@@ -1,0 +1,54 @@
+//! Long-context retrieval accuracy across methods and context lengths —
+//! the RULER-style scaling story (paper §5.4) on the constructed model.
+//!
+//! Run: cargo run --release --example ruler_longcontext [--ctx 512] [--trials 8]
+
+use sals::harness::{pct, Experiment, Table};
+use sals::model::Method;
+use sals::util::cli::Args;
+use sals::util::rng::Rng;
+use sals::workload::ruler::{generate, RulerTask};
+use sals::workload::runner;
+
+fn main() {
+    let args = Args::from_env();
+    let trials: usize = args.get_or("trials", 8);
+    let lengths: Vec<usize> = match args.get("ctx") {
+        Some(s) => vec![s.parse().expect("bad --ctx")],
+        None => vec![128, 256, 512],
+    };
+
+    for ctx in lengths {
+        let exp = Experiment::new(ctx, false, 0xE2E ^ ctx as u64);
+        let mut rng = Rng::new(ctx as u64);
+        let mut suite = Vec::new();
+        for _ in 0..trials {
+            suite.extend(generate(&exp.rm, RulerTask::S2, ctx, &mut rng));
+            suite.extend(generate(&exp.rm, RulerTask::Mk1, ctx, &mut rng));
+        }
+        let mut table = Table::new(
+            &format!("retrieval accuracy at context {ctx} (S2 + MK1, {} trials)", suite.len()),
+            &["Method", "accuracy", "mem access vs dense"],
+        );
+        let mut base_read = 0.0;
+        for method in [
+            Method::Full,
+            Method::Sals25,
+            Method::Sals125,
+            Method::Quest,
+            Method::StreamingLlm,
+        ] {
+            let factory = exp.factory(method);
+            let res = runner::evaluate(&exp.rm, &exp.model, &factory, &suite, 0);
+            if method == Method::Full {
+                base_read = res.read_bytes as f64;
+            }
+            table.row(vec![
+                method.name().to_string(),
+                pct(res.accuracy()),
+                format!("{:.2}", res.read_bytes as f64 / base_read),
+            ]);
+        }
+        table.print();
+    }
+}

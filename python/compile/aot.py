@@ -1,0 +1,114 @@
+"""AOT lowering: JAX decode steps -> HLO TEXT artifacts for the Rust runtime.
+
+HLO *text* (not `.serialize()`) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (behind
+the `xla` crate) rejects; the text parser reassigns ids and round-trips
+cleanly. See /opt/xla-example/load_hlo and its README.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+Emits:
+    sals_decode.hlo.txt    SALS decode step (Pallas kernels inlined)
+    dense_decode.hlo.txt   dense-attention baseline step
+    latent_score.hlo.txt   standalone stage-2 kernel (microbench)
+    sparse_attn.hlo.txt    standalone stage-3 fused kernel (microbench)
+    meta.txt               shape/config contract consumed by rust
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .kernels.latent_score import latent_score
+from .kernels.sparse_recon_attn import sparse_recon_attn
+from . import model as m
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the default elides baked weight tensors to
+    # "{...}", which XLA 0.5.1's text parser silently parses as ZEROS —
+    # the executable then computes garbage. Full constants are mandatory.
+    text = comp.as_hlo_text(print_large_constants=True)
+    assert "{...}" not in text, "HLO text contains elided constants"
+    return text
+
+
+def write(path: str, text: str) -> None:
+    with open(path, "w") as f:
+        f.write(text)
+    print(f"wrote {len(text):>9} chars  {path}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    cfg = m.DemoConfig()
+    weights = m.init_weights(cfg, seed=args.seed)
+    projectors = m.calibrate_projectors(cfg, weights, seed=args.seed + 1)
+
+    i32 = jnp.int32
+    f32 = jnp.float32
+    tok = jax.ShapeDtypeStruct((), i32)
+    pos = jax.ShapeDtypeStruct((), i32)
+    klat = jax.ShapeDtypeStruct((cfg.n_layers, cfg.max_seq, cfg.rank), f32)
+    kv = jax.ShapeDtypeStruct((cfg.n_layers, cfg.max_seq, cfg.kv_dim), f32)
+
+    # ---- SALS decode step (weights + projectors baked as constants) ----
+    sals_fn = functools.partial(m.sals_decode_step, cfg, weights, projectors)
+    lowered = jax.jit(sals_fn).lower(tok, pos, klat, kv)
+    write(os.path.join(args.out, "sals_decode.hlo.txt"), to_hlo_text(lowered))
+
+    # ---- dense baseline step ----
+    dense_fn = functools.partial(m.dense_decode_step, cfg, weights)
+    lowered = jax.jit(dense_fn).lower(tok, pos, kv, kv)
+    write(os.path.join(args.out, "dense_decode.hlo.txt"), to_hlo_text(lowered))
+
+    # ---- standalone kernels for rust-side microbenches ----
+    qlat = jax.ShapeDtypeStruct((cfg.rank,), f32)
+    kcache1 = jax.ShapeDtypeStruct((cfg.max_seq, cfg.rank), f32)
+    mask1 = jax.ShapeDtypeStruct((cfg.max_seq,), jnp.bool_)
+    lowered = jax.jit(
+        functools.partial(latent_score, r_star=cfg.r_star)
+    ).lower(qlat, kcache1, mask1)
+    write(os.path.join(args.out, "latent_score.hlo.txt"), to_hlo_text(lowered))
+
+    q = jax.ShapeDtypeStruct((cfg.n_heads, cfg.head_dim), f32)
+    ksel = jax.ShapeDtypeStruct((cfg.k_sel, cfg.rank), f32)
+    vsel = jax.ShapeDtypeStruct((cfg.k_sel, cfg.n_heads, cfg.head_dim), f32)
+    ut = jax.ShapeDtypeStruct((cfg.rank, cfg.kv_dim), f32)
+    positions = jax.ShapeDtypeStruct((cfg.k_sel,), i32)
+    posq = jax.ShapeDtypeStruct((), i32)
+    selmask = jax.ShapeDtypeStruct((cfg.k_sel,), jnp.bool_)
+    lowered = jax.jit(sparse_recon_attn).lower(q, ksel, vsel, ut, positions, posq, selmask)
+    write(os.path.join(args.out, "sparse_attn.hlo.txt"), to_hlo_text(lowered))
+
+    # ---- machine-readable contract for the rust loader ----
+    meta = "\n".join([
+        "sals-artifacts v1",
+        f"vocab {cfg.vocab}",
+        f"d_model {cfg.d_model}",
+        f"n_layers {cfg.n_layers}",
+        f"n_heads {cfg.n_heads}",
+        f"head_dim {cfg.head_dim}",
+        f"max_seq {cfg.max_seq}",
+        f"rank {cfg.rank}",
+        f"r_star {cfg.r_star}",
+        f"k_sel {cfg.k_sel}",
+        "",
+    ])
+    write(os.path.join(args.out, "meta.txt"), meta)
+
+
+if __name__ == "__main__":
+    main()

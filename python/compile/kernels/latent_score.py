@@ -1,0 +1,64 @@
+"""Pallas kernel: blocked latent-space token scoring (paper §4.3, stage 2).
+
+Streams the latent key cache through VMEM in (BLOCK_S, r*) tiles and emits
+the cheap approximate scores s_j = q̃[:r*] · k̃_j[:r*]. On a real TPU each
+tile is one HBM→VMEM DMA and the dot products run on the VPU/MXU; under
+interpret=True (CPU PJRT) the same program executes with numpy semantics,
+which is the supported correctness path in this environment.
+
+TPU sizing (DESIGN.md §Hardware-Adaptation / §Perf): with r* = 128 and
+BLOCK_S = 512 the K-tile is 512×128×4B = 256 KiB — 2 tiles double-buffered
+fit easily in 16 MiB VMEM alongside the resident q̃ (512 B).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_S = 512
+
+
+def _score_kernel(q_ref, k_ref, mask_ref, out_ref):
+    """One grid step: score BLOCK_S tokens against the resident query."""
+    q = q_ref[...]                        # (r*,) resident in VMEM
+    k = k_ref[...]                        # (BLOCK_S, r*) streamed tile
+    mask = mask_ref[...]                  # (BLOCK_S,)
+    scores = k @ q                        # VPU/MXU dot per row
+    out_ref[...] = jnp.where(mask, scores, -1e30)
+
+
+@functools.partial(jax.jit, static_argnames=("r_star",))
+def latent_score(q_lat, k_lat, length_mask, *, r_star: int):
+    """Scores for every cached token.
+
+    q_lat: (r,) full latent query (leading r* used).
+    k_lat: (S, r) latent key cache; S must be a multiple of BLOCK_S or is
+           padded by the caller (mask covers padding).
+    length_mask: (S,) bool.
+    Returns (S,) f32.
+    """
+    s, r = k_lat.shape
+    assert r_star <= r, (r_star, r)
+    q = q_lat[:r_star]
+    k = k_lat[:, :r_star]
+    block = min(BLOCK_S, s)
+    if s % block != 0:
+        pad = block - s % block
+        k = jnp.pad(k, ((0, pad), (0, 0)))
+        length_mask = jnp.pad(length_mask, (0, pad))
+    grid = (k.shape[0] // block,)
+    out = pl.pallas_call(
+        _score_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((r_star,), lambda i: (0,)),           # q resident
+            pl.BlockSpec((block, r_star), lambda i: (i, 0)),   # K streamed
+            pl.BlockSpec((block,), lambda i: (i,)),            # mask tile
+        ],
+        out_specs=pl.BlockSpec((block,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((k.shape[0],), jnp.float32),
+        interpret=True,
+    )(q, k, length_mask)
+    return out[:s]

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for the Pallas kernels — the correctness ground truth.
+
+Every Pallas kernel in this package has a reference implementation here
+written with plain jax.numpy ops; pytest (python/tests/test_kernel.py)
+asserts allclose between kernel and oracle across a hypothesis-driven sweep
+of shapes and data.
+"""
+
+import jax.numpy as jnp
+
+
+def rope_tables(head_dim: int, positions, base: float = 10_000.0):
+    """cos/sin tables for given integer positions, LLaMA rotate-half layout.
+
+    Returns (cos, sin) of shape (len(positions), head_dim/2).
+    """
+    half = head_dim // 2
+    freqs = base ** (-2.0 * jnp.arange(half, dtype=jnp.float32) / head_dim)
+    theta = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.cos(theta), jnp.sin(theta)
+
+
+def apply_rope(x, cos, sin):
+    """Rotate-half RoPE on the last dim. x: (..., head_dim)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def _softmax_lastdim(scores):
+    m = scores.max(-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    return p / p.sum(-1, keepdims=True)
+
+
+def latent_score_ref(q_lat, k_lat, length_mask):
+    """Latent-space scores (paper §4.3): s_j = q̃[:r*] · k̃_j[:r*].
+
+    q_lat: (r_star,) — already truncated to the scoring rank.
+    k_lat: (S, r) latent key cache (full stored rank r).
+    length_mask: (S,) bool; False positions score -1e30.
+    Returns (S,) f32 scores.
+    """
+    r_star = q_lat.shape[0]
+    scores = k_lat[:, :r_star] @ q_lat
+    return jnp.where(length_mask, scores, -1e30)
+
+
+def sparse_recon_attn_ref(q, k_sel_lat, v_sel, u_t, positions, pos_q, sel_mask,
+                          rope_base: float = 10_000.0):
+    """Fused selective-reconstruction sparse attention (Algorithm 1, 6–9).
+
+    q:          (H, d) pre-RoPE query heads.
+    k_sel_lat:  (k, r) gathered latent keys of the selected tokens.
+    v_sel:      (k, H, d) gathered values.
+    u_t:        (r, H*d) transposed projector (reconstruction matrix).
+    positions:  (k,) int32 original positions of the selected tokens.
+    pos_q:      scalar int32 query position.
+    sel_mask:   (k,) bool; False entries are padding.
+    Returns (H, d) attention output.
+    """
+    h, d = q.shape
+    k = k_sel_lat.shape[0]
+    # Reconstruct: K_C = K̃_C Uᵀ  -> (k, H, d)
+    k_sel = (k_sel_lat @ u_t).reshape(k, h, d)
+    # RoPE at original positions / query position.
+    cos_k, sin_k = rope_tables(d, positions, rope_base)
+    k_rot = apply_rope(k_sel, cos_k[:, None, :], sin_k[:, None, :])
+    cos_q, sin_q = rope_tables(d, jnp.full((1,), pos_q, dtype=jnp.int32), rope_base)
+    q_rot = apply_rope(q, cos_q, sin_q)
+    # Exact attention over the selected set (Eq. 5).
+    scores = jnp.einsum("hd,khd->hk", q_rot, k_rot) / jnp.sqrt(float(d))
+    scores = jnp.where(sel_mask[None, :], scores, -1e30)
+    probs = _softmax_lastdim(scores)
+    return jnp.einsum("hk,khd->hd", probs, v_sel)
+
+
+def full_attention_ref(q, keys, values, length_mask, pos_q, rope_base: float = 10_000.0):
+    """Dense decode attention oracle: pre-RoPE keys (S, H, d), query (H, d)."""
+    s, h, d = keys.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    cos_k, sin_k = rope_tables(d, positions, rope_base)
+    k_rot = apply_rope(keys, cos_k[:, None, :], sin_k[:, None, :])
+    cos_q, sin_q = rope_tables(d, jnp.full((1,), pos_q, dtype=jnp.int32), rope_base)
+    q_rot = apply_rope(q, cos_q, sin_q)
+    scores = jnp.einsum("hd,shd->hs", q_rot, k_rot) / jnp.sqrt(float(d))
+    scores = jnp.where(length_mask[None, :], scores, -1e30)
+    probs = _softmax_lastdim(scores)
+    return jnp.einsum("hs,shd->hd", probs, values)

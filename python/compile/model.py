@@ -1,0 +1,197 @@
+"""Layer 2: the SALS decode-step compute graph in JAX.
+
+A small LLaMA-style decoder with the SALS attention path (latent scoring →
+in-graph top-k → fused selective reconstruction) plus a dense baseline.
+Weights and the calibrated projectors are baked into the lowered HLO as
+constants, so the Rust side only moves token ids and caches.
+
+Static shapes throughout (decode step with max_seq-sized caches) — this is
+what lets jax.lax.top_k live inside the graph and the whole step lower to
+one HLO module that `rust/src/runtime` compiles once and reuses.
+"""
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.latent_score import latent_score
+from .kernels.sparse_recon_attn import sparse_recon_attn
+from .kernels import ref
+
+
+@dataclass(frozen=True)
+class DemoConfig:
+    """Shape config of the AOT demo model (kept deliberately small: the e2e
+    example drives hundreds of decode steps through PJRT-CPU)."""
+
+    vocab: int = 256
+    d_model: int = 128
+    n_layers: int = 4
+    n_heads: int = 4
+    head_dim: int = 32
+    d_ff: int = 256
+    max_seq: int = 512
+    rank: int = 32          # r  (25% of kv_dim = n_heads*head_dim = 128)
+    r_star: int = 16        # r* = r/2
+    k_sel: int = 64         # selection budget (sink+recent+critical merged)
+    sink: int = 4
+    recent: int = 16
+    rope_base: float = 10_000.0
+
+    @property
+    def kv_dim(self) -> int:
+        return self.n_heads * self.head_dim
+
+
+def init_weights(cfg: DemoConfig, seed: int = 0):
+    """Seeded random weights as a pytree of jnp arrays."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 8 * cfg.n_layers + 2)
+    std = 1.0 / jnp.sqrt(cfg.d_model)
+    i = iter(range(len(ks)))
+    w = {
+        "embedding": jax.random.normal(ks[next(i)], (cfg.vocab, cfg.d_model)) * 1.0,
+        "layers": [],
+    }
+    # Real LLMs' pre-RoPE keys are empirically low-rank (the premise of §2.1
+    # and Palu/Loki); random Gaussian wk would make them full-rank and
+    # unrepresentative. Give wk an inner rank of rank/2 so the calibrated
+    # rank-r projector captures the key energy the way it does on LLaMA.
+    key_inner = max(2, cfg.rank // 2)
+    for _ in range(cfg.n_layers):
+        wk_a = jax.random.normal(ks[next(i)], (cfg.d_model, key_inner)) * std
+        wk_b = jax.random.normal(jax.random.fold_in(ks[next(i)], 1), (key_inner, cfg.kv_dim))
+        w["layers"].append({
+            "wq": jax.random.normal(ks[next(i)], (cfg.d_model, cfg.kv_dim)) * std,
+            "wk": wk_a @ wk_b / jnp.sqrt(key_inner),
+            "wv": jax.random.normal(ks[next(i)], (cfg.d_model, cfg.kv_dim)) * std,
+            "wo": jax.random.normal(ks[next(i)], (cfg.kv_dim, cfg.d_model)) * std,
+            "w_gate": jax.random.normal(ks[next(i)], (cfg.d_model, cfg.d_ff)) * std,
+            "w_up": jax.random.normal(ks[next(i)], (cfg.d_model, cfg.d_ff)) * std,
+            "w_down": jax.random.normal(ks[next(i)], (cfg.d_ff, cfg.d_model)) / jnp.sqrt(cfg.d_ff),
+        })
+    return w
+
+
+def _rmsnorm(x, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x) + eps)
+
+
+def calibrate_projectors(cfg: DemoConfig, weights, n_tokens: int = 1024, seed: int = 1):
+    """§4.2 offline calibration in JAX: run the dense model over random
+    token streams, collect pre-RoPE keys per layer, eigendecompose KᵀK and
+    keep the leading-r eigenvectors. Returns a list of (kv_dim, r) arrays."""
+    key = jax.random.PRNGKey(seed)
+    tokens = jax.random.randint(key, (n_tokens,), 0, cfg.vocab)
+    xs = weights["embedding"][tokens]          # (T, d_model)
+    projs = []
+    x = xs
+    for lw in weights["layers"]:
+        normed = x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-5)
+        k = normed @ lw["wk"]                  # (T, kv_dim) pre-RoPE keys
+        c = k.T @ k
+        _, vecs = jnp.linalg.eigh(c)           # ascending
+        u = vecs[:, ::-1][:, : cfg.rank]       # (kv_dim, r) leading
+        projs.append(u)
+        # Cheap stream update so deeper layers see layer-mixed activations:
+        # dense attention with uniform probs ≈ running mean (good enough for
+        # covariance calibration of a random-weight model).
+        v = normed @ lw["wv"]
+        attn = jnp.cumsum(v, axis=0) / (jnp.arange(1, n_tokens + 1)[:, None])
+        x = x + attn @ lw["wo"]
+        g = x @ lw["w_gate"]
+        x = x + (jax.nn.silu(g) * (x @ lw["w_up"])) @ lw["w_down"]
+    return projs
+
+
+def sals_decode_step(cfg: DemoConfig, weights, projectors,
+                     token, pos, k_lat_cache, v_cache):
+    """One SALS decode step.
+
+    token: () int32; pos: () int32 (0-based position of this token)
+    k_lat_cache: (L, S, r) latent key cache
+    v_cache:     (L, S, kv_dim) value cache (fp32 in the XLA demo path;
+                 quantized storage is exercised in the Rust backends)
+    Returns (logits, new_k_lat_cache, new_v_cache).
+    """
+    h, d, s = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    x = weights["embedding"][token]
+    new_klat, new_v = [], []
+    idx = jnp.arange(s, dtype=jnp.int32)
+
+    for layer, lw in enumerate(weights["layers"]):
+        u = projectors[layer]                          # (kv, r)
+        normed = _rmsnorm(x)
+        q = (normed @ lw["wq"]).reshape(h, d)
+        k = normed @ lw["wk"]                          # (kv,) pre-RoPE
+        v = normed @ lw["wv"]
+
+        # Stage 1: compress the new key into latent space; append (line 2–3).
+        k_lat = k @ u                                   # (r,)
+        kc = jax.lax.dynamic_update_slice(k_lat_cache[layer], k_lat[None, :], (pos, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[layer], v[None, :], (pos, 0))
+        new_klat.append(kc)
+        new_v.append(vc)
+
+        # Stage 2: latent scoring (Pallas kernel) + top-k with sink/recent
+        # bias (lines 4–5). Causal mask: positions > pos are invalid.
+        valid = idx <= pos
+        q_lat = q.reshape(-1) @ u                       # (r,)
+        scores = latent_score(q_lat, kc, valid, r_star=cfg.r_star)
+        is_sink = idx < cfg.sink
+        is_recent = (idx + cfg.recent > pos) & valid
+        biased = jnp.where(is_sink | is_recent, 1e30, scores)
+        # top-k via full argsort: lowers to the classic `sort` HLO op, which
+        # xla_extension 0.5.1's text parser accepts (jax.lax.top_k lowers to
+        # a `topk(..., largest=true)` instruction it cannot parse).
+        sel = jnp.argsort(-biased)[: cfg.k_sel]         # (k_sel,) indices
+        sel_mask = valid[sel]
+
+        # Stage 3: gather + fused reconstruct/RoPE/sparse-attention
+        # (Pallas kernel, lines 6–9).
+        k_sel_lat = kc[sel]                             # (k_sel, r)
+        v_sel = vc[sel].reshape(cfg.k_sel, h, d)
+        out = sparse_recon_attn(q, k_sel_lat, v_sel, u.T, sel, pos, sel_mask,
+                                rope_base=cfg.rope_base)
+        x = x + out.reshape(-1) @ lw["wo"]
+
+        # FFN.
+        normed = _rmsnorm(x)
+        g = jax.nn.silu(normed @ lw["w_gate"]) * (normed @ lw["w_up"])
+        x = x + g @ lw["w_down"]
+
+    logits = weights["embedding"] @ _rmsnorm(x)
+    return logits, jnp.stack(new_klat), jnp.stack(new_v)
+
+
+def dense_decode_step(cfg: DemoConfig, weights, token, pos, k_cache, v_cache):
+    """Baseline decode step with dense attention (GPT-fast stand-in).
+
+    k_cache/v_cache: (L, S, kv_dim); keys cached pre-RoPE and rotated in the
+    oracle for parity with the SALS path.
+    """
+    h, d, s = cfg.n_heads, cfg.head_dim, cfg.max_seq
+    x = weights["embedding"][token]
+    new_k, new_v = [], []
+    idx = jnp.arange(s, dtype=jnp.int32)
+
+    for lw in weights["layers"]:
+        normed = _rmsnorm(x)
+        q = (normed @ lw["wq"]).reshape(h, d)
+        k = normed @ lw["wk"]
+        v = normed @ lw["wv"]
+        kc = jax.lax.dynamic_update_slice(k_cache[len(new_k)], k[None, :], (pos, 0))
+        vc = jax.lax.dynamic_update_slice(v_cache[len(new_v)], v[None, :], (pos, 0))
+        new_k.append(kc)
+        new_v.append(vc)
+        valid = idx <= pos
+        out = ref.full_attention_ref(q, kc.reshape(s, h, d), vc.reshape(s, h, d),
+                                     valid, pos, rope_base=cfg.rope_base)
+        x = x + out.reshape(-1) @ lw["wo"]
+        normed = _rmsnorm(x)
+        g = jax.nn.silu(normed @ lw["w_gate"]) * (normed @ lw["w_up"])
+        x = x + g @ lw["w_down"]
+
+    logits = weights["embedding"] @ _rmsnorm(x)
+    return logits, jnp.stack(new_k), jnp.stack(new_v)

@@ -1,0 +1,147 @@
+"""Kernel-vs-oracle correctness: the CORE L1 signal.
+
+hypothesis sweeps shapes; every case asserts allclose between the Pallas
+kernel (interpret mode) and the pure-jnp reference.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.latent_score import latent_score
+from compile.kernels.sparse_recon_attn import sparse_recon_attn
+from compile.kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rnd(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape) * scale
+
+
+# ---------------------------------------------------------------- latent_score
+
+@settings(max_examples=20, deadline=None)
+@given(
+    s=st.integers(min_value=1, max_value=700),
+    r=st.sampled_from([4, 8, 16, 32]),
+    frac=st.sampled_from([1, 2, 4]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_latent_score_matches_ref(s, r, frac, seed):
+    r_star = max(1, r // frac)
+    q = rnd(seed, (r,))
+    k = rnd(seed + 1, (s, r))
+    length = int(jax.random.randint(jax.random.PRNGKey(seed + 2), (), 1, s + 1))
+    mask = jnp.arange(s) < length
+    got = latent_score(q, k, mask, r_star=r_star)
+    want = ref.latent_score_ref(q[:r_star], k, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_latent_score_masks_invalid():
+    q = jnp.ones((8,))
+    k = jnp.ones((10, 8))
+    mask = jnp.arange(10) < 3
+    out = latent_score(q, k, mask, r_star=4)
+    assert np.all(np.asarray(out[3:]) <= -1e29)
+    assert np.all(np.isfinite(np.asarray(out[:3])))
+
+
+def test_latent_score_non_multiple_of_block():
+    # 700 is not a multiple of BLOCK_S=512: exercises the padding path.
+    q = rnd(0, (16,))
+    k = rnd(1, (700, 16))
+    mask = jnp.ones((700,), bool)
+    got = latent_score(q, k, mask, r_star=8)
+    want = ref.latent_score_ref(q[:8], k, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------- sparse_recon_attn
+
+@settings(max_examples=15, deadline=None)
+@given(
+    h=st.sampled_from([1, 2, 4]),
+    d=st.sampled_from([8, 16, 32]),
+    k=st.integers(min_value=1, max_value=96),
+    r=st.sampled_from([4, 8, 16]),
+    seed=st.integers(min_value=0, max_value=2**16),
+)
+def test_sparse_recon_attn_matches_ref(h, d, k, r, seed):
+    q = rnd(seed, (h, d))
+    klat = rnd(seed + 1, (k, r))
+    v = rnd(seed + 2, (k, h, d))
+    ut = rnd(seed + 3, (r, h * d), scale=0.3)
+    kk = jax.random.PRNGKey(seed + 4)
+    positions = jax.random.randint(kk, (k,), 0, 400).astype(jnp.int32)
+    pos_q = jnp.asarray(400, jnp.int32)
+    n_valid = int(jax.random.randint(jax.random.PRNGKey(seed + 5), (), 1, k + 1))
+    mask = jnp.arange(k) < n_valid
+    got = sparse_recon_attn(q, klat, v, ut, positions, pos_q, mask)
+    want = ref.sparse_recon_attn_ref(q, klat, v, ut, positions, pos_q, mask)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=2e-4)
+
+
+def test_sparse_attn_single_token_returns_value():
+    # One valid token: softmax collapses to 1 -> out == its value.
+    h, d, r = 2, 8, 4
+    q = rnd(0, (h, d))
+    klat = rnd(1, (1, r))
+    v = rnd(2, (1, h, d))
+    ut = rnd(3, (r, h * d))
+    out = sparse_recon_attn(q, klat, v, ut,
+                            jnp.zeros((1,), jnp.int32), jnp.asarray(5, jnp.int32),
+                            jnp.ones((1,), bool))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(v[0]), rtol=1e-5, atol=1e-6)
+
+
+def test_sparse_attn_padding_is_ignored():
+    # Identical valid prefix, garbage in the padding slots: same output.
+    h, d, k, r = 2, 16, 12, 8
+    q = rnd(0, (h, d))
+    klat = rnd(1, (k, r))
+    v = rnd(2, (k, h, d))
+    ut = rnd(3, (r, h * d))
+    pos = jnp.arange(k, dtype=jnp.int32)
+    posq = jnp.asarray(99, jnp.int32)
+    mask = jnp.arange(k) < 5
+    out1 = sparse_recon_attn(q, klat, v, ut, pos, posq, mask)
+    klat2 = klat.at[5:].set(1e3)
+    v2 = v.at[5:].set(-1e3)
+    out2 = sparse_recon_attn(q, klat2, v2, ut, pos, posq, mask)
+    np.testing.assert_allclose(np.asarray(out1), np.asarray(out2), rtol=1e-5, atol=1e-5)
+
+
+def test_full_rank_projector_recovers_dense_attention():
+    # With r = H*d and U orthonormal (identity), selecting ALL tokens makes
+    # the fused kernel equal to the dense oracle.
+    h, d, s = 2, 8, 24
+    kv = h * d
+    q = rnd(0, (h, d))
+    keys = rnd(1, (s, kv))
+    v = rnd(2, (s, h, d))
+    ut = jnp.eye(kv)
+    pos = jnp.arange(s, dtype=jnp.int32)
+    posq = jnp.asarray(s - 1, jnp.int32)
+    mask = jnp.ones((s,), bool)
+    got = sparse_recon_attn(q, keys, v, ut, pos, posq, mask)
+    want = ref.full_attention_ref(q, keys.reshape(s, h, d), v, mask, s - 1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5)
+
+
+# ------------------------------------------------------------------- rope ref
+
+def test_rope_ref_relative_property():
+    d = 16
+    q = rnd(0, (d,))
+    k = rnd(1, (d,))
+
+    def score(i, j):
+        cq, sq = ref.rope_tables(d, jnp.array([i]))
+        ck, sk = ref.rope_tables(d, jnp.array([j]))
+        return float(ref.apply_rope(q, cq[0], sq[0]) @ ref.apply_rope(k, ck[0], sk[0]))
+
+    assert score(9, 2) == pytest.approx(score(107, 100), rel=1e-4)

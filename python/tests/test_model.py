@@ -1,0 +1,115 @@
+"""L2 model-graph tests: shapes, causality, SALS-vs-dense fidelity."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as m
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = m.DemoConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, head_dim=16,
+                       d_ff=64, max_seq=64, rank=8, r_star=4, k_sel=16,
+                       sink=2, recent=4)
+    weights = m.init_weights(cfg, seed=3)
+    projs = m.calibrate_projectors(cfg, weights, n_tokens=256, seed=4)
+    return cfg, weights, projs
+
+
+def empty_caches(cfg):
+    klat = jnp.zeros((cfg.n_layers, cfg.max_seq, cfg.rank))
+    v = jnp.zeros((cfg.n_layers, cfg.max_seq, cfg.kv_dim))
+    return klat, v
+
+
+def decode_seq(cfg, weights, projs, tokens):
+    klat, v = empty_caches(cfg)
+    logits = None
+    for pos, t in enumerate(tokens):
+        logits, klat, v = m.sals_decode_step(
+            cfg, weights, projs, jnp.asarray(t, jnp.int32),
+            jnp.asarray(pos, jnp.int32), klat, v)
+    return logits, klat, v
+
+
+def test_shapes_and_finiteness(setup):
+    cfg, weights, projs = setup
+    logits, klat, v = decode_seq(cfg, weights, projs, [1, 2, 3])
+    assert logits.shape == (cfg.vocab,)
+    assert klat.shape == (cfg.n_layers, cfg.max_seq, cfg.rank)
+    assert v.shape == (cfg.n_layers, cfg.max_seq, cfg.kv_dim)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_deterministic(setup):
+    cfg, weights, projs = setup
+    a, _, _ = decode_seq(cfg, weights, projs, [5, 6, 7, 8])
+    b, _, _ = decode_seq(cfg, weights, projs, [5, 6, 7, 8])
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_causality_future_cache_slots_ignored(setup):
+    # Poisoning cache slots beyond the current position must not change the
+    # output (the causal mask + selection must never look there).
+    cfg, weights, projs = setup
+    tokens = [3, 1, 4]
+    logits, klat, v = decode_seq(cfg, weights, projs, tokens)
+    klat2, v2 = empty_caches(cfg)
+    klat2 = klat2.at[:, len(tokens):, :].set(1e3)
+    v2 = v2.at[:, len(tokens):, :].set(-1e3)
+    out = None
+    for pos, t in enumerate(tokens):
+        out, klat2, v2 = m.sals_decode_step(
+            cfg, weights, projs, jnp.asarray(t, jnp.int32),
+            jnp.asarray(pos, jnp.int32), klat2, v2)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(logits), rtol=1e-5, atol=1e-5)
+
+
+def test_cache_rows_written_at_position(setup):
+    cfg, weights, projs = setup
+    _, klat, v = decode_seq(cfg, weights, projs, [9, 8, 7])
+    # Rows 0..2 non-zero, rows 3.. all zero.
+    assert np.any(np.asarray(klat[:, :3, :]) != 0)
+    assert np.all(np.asarray(klat[:, 3:, :]) == 0)
+    assert np.all(np.asarray(v[:, 3:, :]) == 0)
+
+
+def test_sals_close_to_dense_when_selection_covers_everything(setup):
+    # k_sel >= seq_len and full-rank latent space -> SALS == dense baseline.
+    cfg0, weights, _ = setup
+    cfg = m.DemoConfig(vocab=64, d_model=32, n_layers=2, n_heads=2, head_dim=16,
+                       d_ff=64, max_seq=64, rank=32, r_star=32, k_sel=16,
+                       sink=2, recent=4)
+    # Full-rank "projector": identity (kv_dim == rank).
+    projs = [jnp.eye(cfg.kv_dim) for _ in range(cfg.n_layers)]
+    tokens = [1, 2, 3, 4, 5]
+    klat = jnp.zeros((cfg.n_layers, cfg.max_seq, cfg.rank))
+    v = jnp.zeros((cfg.n_layers, cfg.max_seq, cfg.kv_dim))
+    kd = jnp.zeros((cfg.n_layers, cfg.max_seq, cfg.kv_dim))
+    vd = jnp.zeros((cfg.n_layers, cfg.max_seq, cfg.kv_dim))
+    for pos, t in enumerate(tokens):
+        tt, pp = jnp.asarray(t, jnp.int32), jnp.asarray(pos, jnp.int32)
+        sl, klat, v = m.sals_decode_step(cfg, weights, projs, tt, pp, klat, v)
+        dl, kd, vd = m.dense_decode_step(cfg, weights, tt, pp, kd, vd)
+    np.testing.assert_allclose(np.asarray(sl), np.asarray(dl), rtol=1e-3, atol=1e-3)
+
+
+def test_dense_baseline_shapes(setup):
+    cfg, weights, _ = setup
+    kd = jnp.zeros((cfg.n_layers, cfg.max_seq, cfg.kv_dim))
+    vd = jnp.zeros((cfg.n_layers, cfg.max_seq, cfg.kv_dim))
+    logits, kd, vd = m.dense_decode_step(
+        cfg, weights, jnp.asarray(1, jnp.int32), jnp.asarray(0, jnp.int32), kd, vd)
+    assert logits.shape == (cfg.vocab,)
+    assert np.all(np.isfinite(np.asarray(logits)))
+
+
+def test_calibrated_projectors_orthonormal(setup):
+    cfg, _, projs = setup
+    for u in projs:
+        utu = np.asarray(u.T @ u)
+        np.testing.assert_allclose(utu, np.eye(cfg.rank), atol=1e-4)

@@ -1,0 +1,57 @@
+//! §4.5 memory-traffic model: closed-form speedup 2sd/(s·r* + 2kr) vs the
+//! traffic actually metered by the backends, and the fused-kernel traffic
+//! cut (paper: 7.69×–14.28×).
+
+use sals::attention::traffic::{fused_kernel_traffic_cut, sals_speedup_model};
+use sals::attention::{AttentionBackend, AttnShape, FullAttention, SalsAttention, SalsConfig};
+use sals::harness::Table;
+use sals::lowrank::Calibrator;
+use sals::util::rng::Rng;
+
+fn main() {
+    let mut table = Table::new(
+        "§4.5 — modeled vs measured memory-traffic speedup (SALS-25%)",
+        &["Seq", "model 2sd/(sr*+2kr)", "measured full/sals bytes"],
+    );
+    for &s in &[1024usize, 2048, 4096] {
+        let sh = AttnShape::mha(8, 64, s + 8);
+        let kvd = sh.kv_dim();
+        let (r, rs, k) = (kvd / 4, kvd / 8, s / 8);
+        let modeled = sals_speedup_model(s, kvd, r, rs, k);
+
+        let mut rng = Rng::new(42 + s as u64);
+        let mut cal = Calibrator::new(kvd);
+        for _ in 0..128 {
+            cal.add_key(&rng.normal_vec(kvd, 1.0));
+        }
+        let proj = cal.fit(r).unwrap();
+        let mut full = FullAttention::new(sh);
+        let mut sals = SalsAttention::new(sh, SalsConfig::sals_25(kvd, 16, k, 64), proj);
+        for _ in 0..s {
+            let kk = rng.normal_vec(kvd, 1.0);
+            let vv = rng.normal_vec(kvd, 1.0);
+            full.append(&kk, &vv);
+            sals.append(&kk, &vv);
+        }
+        let q = rng.normal_vec(sh.q_dim(), 1.0);
+        let mut out = vec![0.0f32; sh.q_dim()];
+        let f0 = full.traffic().read;
+        full.attend(&q, &mut out);
+        let s0 = sals.traffic().read;
+        sals.attend(&q, &mut out);
+        let measured = (full.traffic().read - f0) as f64 / (sals.traffic().read - s0) as f64;
+        table.row(vec![s.to_string(), format!("{modeled:.2}x"), format!("{measured:.2}x")]);
+    }
+    table.print();
+
+    let mut t2 = Table::new(
+        "§4.5 — fused-kernel traffic cut across settings (paper: 7.69–14.28x)",
+        &["d_r", "k/s", "cut"],
+    );
+    let d = 4096;
+    for (dr, ks) in [(4usize, 4usize), (4, 8), (8, 8), (8, 16)] {
+        let cut = fused_kernel_traffic_cut(4096, d, d / dr, d / (2 * dr), 4096 / ks);
+        t2.row(vec![format!("1/{dr}"), format!("1/{ks}"), format!("{cut:.2}x")]);
+    }
+    t2.print();
+}

@@ -1,0 +1,10 @@
+//! Analyses behind the paper's figures: RoPE's effect on key geometry
+//! (Figure 1b, Figure 4) and the latent-space overlap score (Figure 2).
+
+pub mod overlap;
+pub mod pca_rope;
+pub mod rank;
+
+pub use overlap::{overlap_score, overlap_by_layer};
+pub use pca_rope::pca_rope_demo;
+pub use rank::{rank_analysis, RankReport};

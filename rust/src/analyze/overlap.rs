@@ -1,0 +1,172 @@
+//! Figure 2: the overlap score (OS) — fraction of the full-attention mass
+//! captured by the top-N_c tokens ranked in the pre-RoPE latent space.
+//!
+//! OS = Σ_{i∈C} p_i / Σ_i p_i where p is the exact attention distribution
+//! and C the top-N_c index set by latent score (§3.2). The paper finds
+//! OS > 90% for layers 2–29 and < 50% for layers 0–1 on LLaMA/Mistral,
+//! motivating the dense-layer skip list.
+
+use crate::lowrank::Projector;
+use crate::rope::RopeTable;
+use crate::tensor::top_k_indices;
+
+/// Overlap score of one (query, key-set) pair.
+///
+/// `q`, `keys` are pre-RoPE (kv_dim / (s, kv_dim)); the exact distribution
+/// is computed post-RoPE at `pos_q` with per-token positions 0..s, single
+/// pooled head (head_dim = kv_dim is acceptable because OS is a property of
+/// score *ranking*, which the multi-head split preserves on average).
+pub fn overlap_score(
+    proj: &Projector,
+    rope: &RopeTable,
+    head_dim: usize,
+    q: &[f32],
+    keys: &[f32],
+    n_c: usize,
+    r_star: usize,
+) -> f64 {
+    let kv_dim = proj.dim;
+    assert_eq!(q.len(), kv_dim);
+    assert_eq!(keys.len() % kv_dim, 0);
+    let s = keys.len() / kv_dim;
+    assert!(s > 0);
+    let pos_q = s - 1;
+
+    // Exact post-RoPE attention distribution (pooled single-head softmax
+    // per head then averaged — equivalent to the multi-head mean mass).
+    let n_heads = kv_dim / head_dim;
+    let mut qr = q.to_vec();
+    rope.apply_multihead(&mut qr, pos_q);
+    let mut logits = vec![0.0f32; s];
+    let scale = 1.0 / (head_dim as f32).sqrt();
+    let mut krot = vec![0.0f32; kv_dim];
+    for j in 0..s {
+        krot.copy_from_slice(&keys[j * kv_dim..(j + 1) * kv_dim]);
+        rope.apply_multihead(&mut krot, j);
+        // Mean over heads of per-head scores.
+        let mut sum = 0.0f32;
+        for h in 0..n_heads {
+            sum += crate::tensor::ops::dot(
+                &qr[h * head_dim..(h + 1) * head_dim],
+                &krot[h * head_dim..(h + 1) * head_dim],
+            );
+        }
+        logits[j] = sum * scale / n_heads as f32;
+    }
+    let mut probs = logits;
+    crate::tensor::ops::softmax(&mut probs);
+
+    // Latent-space ranking (pre-RoPE, r* dims).
+    let mut qlat = vec![0.0f32; proj.rank];
+    proj.project(q, &mut qlat);
+    let mut klat = vec![0.0f32; proj.rank];
+    let mut scores = vec![0.0f32; s];
+    for j in 0..s {
+        proj.project(&keys[j * kv_dim..(j + 1) * kv_dim], &mut klat);
+        scores[j] = crate::tensor::ops::dot(&qlat[..r_star], &klat[..r_star]);
+    }
+    let top = top_k_indices(&scores, n_c.min(s));
+    top.iter().map(|&i| probs[i] as f64).sum::<f64>()
+}
+
+/// Mean overlap score per layer given per-layer calibration keys — drives
+/// the Figure-2 reproduction (`sals analyze overlap`).
+pub fn overlap_by_layer(
+    projs: &[Projector],
+    layers_keys: &[Vec<f32>],
+    head_dim: usize,
+    rope: &RopeTable,
+    n_c: usize,
+    r_star_frac: f64,
+    queries_per_layer: usize,
+    seed: u64,
+) -> Vec<f64> {
+    use crate::util::rng::Rng;
+    assert_eq!(projs.len(), layers_keys.len());
+    let mut out = Vec::with_capacity(projs.len());
+    for (proj, keys) in projs.iter().zip(layers_keys) {
+        let kv_dim = proj.dim;
+        let s = keys.len() / kv_dim;
+        let r_star = ((proj.rank as f64 * r_star_frac) as usize).max(1);
+        let mut rng = Rng::new(seed ^ proj.rank as u64 ^ s as u64);
+        let mut acc = 0.0;
+        for _ in 0..queries_per_layer {
+            // Queries drawn from the key distribution (same subspace).
+            let j = rng.below(s);
+            let mut q = keys[j * kv_dim..(j + 1) * kv_dim].to_vec();
+            for x in q.iter_mut() {
+                *x += rng.normal_f32() * 0.1;
+            }
+            acc += overlap_score(proj, rope, head_dim, &q, keys, n_c, r_star);
+        }
+        out.push(acc / queries_per_layer as f64);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::Calibrator;
+    use crate::util::rng::Rng;
+
+    fn low_rank_keys(s: usize, kv: usize, true_rank: usize, rng: &mut Rng) -> Vec<f32> {
+        let basis: Vec<Vec<f32>> = (0..true_rank).map(|_| rng.normal_vec(kv, 1.0)).collect();
+        let mut keys = vec![0.0f32; s * kv];
+        for j in 0..s {
+            for b in &basis {
+                crate::tensor::ops::axpy(rng.normal_f32(), b, &mut keys[j * kv..(j + 1) * kv]);
+            }
+        }
+        keys
+    }
+
+    #[test]
+    fn full_budget_overlap_is_one() {
+        let mut rng = Rng::new(601);
+        let kv = 16;
+        let keys = low_rank_keys(40, kv, 4, &mut rng);
+        let mut cal = Calibrator::new(kv);
+        cal.add_keys(&keys);
+        let proj = cal.fit(8).unwrap();
+        let rope = RopeTable::new(8, 64, 10_000.0);
+        let q = keys[..kv].to_vec();
+        let os = overlap_score(&proj, &rope, 8, &q, &keys, 40, 8);
+        assert!((os - 1.0).abs() < 1e-6, "{os}");
+    }
+
+    #[test]
+    fn overlap_decreases_with_smaller_budget() {
+        let mut rng = Rng::new(603);
+        let kv = 16;
+        let keys = low_rank_keys(60, kv, 4, &mut rng);
+        let mut cal = Calibrator::new(kv);
+        cal.add_keys(&keys);
+        let proj = cal.fit(8).unwrap();
+        let rope = RopeTable::new(8, 64, 10_000.0);
+        let q = keys[..kv].to_vec();
+        let os_big = overlap_score(&proj, &rope, 8, &q, &keys, 30, 4);
+        let os_small = overlap_score(&proj, &rope, 8, &q, &keys, 2, 4);
+        assert!(os_big >= os_small, "{os_big} vs {os_small}");
+        assert!(os_big > 0.5);
+    }
+
+    #[test]
+    fn good_latent_space_high_overlap() {
+        // Keys in a genuine low-rank subspace: latent ranking ≈ exact
+        // ranking -> OS near 1 with a quarter budget.
+        let mut rng = Rng::new(605);
+        let kv = 32;
+        let keys = low_rank_keys(80, kv, 4, &mut rng);
+        let mut cal = Calibrator::new(kv);
+        cal.add_keys(&keys);
+        let proj = cal.fit(8).unwrap();
+        let rope = RopeTable::new(16, 128, 10_000.0);
+        let mut acc = 0.0;
+        for t in 0..5 {
+            let q = keys[t * kv..(t + 1) * kv].to_vec();
+            acc += overlap_score(&proj, &rope, 16, &q, &keys, 20, 4);
+        }
+        assert!(acc / 5.0 > 0.8, "mean OS {}", acc / 5.0);
+    }
+}

@@ -1,0 +1,99 @@
+//! Shared plumbing for baseline backends: a dense post-RoPE KV cache.
+
+use crate::attention::{AttnShape, Traffic};
+use crate::rope::RopeTable;
+
+/// Dense fp32 KV cache with keys rotated at append time. Most token-sparse
+/// baselines (Loki, DoubleSparse, HShare, Quest, StreamingLLM) keep the full
+/// cache resident and only reduce *traffic*; this is their common store.
+pub struct DenseCache {
+    pub shape: AttnShape,
+    pub rope: RopeTable,
+    /// (len, kv_dim) post-RoPE keys.
+    pub keys: Vec<f32>,
+    /// (len, kv_dim) values.
+    pub values: Vec<f32>,
+    pub len: usize,
+}
+
+impl DenseCache {
+    pub fn new(shape: AttnShape) -> DenseCache {
+        let rope = RopeTable::new(shape.head_dim, shape.max_seq, shape.rope_base);
+        DenseCache { shape, rope, keys: Vec::new(), values: Vec::new(), len: 0 }
+    }
+
+    /// Append pre-RoPE key (rotated here) + value.
+    pub fn append(&mut self, k: &[f32], v: &[f32], traffic: &mut Traffic) {
+        let kvd = self.shape.kv_dim();
+        assert_eq!(k.len(), kvd);
+        assert_eq!(v.len(), kvd);
+        let mut kr = k.to_vec();
+        self.rope.apply_multihead(&mut kr, self.len);
+        self.keys.extend_from_slice(&kr);
+        self.values.extend_from_slice(v);
+        self.len += 1;
+        traffic.write_f32(2 * kvd);
+    }
+
+    /// Rotate a query for the current decode position (len - 1).
+    pub fn rotate_query(&self, q: &[f32]) -> Vec<f32> {
+        let mut qr = q.to_vec();
+        self.rope.apply_multihead(&mut qr, self.len - 1);
+        qr
+    }
+
+    /// Gather rows of keys+values for a selection, metering reads.
+    pub fn gather(&self, sel: &[usize], traffic: &mut Traffic) -> (Vec<f32>, Vec<f32>) {
+        let kvd = self.shape.kv_dim();
+        let mut ks = Vec::with_capacity(sel.len() * kvd);
+        let mut vs = Vec::with_capacity(sel.len() * kvd);
+        for &j in sel {
+            ks.extend_from_slice(&self.keys[j * kvd..(j + 1) * kvd]);
+            vs.extend_from_slice(&self.values[j * kvd..(j + 1) * kvd]);
+        }
+        traffic.read_f32(2 * sel.len() * kvd);
+        (ks, vs)
+    }
+
+    pub fn kv_bytes(&self) -> usize {
+        (self.keys.len() + self.values.len()) * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn append_and_gather_roundtrip() {
+        let shape = AttnShape::mha(1, 4, 16);
+        let mut c = DenseCache::new(shape);
+        let mut t = Traffic::default();
+        let mut rng = Rng::new(83);
+        let mut vals = Vec::new();
+        for _ in 0..5 {
+            let k = rng.normal_vec(4, 1.0);
+            let v = rng.normal_vec(4, 1.0);
+            vals.push(v.clone());
+            c.append(&k, &v, &mut t);
+        }
+        let (_, vs) = c.gather(&[1, 3], &mut t);
+        assert_eq!(&vs[..4], vals[1].as_slice());
+        assert_eq!(&vs[4..], vals[3].as_slice());
+        assert_eq!(t.written, (5 * 2 * 4 * 4) as u64);
+        assert_eq!(t.read, (2 * 2 * 4 * 4) as u64);
+    }
+
+    #[test]
+    fn keys_are_rotated() {
+        let shape = AttnShape::mha(1, 4, 16);
+        let mut c = DenseCache::new(shape);
+        let mut t = Traffic::default();
+        let k = vec![1.0f32, 0.0, 0.0, 0.0];
+        c.append(&k, &k, &mut t); // pos 0: identity
+        c.append(&k, &k, &mut t); // pos 1: rotated
+        assert_eq!(&c.keys[..4], k.as_slice());
+        assert_ne!(&c.keys[4..8], k.as_slice());
+    }
+}

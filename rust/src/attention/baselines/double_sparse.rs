@@ -1,0 +1,170 @@
+//! Double Sparsity baseline (Yang et al., 2024): token sparsity guided by
+//! **important channels** selected offline.
+//!
+//! DS picks, per layer, the channels of the (post-RoPE) key space with the
+//! largest calibration magnitude; decode-time approximate scores use only
+//! those channels ("label cache"), then exact attention runs on the top-k
+//! tokens from the full-precision cache. Like Loki/HShare it reduces
+//! traffic, not resident memory.
+
+use crate::attention::baselines::common::DenseCache;
+use crate::attention::{exact_attention, merge_selection, AttentionBackend, AttnShape, Traffic};
+use crate::tensor::top_k_indices;
+
+pub struct DoubleSparseAttention {
+    cache: DenseCache,
+    /// Offline-selected important channel indices (into kv_dim).
+    channels: Vec<usize>,
+    /// (len, channels.len()) label cache: selected channels of rotated keys.
+    labels: Vec<f32>,
+    sink: usize,
+    recent: usize,
+    critical: usize,
+    traffic: Traffic,
+}
+
+impl DoubleSparseAttention {
+    pub fn new(
+        shape: AttnShape,
+        channels: Vec<usize>,
+        sink: usize,
+        recent: usize,
+        critical: usize,
+    ) -> DoubleSparseAttention {
+        assert!(!channels.is_empty());
+        assert!(channels.iter().all(|&c| c < shape.kv_dim()));
+        DoubleSparseAttention {
+            cache: DenseCache::new(shape),
+            channels,
+            labels: Vec::new(),
+            sink,
+            recent,
+            critical,
+            traffic: Traffic::default(),
+        }
+    }
+
+    /// Offline channel selection: top-`n_channels` by mean |k_c| over a
+    /// calibration batch of **post-RoPE** keys ((n, kv_dim) row-major).
+    pub fn select_channels(calib_keys: &[f32], kv_dim: usize, n_channels: usize) -> Vec<usize> {
+        assert_eq!(calib_keys.len() % kv_dim, 0);
+        let n = calib_keys.len() / kv_dim;
+        let mut mag = vec![0.0f64; kv_dim];
+        for row in calib_keys.chunks_exact(kv_dim) {
+            for (c, &x) in row.iter().enumerate() {
+                mag[c] += x.abs() as f64;
+            }
+        }
+        let _ = n;
+        let mag32: Vec<f32> = mag.iter().map(|&x| x as f32).collect();
+        let mut idx = top_k_indices(&mag32, n_channels);
+        idx.sort_unstable();
+        idx
+    }
+}
+
+impl AttentionBackend for DoubleSparseAttention {
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        self.cache.append(k, v, &mut self.traffic);
+        let kvd = self.cache.shape.kv_dim();
+        let rot = &self.cache.keys[(self.cache.len - 1) * kvd..self.cache.len * kvd];
+        for &c in &self.channels {
+            self.labels.push(rot[c]);
+        }
+        self.traffic.write_f32(self.channels.len());
+    }
+
+    fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+        assert!(self.cache.len > 0);
+        let qr = self.cache.rotate_query(q);
+        let shape = self.cache.shape;
+        let (d, group) = (shape.head_dim, shape.group_size());
+        // Pool rotated query heads to kv_dim, pick the important channels.
+        let kvd = shape.kv_dim();
+        let mut pooled = vec![0.0f32; kvd];
+        let inv = 1.0 / group as f32;
+        for h in 0..shape.n_heads {
+            let kvh = h / group;
+            for (a, &b) in pooled[kvh * d..(kvh + 1) * d].iter_mut().zip(&qr[h * d..(h + 1) * d]) {
+                *a += b * inv;
+            }
+        }
+        let qc: Vec<f32> = self.channels.iter().map(|&c| pooled[c]).collect();
+        let nc = self.channels.len();
+        let mut scores = Vec::with_capacity(self.cache.len);
+        for j in 0..self.cache.len {
+            scores.push(crate::tensor::ops::dot(&qc, &self.labels[j * nc..(j + 1) * nc]));
+        }
+        self.traffic.read_f32(self.cache.len * nc);
+        let crit = top_k_indices(&scores, self.critical);
+        let sel = merge_selection(self.cache.len, self.sink, self.recent, &crit);
+        let (ks, vs) = self.cache.gather(&sel, &mut self.traffic);
+        exact_attention(&shape, &qr, &ks, &vs, sel.len(), out);
+    }
+
+    fn len(&self) -> usize {
+        self.cache.len
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.traffic
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.cache.kv_bytes() + self.labels.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "double_sparse"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn channel_selection_prefers_high_magnitude() {
+        let kv_dim = 8;
+        // Channel 3 and 6 carry 10× magnitude.
+        let mut rng = Rng::new(95);
+        let mut keys = Vec::new();
+        for _ in 0..100 {
+            let mut row = rng.normal_vec(kv_dim, 0.1);
+            row[3] += 5.0;
+            row[6] -= 5.0;
+            keys.extend_from_slice(&row);
+        }
+        let ch = DoubleSparseAttention::select_channels(&keys, kv_dim, 2);
+        assert_eq!(ch, vec![3, 6]);
+    }
+
+    #[test]
+    fn attends_finite() {
+        let shape = AttnShape::mha(2, 8, 128);
+        let mut rng = Rng::new(97);
+        let mut b = DoubleSparseAttention::new(shape, vec![0, 3, 7, 11], 2, 4, 8);
+        for _ in 0..50 {
+            let k = rng.normal_vec(16, 1.0);
+            let v = rng.normal_vec(16, 1.0);
+            b.append(&k, &v);
+        }
+        let q = rng.normal_vec(16, 1.0);
+        let mut out = vec![0.0; 16];
+        b.attend(&q, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn label_cache_grows_with_channels_only() {
+        let shape = AttnShape::mha(1, 8, 64);
+        let mut rng = Rng::new(99);
+        let mut b = DoubleSparseAttention::new(shape, vec![1, 2], 1, 2, 4);
+        for _ in 0..10 {
+            let k = rng.normal_vec(8, 1.0);
+            b.append(&k, &k.clone());
+        }
+        assert_eq!(b.labels.len(), 10 * 2);
+    }
+}

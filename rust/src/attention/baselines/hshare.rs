@@ -1,0 +1,171 @@
+//! HShare baseline (Wu et al., 2025): hierarchical critical-token sharing.
+//!
+//! HShare amortizes top-k selection by sharing critical-token indices at
+//! three granularities: across heads in a KV group, across adjacent layers,
+//! and across decode steps (indices are refreshed every `refresh` steps and
+//! reused in between). Our per-layer backend implements head-level sharing
+//! (scores from the pooled query, like the leader-head scheme) plus
+//! step-level reuse; layer-level sharing is wired in the model layer by
+//! cloning the previous layer's index set (see `model::sparse_llama`).
+
+use crate::attention::baselines::common::DenseCache;
+use crate::attention::{exact_attention, merge_selection, AttentionBackend, AttnShape, Traffic};
+use crate::tensor::top_k_indices;
+
+pub struct HShareAttention {
+    cache: DenseCache,
+    sink: usize,
+    recent: usize,
+    critical: usize,
+    /// Re-select critical tokens every `refresh` decode steps.
+    refresh: usize,
+    steps: usize,
+    shared_indices: Vec<usize>,
+    traffic: Traffic,
+}
+
+impl HShareAttention {
+    pub fn new(shape: AttnShape, sink: usize, recent: usize, critical: usize, refresh: usize) -> HShareAttention {
+        HShareAttention {
+            cache: DenseCache::new(shape),
+            sink,
+            recent,
+            critical,
+            refresh: refresh.max(1),
+            steps: 0,
+            shared_indices: Vec::new(),
+            traffic: Traffic::default(),
+        }
+    }
+
+    /// Adopt critical indices shared from another layer (layer-level
+    /// hierarchy); resets the refresh countdown.
+    pub fn share_indices_from(&mut self, indices: &[usize]) {
+        self.shared_indices = indices.to_vec();
+        self.steps = 1; // counts as freshly selected
+    }
+
+    /// Current shared critical indices (for propagating to the next layer).
+    pub fn shared_indices(&self) -> &[usize] {
+        &self.shared_indices
+    }
+}
+
+impl AttentionBackend for HShareAttention {
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        self.cache.append(k, v, &mut self.traffic);
+    }
+
+    fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+        assert!(self.cache.len > 0);
+        let qr = self.cache.rotate_query(q);
+        let shape = self.cache.shape;
+        let (d, kvd, group) = (shape.head_dim, shape.kv_dim(), shape.group_size());
+
+        let needs_refresh = self.steps % self.refresh == 0 || self.shared_indices.is_empty();
+        if needs_refresh {
+            // Leader scoring: pooled query against full keys (one head-group
+            // pass instead of n_heads passes — the head-level sharing).
+            let mut pooled = vec![0.0f32; kvd];
+            let inv = 1.0 / group as f32;
+            for h in 0..shape.n_heads {
+                let kvh = h / group;
+                for (a, &b) in pooled[kvh * d..(kvh + 1) * d].iter_mut().zip(&qr[h * d..(h + 1) * d]) {
+                    *a += b * inv;
+                }
+            }
+            let mut scores = Vec::with_capacity(self.cache.len);
+            for j in 0..self.cache.len {
+                scores.push(crate::tensor::ops::dot(&pooled, &self.cache.keys[j * kvd..(j + 1) * kvd]));
+            }
+            self.traffic.read_f32(self.cache.len * kvd);
+            self.shared_indices = top_k_indices(&scores, self.critical);
+        }
+        self.steps += 1;
+
+        let sel = merge_selection(self.cache.len, self.sink, self.recent, &self.shared_indices);
+        let (ks, vs) = self.cache.gather(&sel, &mut self.traffic);
+        exact_attention(&shape, &qr, &ks, &vs, sel.len(), out);
+    }
+
+    fn len(&self) -> usize {
+        self.cache.len
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.traffic
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.cache.kv_bytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "hshare"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reuses_indices_between_refreshes() {
+        let shape = AttnShape::mha(1, 8, 128);
+        let mut rng = Rng::new(107);
+        let mut b = HShareAttention::new(shape, 1, 2, 4, 4);
+        for _ in 0..30 {
+            let k = rng.normal_vec(8, 1.0);
+            b.append(&k, &k.clone());
+        }
+        let q = rng.normal_vec(8, 1.0);
+        let mut out = vec![0.0; 8];
+        b.attend(&q, &mut out);
+        let first = b.shared_indices().to_vec();
+        // Next step with a different query but before refresh: same indices.
+        let q2 = rng.normal_vec(8, 1.0);
+        b.append(&rng.normal_vec(8, 1.0), &rng.normal_vec(8, 1.0));
+        b.attend(&q2, &mut out);
+        assert_eq!(b.shared_indices(), first.as_slice());
+    }
+
+    #[test]
+    fn refresh_recomputes() {
+        let shape = AttnShape::mha(1, 8, 256);
+        let mut rng = Rng::new(109);
+        let mut b = HShareAttention::new(shape, 0, 1, 3, 2);
+        for _ in 0..40 {
+            let k = rng.normal_vec(8, 1.0);
+            b.append(&k, &k.clone());
+        }
+        let mut out = vec![0.0; 8];
+        // Step 1 selects; step 2 reuses; step 3 refreshes. Feed a query
+        // aligned with a specific late key to change the ranking.
+        b.attend(&rng.normal_vec(8, 1.0), &mut out);
+        let first = b.shared_indices().to_vec();
+        b.attend(&rng.normal_vec(8, 1.0), &mut out); // reuse
+        assert_eq!(b.shared_indices(), first.as_slice());
+        // Insert a dominant key, then refresh step must include it.
+        let big = vec![10.0f32; 8];
+        b.append(&big, &big);
+        b.attend(&big, &mut out); // step 3 -> refresh
+        let last_idx = b.len() - 1;
+        assert!(b.shared_indices().contains(&last_idx), "{:?}", b.shared_indices());
+    }
+
+    #[test]
+    fn share_from_other_layer() {
+        let shape = AttnShape::mha(1, 4, 64);
+        let mut b = HShareAttention::new(shape, 0, 1, 2, 8);
+        let mut rng = Rng::new(111);
+        for _ in 0..10 {
+            let k = rng.normal_vec(4, 1.0);
+            b.append(&k, &k.clone());
+        }
+        b.share_indices_from(&[3, 7]);
+        let mut out = vec![0.0; 4];
+        b.attend(&rng.normal_vec(4, 1.0), &mut out);
+        assert_eq!(b.shared_indices(), &[3, 7]);
+    }
+}

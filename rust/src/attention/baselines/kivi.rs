@@ -1,0 +1,153 @@
+//! KIVI baseline (Liu et al., 2024): tuning-free asymmetric KV-cache
+//! quantization — keys per-channel, values per-token, with a full-precision
+//! recent window. Attention itself stays dense (every token participates),
+//! so accuracy is high but traffic scales with the full sequence.
+
+use crate::attention::{exact_attention, AttentionBackend, AttnShape, Traffic};
+use crate::quant::{Bits, TokenQuantStore};
+use crate::rope::RopeTable;
+
+pub struct KiviAttention {
+    shape: AttnShape,
+    rope: RopeTable,
+    /// Post-RoPE keys, per-channel group quantized (KIVI's key mode).
+    keys: TokenQuantStore,
+    /// Values, quantized per token group (same packed store, per-channel
+    /// grouping is the closest shared representation; KIVI's per-token mode
+    /// differs only in grouping axis — both are asymmetric affine).
+    values: TokenQuantStore,
+    len: usize,
+    traffic: Traffic,
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+}
+
+impl KiviAttention {
+    pub fn new(shape: AttnShape, bits: Bits, group: usize, window: usize) -> KiviAttention {
+        let kvd = shape.kv_dim();
+        KiviAttention {
+            shape,
+            rope: RopeTable::new(shape.head_dim, shape.max_seq, shape.rope_base),
+            keys: TokenQuantStore::new(kvd, bits, group, window),
+            values: TokenQuantStore::new(kvd, bits, group, window),
+            len: 0,
+            traffic: Traffic::default(),
+            scratch_k: Vec::new(),
+            scratch_v: Vec::new(),
+        }
+    }
+}
+
+impl AttentionBackend for KiviAttention {
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        let kvd = self.shape.kv_dim();
+        let mut kr = k.to_vec();
+        self.rope.apply_multihead(&mut kr, self.len);
+        self.keys.append(&kr);
+        self.values.append(v);
+        self.len += 1;
+        self.traffic.write_bytes(self.keys.row_read_bytes(self.len - 1));
+        self.traffic.write_bytes(self.values.row_read_bytes(self.len - 1));
+        let _ = kvd;
+    }
+
+    fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+        assert!(self.len > 0);
+        let kvd = self.shape.kv_dim();
+        let mut qr = q.to_vec();
+        self.rope.apply_multihead(&mut qr, self.len - 1);
+        // Dequantize the whole cache (dense attention), metering quantized
+        // byte counts — the bandwidth saving KIVI actually delivers.
+        self.scratch_k.resize(self.len * kvd, 0.0);
+        self.scratch_v.resize(self.len * kvd, 0.0);
+        for j in 0..self.len {
+            self.keys.get(j, &mut self.scratch_k[j * kvd..(j + 1) * kvd]);
+            self.values.get(j, &mut self.scratch_v[j * kvd..(j + 1) * kvd]);
+            self.traffic.read_bytes(self.keys.row_read_bytes(j));
+            self.traffic.read_bytes(self.values.row_read_bytes(j));
+        }
+        exact_attention(&self.shape, &qr, &self.scratch_k, &self.scratch_v, self.len, out);
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.traffic
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.keys.nbytes() + self.values.nbytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "kivi"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::FullAttention;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn kivi4_close_to_full() {
+        let shape = AttnShape::mha(2, 8, 128);
+        let mut rng = Rng::new(113);
+        let mut kivi = KiviAttention::new(shape, Bits::B4, 16, 16);
+        let mut full = FullAttention::new(shape);
+        for _ in 0..80 {
+            let k = rng.normal_vec(16, 1.0);
+            let v = rng.normal_vec(16, 1.0);
+            kivi.append(&k, &v);
+            full.append(&k, &v);
+        }
+        let q = rng.normal_vec(16, 1.0);
+        let mut o1 = vec![0.0; 16];
+        let mut o2 = vec![0.0; 16];
+        kivi.attend(&q, &mut o1);
+        full.attend(&q, &mut o2);
+        let err = crate::util::stats::rel_l2(&o1, &o2);
+        assert!(err < 0.15, "rel err {err}");
+    }
+
+    #[test]
+    fn kivi2_worse_than_kivi4() {
+        let shape = AttnShape::mha(2, 8, 128);
+        let mut rng = Rng::new(115);
+        let mut k4 = KiviAttention::new(shape, Bits::B4, 16, 8);
+        let mut k2 = KiviAttention::new(shape, Bits::B2, 16, 8);
+        let mut full = FullAttention::new(shape);
+        for _ in 0..80 {
+            let k = rng.normal_vec(16, 1.0);
+            let v = rng.normal_vec(16, 1.0);
+            k4.append(&k, &v);
+            k2.append(&k, &v);
+            full.append(&k, &v);
+        }
+        let q = rng.normal_vec(16, 1.0);
+        let (mut o4, mut o2, mut of) = (vec![0.0; 16], vec![0.0; 16], vec![0.0; 16]);
+        k4.attend(&q, &mut o4);
+        k2.attend(&q, &mut o2);
+        full.attend(&q, &mut of);
+        let e4 = crate::util::stats::rel_l2(&o4, &of);
+        let e2 = crate::util::stats::rel_l2(&o2, &of);
+        assert!(e4 < e2, "e4={e4} e2={e2}");
+    }
+
+    #[test]
+    fn cache_smaller_than_fp32() {
+        let shape = AttnShape::mha(2, 8, 512);
+        let mut rng = Rng::new(117);
+        let mut kivi = KiviAttention::new(shape, Bits::B2, 32, 32);
+        for _ in 0..400 {
+            let k = rng.normal_vec(16, 1.0);
+            let v = rng.normal_vec(16, 1.0);
+            kivi.append(&k, &v);
+        }
+        let fp32 = 400 * 2 * 16 * 4;
+        assert!(kivi.kv_bytes() < fp32 / 3, "{} vs {fp32}", kivi.kv_bytes());
+    }
+}

@@ -1,0 +1,164 @@
+//! Loki baseline (Singhania et al., 2024): low-rank keys for sparse
+//! attention, computed with **post-RoPE** PCA.
+//!
+//! Loki runs PCA on rotated keys offline, scores tokens with the leading
+//! principal components of the *rotated* query/key, selects top-k, then
+//! attends with the full-precision cache (the cache is NOT compressed —
+//! Table 1: memory "Median"). SALS's §3.1 argument is precisely that this
+//! post-RoPE latent space needs a higher rank for the same fidelity.
+
+use crate::attention::baselines::common::DenseCache;
+use crate::attention::{exact_attention, merge_selection, AttentionBackend, AttnShape, Traffic};
+use crate::lowrank::Projector;
+use crate::tensor::top_k_indices;
+
+pub struct LokiAttention {
+    cache: DenseCache,
+    /// PCA projector fitted on post-RoPE keys (dim = kv_dim).
+    projector: Projector,
+    /// Scoring dims (Loki's r).
+    r: usize,
+    /// (len, r) latent copies of the rotated keys, for scoring only.
+    latents: Vec<f32>,
+    sink: usize,
+    recent: usize,
+    critical: usize,
+    traffic: Traffic,
+}
+
+impl LokiAttention {
+    /// `projector` must be calibrated on **post-RoPE** keys.
+    pub fn new(
+        shape: AttnShape,
+        projector: Projector,
+        r: usize,
+        sink: usize,
+        recent: usize,
+        critical: usize,
+    ) -> LokiAttention {
+        assert_eq!(projector.dim, shape.kv_dim());
+        assert!(r <= projector.rank);
+        LokiAttention {
+            cache: DenseCache::new(shape),
+            projector,
+            r,
+            latents: Vec::new(),
+            sink,
+            recent,
+            critical,
+            traffic: Traffic::default(),
+        }
+    }
+}
+
+impl AttentionBackend for LokiAttention {
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        self.cache.append(k, v, &mut self.traffic);
+        // Latent copy of the *rotated* key (post-RoPE PCA).
+        let kvd = self.cache.shape.kv_dim();
+        let rot = &self.cache.keys[(self.cache.len - 1) * kvd..self.cache.len * kvd];
+        let mut lat = vec![0.0f32; self.projector.rank];
+        self.projector.project(rot, &mut lat);
+        self.latents.extend_from_slice(&lat[..self.r]);
+        self.traffic.write_f32(self.r);
+    }
+
+    fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+        assert!(self.cache.len > 0);
+        let qr = self.cache.rotate_query(q);
+        // Pool rotated query heads to kv_dim, then project (mirrors SALS's
+        // GQA handling so the comparison is apples-to-apples).
+        let shape = self.cache.shape;
+        let (d, kvd, group) = (shape.head_dim, shape.kv_dim(), shape.group_size());
+        let mut pooled = vec![0.0f32; kvd];
+        let inv = 1.0 / group as f32;
+        for h in 0..shape.n_heads {
+            let kvh = h / group;
+            for (a, &b) in pooled[kvh * d..(kvh + 1) * d].iter_mut().zip(&qr[h * d..(h + 1) * d]) {
+                *a += b * inv;
+            }
+        }
+        let mut qlat = vec![0.0f32; self.projector.rank];
+        self.projector.project(&pooled, &mut qlat);
+        // Score all tokens in the post-RoPE latent space.
+        let mut scores = Vec::with_capacity(self.cache.len);
+        for j in 0..self.cache.len {
+            scores.push(crate::tensor::ops::dot(&qlat[..self.r], &self.latents[j * self.r..(j + 1) * self.r]));
+        }
+        self.traffic.read_f32(self.cache.len * self.r);
+        let crit = top_k_indices(&scores, self.critical);
+        let sel = merge_selection(self.cache.len, self.sink, self.recent, &crit);
+        let (ks, vs) = self.cache.gather(&sel, &mut self.traffic);
+        exact_attention(&shape, &qr, &ks, &vs, sel.len(), out);
+    }
+
+    fn len(&self) -> usize {
+        self.cache.len
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.traffic
+    }
+
+    fn kv_bytes(&self) -> usize {
+        // Full cache + scoring latents stay resident.
+        self.cache.kv_bytes() + self.latents.len() * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "loki"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::lowrank::Calibrator;
+    use crate::rope::RopeTable;
+    use crate::util::rng::Rng;
+
+    fn post_rope_projector(shape: AttnShape, rank: usize, rng: &mut Rng) -> Projector {
+        // Calibrate on rotated keys, as Loki does.
+        let kvd = shape.kv_dim();
+        let rope = RopeTable::new(shape.head_dim, shape.max_seq, shape.rope_base);
+        let mut cal = Calibrator::new(kvd);
+        for pos in 0..300 {
+            let mut k = rng.normal_vec(kvd, 1.0);
+            rope.apply_multihead(&mut k, pos % shape.max_seq);
+            cal.add_key(&k);
+        }
+        cal.fit(rank).unwrap()
+    }
+
+    #[test]
+    fn selects_and_attends() {
+        let shape = AttnShape::mha(2, 8, 128);
+        let mut rng = Rng::new(91);
+        let proj = post_rope_projector(shape, 8, &mut rng);
+        let mut b = LokiAttention::new(shape, proj, 4, 2, 4, 8);
+        for _ in 0..60 {
+            let k = rng.normal_vec(16, 1.0);
+            let v = rng.normal_vec(16, 1.0);
+            b.append(&k, &v);
+        }
+        let q = rng.normal_vec(16, 1.0);
+        let mut out = vec![0.0; 16];
+        b.attend(&q, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn memory_not_compressed() {
+        // Loki keeps the dense cache + latents: kv_bytes > dense-only.
+        let shape = AttnShape::mha(1, 8, 64);
+        let mut rng = Rng::new(93);
+        let proj = post_rope_projector(shape, 4, &mut rng);
+        let mut b = LokiAttention::new(shape, proj, 4, 1, 2, 4);
+        for _ in 0..30 {
+            let k = rng.normal_vec(8, 1.0);
+            let v = rng.normal_vec(8, 1.0);
+            b.append(&k, &v);
+        }
+        assert!(b.kv_bytes() > 30 * 2 * 8 * 4);
+    }
+}

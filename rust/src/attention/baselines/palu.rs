@@ -1,0 +1,231 @@
+//! Palu baseline (Chang et al., 2024): pure low-rank KV-cache compression.
+//!
+//! Keys AND values are stored as rank-r latents (pre-RoPE for keys, per the
+//! accuracy-preserving choice Palu and §3.1 agree on). At every decode step
+//! the **entire** key cache must be reconstructed and re-rotated before
+//! dense attention — the overhead Figure 1(a) plots and the reason Table 1
+//! charges Palu with "High" computation. Optional latent quantization
+//! mirrors Palu's 3-bit variant (we use the nearest supported width).
+
+use crate::attention::{exact_attention, AttentionBackend, AttnShape, Traffic};
+use crate::lowrank::Projector;
+use crate::quant::{dequantize_group, quantize_group, Bits, QuantGroup};
+use crate::rope::RopeTable;
+
+pub struct PaluAttention {
+    shape: AttnShape,
+    rope: RopeTable,
+    k_proj: Projector,
+    v_proj: Projector,
+    rank: usize,
+    /// Latent caches, optionally quantized per token row.
+    k_latents: Vec<f32>,
+    v_latents: Vec<f32>,
+    k_quant: Vec<QuantGroup>,
+    v_quant: Vec<QuantGroup>,
+    quant_bits: Option<Bits>,
+    len: usize,
+    traffic: Traffic,
+    scratch_k: Vec<f32>,
+    scratch_v: Vec<f32>,
+}
+
+impl PaluAttention {
+    /// `k_proj`/`v_proj` are calibrated on pre-RoPE keys / values
+    /// respectively. `quant_bits` adds Palu's latent quantization.
+    pub fn new(
+        shape: AttnShape,
+        k_proj: Projector,
+        v_proj: Projector,
+        rank: usize,
+        quant_bits: Option<Bits>,
+    ) -> PaluAttention {
+        assert_eq!(k_proj.dim, shape.kv_dim());
+        assert_eq!(v_proj.dim, shape.kv_dim());
+        assert!(rank <= k_proj.rank && rank <= v_proj.rank);
+        PaluAttention {
+            shape,
+            rope: RopeTable::new(shape.head_dim, shape.max_seq, shape.rope_base),
+            k_proj,
+            v_proj,
+            rank,
+            k_latents: Vec::new(),
+            v_latents: Vec::new(),
+            k_quant: Vec::new(),
+            v_quant: Vec::new(),
+            quant_bits,
+            len: 0,
+            traffic: Traffic::default(),
+            scratch_k: Vec::new(),
+            scratch_v: Vec::new(),
+        }
+    }
+
+    fn latent_row(&self, quant: &[QuantGroup], latents: &[f32], j: usize, out: &mut [f32]) {
+        if self.quant_bits.is_some() {
+            dequantize_group(&quant[j], out);
+        } else {
+            out.copy_from_slice(&latents[j * self.rank..(j + 1) * self.rank]);
+        }
+    }
+
+    fn latent_row_bytes(&self) -> usize {
+        match self.quant_bits {
+            Some(b) => self.rank * b.bits() as usize / 8 + 8,
+            None => self.rank * 4,
+        }
+    }
+}
+
+impl AttentionBackend for PaluAttention {
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        let r = self.rank;
+        let mut klat = vec![0.0f32; r];
+        let mut vlat = vec![0.0f32; r];
+        self.k_proj.project(k, &mut klat);
+        self.v_proj.project(v, &mut vlat);
+        if let Some(bits) = self.quant_bits {
+            self.k_quant.push(quantize_group(&klat, bits));
+            self.v_quant.push(quantize_group(&vlat, bits));
+        } else {
+            self.k_latents.extend_from_slice(&klat);
+            self.v_latents.extend_from_slice(&vlat);
+        }
+        self.traffic.write_bytes(2 * self.latent_row_bytes());
+        self.len += 1;
+    }
+
+    fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+        assert!(self.len > 0);
+        let kvd = self.shape.kv_dim();
+        let r = self.rank;
+        let mut qr = q.to_vec();
+        self.rope.apply_multihead(&mut qr, self.len - 1);
+
+        // FULL reconstruction of the key and value caches — the Figure-1(a)
+        // overhead: O(s·r·kv_dim) work and O(s·r) cache traffic per step.
+        self.scratch_k.resize(self.len * kvd, 0.0);
+        self.scratch_v.resize(self.len * kvd, 0.0);
+        let mut lat = vec![0.0f32; r];
+        for j in 0..self.len {
+            self.latent_row(&self.k_quant, &self.k_latents, j, &mut lat);
+            self.k_proj.reconstruct(&lat, &mut self.scratch_k[j * kvd..(j + 1) * kvd]);
+            self.rope.apply_multihead(&mut self.scratch_k[j * kvd..(j + 1) * kvd], j);
+            self.latent_row(&self.v_quant, &self.v_latents, j, &mut lat);
+            self.v_proj.reconstruct(&lat, &mut self.scratch_v[j * kvd..(j + 1) * kvd]);
+            self.traffic.read_bytes(2 * self.latent_row_bytes());
+        }
+        exact_attention(&self.shape, &qr, &self.scratch_k, &self.scratch_v, self.len, out);
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.traffic
+    }
+
+    fn kv_bytes(&self) -> usize {
+        if self.quant_bits.is_some() {
+            self.k_quant.iter().chain(&self.v_quant).map(|g| g.packed.len() + 8).sum()
+        } else {
+            (self.k_latents.len() + self.v_latents.len()) * 4
+        }
+    }
+
+    fn name(&self) -> &'static str {
+        "palu"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::FullAttention;
+    use crate::lowrank::Calibrator;
+    use crate::util::rng::Rng;
+
+    fn projector_for(kv_dim: usize, rank: usize, true_rank: usize, seed: u64) -> Projector {
+        let mut rng = Rng::new(seed);
+        let basis: Vec<Vec<f32>> = (0..true_rank).map(|_| rng.normal_vec(kv_dim, 1.0)).collect();
+        let mut cal = Calibrator::new(kv_dim);
+        let mut row = vec![0.0f32; kv_dim];
+        for _ in 0..400 {
+            row.fill(0.0);
+            for b in &basis {
+                crate::tensor::ops::axpy(rng.normal_f32(), b, &mut row);
+            }
+            cal.add_key(&row);
+        }
+        cal.fit(rank).unwrap()
+    }
+
+    #[test]
+    fn full_rank_palu_matches_full_attention() {
+        let shape = AttnShape::mha(2, 8, 64);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(121);
+        let kp = projector_for(kvd, kvd, kvd, 122);
+        let vp = projector_for(kvd, kvd, kvd, 123);
+        let mut palu = PaluAttention::new(shape, kp, vp, kvd, None);
+        let mut full = FullAttention::new(shape);
+        for _ in 0..30 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            palu.append(&k, &v);
+            full.append(&k, &v);
+        }
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let (mut o1, mut o2) = (vec![0.0; shape.q_dim()], vec![0.0; shape.q_dim()]);
+        palu.attend(&q, &mut o1);
+        full.attend(&q, &mut o2);
+        for (a, b) in o1.iter().zip(&o2) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn memory_small_but_traffic_grows_with_rank_times_len() {
+        let shape = AttnShape::mha(2, 16, 256);
+        let kvd = shape.kv_dim();
+        let kp = projector_for(kvd, kvd / 4, 6, 125);
+        let vp = projector_for(kvd, kvd / 4, 6, 126);
+        let mut palu = PaluAttention::new(shape, kp, vp, kvd / 4, None);
+        let mut rng = Rng::new(127);
+        for _ in 0..100 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            palu.append(&k, &v);
+        }
+        // Cache is 4× smaller than dense fp32.
+        assert_eq!(palu.kv_bytes(), 100 * 2 * (kvd / 4) * 4);
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let mut out = vec![0.0; shape.q_dim()];
+        let t0 = palu.traffic();
+        palu.attend(&q, &mut out);
+        // Per-step read = 2 * len * r floats.
+        assert_eq!(palu.traffic().read - t0.read, (2 * 100 * (kvd / 4) * 4) as u64);
+    }
+
+    #[test]
+    fn quantized_variant_roundtrips() {
+        let shape = AttnShape::mha(1, 8, 64);
+        let kvd = shape.kv_dim();
+        let kp = projector_for(kvd, 4, 3, 129);
+        let vp = projector_for(kvd, 4, 3, 130);
+        let mut palu = PaluAttention::new(shape, kp, vp, 4, Some(Bits::B4));
+        let mut rng = Rng::new(131);
+        for _ in 0..20 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            palu.append(&k, &v);
+        }
+        let q = rng.normal_vec(kvd, 1.0);
+        let mut out = vec![0.0; kvd];
+        palu.attend(&q, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // Quantized latent cache is ~8× smaller than fp32 latents.
+        assert!(palu.kv_bytes() < 20 * 2 * 4 * 4);
+    }
+}

@@ -1,0 +1,203 @@
+//! Full (dense) attention backend — the accuracy baseline and the
+//! FlashAttention-2 stand-in for the latency tables.
+//!
+//! Keys are cached **post-RoPE** (standard serving practice: rotate once at
+//! append). `attend` makes a single streaming pass per head with an online
+//! softmax (the FlashAttention recurrence), so its traffic is exactly the
+//! `2·s·d` elements §4.5 charges full attention with.
+
+use super::{AttentionBackend, AttnShape, Traffic};
+use crate::rope::RopeTable;
+
+/// Dense KV cache + streaming-softmax attention.
+pub struct FullAttention {
+    shape: AttnShape,
+    rope: RopeTable,
+    /// (len, kv_dim) post-RoPE keys, row-major, grown by append.
+    keys: Vec<f32>,
+    /// (len, kv_dim) values.
+    values: Vec<f32>,
+    len: usize,
+    traffic: Traffic,
+    /// Scratch: per-head accumulator + rotated query (hot path must not
+    /// allocate — §Perf L3 iteration 1).
+    scratch_acc: Vec<f32>,
+    scratch_qr: Vec<f32>,
+}
+
+impl FullAttention {
+    pub fn new(shape: AttnShape) -> FullAttention {
+        let rope = RopeTable::new(shape.head_dim, shape.max_seq, shape.rope_base);
+        FullAttention {
+            shape,
+            rope,
+            keys: Vec::new(),
+            values: Vec::new(),
+            len: 0,
+            traffic: Traffic::default(),
+            scratch_acc: vec![0.0; shape.head_dim],
+            scratch_qr: Vec::new(),
+        }
+    }
+
+    /// Read-only view of the cached post-RoPE keys (used by analyses).
+    pub fn keys(&self) -> &[f32] {
+        &self.keys
+    }
+}
+
+impl AttentionBackend for FullAttention {
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        let kvd = self.shape.kv_dim();
+        assert_eq!(k.len(), kvd);
+        assert_eq!(v.len(), kvd);
+        let pos = self.len;
+        let mut kr = k.to_vec();
+        self.rope.apply_multihead(&mut kr, pos);
+        self.keys.extend_from_slice(&kr);
+        self.values.extend_from_slice(v);
+        self.len += 1;
+        self.traffic.write_f32(2 * kvd);
+    }
+
+    fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+        let d = self.shape.head_dim;
+        let kvd = self.shape.kv_dim();
+        assert_eq!(q.len(), self.shape.q_dim());
+        assert_eq!(out.len(), self.shape.q_dim());
+        assert!(self.len > 0, "attend on empty cache");
+        let pos = self.len - 1;
+        self.scratch_qr.clear();
+        self.scratch_qr.extend_from_slice(q);
+        let qr = &mut self.scratch_qr;
+        self.rope.apply_multihead(qr, pos);
+
+        let scale = 1.0 / (d as f32).sqrt();
+        let group = self.shape.group_size();
+        out.fill(0.0);
+        for h in 0..self.shape.n_heads {
+            let kvh = h / group;
+            let qh = &qr[h * d..(h + 1) * d];
+            // Online softmax (FlashAttention recurrence): single pass,
+            // running max m, running denom l, running weighted value acc.
+            let mut m = f32::NEG_INFINITY;
+            let mut l = 0.0f32;
+            let acc = &mut self.scratch_acc;
+            acc.fill(0.0);
+            for j in 0..self.len {
+                let krow = &self.keys[j * kvd + kvh * d..j * kvd + (kvh + 1) * d];
+                let s = crate::tensor::ops::dot(qh, krow) * scale;
+                let m_new = m.max(s);
+                let corr = (m - m_new).exp();
+                let p = (s - m_new).exp();
+                l = l * corr + p;
+                let vrow = &self.values[j * kvd + kvh * d..j * kvd + (kvh + 1) * d];
+                for (a, &vv) in acc.iter_mut().zip(vrow) {
+                    *a = *a * corr + p * vv;
+                }
+                m = m_new;
+            }
+            let inv = 1.0 / l;
+            let oh = &mut out[h * d..(h + 1) * d];
+            for (o, a) in oh.iter_mut().zip(acc.iter()) {
+                *o = a * inv;
+            }
+        }
+        // Each kv row (key + value) is streamed once per kv head-group pass;
+        // query heads sharing a kv head reread it (group× for GQA) but we
+        // meter the §4.5 canonical cost: 2·s·kv_dim per decode.
+        self.traffic.read_f32(2 * self.len * kvd);
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.traffic
+    }
+
+    fn kv_bytes(&self) -> usize {
+        (self.keys.len() + self.values.len()) * 4
+    }
+
+    fn name(&self) -> &'static str {
+        "full"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn fill(b: &mut FullAttention, n: usize, rng: &mut Rng) {
+        let kvd = b.shape.kv_dim();
+        for _ in 0..n {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            b.append(&k, &v);
+        }
+    }
+
+    #[test]
+    fn single_token_attention_is_value() {
+        let shape = AttnShape::mha(2, 8, 32);
+        let mut b = FullAttention::new(shape);
+        let k = vec![0.5f32; 16];
+        let v: Vec<f32> = (0..16).map(|i| i as f32 * 0.1).collect();
+        b.append(&k, &v);
+        let q = vec![1.0f32; 16];
+        let mut out = vec![0.0f32; 16];
+        b.attend(&q, &mut out);
+        for (o, vv) in out.iter().zip(&v) {
+            assert!((o - vv).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn online_softmax_matches_exact() {
+        let shape = AttnShape::mha(4, 16, 128);
+        let mut b = FullAttention::new(shape);
+        let mut rng = Rng::new(51);
+        fill(&mut b, 100, &mut rng);
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let mut out = vec![0.0f32; shape.q_dim()];
+        b.attend(&q, &mut out);
+
+        // Exact two-pass computation on the same (post-RoPE) cache.
+        let mut qr = q.clone();
+        b.rope.apply_multihead(&mut qr, b.len - 1);
+        let mut exact = vec![0.0f32; shape.q_dim()];
+        super::super::exact_attention(&shape, &qr, &b.keys, &b.values, b.len, &mut exact);
+        for (a, e) in out.iter().zip(&exact) {
+            assert!((a - e).abs() < 1e-4, "{a} vs {e}");
+        }
+    }
+
+    #[test]
+    fn traffic_grows_linearly_with_len() {
+        let shape = AttnShape::mha(1, 4, 64);
+        let mut b = FullAttention::new(shape);
+        let mut rng = Rng::new(53);
+        fill(&mut b, 10, &mut rng);
+        let q = rng.normal_vec(4, 1.0);
+        let mut out = vec![0.0f32; 4];
+        let t0 = b.traffic();
+        b.attend(&q, &mut out);
+        let dt = b.traffic().read - t0.read;
+        assert_eq!(dt, (2 * 10 * 4 * 4) as u64);
+    }
+
+    #[test]
+    fn gqa_runs() {
+        let shape = AttnShape::gqa(8, 2, 8, 64);
+        let mut b = FullAttention::new(shape);
+        let mut rng = Rng::new(55);
+        fill(&mut b, 20, &mut rng);
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let mut out = vec![0.0f32; shape.q_dim()];
+        b.attend(&q, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

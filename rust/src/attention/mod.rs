@@ -1,0 +1,207 @@
+//! Decode-time attention backends: full (FlashAttention stand-in), SALS,
+//! and every baseline the paper compares against (Table 1 / §5.1).
+//!
+//! All backends implement [`AttentionBackend`]: a per-layer KV store with
+//! `append` (new token's pre-RoPE key + value) and `attend` (current
+//! pre-RoPE multi-head query → attention output). Each backend meters its
+//! cache **memory traffic** (the quantity §4.5's roofline argument is
+//! about) and reports resident cache bytes, which drive the Memory-Access
+//! and Comp.-ratio columns of Tables 2–4.
+
+pub mod full;
+pub mod sals;
+pub mod traffic;
+
+pub mod baselines {
+    pub mod common;
+    pub mod double_sparse;
+    pub mod hshare;
+    pub mod kivi;
+    pub mod loki;
+    pub mod palu;
+    pub mod quest;
+    pub mod streaming_llm;
+}
+
+pub use full::FullAttention;
+pub use sals::{SalsAttention, SalsConfig};
+pub use traffic::Traffic;
+
+/// Shape parameters of one attention layer.
+#[derive(Clone, Copy, Debug)]
+pub struct AttnShape {
+    /// Query heads.
+    pub n_heads: usize,
+    /// KV heads (== n_heads for MHA; fewer for GQA).
+    pub n_kv_heads: usize,
+    /// Per-head dimension.
+    pub head_dim: usize,
+    /// Maximum sequence length (RoPE table size).
+    pub max_seq: usize,
+    /// RoPE base (10_000 for LLaMA2/Mistral, 500_000 for LLaMA3).
+    pub rope_base: f32,
+}
+
+impl AttnShape {
+    /// MHA shape helper.
+    pub fn mha(n_heads: usize, head_dim: usize, max_seq: usize) -> AttnShape {
+        AttnShape { n_heads, n_kv_heads: n_heads, head_dim, max_seq, rope_base: 10_000.0 }
+    }
+
+    /// GQA shape helper.
+    pub fn gqa(n_heads: usize, n_kv_heads: usize, head_dim: usize, max_seq: usize) -> AttnShape {
+        assert_eq!(n_heads % n_kv_heads, 0);
+        AttnShape { n_heads, n_kv_heads, head_dim, max_seq, rope_base: 10_000.0 }
+    }
+
+    /// Stacked query dimension (n_heads * head_dim).
+    pub fn q_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Stacked key/value dimension (n_kv_heads * head_dim).
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// Query heads per KV head.
+    pub fn group_size(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+}
+
+/// A per-layer decode-attention backend with an internal KV store.
+pub trait AttentionBackend {
+    /// Append the new token's **pre-RoPE** stacked key and value
+    /// (both length kv_dim). Position is the running token count.
+    fn append(&mut self, k: &[f32], v: &[f32]);
+
+    /// Attend with the current token's **pre-RoPE** stacked query
+    /// (length q_dim); the query's position is `len() - 1` (its KV was
+    /// appended first, mirroring standard decode). Returns (q_dim) output.
+    fn attend(&mut self, q: &[f32], out: &mut [f32]);
+
+    /// Number of cached tokens.
+    fn len(&self) -> usize;
+
+    /// True if no tokens are cached.
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Cumulative cache memory traffic since construction.
+    fn traffic(&self) -> Traffic;
+
+    /// Resident KV-cache bytes at the current length.
+    fn kv_bytes(&self) -> usize;
+
+    /// Human-readable method name for reports.
+    fn name(&self) -> &'static str;
+}
+
+/// Exact per-head attention over an explicit (post-RoPE) K/V token subset —
+/// the shared "exact sparse attention" epilogue (Eq. 5). `keys`/`values` are
+/// (n_sel, kv_dim) row-major; `q` is post-RoPE (q_dim). Output accumulates
+/// into `out` (q_dim). Returns nothing; caller meters traffic.
+pub(crate) fn exact_attention(
+    shape: &AttnShape,
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    n_sel: usize,
+    out: &mut [f32],
+) {
+    let d = shape.head_dim;
+    let kvd = shape.kv_dim();
+    let scale = 1.0 / (d as f32).sqrt();
+    let group = shape.group_size();
+    let mut scores = vec![0.0f32; n_sel];
+    out.fill(0.0);
+    for h in 0..shape.n_heads {
+        let kvh = h / group;
+        let qh = &q[h * d..(h + 1) * d];
+        for (j, s) in scores.iter_mut().enumerate() {
+            let krow = &keys[j * kvd + kvh * d..j * kvd + (kvh + 1) * d];
+            *s = crate::tensor::ops::dot(qh, krow) * scale;
+        }
+        crate::tensor::ops::softmax(&mut scores);
+        let oh = &mut out[h * d..(h + 1) * d];
+        for (j, &p) in scores.iter().enumerate() {
+            let vrow = &values[j * kvd + kvh * d..j * kvd + (kvh + 1) * d];
+            crate::tensor::ops::axpy(p, vrow, oh);
+        }
+    }
+}
+
+/// Merge sink tokens, a recent window, and selected critical indices into a
+/// sorted, deduplicated index set (the paper's x sink + y critical + z
+/// recent composition, §5.2).
+pub fn merge_selection(
+    seq_len: usize,
+    sink: usize,
+    recent: usize,
+    critical: &[usize],
+) -> Vec<usize> {
+    let mut mask = vec![false; seq_len];
+    for i in 0..sink.min(seq_len) {
+        mask[i] = true;
+    }
+    for i in seq_len.saturating_sub(recent)..seq_len {
+        mask[i] = true;
+    }
+    for &i in critical {
+        if i < seq_len {
+            mask[i] = true;
+        }
+    }
+    mask.iter().enumerate().filter_map(|(i, &m)| if m { Some(i) } else { None }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_selection_dedups_and_sorts() {
+        let sel = merge_selection(10, 2, 3, &[5, 1, 7, 7]);
+        assert_eq!(sel, vec![0, 1, 5, 7, 8, 9]);
+    }
+
+    #[test]
+    fn merge_selection_small_seq() {
+        let sel = merge_selection(2, 4, 4, &[9]);
+        assert_eq!(sel, vec![0, 1]);
+    }
+
+    #[test]
+    fn shape_helpers() {
+        let s = AttnShape::gqa(8, 2, 16, 128);
+        assert_eq!(s.q_dim(), 128);
+        assert_eq!(s.kv_dim(), 32);
+        assert_eq!(s.group_size(), 4);
+    }
+
+    #[test]
+    fn exact_attention_single_token_returns_value() {
+        // One cached token: softmax over a singleton is 1 -> out == value.
+        let shape = AttnShape::mha(2, 4, 8);
+        let q = vec![0.3f32; 8];
+        let k = vec![0.1f32; 8];
+        let v: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; 8];
+        exact_attention(&shape, &q, &k, &v, 1, &mut out);
+        assert_eq!(out, v);
+    }
+
+    #[test]
+    fn exact_attention_gqa_maps_heads() {
+        // 2 query heads share 1 kv head; identical q halves -> identical out.
+        let shape = AttnShape::gqa(2, 1, 4, 8);
+        let q = [vec![0.5f32; 4], vec![0.5f32; 4]].concat();
+        let k = vec![0.2f32; 8]; // 2 tokens × kv_dim 4
+        let v = vec![1.0f32, 2.0, 3.0, 4.0, 5.0, 6.0, 7.0, 8.0];
+        let mut out = vec![0.0f32; 8];
+        exact_attention(&shape, &q, &k, &v, 2, &mut out);
+        assert_eq!(&out[..4], &out[4..]);
+    }
+}

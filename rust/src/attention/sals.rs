@@ -1,0 +1,533 @@
+//! SALS decode attention (Algorithm 1): latent KV cache, critical-token
+//! selection in latent space, selective reconstruction + RoPE, exact sparse
+//! attention.
+//!
+//! Per decode step:
+//! 1. `k̃ = U_rᵀ k` — append the new token's key as an r-dim latent
+//!    (pre-RoPE, §3.1: post-RoPE keys have higher effective rank); values go
+//!    to the channel-wise group-quantized store with an fp32 recent window.
+//! 2. `s_j = q̃[:r*] · k̃_j[:r*]` — cheap RoPE-free scores over the whole
+//!    latent cache using only the leading r* latent dims (§4.3).
+//! 3. `C = sink ∪ recent ∪ top-k(s)` — critical-token set (§5.2 layout).
+//! 4. `K_C = K̃_C U_rᵀ`, RoPE(K_C), RoPE(q) — reconstruct only |C| keys.
+//!    Recent-window keys are kept fp32 and skip reconstruction (the paper's
+//!    half-compressed high-precision window; exactness is the limit case).
+//! 5. Exact softmax attention over (K_C, V_C) per head (Eq. 5).
+//!
+//! GQA: the latent space is calibrated on stacked **KV-head** keys
+//! (kv_dim = n_kv_heads·head_dim). Queries are mean-pooled per KV group to
+//! kv_dim before projection — the single-head shared-latent analogue for
+//! grouped queries (documented in DESIGN.md §3).
+
+use super::{merge_selection, AttentionBackend, AttnShape, Traffic};
+use crate::lowrank::Projector;
+use crate::quant::{Bits, TokenQuantStore};
+use crate::rope::RopeTable;
+use crate::tensor::top_k_indices_into;
+
+/// SALS hyper-parameters (§5.1/§5.2 defaults).
+#[derive(Clone, Debug)]
+pub struct SalsConfig {
+    /// Latent rank r (compression d_r = r / kv_dim).
+    pub rank: usize,
+    /// Scoring rank r* (paper: r/2).
+    pub r_star: usize,
+    /// Sink tokens always kept (x).
+    pub sink: usize,
+    /// Recent window always kept + stored high-precision (z / w).
+    pub recent: usize,
+    /// Critical-token budget for top-k (y).
+    pub critical: usize,
+    /// Value-cache quantization bits (4 at 25%, 2 at 12.5%).
+    pub v_bits: Bits,
+    /// Quantization group size along the token axis.
+    pub group: usize,
+}
+
+impl SalsConfig {
+    /// Paper's SALS-25% setting for a given kv_dim: r = kv_dim/4, r* = r/2,
+    /// 4-bit values.
+    pub fn sals_25(kv_dim: usize, sink: usize, critical: usize, recent: usize) -> SalsConfig {
+        SalsConfig {
+            rank: kv_dim / 4,
+            r_star: kv_dim / 8,
+            sink,
+            recent,
+            critical,
+            v_bits: Bits::B4,
+            group: 32,
+        }
+    }
+
+    /// Paper's SALS-12.5% setting: r = kv_dim/8, r* = r/2, 2-bit values.
+    pub fn sals_125(kv_dim: usize, sink: usize, critical: usize, recent: usize) -> SalsConfig {
+        SalsConfig {
+            rank: kv_dim / 8,
+            r_star: kv_dim / 16,
+            sink,
+            recent,
+            critical,
+            v_bits: Bits::B2,
+            group: 32,
+        }
+    }
+}
+
+/// SALS attention backend for one layer.
+pub struct SalsAttention {
+    shape: AttnShape,
+    cfg: SalsConfig,
+    projector: Projector,
+    /// Uᵀ (rank, kv_dim) row-major — reconstruction as a blocked matmul
+    /// with a unit-stride kv_dim inner loop (§Perf L3 iteration 3; the
+    /// per-row rank-length dots were the decode-op bottleneck).
+    u_t: crate::tensor::Mat,
+    rope: RopeTable,
+    /// (len, rank) pre-RoPE latent keys.
+    latent_keys: Vec<f32>,
+    /// fp32 pre-RoPE keys for the recent window (ring buffer of
+    /// `recent + 1` rows, indexed by absolute position % capacity).
+    recent_keys: Vec<f32>,
+    recent_cap: usize,
+    /// Quantized value store (fp32 recent window inside).
+    values: TokenQuantStore,
+    len: usize,
+    traffic: Traffic,
+    // ---- scratch buffers (hot path must not allocate) ----
+    scratch_scores: Vec<f32>,
+    scratch_idx: Vec<usize>,
+    scratch_qlat: Vec<f32>,
+    scratch_pool: Vec<f32>,
+    scratch_keys: Vec<f32>,
+    scratch_vals: Vec<f32>,
+    scratch_lat: Vec<f32>,
+    scratch_qr: Vec<f32>,
+}
+
+impl SalsAttention {
+    /// `projector` must be calibrated on stacked pre-RoPE KV-head keys of
+    /// dimension `shape.kv_dim()`.
+    pub fn new(shape: AttnShape, cfg: SalsConfig, projector: Projector) -> SalsAttention {
+        assert_eq!(projector.dim, shape.kv_dim(), "projector dim != kv_dim");
+        assert!(cfg.rank <= projector.rank, "config rank exceeds projector rank");
+        assert!(cfg.r_star <= cfg.rank, "r* must be <= r");
+        let rope = RopeTable::new(shape.head_dim, shape.max_seq, shape.rope_base);
+        let recent_cap = cfg.recent.max(1);
+        let values = TokenQuantStore::new(shape.kv_dim(), cfg.v_bits, cfg.group, cfg.recent.max(cfg.group));
+        // Uᵀ truncated to the configured rank.
+        let mut u_t = crate::tensor::Mat::zeros(cfg.rank, shape.kv_dim());
+        for i in 0..shape.kv_dim() {
+            for j in 0..cfg.rank {
+                u_t.data[j * shape.kv_dim() + i] = projector.u.data[i * projector.rank + j];
+            }
+        }
+        SalsAttention {
+            shape,
+            projector,
+            u_t,
+            rope,
+            latent_keys: Vec::new(),
+            recent_keys: vec![0.0; recent_cap * shape.kv_dim()],
+            recent_cap,
+            values,
+            len: 0,
+            traffic: Traffic::default(),
+            scratch_scores: Vec::new(),
+            scratch_idx: Vec::new(),
+            scratch_qlat: vec![0.0; cfg.rank],
+            scratch_pool: vec![0.0; shape.kv_dim()],
+            scratch_keys: Vec::new(),
+            scratch_vals: Vec::new(),
+            scratch_lat: Vec::new(),
+            scratch_qr: Vec::new(),
+            cfg,
+        }
+    }
+
+    /// Latent scores of every cached token for a pre-RoPE query — exposed
+    /// for the Figure-2 overlap-score analysis.
+    pub fn latent_scores(&mut self, q: &[f32]) -> Vec<f32> {
+        self.compute_scores(q);
+        self.scratch_scores.clone()
+    }
+
+    /// Pool query heads per KV group (mean) then project to latent space.
+    fn project_query(&mut self, q: &[f32]) {
+        let d = self.shape.head_dim;
+        let group = self.shape.group_size();
+        let kvd = self.shape.kv_dim();
+        if group == 1 {
+            self.scratch_pool[..kvd].copy_from_slice(q);
+        } else {
+            let inv = 1.0 / group as f32;
+            self.scratch_pool.fill(0.0);
+            for h in 0..self.shape.n_heads {
+                let kvh = h / group;
+                let qh = &q[h * d..(h + 1) * d];
+                let dst = &mut self.scratch_pool[kvh * d..(kvh + 1) * d];
+                for (a, &b) in dst.iter_mut().zip(qh) {
+                    *a += b * inv;
+                }
+            }
+        }
+        let pool = std::mem::take(&mut self.scratch_pool);
+        self.projector.project(&pool, &mut self.scratch_qlat);
+        self.scratch_pool = pool;
+    }
+
+    /// Fill scratch_scores with r*-dim latent scores for all cached tokens.
+    fn compute_scores(&mut self, q: &[f32]) {
+        self.project_query(q);
+        let r = self.cfg.rank;
+        let rs = self.cfg.r_star;
+        self.scratch_scores.clear();
+        self.scratch_scores.reserve(self.len);
+        let qlat = &self.scratch_qlat[..rs];
+        for j in 0..self.len {
+            let krow = &self.latent_keys[j * r..j * r + rs];
+            self.scratch_scores.push(crate::tensor::ops::dot(qlat, krow));
+        }
+        self.traffic.read_f32(self.len * rs);
+    }
+
+    fn recent_slot(&self, pos: usize) -> usize {
+        pos % self.recent_cap
+    }
+
+    /// Is `pos` still inside the fp32 recent-key ring?
+    fn in_recent(&self, pos: usize) -> bool {
+        pos + self.recent_cap >= self.len && self.cfg.recent > 0
+    }
+}
+
+impl AttentionBackend for SalsAttention {
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        let kvd = self.shape.kv_dim();
+        assert_eq!(k.len(), kvd);
+        assert_eq!(v.len(), kvd);
+        let r = self.cfg.rank;
+        let pos = self.len;
+        // Latent projection of the pre-RoPE key (Algorithm 1, line 2).
+        let start = self.latent_keys.len();
+        self.latent_keys.resize(start + r, 0.0);
+        self.projector.project(k, &mut self.latent_keys[start..start + r]);
+        self.traffic.write_f32(r);
+        // fp32 recent-key ring.
+        let slot = self.recent_slot(pos);
+        self.recent_keys[slot * kvd..(slot + 1) * kvd].copy_from_slice(k);
+        // Quantized value store (fp32 recent window inside).
+        self.values.append(v);
+        self.traffic.write_bytes(self.values.row_read_bytes(pos));
+        self.len += 1;
+    }
+
+    fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+        let kvd = self.shape.kv_dim();
+        let r = self.cfg.rank;
+        assert_eq!(q.len(), self.shape.q_dim());
+        assert!(self.len > 0, "attend on empty cache");
+        let pos = self.len - 1;
+
+        // ---- Stage 2: latent scoring (lines 3–4) ----
+        self.compute_scores(q);
+
+        // ---- Stage 2: top-k + sink/recent merge (line 5) ----
+        let scores = std::mem::take(&mut self.scratch_scores);
+        top_k_indices_into(&scores, self.cfg.critical, &mut self.scratch_idx);
+        self.scratch_scores = scores;
+        let sel = merge_selection(self.len, self.cfg.sink, self.cfg.recent, &self.scratch_idx);
+        let n_sel = sel.len();
+
+        // ---- Stage 3: selective reconstruction + RoPE (lines 6–7) ----
+        // Batched reconstruction: gather selected latents contiguously and
+        // run ONE (n_sel, r) @ (r, kvd) matmul whose inner loop is a
+        // unit-stride kvd-length axpy (SIMD), then overwrite recent rows
+        // with their exact fp32 keys (high-precision window).
+        self.scratch_keys.resize(n_sel * kvd, 0.0);
+        self.scratch_vals.resize(n_sel * kvd, 0.0);
+        self.scratch_lat.resize(n_sel * r, 0.0);
+        for (row, &j) in sel.iter().enumerate() {
+            self.scratch_lat[row * r..(row + 1) * r]
+                .copy_from_slice(&self.latent_keys[j * r..(j + 1) * r]);
+        }
+        crate::tensor::ops::matmul(
+            &self.scratch_lat,
+            &self.u_t.data,
+            &mut self.scratch_keys,
+            n_sel,
+            r,
+            kvd,
+        );
+        for (row, &j) in sel.iter().enumerate() {
+            let kdst_range = row * kvd..(row + 1) * kvd;
+            if self.in_recent(j) {
+                // High-precision window: exact pre-RoPE key, no reconstruction.
+                let slot = self.recent_slot(j);
+                self.scratch_keys[kdst_range.clone()]
+                    .copy_from_slice(&self.recent_keys[slot * kvd..(slot + 1) * kvd]);
+                self.traffic.read_f32(kvd);
+            } else {
+                self.traffic.read_f32(r);
+            }
+            // RoPE at the token's original position (line 7).
+            self.rope.apply_multihead(&mut self.scratch_keys[kdst_range], j);
+            // Values: dequantize (recent rows are exact fp32).
+            self.values.get(j, &mut self.scratch_vals[row * kvd..(row + 1) * kvd]);
+            self.traffic.read_bytes(self.values.row_read_bytes(j));
+        }
+
+        // RoPE the query at its position.
+        self.scratch_qr.clear();
+        self.scratch_qr.extend_from_slice(q);
+        self.rope.apply_multihead(&mut self.scratch_qr, pos);
+
+        // ---- Stage 3: exact sparse attention (lines 8–9, Eq. 5) ----
+        super::exact_attention(
+            &self.shape,
+            &self.scratch_qr,
+            &self.scratch_keys,
+            &self.scratch_vals,
+            n_sel,
+            out,
+        );
+    }
+
+    fn len(&self) -> usize {
+        self.len
+    }
+
+    fn traffic(&self) -> Traffic {
+        self.traffic
+    }
+
+    fn kv_bytes(&self) -> usize {
+        self.latent_keys.len() * 4 + self.recent_keys.len() * 4 + self.values.nbytes()
+    }
+
+    fn name(&self) -> &'static str {
+        "sals"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::FullAttention;
+    use crate::lowrank::Calibrator;
+    use crate::util::rng::Rng;
+
+    /// Build a projector from keys with global low-rank structure.
+    fn make_projector(kv_dim: usize, rank: usize, true_rank: usize, rng: &mut Rng) -> Projector {
+        let basis: Vec<Vec<f32>> = (0..true_rank).map(|_| rng.normal_vec(kv_dim, 1.0)).collect();
+        let mut cal = Calibrator::new(kv_dim);
+        let mut row = vec![0.0f32; kv_dim];
+        for _ in 0..600 {
+            row.fill(0.0);
+            for b in &basis {
+                let c = rng.normal_f32();
+                crate::tensor::ops::axpy(c, b, &mut row);
+            }
+            for v in row.iter_mut() {
+                *v += rng.normal_f32() * 0.02;
+            }
+            cal.add_key(&row);
+        }
+        cal.fit(rank).unwrap()
+    }
+
+    /// Draw a key from the same low-rank family used in make_projector.
+    fn lowrank_sampler(kv_dim: usize, true_rank: usize, seed: u64) -> impl FnMut(&mut Rng) -> Vec<f32> {
+        let mut brng = Rng::new(seed);
+        let basis: Vec<Vec<f32>> = (0..true_rank).map(|_| brng.normal_vec(kv_dim, 1.0)).collect();
+        move |rng: &mut Rng| {
+            let mut row = vec![0.0f32; kv_dim];
+            for b in &basis {
+                let c = rng.normal_f32();
+                crate::tensor::ops::axpy(c, b, &mut row);
+            }
+            row
+        }
+    }
+
+    fn cfg_small(rank: usize) -> SalsConfig {
+        SalsConfig {
+            rank,
+            r_star: rank / 2,
+            sink: 2,
+            recent: 8,
+            critical: 16,
+            v_bits: Bits::B4,
+            group: 8,
+        }
+    }
+
+    #[test]
+    fn matches_full_attention_when_selection_covers_all() {
+        // critical >= seq and exact projector rank -> SALS == full attention.
+        let shape = AttnShape::mha(2, 8, 64);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(71);
+        // Full-rank projector (rank == dim): reconstruction is exact.
+        let mut cal = Calibrator::new(kvd);
+        for _ in 0..200 {
+            cal.add_key(&rng.normal_vec(kvd, 1.0));
+        }
+        let proj = cal.fit(kvd).unwrap();
+        let cfg = SalsConfig {
+            rank: kvd,
+            r_star: kvd,
+            sink: 0,
+            recent: 64, // whole sequence high-precision -> values exact too
+            critical: 64,
+            v_bits: Bits::B8,
+            group: 8,
+        };
+        let mut sals = SalsAttention::new(shape, cfg, proj);
+        let mut full = FullAttention::new(shape);
+        for _ in 0..30 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            sals.append(&k, &v);
+            full.append(&k, &v);
+        }
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let mut o1 = vec![0.0; shape.q_dim()];
+        let mut o2 = vec![0.0; shape.q_dim()];
+        sals.attend(&q, &mut o1);
+        full.attend(&q, &mut o2);
+        for (a, b) in o1.iter().zip(&o2) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn close_to_full_on_low_rank_keys() {
+        let shape = AttnShape::mha(2, 8, 256);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(73);
+        let proj = make_projector(kvd, 8, 4, &mut rng);
+        let mut sample = lowrank_sampler(kvd, 4, 73);
+        let mut sals = SalsAttention::new(shape, cfg_small(8), proj);
+        let mut full = FullAttention::new(shape);
+        for _ in 0..100 {
+            let k = sample(&mut rng);
+            let v = rng.normal_vec(kvd, 1.0);
+            sals.append(&k, &v);
+            full.append(&k, &v);
+        }
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let mut o1 = vec![0.0; shape.q_dim()];
+        let mut o2 = vec![0.0; shape.q_dim()];
+        sals.attend(&q, &mut o1);
+        full.attend(&q, &mut o2);
+        let err = crate::util::stats::rel_l2(&o1, &o2);
+        assert!(err < 0.35, "rel err {err}");
+        let cos = crate::util::stats::cosine(&o1, &o2);
+        assert!(cos > 0.9, "cosine {cos}");
+    }
+
+    #[test]
+    fn traffic_much_lower_than_full() {
+        let shape = AttnShape::mha(4, 16, 1024);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(75);
+        let proj = make_projector(kvd, kvd / 4, 8, &mut rng);
+        let cfg = SalsConfig::sals_25(kvd, 4, 32, 16);
+        let mut sals = SalsAttention::new(shape, cfg, proj);
+        let mut full = FullAttention::new(shape);
+        let mut sample = lowrank_sampler(kvd, 8, 75);
+        for _ in 0..512 {
+            let k = sample(&mut rng);
+            let v = rng.normal_vec(kvd, 1.0);
+            sals.append(&k, &v);
+            full.append(&k, &v);
+        }
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let mut out = vec![0.0; shape.q_dim()];
+        let s0 = sals.traffic();
+        sals.attend(&q, &mut out);
+        let f0 = full.traffic();
+        full.attend(&q, &mut out);
+        let sals_read = sals.traffic().read - s0.read;
+        let full_read = full.traffic().read - f0.read;
+        assert!(
+            (sals_read as f64) < full_read as f64 / 4.0,
+            "sals {sals_read} vs full {full_read}"
+        );
+    }
+
+    #[test]
+    fn cache_bytes_compressed() {
+        let shape = AttnShape::mha(4, 16, 512);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(77);
+        let proj = make_projector(kvd, kvd / 4, 8, &mut rng);
+        let cfg = SalsConfig::sals_25(kvd, 4, 32, 16);
+        let mut sals = SalsAttention::new(shape, cfg, proj);
+        let mut full = FullAttention::new(shape);
+        for _ in 0..256 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            sals.append(&k, &v);
+            full.append(&k, &v);
+        }
+        // Paper Table 2: SALS-25% comp ratio 0.28 vs fp16 baseline.
+        // Ours is fp32-relative; latents (r=kvd/4) + 4-bit values + windows
+        // must land well under 50% of the dense cache.
+        assert!(
+            sals.kv_bytes() * 2 < full.kv_bytes(),
+            "sals {} vs full {}",
+            sals.kv_bytes(),
+            full.kv_bytes()
+        );
+    }
+
+    #[test]
+    fn selection_includes_sink_and_recent() {
+        let shape = AttnShape::mha(1, 8, 128);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(79);
+        let proj = make_projector(kvd, 4, 4, &mut rng);
+        let cfg = SalsConfig {
+            rank: 4,
+            r_star: 2,
+            sink: 2,
+            recent: 4,
+            critical: 2,
+            v_bits: Bits::B4,
+            group: 4,
+        };
+        let mut sals = SalsAttention::new(shape, cfg, proj);
+        for _ in 0..50 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            sals.append(&k, &v);
+        }
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let scores = sals.latent_scores(&q);
+        let idx = crate::tensor::top_k_indices(&scores, 2);
+        let sel = merge_selection(50, 2, 4, &idx);
+        assert!(sel.contains(&0) && sel.contains(&1), "sink missing: {sel:?}");
+        for t in 46..50 {
+            assert!(sel.contains(&t), "recent {t} missing: {sel:?}");
+        }
+    }
+
+    #[test]
+    fn gqa_query_pooling_runs() {
+        let shape = AttnShape::gqa(4, 2, 8, 64);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(81);
+        let proj = make_projector(kvd, 8, 4, &mut rng);
+        let mut sals = SalsAttention::new(shape, cfg_small(8), proj);
+        for _ in 0..20 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            sals.append(&k, &v);
+        }
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let mut out = vec![0.0; shape.q_dim()];
+        sals.attend(&q, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+    }
+}

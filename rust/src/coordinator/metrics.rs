@@ -1,0 +1,80 @@
+//! Serving metrics registry: counters + latency samples, JSON-exportable.
+
+use crate::util::json::Json;
+use crate::util::stats::Summary;
+
+/// Engine-level metrics collected during a run.
+#[derive(Clone, Debug, Default)]
+pub struct Metrics {
+    pub requests_submitted: usize,
+    pub requests_completed: usize,
+    pub tokens_prefilled: usize,
+    pub tokens_generated: usize,
+    pub preemptions: usize,
+    pub steps: usize,
+    /// Per-request time-to-first-token (s).
+    pub ttft: Vec<f64>,
+    /// Per-request end-to-end latency (s).
+    pub e2e: Vec<f64>,
+    /// Wall-clock of the whole run (s).
+    pub wall_s: f64,
+    /// Peak pool utilization (pages).
+    pub peak_pool_pages: usize,
+}
+
+impl Metrics {
+    /// Decode throughput over the run (generated tokens / wall time).
+    pub fn tokens_per_second(&self) -> f64 {
+        if self.wall_s <= 0.0 {
+            0.0
+        } else {
+            self.tokens_generated as f64 / self.wall_s
+        }
+    }
+
+    pub fn ttft_summary(&self) -> Summary {
+        Summary::of(&self.ttft)
+    }
+
+    pub fn e2e_summary(&self) -> Summary {
+        Summary::of(&self.e2e)
+    }
+
+    /// Export as JSON for EXPERIMENTS.md records.
+    pub fn to_json(&self) -> Json {
+        let t = self.ttft_summary();
+        let e = self.e2e_summary();
+        Json::obj()
+            .field("requests_completed", self.requests_completed)
+            .field("tokens_generated", self.tokens_generated)
+            .field("preemptions", self.preemptions)
+            .field("steps", self.steps)
+            .field("wall_s", self.wall_s)
+            .field("tokens_per_second", self.tokens_per_second())
+            .field("ttft_p50_s", t.p50)
+            .field("ttft_p99_s", t.p99)
+            .field("e2e_p50_s", e.p50)
+            .field("e2e_p99_s", e.p99)
+            .field("peak_pool_pages", self.peak_pool_pages)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_computation() {
+        let m = Metrics { tokens_generated: 100, wall_s: 4.0, ..Default::default() };
+        assert!((m.tokens_per_second() - 25.0).abs() < 1e-12);
+        assert_eq!(Metrics::default().tokens_per_second(), 0.0);
+    }
+
+    #[test]
+    fn json_has_fields() {
+        let m = Metrics { ttft: vec![0.1, 0.2], e2e: vec![0.5], ..Default::default() };
+        let s = m.to_json().to_string();
+        assert!(s.contains("\"ttft_p50_s\""));
+        assert!(s.contains("\"tokens_per_second\""));
+    }
+}

@@ -1,0 +1,16 @@
+//! L3 serving coordinator: request types, router, continuous-batching
+//! engine, and metrics. This layer owns the event loop, the page-pool
+//! admission control, and the scheduling policy; the compute is delegated
+//! to the model's attention backends (CPU) or the PJRT runtime (artifacts).
+
+pub mod engine;
+pub mod metrics;
+pub mod request;
+pub mod router;
+pub mod trace;
+
+pub use engine::{Engine, EngineConfig};
+pub use metrics::Metrics;
+pub use request::{GenParams, Request, Response};
+pub use router::{Policy, ReplicaId, Router};
+pub use trace::{TraceGen, TraceSpec};

@@ -1,0 +1,64 @@
+//! Request/response types for the serving coordinator.
+
+use crate::kvcache::SeqId;
+use std::time::Instant;
+
+/// Generation parameters.
+#[derive(Clone, Debug)]
+pub struct GenParams {
+    pub max_new_tokens: usize,
+    /// Stop early when this token is produced (optional).
+    pub stop_token: Option<usize>,
+}
+
+impl Default for GenParams {
+    fn default() -> GenParams {
+        GenParams { max_new_tokens: 32, stop_token: None }
+    }
+}
+
+/// An inference request entering the router.
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: SeqId,
+    pub prompt: Vec<usize>,
+    pub params: GenParams,
+    /// Arrival timestamp assigned at submit time (None until submitted).
+    pub arrival: Option<Instant>,
+}
+
+impl Request {
+    pub fn new(id: SeqId, prompt: Vec<usize>, params: GenParams) -> Request {
+        Request { id, prompt, params, arrival: None }
+    }
+}
+
+/// Completed request with timing breakdown.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: SeqId,
+    pub tokens: Vec<usize>,
+    pub prompt_len: usize,
+    /// Queueing delay: submit -> first scheduled step (seconds).
+    pub queue_s: f64,
+    /// Time to first token: submit -> first generated token (seconds).
+    pub ttft_s: f64,
+    /// Total latency: submit -> finish (seconds).
+    pub e2e_s: f64,
+    /// Times this sequence was preempted and re-queued.
+    pub preemptions: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_sane() {
+        let p = GenParams::default();
+        assert!(p.max_new_tokens > 0);
+        assert!(p.stop_token.is_none());
+        let r = Request::new(1, vec![1, 2], p);
+        assert!(r.arrival.is_none());
+    }
+}

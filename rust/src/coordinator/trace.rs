@@ -1,0 +1,105 @@
+//! Synthetic request-trace generator (Poisson arrivals, mixed lengths) —
+//! feeds the serving benches and the end-to-end example.
+
+use super::request::{GenParams, Request};
+use crate::util::rng::Rng;
+
+/// Trace parameters.
+#[derive(Clone, Debug)]
+pub struct TraceSpec {
+    pub n_requests: usize,
+    /// Mean arrival rate (requests/second) for Poisson arrivals.
+    pub rate: f64,
+    pub prompt_min: usize,
+    pub prompt_max: usize,
+    pub new_tokens_min: usize,
+    pub new_tokens_max: usize,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+impl Default for TraceSpec {
+    fn default() -> TraceSpec {
+        TraceSpec {
+            n_requests: 32,
+            rate: 16.0,
+            prompt_min: 16,
+            prompt_max: 128,
+            new_tokens_min: 8,
+            new_tokens_max: 64,
+            vocab: 512,
+            seed: 42,
+        }
+    }
+}
+
+/// A generated trace entry: the request plus its arrival offset (seconds
+/// from trace start).
+#[derive(Clone, Debug)]
+pub struct TimedRequest {
+    pub at_s: f64,
+    pub request: Request,
+}
+
+/// Deterministic trace generator.
+pub struct TraceGen;
+
+impl TraceGen {
+    pub fn generate(spec: &TraceSpec) -> Vec<TimedRequest> {
+        assert!(spec.prompt_min >= 1 && spec.prompt_max >= spec.prompt_min);
+        assert!(spec.new_tokens_max >= spec.new_tokens_min && spec.new_tokens_min >= 1);
+        let mut rng = Rng::new(spec.seed);
+        let mut t = 0.0f64;
+        let mut out = Vec::with_capacity(spec.n_requests);
+        for id in 0..spec.n_requests {
+            t += rng.exponential(spec.rate);
+            let plen = rng.range(spec.prompt_min, spec.prompt_max + 1);
+            let prompt: Vec<usize> = (0..plen).map(|_| rng.below(spec.vocab)).collect();
+            let n_new = rng.range(spec.new_tokens_min, spec.new_tokens_max + 1);
+            out.push(TimedRequest {
+                at_s: t,
+                request: Request::new(id as u64, prompt, GenParams { max_new_tokens: n_new, stop_token: None }),
+            });
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_monotone() {
+        let spec = TraceSpec::default();
+        let a = TraceGen::generate(&spec);
+        let b = TraceGen::generate(&spec);
+        assert_eq!(a.len(), spec.n_requests);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.request.prompt, y.request.prompt);
+        }
+        for w in a.windows(2) {
+            assert!(w[1].at_s >= w[0].at_s);
+        }
+    }
+
+    #[test]
+    fn respects_bounds() {
+        let spec = TraceSpec { prompt_min: 4, prompt_max: 6, new_tokens_min: 2, new_tokens_max: 3, ..Default::default() };
+        for tr in TraceGen::generate(&spec) {
+            assert!((4..=6).contains(&tr.request.prompt.len()));
+            assert!((2..=3).contains(&tr.request.params.max_new_tokens));
+            assert!(tr.request.prompt.iter().all(|&t| t < spec.vocab));
+        }
+    }
+
+    #[test]
+    fn arrival_rate_roughly_matches() {
+        let spec = TraceSpec { n_requests: 2000, rate: 10.0, ..Default::default() };
+        let tr = TraceGen::generate(&spec);
+        let span = tr.last().unwrap().at_s;
+        let rate = 2000.0 / span;
+        assert!((rate - 10.0).abs() < 1.0, "rate {rate}");
+    }
+}

@@ -1,0 +1,200 @@
+//! Paged KV-cache pool — the vLLM-style block manager that gives the
+//! coordinator admission control and backpressure over latent-cache memory.
+//!
+//! Backends own their storage; the pool is the *allocator of record*: every
+//! sequence must reserve pages (fixed-size byte blocks) before its caches
+//! may grow. When the pool is exhausted, the scheduler stops admitting new
+//! sequences and queues them (backpressure), exactly like vLLM's block
+//! manager refusing block allocation. Because SALS caches are `d_r`-times
+//! smaller, the same pool admits proportionally more concurrent sequences —
+//! the mechanism behind the Table-7 throughput gains at long contexts.
+
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+
+/// Sequence identifier used by the pool and coordinator.
+pub type SeqId = u64;
+
+/// Fixed-size-page memory pool with per-sequence accounting.
+#[derive(Debug)]
+pub struct PagePool {
+    /// Bytes per page.
+    pub page_bytes: usize,
+    /// Total pages in the pool.
+    pub total_pages: usize,
+    free_pages: usize,
+    /// Pages held per sequence.
+    held: HashMap<SeqId, usize>,
+    /// Peak utilization (pages), for reports.
+    peak_used: usize,
+}
+
+impl PagePool {
+    pub fn new(page_bytes: usize, total_pages: usize) -> PagePool {
+        assert!(page_bytes > 0 && total_pages > 0);
+        PagePool { page_bytes, total_pages, free_pages: total_pages, held: HashMap::new(), peak_used: 0 }
+    }
+
+    /// Pool sized for a byte budget.
+    pub fn with_budget(page_bytes: usize, budget_bytes: usize) -> PagePool {
+        PagePool::new(page_bytes, (budget_bytes / page_bytes).max(1))
+    }
+
+    pub fn free_pages(&self) -> usize {
+        self.free_pages
+    }
+
+    pub fn used_pages(&self) -> usize {
+        self.total_pages - self.free_pages
+    }
+
+    pub fn peak_used_pages(&self) -> usize {
+        self.peak_used
+    }
+
+    /// Pages needed to hold `bytes`.
+    pub fn pages_for(&self, bytes: usize) -> usize {
+        bytes.div_ceil(self.page_bytes)
+    }
+
+    /// Pages currently held by a sequence.
+    pub fn held_by(&self, seq: SeqId) -> usize {
+        self.held.get(&seq).copied().unwrap_or(0)
+    }
+
+    /// Can `seq` grow to `target_bytes` without exceeding the pool?
+    pub fn can_grow_to(&self, seq: SeqId, target_bytes: usize) -> bool {
+        let need = self.pages_for(target_bytes);
+        let have = self.held_by(seq);
+        need <= have || need - have <= self.free_pages
+    }
+
+    /// Grow (or shrink) a sequence's reservation to cover `target_bytes`.
+    /// Fails with `Error::Coordinator` when the pool is exhausted — callers
+    /// translate that into scheduling backpressure.
+    pub fn reserve(&mut self, seq: SeqId, target_bytes: usize) -> Result<()> {
+        let need = self.pages_for(target_bytes);
+        let have = self.held_by(seq);
+        if need > have {
+            let grow = need - have;
+            if grow > self.free_pages {
+                return Err(Error::Coordinator(format!(
+                    "pool exhausted: seq {seq} needs {grow} pages, {} free",
+                    self.free_pages
+                )));
+            }
+            self.free_pages -= grow;
+        } else {
+            self.free_pages += have - need;
+        }
+        if need == 0 {
+            self.held.remove(&seq);
+        } else {
+            self.held.insert(seq, need);
+        }
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Ok(())
+    }
+
+    /// Release everything a finished sequence holds.
+    pub fn release(&mut self, seq: SeqId) {
+        if let Some(pages) = self.held.remove(&seq) {
+            self.free_pages += pages;
+        }
+    }
+
+    /// Invariant check: free + Σheld == total. Used by property tests.
+    pub fn check_invariants(&self) -> Result<()> {
+        let held: usize = self.held.values().sum();
+        if held + self.free_pages != self.total_pages {
+            return Err(Error::Coordinator(format!(
+                "pool accounting broken: held {held} + free {} != total {}",
+                self.free_pages, self.total_pages
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn reserve_and_release() {
+        let mut p = PagePool::new(1024, 10);
+        p.reserve(1, 3000).unwrap(); // 3 pages
+        assert_eq!(p.used_pages(), 3);
+        p.reserve(2, 7 * 1024).unwrap();
+        assert_eq!(p.free_pages(), 0);
+        assert!(p.reserve(3, 1).is_err());
+        p.release(1);
+        assert_eq!(p.free_pages(), 3);
+        p.reserve(3, 1).unwrap();
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn grow_and_shrink_same_seq() {
+        let mut p = PagePool::new(100, 10);
+        p.reserve(1, 250).unwrap(); // 3 pages
+        p.reserve(1, 950).unwrap(); // 10 pages
+        assert_eq!(p.free_pages(), 0);
+        p.reserve(1, 100).unwrap(); // shrink to 1
+        assert_eq!(p.free_pages(), 9);
+        p.reserve(1, 0).unwrap(); // full shrink removes entry
+        assert_eq!(p.held_by(1), 0);
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn can_grow_to_is_consistent_with_reserve() {
+        let mut p = PagePool::new(10, 5);
+        p.reserve(1, 30).unwrap();
+        assert!(p.can_grow_to(1, 50));
+        assert!(!p.can_grow_to(2, 30));
+        assert!(p.can_grow_to(2, 20));
+    }
+
+    #[test]
+    fn peak_tracks_high_water() {
+        let mut p = PagePool::new(10, 8);
+        p.reserve(1, 60).unwrap();
+        p.release(1);
+        assert_eq!(p.used_pages(), 0);
+        assert_eq!(p.peak_used_pages(), 6);
+    }
+
+    #[test]
+    fn property_random_ops_preserve_accounting() {
+        // Random interleavings of reserve/release never break accounting
+        // and never exceed capacity.
+        prop::check(
+            "pagepool-accounting",
+            200,
+            |rng: &mut Rng| {
+                // encode an op sequence as raw numbers
+                let n_ops = rng.range(1, 40);
+                (0..n_ops * 3).map(|_| rng.below(1000)).collect::<Vec<usize>>()
+            },
+            |ops| {
+                let mut p = PagePool::new(16, 32);
+                for chunk in ops.chunks_exact(3) {
+                    let (seq, kind, amt) = (chunk[0] % 6, chunk[1] % 3, chunk[2]);
+                    match kind {
+                        0 | 1 => {
+                            let _ = p.reserve(seq as SeqId, amt);
+                        }
+                        _ => p.release(seq as SeqId),
+                    }
+                    if p.check_invariants().is_err() || p.used_pages() > p.total_pages {
+                        return false;
+                    }
+                }
+                true
+            },
+        );
+    }
+}

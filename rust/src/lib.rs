@@ -1,0 +1,33 @@
+//! SALS: Sparse Attention in Latent Space for KV cache compression.
+//!
+//! Reproduction of "SALS: Sparse Attention in Latent Space for KV cache
+//! Compression" (Mu et al., 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * Layer 3 (this crate): serving coordinator — request router, continuous
+//!   batcher, paged latent KV-cache manager, prefill/decode scheduler —
+//!   plus every substrate the paper depends on (low-rank calibration,
+//!   quantization, RoPE, sparse-attention baselines, workload generators).
+//! * Layer 2: JAX decode-step graphs (build-time python, `python/compile/`),
+//!   lowered once to HLO text artifacts.
+//! * Layer 1: Pallas kernels for latent scoring and the fused
+//!   reconstruct-RoPE sparse attention (interpret mode on CPU).
+//!
+//! Python never runs on the request path: the Rust binary loads
+//! `artifacts/*.hlo.txt` through PJRT (`xla` crate) and serves from there.
+
+pub mod analyze;
+pub mod attention;
+pub mod coordinator;
+pub mod harness;
+pub mod kvcache;
+pub mod linalg;
+pub mod model;
+pub mod lowrank;
+pub mod quant;
+pub mod rope;
+pub mod runtime;
+pub mod workload;
+pub mod tensor;
+pub mod util;
+
+pub use util::error::{Error, Result};

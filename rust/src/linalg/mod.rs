@@ -1,0 +1,316 @@
+//! Dense symmetric linear algebra: covariance, cyclic-Jacobi
+//! eigendecomposition, PCA, and the Loki/SALS effective-rank metric.
+//!
+//! This is the calibration substrate (§4.2): the projector `U_r` is the
+//! leading eigenbasis of the empirical key covariance `C = KᵀK`. The
+//! Appendix-A metric `Rank_l(v)` (smallest #components retaining v% of
+//! variance) is implemented here for the Figure-4 reproduction.
+
+use crate::tensor::Mat;
+
+/// Accumulates `C = Σ kᵀk` over streamed rows without materializing K.
+#[derive(Clone, Debug)]
+pub struct CovAccumulator {
+    pub dim: usize,
+    pub count: usize,
+    /// (dim, dim) row-major, symmetric.
+    pub c: Vec<f64>,
+}
+
+impl CovAccumulator {
+    pub fn new(dim: usize) -> CovAccumulator {
+        CovAccumulator { dim, count: 0, c: vec![0.0; dim * dim] }
+    }
+
+    /// Add one row vector k (length dim): C += kᵀk.
+    pub fn add_row(&mut self, k: &[f32]) {
+        assert_eq!(k.len(), self.dim);
+        // Upper triangle only; mirrored in finish().
+        for i in 0..self.dim {
+            let ki = k[i] as f64;
+            if ki == 0.0 {
+                continue;
+            }
+            let row = &mut self.c[i * self.dim..(i + 1) * self.dim];
+            for (j, cj) in row.iter_mut().enumerate().skip(i) {
+                *cj += ki * k[j] as f64;
+            }
+        }
+        self.count += 1;
+    }
+
+    /// Add many rows stored row-major in `ks` ((n, dim)).
+    pub fn add_rows(&mut self, ks: &[f32]) {
+        assert_eq!(ks.len() % self.dim, 0);
+        for row in ks.chunks_exact(self.dim) {
+            self.add_row(row);
+        }
+    }
+
+    /// Finalize into a symmetric f32 covariance matrix (optionally divide by
+    /// count for the mean outer product — eigenvectors are scale-invariant
+    /// so the paper's plain `KᵀK` and the normalized version coincide).
+    pub fn finish(&self, normalize: bool) -> Mat {
+        let d = self.dim;
+        let scale = if normalize && self.count > 0 { 1.0 / self.count as f64 } else { 1.0 };
+        let mut m = Mat::zeros(d, d);
+        for i in 0..d {
+            for j in i..d {
+                let v = (self.c[i * d + j] * scale) as f32;
+                m.data[i * d + j] = v;
+                m.data[j * d + i] = v;
+            }
+        }
+        m
+    }
+}
+
+/// Eigendecomposition result, eigenvalues descending.
+#[derive(Clone, Debug)]
+pub struct Eig {
+    /// Descending eigenvalues.
+    pub values: Vec<f32>,
+    /// Eigenvectors as COLUMNS of a (d, d) matrix: vectors.at(i, j) is
+    /// component i of eigenvector j (matching values[j]).
+    pub vectors: Mat,
+}
+
+/// Cyclic Jacobi eigendecomposition for a symmetric matrix.
+///
+/// O(d³) per sweep; converges quadratically. Dimensions here are ≤ a few
+/// thousand (nd for the joint projector), and calibration is offline, so
+/// Jacobi's simplicity and unconditional stability win over QR.
+pub fn eig_symmetric(a: &Mat, max_sweeps: usize, tol: f64) -> Eig {
+    assert_eq!(a.rows, a.cols, "eig_symmetric needs a square matrix");
+    let d = a.rows;
+    let mut m: Vec<f64> = a.data.iter().map(|&x| x as f64).collect();
+    let mut v = vec![0.0f64; d * d];
+    for i in 0..d {
+        v[i * d + i] = 1.0;
+    }
+
+    for _sweep in 0..max_sweeps {
+        // Off-diagonal Frobenius mass.
+        let mut off = 0.0f64;
+        for i in 0..d {
+            for j in (i + 1)..d {
+                off += m[i * d + j] * m[i * d + j];
+            }
+        }
+        if off.sqrt() <= tol {
+            break;
+        }
+        for p in 0..d {
+            for q in (p + 1)..d {
+                let apq = m[p * d + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[p * d + p];
+                let aqq = m[q * d + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = if theta >= 0.0 {
+                    1.0 / (theta + (1.0 + theta * theta).sqrt())
+                } else {
+                    1.0 / (theta - (1.0 + theta * theta).sqrt())
+                };
+                let c = 1.0 / (1.0 + t * t).sqrt();
+                let s = t * c;
+
+                // Rotate rows/cols p and q of m.
+                for k in 0..d {
+                    let mkp = m[k * d + p];
+                    let mkq = m[k * d + q];
+                    m[k * d + p] = c * mkp - s * mkq;
+                    m[k * d + q] = s * mkp + c * mkq;
+                }
+                for k in 0..d {
+                    let mpk = m[p * d + k];
+                    let mqk = m[q * d + k];
+                    m[p * d + k] = c * mpk - s * mqk;
+                    m[q * d + k] = s * mpk + c * mqk;
+                }
+                // Accumulate eigenvectors.
+                for k in 0..d {
+                    let vkp = v[k * d + p];
+                    let vkq = v[k * d + q];
+                    v[k * d + p] = c * vkp - s * vkq;
+                    v[k * d + q] = s * vkp + c * vkq;
+                }
+            }
+        }
+    }
+
+    // Extract eigenvalues, sort descending, permute eigenvector columns.
+    let mut order: Vec<usize> = (0..d).collect();
+    let evals: Vec<f64> = (0..d).map(|i| m[i * d + i]).collect();
+    order.sort_by(|&i, &j| evals[j].partial_cmp(&evals[i]).unwrap());
+    let mut values = Vec::with_capacity(d);
+    let mut vectors = Mat::zeros(d, d);
+    for (newcol, &oldcol) in order.iter().enumerate() {
+        values.push(evals[oldcol] as f32);
+        for row in 0..d {
+            vectors.data[row * d + newcol] = v[row * d + oldcol] as f32;
+        }
+    }
+    Eig { values, vectors }
+}
+
+/// Leading-r eigenvector block as a (d, r) projection matrix U_r.
+pub fn leading_eigvecs(eig: &Eig, r: usize) -> Mat {
+    let d = eig.vectors.rows;
+    assert!(r <= d);
+    let mut u = Mat::zeros(d, r);
+    for row in 0..d {
+        for col in 0..r {
+            u.data[row * r + col] = eig.vectors.data[row * d + col];
+        }
+    }
+    u
+}
+
+/// Appendix-A / Loki metric: smallest #components whose eigenvalue mass
+/// reaches v% of the total. Eigenvalues must be descending; negatives
+/// (numerical noise) are clamped to 0.
+pub fn rank_at_energy(values: &[f32], v_percent: f64) -> usize {
+    let total: f64 = values.iter().map(|&x| (x.max(0.0)) as f64).sum();
+    if total <= 0.0 {
+        return 0;
+    }
+    let target = total * v_percent / 100.0;
+    let mut acc = 0.0;
+    for (i, &x) in values.iter().enumerate() {
+        acc += x.max(0.0) as f64;
+        if acc >= target {
+            return i + 1;
+        }
+    }
+    values.len()
+}
+
+/// Fraction of total variance captured by the leading r eigenvalues.
+pub fn energy_fraction(values: &[f32], r: usize) -> f64 {
+    let total: f64 = values.iter().map(|&x| x.max(0.0) as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    values[..r.min(values.len())].iter().map(|&x| x.max(0.0) as f64).sum::<f64>() / total
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn reconstruct(e: &Eig) -> Mat {
+        // A = V diag(λ) Vᵀ
+        let d = e.vectors.rows;
+        let mut scaled = e.vectors.clone(); // columns scaled by λ
+        for row in 0..d {
+            for col in 0..d {
+                scaled.data[row * d + col] *= e.values[col];
+            }
+        }
+        scaled.matmul_t(&e.vectors.clone()) // (V·Λ) @ Vᵀ ... matmul_t computes A@Bᵀ with B=(d,d) rows as vectors
+    }
+
+    #[test]
+    fn eig_diag_matrix() {
+        let a = Mat::from_vec(3, 3, vec![3.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 2.0]);
+        let e = eig_symmetric(&a, 30, 1e-12);
+        assert!((e.values[0] - 3.0).abs() < 1e-5);
+        assert!((e.values[1] - 2.0).abs() < 1e-5);
+        assert!((e.values[2] - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn eig_reconstructs_random_symmetric() {
+        let mut rng = Rng::new(21);
+        let d = 12;
+        let b = Mat::randn(d, d, 1.0, &mut rng);
+        let a = {
+            // A = B Bᵀ (symmetric PSD)
+            b.matmul_t(&b)
+        };
+        let e = eig_symmetric(&a, 50, 1e-10);
+        let rec = reconstruct(&e);
+        let mut err = 0.0f64;
+        let mut norm = 0.0f64;
+        for (x, y) in rec.data.iter().zip(&a.data) {
+            err += ((x - y) as f64).powi(2);
+            norm += (*y as f64).powi(2);
+        }
+        assert!((err / norm).sqrt() < 1e-4, "rel err {}", (err / norm).sqrt());
+        // Eigenvalues of a PSD matrix are nonnegative.
+        assert!(e.values.iter().all(|&l| l > -1e-3));
+    }
+
+    #[test]
+    fn eigvecs_orthonormal() {
+        let mut rng = Rng::new(23);
+        let b = Mat::randn(8, 8, 1.0, &mut rng);
+        let a = b.matmul_t(&b);
+        let e = eig_symmetric(&a, 50, 1e-10);
+        let vtv = e.vectors.transpose().matmul(&e.vectors);
+        for i in 0..8 {
+            for j in 0..8 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((vtv.at(i, j) - expect).abs() < 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn covariance_accumulator_matches_direct() {
+        let mut rng = Rng::new(25);
+        let (n, d) = (40, 6);
+        let k = Mat::randn(n, d, 1.0, &mut rng);
+        let mut acc = CovAccumulator::new(d);
+        acc.add_rows(&k.data);
+        let c = acc.finish(false);
+        let direct = k.transpose().matmul(&k);
+        for (x, y) in c.data.iter().zip(&direct.data) {
+            assert!((x - y).abs() < 1e-3, "{x} vs {y}");
+        }
+        assert_eq!(acc.count, n);
+    }
+
+    #[test]
+    fn rank_at_energy_basics() {
+        let vals = [4.0f32, 3.0, 2.0, 1.0]; // total 10
+        assert_eq!(rank_at_energy(&vals, 40.0), 1);
+        assert_eq!(rank_at_energy(&vals, 69.0), 2);
+        assert_eq!(rank_at_energy(&vals, 90.0), 3);
+        assert_eq!(rank_at_energy(&vals, 100.0), 4);
+        assert_eq!(rank_at_energy(&[], 90.0), 0);
+    }
+
+    #[test]
+    fn energy_fraction_monotone() {
+        let vals = [5.0f32, 3.0, 1.0, 0.5];
+        let mut prev = 0.0;
+        for r in 0..=4 {
+            let e = energy_fraction(&vals, r);
+            assert!(e >= prev);
+            prev = e;
+        }
+        assert!((energy_fraction(&vals, 4) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn low_rank_data_detected() {
+        // Rows live in a 2-D subspace of R^6 -> rank_90 should be <= 2.
+        let mut rng = Rng::new(27);
+        let basis = Mat::randn(2, 6, 1.0, &mut rng);
+        let mut acc = CovAccumulator::new(6);
+        for _ in 0..200 {
+            let a = rng.normal_f32();
+            let b = rng.normal_f32();
+            let row: Vec<f32> =
+                (0..6).map(|i| a * basis.at(0, i) + b * basis.at(1, i)).collect();
+            acc.add_row(&row);
+        }
+        let e = eig_symmetric(&acc.finish(true), 50, 1e-10);
+        assert!(rank_at_energy(&e.values, 90.0) <= 2);
+    }
+}

@@ -1,0 +1,391 @@
+//! Low-rank latent projection: calibration, fit, save/load (§4.2).
+//!
+//! The projector `U_r ∈ R^{nd×r}` is the leading-r eigenbasis of the
+//! empirical covariance of stacked multi-head **pre-RoPE** keys. Lemma 1:
+//! a joint (all heads together) projector captures at least as much energy
+//! as any block-diagonal per-head projector at equal total rank — both
+//! variants are implemented so the Lemma-1 ablation bench can compare them.
+
+use crate::linalg::{eig_symmetric, leading_eigvecs, rank_at_energy, CovAccumulator, Eig};
+use crate::tensor::Mat;
+use crate::util::{Error, Result};
+use std::io::{BufRead, BufReader, BufWriter, Write};
+use std::path::Path;
+
+/// A fitted latent projector.
+#[derive(Clone, Debug)]
+pub struct Projector {
+    /// Full input dimension (n_heads * head_dim for joint mode).
+    pub dim: usize,
+    /// Latent rank r.
+    pub rank: usize,
+    /// (dim, rank) column-orthonormal projection matrix U_r.
+    pub u: Mat,
+    /// Eigenvalues of the calibration covariance (descending, full length).
+    pub spectrum: Vec<f32>,
+}
+
+impl Projector {
+    /// Project a single vector: k̃ = U_rᵀ k (length rank).
+    pub fn project(&self, k: &[f32], out: &mut [f32]) {
+        assert_eq!(k.len(), self.dim);
+        assert_eq!(out.len(), self.rank);
+        // out = kᵀU: iterate U rows (unit stride) accumulating into out.
+        out.fill(0.0);
+        for (i, &ki) in k.iter().enumerate() {
+            if ki == 0.0 {
+                continue;
+            }
+            let urow = &self.u.data[i * self.rank..(i + 1) * self.rank];
+            for (o, &uv) in out.iter_mut().zip(urow) {
+                *o += ki * uv;
+            }
+        }
+    }
+
+    /// Reconstruct: k ≈ U_r k̃ (length dim).
+    pub fn reconstruct(&self, latent: &[f32], out: &mut [f32]) {
+        assert_eq!(latent.len(), self.rank);
+        assert_eq!(out.len(), self.dim);
+        for (i, o) in out.iter_mut().enumerate() {
+            let urow = &self.u.data[i * self.rank..(i + 1) * self.rank];
+            *o = crate::tensor::ops::dot(urow, latent);
+        }
+    }
+
+    /// Project many rows ((n, dim) -> (n, rank)).
+    pub fn project_rows(&self, ks: &Mat) -> Mat {
+        assert_eq!(ks.cols, self.dim);
+        ks.matmul(&self.u)
+    }
+
+    /// Reconstruct many rows ((n, rank) -> (n, dim)).
+    pub fn reconstruct_rows(&self, latents: &Mat) -> Mat {
+        assert_eq!(latents.cols, self.rank);
+        latents.matmul_t(&self.u)
+    }
+
+    /// Captured-energy fraction of this projector on its calibration data.
+    pub fn captured_energy(&self) -> f64 {
+        crate::linalg::energy_fraction(&self.spectrum, self.rank)
+    }
+
+    /// Appendix-A Rank(v%) of the calibration spectrum.
+    pub fn rank_at(&self, v_percent: f64) -> usize {
+        rank_at_energy(&self.spectrum, v_percent)
+    }
+
+    /// Serialize to a simple text format (portable; also consumed by
+    /// `python/compile/aot.py` to bake U_r into the HLO artifacts).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let f = std::fs::File::create(path)?;
+        let mut w = BufWriter::new(f);
+        writeln!(w, "sals-projector v1")?;
+        writeln!(w, "dim {} rank {}", self.dim, self.rank)?;
+        writeln!(w, "spectrum {}", self.spectrum.len())?;
+        for v in &self.spectrum {
+            writeln!(w, "{v}")?;
+        }
+        writeln!(w, "u {}", self.u.data.len())?;
+        for v in &self.u.data {
+            writeln!(w, "{v}")?;
+        }
+        Ok(())
+    }
+
+    /// Load from [`Projector::save`] format.
+    pub fn load(path: &Path) -> Result<Projector> {
+        let f = std::fs::File::open(path)?;
+        let mut lines = BufReader::new(f).lines();
+        let mut next = || -> Result<String> {
+            lines
+                .next()
+                .ok_or_else(|| Error::Config("projector file truncated".into()))?
+                .map_err(Error::Io)
+        };
+        let magic = next()?;
+        if magic.trim() != "sals-projector v1" {
+            return Err(Error::Config(format!("bad projector magic: {magic}")));
+        }
+        let hdr = next()?;
+        let parts: Vec<&str> = hdr.split_whitespace().collect();
+        if parts.len() != 4 || parts[0] != "dim" || parts[2] != "rank" {
+            return Err(Error::Config(format!("bad projector header: {hdr}")));
+        }
+        let dim: usize = parts[1].parse().map_err(|_| Error::Config("bad dim".into()))?;
+        let rank: usize = parts[3].parse().map_err(|_| Error::Config("bad rank".into()))?;
+        let spec_hdr = next()?;
+        let spec_n: usize = spec_hdr
+            .strip_prefix("spectrum ")
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Config("bad spectrum header".into()))?;
+        let mut spectrum = Vec::with_capacity(spec_n);
+        for _ in 0..spec_n {
+            spectrum.push(next()?.trim().parse().map_err(|_| Error::Config("bad spectrum value".into()))?);
+        }
+        let u_hdr = next()?;
+        let u_n: usize = u_hdr
+            .strip_prefix("u ")
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| Error::Config("bad u header".into()))?;
+        if u_n != dim * rank {
+            return Err(Error::Config("u size mismatch".into()));
+        }
+        let mut data = Vec::with_capacity(u_n);
+        for _ in 0..u_n {
+            data.push(next()?.trim().parse().map_err(|_| Error::Config("bad u value".into()))?);
+        }
+        Ok(Projector { dim, rank, u: Mat::from_vec(dim, rank, data), spectrum })
+    }
+}
+
+/// Streaming calibration: feed pre-RoPE key rows, then fit.
+#[derive(Clone, Debug)]
+pub struct Calibrator {
+    acc: CovAccumulator,
+}
+
+impl Calibrator {
+    /// `dim` = n_heads * head_dim for joint multi-head calibration.
+    pub fn new(dim: usize) -> Calibrator {
+        Calibrator { acc: CovAccumulator::new(dim) }
+    }
+
+    /// Add one stacked multi-head key row.
+    pub fn add_key(&mut self, k: &[f32]) {
+        self.acc.add_row(k);
+    }
+
+    /// Add a row-major (n, dim) batch.
+    pub fn add_keys(&mut self, ks: &[f32]) {
+        self.acc.add_rows(ks);
+    }
+
+    pub fn count(&self) -> usize {
+        self.acc.count
+    }
+
+    /// Eigendecompose the accumulated covariance.
+    pub fn decompose(&self) -> Eig {
+        eig_symmetric(&self.acc.finish(true), 60, 1e-9)
+    }
+
+    /// Fit a rank-r joint projector (§4.2: leading-r eigenvectors of KᵀK).
+    pub fn fit(&self, rank: usize) -> Result<Projector> {
+        if rank == 0 || rank > self.acc.dim {
+            return Err(Error::Config(format!(
+                "rank {rank} out of range for dim {}",
+                self.acc.dim
+            )));
+        }
+        if self.acc.count == 0 {
+            return Err(Error::Config("no calibration data".into()));
+        }
+        let eig = self.decompose();
+        Ok(Projector {
+            dim: self.acc.dim,
+            rank,
+            u: leading_eigvecs(&eig, rank),
+            spectrum: eig.values,
+        })
+    }
+}
+
+/// Per-head block-diagonal projector (the Lemma-1 counterpart): each head's
+/// (head_dim) slice gets its own rank-r' projector with r' = rank / n_heads.
+#[derive(Clone, Debug)]
+pub struct PerHeadProjector {
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub rank_per_head: usize,
+    pub heads: Vec<Projector>,
+}
+
+impl PerHeadProjector {
+    /// Calibrate per-head projectors from stacked multi-head rows.
+    pub fn fit(keys: &Mat, n_heads: usize, total_rank: usize) -> Result<PerHeadProjector> {
+        if keys.cols % n_heads != 0 {
+            return Err(Error::Config("keys dim not divisible by heads".into()));
+        }
+        if total_rank % n_heads != 0 {
+            return Err(Error::Config("rank not divisible by heads".into()));
+        }
+        let head_dim = keys.cols / n_heads;
+        let r = total_rank / n_heads;
+        let mut heads = Vec::with_capacity(n_heads);
+        for h in 0..n_heads {
+            let mut cal = Calibrator::new(head_dim);
+            for row in 0..keys.rows {
+                cal.add_key(&keys.row(row)[h * head_dim..(h + 1) * head_dim]);
+            }
+            heads.push(cal.fit(r)?);
+        }
+        Ok(PerHeadProjector { n_heads, head_dim, rank_per_head: r, heads })
+    }
+
+    /// Project a stacked multi-head key (block-diagonal application).
+    pub fn project(&self, k: &[f32], out: &mut [f32]) {
+        assert_eq!(k.len(), self.n_heads * self.head_dim);
+        assert_eq!(out.len(), self.n_heads * self.rank_per_head);
+        for h in 0..self.n_heads {
+            self.heads[h].project(
+                &k[h * self.head_dim..(h + 1) * self.head_dim],
+                &mut out[h * self.rank_per_head..(h + 1) * self.rank_per_head],
+            );
+        }
+    }
+
+    /// Reconstruct a stacked multi-head key.
+    pub fn reconstruct(&self, latent: &[f32], out: &mut [f32]) {
+        for h in 0..self.n_heads {
+            self.heads[h].reconstruct(
+                &latent[h * self.rank_per_head..(h + 1) * self.rank_per_head],
+                &mut out[h * self.head_dim..(h + 1) * self.head_dim],
+            );
+        }
+    }
+
+    /// Mean captured energy across heads (for the Lemma-1 comparison).
+    pub fn captured_energy(&self) -> f64 {
+        self.heads.iter().map(|p| p.captured_energy()).sum::<f64>() / self.n_heads as f64
+    }
+}
+
+/// Reconstruction relative error of a projector on a batch of keys —
+/// the calibration-quality metric reported in EXPERIMENTS.md.
+pub fn reconstruction_error(p: &Projector, keys: &Mat) -> f64 {
+    let latent = p.project_rows(keys);
+    let rec = p.reconstruct_rows(&latent);
+    crate::util::stats::rel_l2(&rec.data, &keys.data)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Keys drawn from a rank-`true_rank` subspace + small noise.
+    fn low_rank_keys(n: usize, dim: usize, true_rank: usize, noise: f32, rng: &mut Rng) -> Mat {
+        let basis = Mat::randn(true_rank, dim, 1.0, rng);
+        let mut keys = Mat::zeros(n, dim);
+        for i in 0..n {
+            let coef = rng.normal_vec(true_rank, 1.0);
+            for (j, b) in basis.data.chunks_exact(dim).enumerate() {
+                crate::tensor::ops::axpy(coef[j], b, keys.row_mut(i));
+            }
+            for v in keys.row_mut(i) {
+                *v += rng.normal_f32() * noise;
+            }
+        }
+        keys
+    }
+
+    #[test]
+    fn projector_recovers_low_rank_structure() {
+        let mut rng = Rng::new(41);
+        let keys = low_rank_keys(300, 16, 4, 0.01, &mut rng);
+        let mut cal = Calibrator::new(16);
+        cal.add_keys(&keys.data);
+        let p = cal.fit(4).unwrap();
+        assert!(p.captured_energy() > 0.99);
+        assert!(reconstruction_error(&p, &keys) < 0.05);
+    }
+
+    #[test]
+    fn projector_orthonormal_columns() {
+        let mut rng = Rng::new(43);
+        let keys = low_rank_keys(200, 12, 6, 0.1, &mut rng);
+        let mut cal = Calibrator::new(12);
+        cal.add_keys(&keys.data);
+        let p = cal.fit(6).unwrap();
+        let utu = p.u.transpose().matmul(&p.u);
+        for i in 0..6 {
+            for j in 0..6 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert!((utu.at(i, j) - expect).abs() < 1e-3);
+            }
+        }
+    }
+
+    #[test]
+    fn project_reconstruct_single_matches_rows() {
+        let mut rng = Rng::new(45);
+        let keys = low_rank_keys(50, 8, 3, 0.05, &mut rng);
+        let mut cal = Calibrator::new(8);
+        cal.add_keys(&keys.data);
+        let p = cal.fit(3).unwrap();
+        let rows = p.project_rows(&keys);
+        let mut single = vec![0.0; 3];
+        p.project(keys.row(7), &mut single);
+        for (a, b) in single.iter().zip(rows.row(7)) {
+            assert!((a - b).abs() < 1e-4);
+        }
+        let recs = p.reconstruct_rows(&rows);
+        let mut rec1 = vec![0.0; 8];
+        p.reconstruct(rows.row(7), &mut rec1);
+        for (a, b) in rec1.iter().zip(recs.row(7)) {
+            assert!((a - b).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn lemma1_joint_beats_per_head() {
+        // Correlated heads: joint projector must capture >= energy.
+        let mut rng = Rng::new(47);
+        let n_heads = 4;
+        let head_dim = 8;
+        let dim = n_heads * head_dim;
+        // Global low-rank structure spanning across heads.
+        let keys = low_rank_keys(400, dim, 6, 0.05, &mut rng);
+        let total_rank = 8;
+        let mut cal = Calibrator::new(dim);
+        cal.add_keys(&keys.data);
+        let joint = cal.fit(total_rank).unwrap();
+        let per_head = PerHeadProjector::fit(&keys, n_heads, total_rank).unwrap();
+        // Compare reconstruction error (lower = more energy captured).
+        let joint_err = reconstruction_error(&joint, &keys);
+        let mut ph_lat = vec![0.0; total_rank];
+        let mut ph_rec = vec![0.0; dim];
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for row in 0..keys.rows {
+            per_head.project(keys.row(row), &mut ph_lat);
+            per_head.reconstruct(&ph_lat, &mut ph_rec);
+            for (a, b) in ph_rec.iter().zip(keys.row(row)) {
+                num += ((a - b) as f64).powi(2);
+                den += (*b as f64).powi(2);
+            }
+        }
+        let ph_err = (num / den).sqrt();
+        assert!(
+            joint_err <= ph_err + 1e-6,
+            "Lemma 1 violated: joint {joint_err} vs per-head {ph_err}"
+        );
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let mut rng = Rng::new(49);
+        let keys = low_rank_keys(100, 10, 4, 0.05, &mut rng);
+        let mut cal = Calibrator::new(10);
+        cal.add_keys(&keys.data);
+        let p = cal.fit(4).unwrap();
+        let dir = std::env::temp_dir().join("sals_test_projector.txt");
+        p.save(&dir).unwrap();
+        let q = Projector::load(&dir).unwrap();
+        assert_eq!(p.dim, q.dim);
+        assert_eq!(p.rank, q.rank);
+        for (a, b) in p.u.data.iter().zip(&q.u.data) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        std::fs::remove_file(dir).ok();
+    }
+
+    #[test]
+    fn fit_errors() {
+        let cal = Calibrator::new(4);
+        assert!(cal.fit(0).is_err());
+        assert!(cal.fit(5).is_err());
+        assert!(cal.fit(2).is_err()); // no data
+    }
+}

@@ -1,0 +1,206 @@
+//! `sals` CLI — the L3 leader entrypoint.
+//!
+//! Subcommands:
+//!   serve      drive a request trace through the serving engine (CPU model)
+//!   serve-xla  drive a trace through the AOT HLO artifacts (PJRT runtime)
+//!   calibrate  run the offline §4.2 calibration and save projectors
+//!   analyze    figure data generators: pca-rope | overlap | rank
+//!   model      print the §4.5 memory-traffic model for given settings
+//!   info       environment + artifact status
+
+use sals::attention::traffic::sals_speedup_model;
+use sals::coordinator::{Engine, EngineConfig, TraceGen, TraceSpec};
+use sals::model::{
+    calibrate, fit_calibration, make_factory, Method, Model, ModelConfig, SparsityParams, Weights,
+};
+use sals::util::cli::Args;
+use sals::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "serve" => serve(&args),
+        "serve-xla" => serve_xla(&args),
+        "calibrate" => calibrate_cmd(&args),
+        "analyze" => analyze(&args),
+        "model" => traffic_model(&args),
+        "info" => info(),
+        _ => help(),
+    }
+}
+
+fn help() {
+    println!("sals — Sparse Attention in Latent Space (paper reproduction)");
+    println!();
+    println!("usage: sals <command> [--options]");
+    println!("  serve      [--method sals25|sals125|full] [--requests N] [--seq N]");
+    println!("  serve-xla  [--variant sals|dense] [--requests N]   (needs `make artifacts`)");
+    println!("  calibrate  [--rank R] [--streams N] [--out DIR]");
+    println!("  analyze    pca-rope | overlap | rank");
+    println!("  model      [--seq N] [--dim D] [--rank R] [--k K]");
+    println!("  info");
+}
+
+fn parse_method(s: &str) -> Method {
+    match s {
+        "full" => Method::Full,
+        "sals25" => Method::Sals25,
+        "sals125" => Method::Sals125,
+        "kivi4" => Method::Kivi4,
+        "kivi2" => Method::Kivi2,
+        "palu30" => Method::Palu30,
+        "palu50" => Method::Palu50,
+        "loki" => Method::Loki,
+        "ds" => Method::DoubleSparse,
+        "hshare" => Method::HShare,
+        "quest" => Method::Quest,
+        "streaming" => Method::StreamingLlm,
+        other => {
+            eprintln!("unknown method {other}, using sals25");
+            Method::Sals25
+        }
+    }
+}
+
+fn serve(args: &Args) {
+    let method = parse_method(args.get("method").unwrap_or("sals25"));
+    let n_requests: usize = args.get_or("requests", 16);
+    let seq: usize = args.get_or("seq", 512);
+    let cfg = ModelConfig::tiny_mha(seq + 64);
+    let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 7)));
+
+    // Calibration (fast, small streams).
+    let mut rng = Rng::new(11);
+    let streams: Vec<Vec<usize>> =
+        (0..2).map(|_| (0..256).map(|_| rng.below(cfg.vocab)).collect()).collect();
+    let fitted = Arc::new(fit_calibration(&cfg, &calibrate(&model, &streams)));
+    let factory = make_factory(method, &fitted, SparsityParams::scaled(seq));
+
+    let mut engine = Engine::new(model, factory, EngineConfig::default());
+    let trace = TraceGen::generate(&TraceSpec {
+        n_requests,
+        vocab: cfg.vocab,
+        prompt_min: seq / 4,
+        prompt_max: seq / 2,
+        ..Default::default()
+    });
+    for tr in trace {
+        engine.submit(tr.request);
+    }
+    let responses = engine.run_to_completion();
+    println!("method={} completed={} tokens/s={:.1}", method.name(), responses.len(), engine.metrics.tokens_per_second());
+    println!("{}", engine.metrics.to_json().to_string());
+}
+
+fn serve_xla(args: &Args) {
+    use sals::runtime::{ArtifactRuntime, XlaModel, XlaVariant};
+    let variant = match args.get("variant").unwrap_or("sals") {
+        "dense" => XlaVariant::Dense,
+        _ => XlaVariant::Sals,
+    };
+    let n: usize = args.get_or("requests", 8);
+    let dir = std::path::PathBuf::from("artifacts");
+    let mut rt = match ArtifactRuntime::new(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("runtime init failed: {e}");
+            std::process::exit(1);
+        }
+    };
+    let mut m = match XlaModel::new(&mut rt, &dir, variant) {
+        Ok(m) => m,
+        Err(e) => {
+            eprintln!("artifact load failed ({e}); run `make artifacts`");
+            std::process::exit(2);
+        }
+    };
+    let mut rng = Rng::new(3);
+    let t0 = std::time::Instant::now();
+    let mut tokens = 0usize;
+    for i in 0..n {
+        m.reset();
+        let prompt: Vec<usize> = (0..16 + rng.below(16)).map(|_| rng.below(m.meta.vocab)).collect();
+        let out = m.generate(&rt, &prompt, 8).expect("generate");
+        tokens += out.len();
+        println!("req {i}: prompt {} -> {:?}", prompt.len(), &out[..4.min(out.len())]);
+    }
+    println!("variant={variant:?} throughput={:.1} tok/s (PJRT CPU, interpret-mode kernels)", tokens as f64 / t0.elapsed().as_secs_f64());
+}
+
+fn calibrate_cmd(args: &Args) {
+    let rank: usize = args.get_or("rank", 32);
+    let n_streams: usize = args.get_or("streams", 8);
+    let out = std::path::PathBuf::from(args.get("out").unwrap_or("artifacts"));
+    std::fs::create_dir_all(&out).expect("mkdir");
+    let cfg = ModelConfig::tiny_mha(512);
+    let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 7)));
+    let mut rng = Rng::new(17);
+    let streams: Vec<Vec<usize>> =
+        (0..n_streams).map(|_| (0..256).map(|_| rng.below(cfg.vocab)).collect()).collect();
+    let calib = calibrate(&model, &streams);
+    for (l, lc) in calib.layers.iter().enumerate() {
+        let mut c = sals::lowrank::Calibrator::new(cfg.kv_dim());
+        c.add_keys(&lc.pre_keys.data);
+        let proj = c.fit(rank.min(cfg.kv_dim())).unwrap();
+        let path = out.join(format!("projector_layer{l}.txt"));
+        proj.save(&path).expect("save projector");
+        println!(
+            "layer {l}: rank {} energy {:.1}% rank90 {} -> {}",
+            proj.rank,
+            100.0 * proj.captured_energy(),
+            proj.rank_at(90.0),
+            path.display()
+        );
+    }
+}
+
+fn analyze(args: &Args) {
+    let what = args.positional.get(1).map(|s| s.as_str()).unwrap_or("pca-rope");
+    match what {
+        "pca-rope" => {
+            let rep = sals::analyze::pca_rope_demo(64, 2048, 10_000.0, 7);
+            println!("Figure 1(b) data:");
+            println!("  anisotropy pre {:.2} post {:.2}", rep.anisotropy_pre, rep.anisotropy_post);
+            println!("  principal-axis |cos| {:.3}", rep.principal_cos);
+            println!("  spectrum pre  (top8): {:?}", &rep.spectrum_pre[..8]);
+            println!("  spectrum post (top8): {:?}", &rep.spectrum_post[..8]);
+        }
+        "rank" => {
+            let mut rng = Rng::new(5);
+            let kv = 64;
+            // Low-rank synthetic keys.
+            let basis: Vec<Vec<f32>> = (0..8).map(|_| rng.normal_vec(kv, 1.0)).collect();
+            let n = 1024;
+            let mut keys = vec![0.0f32; n * kv];
+            for j in 0..n {
+                for b in &basis {
+                    sals::tensor::ops::axpy(rng.normal_f32(), b, &mut keys[j * kv..(j + 1) * kv]);
+                }
+            }
+            let rep = sals::analyze::rank_analysis(0, &keys, kv, 32, n, 10_000.0);
+            println!("Figure 4 data: rank90 pre={} post={}", rep.rank90_pre, rep.rank90_post);
+        }
+        "overlap" => {
+            println!("run `cargo bench --bench fig2_overlap` for the full per-layer table");
+        }
+        other => eprintln!("unknown analysis {other} (pca-rope | overlap | rank)"),
+    }
+}
+
+fn traffic_model(args: &Args) {
+    let s: usize = args.get_or("seq", 4096);
+    let d: usize = args.get_or("dim", 4096);
+    let r: usize = args.get_or("rank", d / 4);
+    let k: usize = args.get_or("k", s / 8);
+    let speedup = sals_speedup_model(s, d, r, r / 2, k);
+    println!("§4.5 model: seq={s} dim={d} rank={r} r*={} k={k} -> predicted memory-bound speedup {speedup:.2}x", r / 2);
+}
+
+fn info() {
+    println!("sals v{}", env!("CARGO_PKG_VERSION"));
+    let meta = std::path::Path::new("artifacts/meta.txt");
+    println!("artifacts: {}", if meta.exists() { "built" } else { "missing (run `make artifacts`)" });
+    println!("cpus: {}", sals::util::threadpool::num_cpus());
+}

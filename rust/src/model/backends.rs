@@ -1,0 +1,435 @@
+//! Method registry: build per-layer attention backends for every method in
+//! the paper's comparison set, plus the offline calibration pass that fits
+//! the latent projectors / channel sets they need.
+
+use super::config::ModelConfig;
+use super::llama::{BackendFactory, Model, Scratch, SequenceState};
+use crate::attention::baselines::double_sparse::DoubleSparseAttention;
+use crate::attention::baselines::hshare::HShareAttention;
+use crate::attention::baselines::kivi::KiviAttention;
+use crate::attention::baselines::loki::LokiAttention;
+use crate::attention::baselines::palu::PaluAttention;
+use crate::attention::baselines::quest::QuestAttention;
+use crate::attention::baselines::streaming_llm::StreamingLlmAttention;
+use crate::attention::{AttentionBackend, FullAttention, SalsAttention, SalsConfig, Traffic};
+use crate::lowrank::{Calibrator, Projector};
+use crate::quant::Bits;
+use crate::rope::RopeTable;
+use crate::tensor::Mat;
+use std::sync::Arc;
+
+/// Token-selection composition shared by the sparse methods (§5.2).
+#[derive(Clone, Copy, Debug)]
+pub struct SparsityParams {
+    pub sink: usize,
+    pub recent: usize,
+    pub critical: usize,
+}
+
+impl SparsityParams {
+    /// Paper's LongBench config for LLaMA2: x=16, y=432, z=64 (scaled down
+    /// proportionally for small max_seq in tests/benches).
+    pub fn paper_llama2() -> SparsityParams {
+        SparsityParams { sink: 16, recent: 64, critical: 432 }
+    }
+
+    /// Scale the composition to a target sequence length, keeping the
+    /// 16:432:64 proportions of the paper at sparsity 1/8.
+    pub fn scaled(seq: usize) -> SparsityParams {
+        let total = (seq / 8).max(8);
+        SparsityParams {
+            sink: (total * 16 / 512).max(1),
+            recent: (total * 64 / 512).max(2),
+            critical: (total * 432 / 512).max(4),
+        }
+    }
+}
+
+/// Every attention method in the comparison matrix.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Method {
+    Full,
+    /// SALS at 25% key compression (4-bit values).
+    Sals25,
+    /// SALS at 12.5% key compression (2-bit values).
+    Sals125,
+    Kivi4,
+    Kivi2,
+    /// Palu at 30% rank (with 4-bit latent quant, nearest to paper's 3-bit).
+    Palu30,
+    /// Palu at 50% rank reduction (rank = 50% ... paper's "Palu-50%" keeps
+    /// 50% compression ratio; see table mapping in DESIGN.md).
+    Palu50,
+    Loki,
+    DoubleSparse,
+    HShare,
+    Quest,
+    StreamingLlm,
+}
+
+impl Method {
+    pub fn name(self) -> &'static str {
+        match self {
+            Method::Full => "baseline",
+            Method::Sals25 => "SALS-25%",
+            Method::Sals125 => "SALS-12.5%",
+            Method::Kivi4 => "KIVI-4bit",
+            Method::Kivi2 => "KIVI-2bit",
+            Method::Palu30 => "Palu-30%",
+            Method::Palu50 => "Palu-50%",
+            Method::Loki => "Loki",
+            Method::DoubleSparse => "Double Sparse",
+            Method::HShare => "HShare",
+            Method::Quest => "Quest",
+            Method::StreamingLlm => "StreamingLLM",
+        }
+    }
+
+    /// All methods compared in the accuracy tables.
+    pub fn accuracy_set() -> Vec<Method> {
+        vec![
+            Method::Full,
+            Method::Kivi4,
+            Method::Kivi2,
+            Method::Palu30,
+            Method::Palu50,
+            Method::Sals25,
+            Method::Sals125,
+        ]
+    }
+
+    /// Token-sparse comparison set (Table 4).
+    pub fn sparse_set() -> Vec<Method> {
+        vec![
+            Method::Full,
+            Method::DoubleSparse,
+            Method::HShare,
+            Method::Loki,
+            Method::Sals25,
+            Method::Sals125,
+        ]
+    }
+}
+
+/// Per-layer calibration tensors collected with the recording pass.
+#[derive(Clone, Debug)]
+pub struct LayerCalibration {
+    /// (n_tokens, kv_dim) pre-RoPE keys.
+    pub pre_keys: Mat,
+    /// (n_tokens, kv_dim) post-RoPE keys.
+    pub post_keys: Mat,
+    /// (n_tokens, kv_dim) values.
+    pub values: Mat,
+}
+
+/// Calibration output for all layers.
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub layers: Vec<LayerCalibration>,
+}
+
+/// A FullAttention wrapper that records pre-RoPE keys/values as they stream
+/// through — the §4.2 "collect pre-RoPE key tensors" pass. Recordings land
+/// in a shared per-layer sink so `calibrate` can read them back without
+/// downcasting.
+type RecordSink = Arc<std::sync::Mutex<(Vec<f32>, Vec<f32>)>>;
+
+struct RecordingBackend {
+    inner: FullAttention,
+    sink: RecordSink,
+}
+
+impl AttentionBackend for RecordingBackend {
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        let mut guard = self.sink.lock().unwrap();
+        guard.0.extend_from_slice(k);
+        guard.1.extend_from_slice(v);
+        drop(guard);
+        self.inner.append(k, v);
+    }
+    fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+        self.inner.attend(q, out);
+    }
+    fn len(&self) -> usize {
+        self.inner.len()
+    }
+    fn traffic(&self) -> Traffic {
+        self.inner.traffic()
+    }
+    fn kv_bytes(&self) -> usize {
+        self.inner.kv_bytes()
+    }
+    fn name(&self) -> &'static str {
+        "recording"
+    }
+    fn is_empty(&self) -> bool {
+        self.inner.is_empty()
+    }
+}
+
+/// Run the model over calibration token streams with recording backends and
+/// collect per-layer pre/post-RoPE keys and values.
+pub fn calibrate(model: &Model, streams: &[Vec<usize>]) -> Calibration {
+    let cfg = &model.cfg;
+    let kvd = cfg.kv_dim();
+    let shape = cfg.attn_shape();
+    let rope = RopeTable::new(cfg.head_dim, cfg.max_seq, cfg.rope_base);
+    let mut layers: Vec<LayerCalibration> = (0..cfg.n_layers)
+        .map(|_| LayerCalibration {
+            pre_keys: Mat::zeros(0, kvd),
+            post_keys: Mat::zeros(0, kvd),
+            values: Mat::zeros(0, kvd),
+        })
+        .collect();
+
+    for stream in streams {
+        let sinks: Vec<RecordSink> =
+            (0..cfg.n_layers).map(|_| Arc::new(std::sync::Mutex::new((Vec::new(), Vec::new())))).collect();
+        let sinks_for_factory = sinks.clone();
+        let factory: Box<BackendFactory> = Box::new(move |layer| {
+            Box::new(RecordingBackend {
+                inner: FullAttention::new(shape),
+                sink: Arc::clone(&sinks_for_factory[layer]),
+            }) as Box<dyn AttentionBackend + Send>
+        });
+        let mut state = SequenceState::new(cfg, &factory);
+        let mut scratch = Scratch::new(cfg);
+        for &t in stream {
+            model.step(&mut state, &mut scratch, t, false);
+        }
+        drop(state);
+        for (layer, sink) in sinks.into_iter().enumerate() {
+            let (pre_keys, values) = {
+                let mut g = sink.lock().unwrap();
+                (std::mem::take(&mut g.0), std::mem::take(&mut g.1))
+            };
+            let n = pre_keys.len() / kvd;
+            let lc = &mut layers[layer];
+            lc.pre_keys.data.extend_from_slice(&pre_keys);
+            lc.pre_keys.rows += n;
+            lc.values.data.extend_from_slice(&values);
+            lc.values.rows += n;
+            // Post-RoPE keys: rotate each row at its in-stream position.
+            let mut rot = pre_keys;
+            for (pos, row) in rot.chunks_exact_mut(kvd).enumerate() {
+                rope.apply_rows(row, kvd, &[pos]);
+            }
+            lc.post_keys.data.extend_from_slice(&rot);
+            lc.post_keys.rows += n;
+        }
+    }
+    Calibration { layers }
+}
+
+/// Per-layer artifacts fitted from a [`Calibration`], enough to build any
+/// method's backends.
+pub struct FittedCalibration {
+    pub cfg: ModelConfig,
+    /// Joint pre-RoPE key projectors at the FULL kv_dim rank (slice to any
+    /// smaller r at build time).
+    pub pre_key_proj: Vec<Arc<Projector>>,
+    /// Post-RoPE key projectors (Loki).
+    pub post_key_proj: Vec<Arc<Projector>>,
+    /// Value projectors (Palu).
+    pub value_proj: Vec<Arc<Projector>>,
+    /// DoubleSparse important channels per layer.
+    pub ds_channels: Vec<Vec<usize>>,
+}
+
+/// Fit all per-layer projectors/channel sets once.
+pub fn fit_calibration(cfg: &ModelConfig, calib: &Calibration) -> FittedCalibration {
+    let kvd = cfg.kv_dim();
+    let mut pre = Vec::new();
+    let mut post = Vec::new();
+    let mut val = Vec::new();
+    let mut ds = Vec::new();
+    for lc in &calib.layers {
+        let mut c1 = Calibrator::new(kvd);
+        c1.add_keys(&lc.pre_keys.data);
+        pre.push(Arc::new(c1.fit(kvd).expect("pre-key fit")));
+        let mut c2 = Calibrator::new(kvd);
+        c2.add_keys(&lc.post_keys.data);
+        post.push(Arc::new(c2.fit(kvd).expect("post-key fit")));
+        let mut c3 = Calibrator::new(kvd);
+        c3.add_keys(&lc.values.data);
+        val.push(Arc::new(c3.fit(kvd).expect("value fit")));
+        ds.push(DoubleSparseAttention::select_channels(&lc.post_keys.data, kvd, (kvd / 8).max(2)));
+    }
+    FittedCalibration { cfg: cfg.clone(), pre_key_proj: pre, post_key_proj: post, value_proj: val, ds_channels: ds }
+}
+
+/// Truncate a full-rank projector to rank r (leading columns).
+fn slice_projector(p: &Projector, r: usize) -> Projector {
+    assert!(r <= p.rank);
+    let mut u = Mat::zeros(p.dim, r);
+    for row in 0..p.dim {
+        for col in 0..r {
+            u.data[row * r + col] = p.u.data[row * p.rank + col];
+        }
+    }
+    Projector { dim: p.dim, rank: r, u, spectrum: p.spectrum.clone() }
+}
+
+/// Build a per-layer backend factory for `method`. Layers in
+/// `cfg.dense_layers` always get dense attention (paper §5.1: layers 0, 1
+/// and the last are skipped for sparsification).
+pub fn make_factory(
+    method: Method,
+    fitted: &Arc<FittedCalibration>,
+    sp: SparsityParams,
+) -> Box<BackendFactory> {
+    let fitted = Arc::clone(fitted);
+    let cfg = fitted.cfg.clone();
+    let shape = cfg.attn_shape();
+    let kvd = cfg.kv_dim();
+    Box::new(move |layer| {
+        let dense = cfg.dense_layers.contains(&layer) && method != Method::Full;
+        if method == Method::Full || (dense && !matches!(method, Method::Kivi4 | Method::Kivi2)) {
+            // Quantization methods apply to all layers in the paper; the
+            // layer-skip rule is about *sparsification*.
+            return Box::new(FullAttention::new(shape)) as Box<dyn AttentionBackend + Send>;
+        }
+        match method {
+            Method::Full => unreachable!(),
+            Method::Sals25 => {
+                let r = (kvd / 4).max(2);
+                let proj = slice_projector(&fitted.pre_key_proj[layer], r);
+                let c = SalsConfig {
+                    rank: r,
+                    r_star: (r / 2).max(1),
+                    sink: sp.sink,
+                    recent: sp.recent,
+                    critical: sp.critical,
+                    v_bits: Bits::B4,
+                    group: 32,
+                };
+                Box::new(SalsAttention::new(shape, c, proj))
+            }
+            Method::Sals125 => {
+                let r = (kvd / 8).max(2);
+                let proj = slice_projector(&fitted.pre_key_proj[layer], r);
+                let c = SalsConfig {
+                    rank: r,
+                    r_star: (r / 2).max(1),
+                    sink: sp.sink,
+                    recent: sp.recent,
+                    critical: sp.critical,
+                    v_bits: Bits::B2,
+                    group: 32,
+                };
+                Box::new(SalsAttention::new(shape, c, proj))
+            }
+            Method::Kivi4 => Box::new(KiviAttention::new(shape, Bits::B4, 32, sp.recent.max(32))),
+            Method::Kivi2 => Box::new(KiviAttention::new(shape, Bits::B2, 32, sp.recent.max(32))),
+            Method::Palu30 => {
+                // 30% compression of the fp16 cache with 3-bit quant in the
+                // paper; here: rank 0.6·kvd with 4-bit latents (DESIGN.md).
+                let r = (kvd * 6 / 10).max(2);
+                let kp = slice_projector(&fitted.pre_key_proj[layer], r);
+                let vp = slice_projector(&fitted.value_proj[layer], r);
+                Box::new(PaluAttention::new(shape, kp, vp, r, Some(Bits::B4)))
+            }
+            Method::Palu50 => {
+                let r = (kvd * 3 / 10).max(2);
+                let kp = slice_projector(&fitted.pre_key_proj[layer], r);
+                let vp = slice_projector(&fitted.value_proj[layer], r);
+                Box::new(PaluAttention::new(shape, kp, vp, r, Some(Bits::B4)))
+            }
+            Method::Loki => {
+                let r = (kvd / 4).max(2);
+                let proj = slice_projector(&fitted.post_key_proj[layer], r);
+                Box::new(LokiAttention::new(shape, proj, r, sp.sink, sp.recent, sp.critical))
+            }
+            Method::DoubleSparse => Box::new(DoubleSparseAttention::new(
+                shape,
+                fitted.ds_channels[layer].clone(),
+                sp.sink,
+                sp.recent,
+                sp.critical,
+            )),
+            Method::HShare => Box::new(HShareAttention::new(shape, sp.sink, sp.recent, sp.critical, 4)),
+            Method::Quest => Box::new(QuestAttention::new(shape, 16, sp.sink, sp.recent, sp.critical)),
+            Method::StreamingLlm => Box::new(StreamingLlmAttention::new(shape, sp.sink, sp.recent + sp.critical)),
+        }
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::weights::Weights;
+    use crate::util::rng::Rng;
+
+    fn small_setup() -> (Model, Arc<FittedCalibration>) {
+        let mut cfg = ModelConfig::tiny_mha(128);
+        cfg.n_layers = 3;
+        cfg.dense_layers = vec![0];
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 29)));
+        let mut rng = Rng::new(31);
+        let streams: Vec<Vec<usize>> =
+            (0..4).map(|_| (0..64).map(|_| rng.below(cfg.vocab)).collect()).collect();
+        let calib = calibrate(&model, &streams);
+        let fitted = Arc::new(fit_calibration(&cfg, &calib));
+        (model, fitted)
+    }
+
+    #[test]
+    fn calibration_collects_all_layers_and_tokens() {
+        let (model, fitted) = small_setup();
+        assert_eq!(fitted.pre_key_proj.len(), model.cfg.n_layers);
+        // 4 streams × 64 tokens
+        assert_eq!(fitted.pre_key_proj[0].dim, model.cfg.kv_dim());
+    }
+
+    #[test]
+    fn every_method_generates() {
+        let (model, fitted) = small_setup();
+        let sp = SparsityParams { sink: 2, recent: 8, critical: 8 };
+        for method in [
+            Method::Full,
+            Method::Sals25,
+            Method::Sals125,
+            Method::Kivi4,
+            Method::Kivi2,
+            Method::Palu30,
+            Method::Palu50,
+            Method::Loki,
+            Method::DoubleSparse,
+            Method::HShare,
+            Method::Quest,
+            Method::StreamingLlm,
+        ] {
+            let factory = make_factory(method, &fitted, sp);
+            let mut state = SequenceState::new(&model.cfg, &factory);
+            let mut scratch = Scratch::new(&model.cfg);
+            let out = model.generate_greedy(&mut state, &mut scratch, &[1, 2, 3, 4], 4);
+            assert_eq!(out.len(), 4, "{method:?}");
+        }
+    }
+
+    #[test]
+    fn dense_layers_get_full_attention() {
+        let (_, fitted) = small_setup();
+        let sp = SparsityParams { sink: 1, recent: 2, critical: 2 };
+        let factory = make_factory(Method::Sals25, &fitted, sp);
+        assert_eq!(factory(0).name(), "full"); // layer 0 is dense
+        assert_eq!(factory(1).name(), "sals");
+    }
+
+    #[test]
+    fn sals_outputs_close_to_full_on_same_prompt() {
+        let (model, fitted) = small_setup();
+        let sp = SparsityParams { sink: 4, recent: 16, critical: 24 };
+        let prompt: Vec<usize> = (0..48).map(|i| (i * 7 + 3) % model.cfg.vocab).collect();
+        let run = |m: Method| {
+            let factory = make_factory(m, &fitted, sp);
+            let mut state = SequenceState::new(&model.cfg, &factory);
+            let mut scratch = Scratch::new(&model.cfg);
+            model.prefill(&mut state, &mut scratch, &prompt)
+        };
+        let full = run(Method::Full);
+        let sals = run(Method::Sals25);
+        let cos = crate::util::stats::cosine(&sals, &full);
+        assert!(cos > 0.8, "logit cosine {cos}");
+    }
+}

@@ -1,0 +1,170 @@
+//! Model configuration (LLaMA-family decoder).
+
+use crate::attention::AttnShape;
+use crate::util::{Error, Result};
+
+/// Architecture hyper-parameters of the CPU reference model.
+#[derive(Clone, Debug)]
+pub struct ModelConfig {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub max_seq: usize,
+    pub rope_base: f32,
+    /// Layers that skip sparsification and run dense attention
+    /// (paper §5.1: layers 0, 1 and the last layer).
+    pub dense_layers: Vec<usize>,
+    pub rms_eps: f32,
+}
+
+impl ModelConfig {
+    /// Validate internal consistency.
+    pub fn validate(&self) -> Result<()> {
+        if self.n_heads % self.n_kv_heads != 0 {
+            return Err(Error::Config("n_heads must be divisible by n_kv_heads".into()));
+        }
+        if self.head_dim % 2 != 0 {
+            return Err(Error::Config("head_dim must be even for RoPE".into()));
+        }
+        if self.d_model != self.n_heads * self.head_dim {
+            return Err(Error::Config(format!(
+                "d_model {} != n_heads*head_dim {}",
+                self.d_model,
+                self.n_heads * self.head_dim
+            )));
+        }
+        if self.dense_layers.iter().any(|&l| l >= self.n_layers) {
+            return Err(Error::Config("dense layer index out of range".into()));
+        }
+        Ok(())
+    }
+
+    /// Attention shape of each layer.
+    pub fn attn_shape(&self) -> AttnShape {
+        AttnShape {
+            n_heads: self.n_heads,
+            n_kv_heads: self.n_kv_heads,
+            head_dim: self.head_dim,
+            max_seq: self.max_seq,
+            rope_base: self.rope_base,
+        }
+    }
+
+    /// Stacked KV dimension.
+    pub fn kv_dim(&self) -> usize {
+        self.n_kv_heads * self.head_dim
+    }
+
+    /// The paper's default dense-layer set: {0, 1, last}.
+    pub fn default_dense_layers(n_layers: usize) -> Vec<usize> {
+        if n_layers >= 3 {
+            vec![0, 1, n_layers - 1]
+        } else {
+            (0..n_layers).collect()
+        }
+    }
+
+    /// A small MHA config in the LLaMA2 shape family (scaled down).
+    pub fn tiny_mha(max_seq: usize) -> ModelConfig {
+        ModelConfig {
+            vocab: 512,
+            d_model: 128,
+            n_layers: 6,
+            n_heads: 4,
+            n_kv_heads: 4,
+            head_dim: 32,
+            d_ff: 256,
+            max_seq,
+            rope_base: 10_000.0,
+            dense_layers: Self::default_dense_layers(6),
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// A small GQA config in the Mistral shape family (scaled down).
+    pub fn tiny_gqa(max_seq: usize) -> ModelConfig {
+        ModelConfig {
+            vocab: 512,
+            d_model: 128,
+            n_layers: 6,
+            n_heads: 8,
+            n_kv_heads: 2,
+            head_dim: 16,
+            d_ff: 256,
+            max_seq,
+            rope_base: 10_000.0,
+            dense_layers: Self::default_dense_layers(6),
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// ~100M-parameter class config for the end-to-end driver (GPT-fast
+    /// comparison scale, Table 7): 12 layers, d_model 768.
+    pub fn medium(max_seq: usize) -> ModelConfig {
+        ModelConfig {
+            vocab: 4096,
+            d_model: 768,
+            n_layers: 12,
+            n_heads: 12,
+            n_kv_heads: 12,
+            head_dim: 64,
+            d_ff: 2048,
+            max_seq,
+            rope_base: 10_000.0,
+            dense_layers: Self::default_dense_layers(12),
+            rms_eps: 1e-5,
+        }
+    }
+
+    /// Approximate parameter count.
+    pub fn param_count(&self) -> usize {
+        let attn = self.d_model * self.d_model // wq
+            + 2 * self.d_model * self.kv_dim() // wk, wv
+            + self.d_model * self.d_model; // wo
+        let ffn = 3 * self.d_model * self.d_ff;
+        let norms = 2 * self.d_model;
+        self.vocab * self.d_model + self.n_layers * (attn + ffn + norms) + self.d_model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiny_configs_valid() {
+        ModelConfig::tiny_mha(256).validate().unwrap();
+        ModelConfig::tiny_gqa(256).validate().unwrap();
+        ModelConfig::medium(512).validate().unwrap();
+    }
+
+    #[test]
+    fn invalid_heads_rejected() {
+        let mut c = ModelConfig::tiny_mha(128);
+        c.n_kv_heads = 3;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn invalid_d_model_rejected() {
+        let mut c = ModelConfig::tiny_mha(128);
+        c.d_model = 100;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn medium_is_roughly_100m() {
+        let p = ModelConfig::medium(512).param_count();
+        assert!(p > 60_000_000 && p < 200_000_000, "{p}");
+    }
+
+    #[test]
+    fn default_dense_layers_small() {
+        assert_eq!(ModelConfig::default_dense_layers(2), vec![0, 1]);
+        assert_eq!(ModelConfig::default_dense_layers(8), vec![0, 1, 7]);
+    }
+}

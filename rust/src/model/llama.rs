@@ -1,0 +1,270 @@
+//! LLaMA-style decoder forward pass over pluggable attention backends.
+//!
+//! Weights are shared (`Arc<Weights>`); per-sequence decode state (the KV
+//! caches inside each layer's [`AttentionBackend`]) lives in
+//! [`SequenceState`]. This split is what lets the coordinator batch many
+//! sequences over one weight set, vLLM-style.
+
+use super::config::ModelConfig;
+use super::weights::Weights;
+use crate::attention::AttentionBackend;
+use crate::tensor::ops::{rmsnorm, silu};
+use std::sync::Arc;
+
+/// Factory producing one attention backend per layer.
+pub type BackendFactory = dyn Fn(usize) -> Box<dyn AttentionBackend + Send> + Send + Sync;
+
+/// Per-sequence decode state: one KV backend per layer + position counter.
+pub struct SequenceState {
+    pub backends: Vec<Box<dyn AttentionBackend + Send>>,
+    pub pos: usize,
+}
+
+impl SequenceState {
+    pub fn new(cfg: &ModelConfig, factory: &BackendFactory) -> SequenceState {
+        SequenceState { backends: (0..cfg.n_layers).map(|l| factory(l)).collect(), pos: 0 }
+    }
+
+    /// Total resident KV bytes across layers.
+    pub fn kv_bytes(&self) -> usize {
+        self.backends.iter().map(|b| b.kv_bytes()).sum()
+    }
+
+    /// Total cache traffic across layers.
+    pub fn traffic(&self) -> crate::attention::Traffic {
+        let mut t = crate::attention::Traffic::default();
+        for b in &self.backends {
+            let bt = b.traffic();
+            t.read += bt.read;
+            t.written += bt.written;
+        }
+        t
+    }
+}
+
+/// The shared model: config + weights. Stateless across sequences.
+pub struct Model {
+    pub cfg: ModelConfig,
+    pub weights: Arc<Weights>,
+}
+
+/// Scratch buffers for one forward step (reused across steps).
+pub struct Scratch {
+    x: Vec<f32>,
+    normed: Vec<f32>,
+    q: Vec<f32>,
+    k: Vec<f32>,
+    v: Vec<f32>,
+    attn_out: Vec<f32>,
+    proj: Vec<f32>,
+    gate: Vec<f32>,
+    up: Vec<f32>,
+    ffn: Vec<f32>,
+}
+
+impl Scratch {
+    pub fn new(cfg: &ModelConfig) -> Scratch {
+        Scratch {
+            x: vec![0.0; cfg.d_model],
+            normed: vec![0.0; cfg.d_model],
+            q: vec![0.0; cfg.n_heads * cfg.head_dim],
+            k: vec![0.0; cfg.kv_dim()],
+            v: vec![0.0; cfg.kv_dim()],
+            attn_out: vec![0.0; cfg.n_heads * cfg.head_dim],
+            proj: vec![0.0; cfg.d_model],
+            gate: vec![0.0; cfg.d_ff],
+            up: vec![0.0; cfg.d_ff],
+            ffn: vec![0.0; cfg.d_model],
+        }
+    }
+}
+
+/// y = x @ W  for a (d_in, d_out) weight, accumulated into `out`.
+fn linear(x: &[f32], w: &crate::tensor::Mat, out: &mut [f32]) {
+    debug_assert_eq!(x.len(), w.rows);
+    debug_assert_eq!(out.len(), w.cols);
+    out.fill(0.0);
+    for (i, &xi) in x.iter().enumerate() {
+        if xi == 0.0 {
+            continue;
+        }
+        let wrow = &w.data[i * w.cols..(i + 1) * w.cols];
+        for (o, &wv) in out.iter_mut().zip(wrow) {
+            *o += xi * wv;
+        }
+    }
+}
+
+impl Model {
+    pub fn new(cfg: ModelConfig, weights: Arc<Weights>) -> Model {
+        cfg.validate().expect("invalid model config");
+        Model { cfg, weights }
+    }
+
+    /// One decode step: feed `token`, advance `state`, return logits.
+    ///
+    /// `process_only`: during prefill we still must append KV and run the
+    /// layers (the residual stream feeds later keys), but logits can be
+    /// skipped; pass `false` to skip the LM head.
+    pub fn step(&self, state: &mut SequenceState, scratch: &mut Scratch, token: usize, want_logits: bool) -> Option<Vec<f32>> {
+        let cfg = &self.cfg;
+        let w = &self.weights;
+        assert!(token < cfg.vocab, "token {token} out of vocab");
+        assert!(state.pos < cfg.max_seq, "sequence exceeds max_seq");
+
+        // Embed.
+        scratch.x.copy_from_slice(w.embedding.row(token));
+
+        for (layer, lw) in w.layers.iter().enumerate() {
+            // ---- attention block ----
+            rmsnorm(&scratch.x, &lw.norm_attn, cfg.rms_eps, &mut scratch.normed);
+            linear(&scratch.normed, &lw.wq, &mut scratch.q);
+            linear(&scratch.normed, &lw.wk, &mut scratch.k);
+            linear(&scratch.normed, &lw.wv, &mut scratch.v);
+            let backend = &mut state.backends[layer];
+            backend.append(&scratch.k, &scratch.v);
+            backend.attend(&scratch.q, &mut scratch.attn_out);
+            linear(&scratch.attn_out, &lw.wo, &mut scratch.proj);
+            for (xi, pi) in scratch.x.iter_mut().zip(&scratch.proj) {
+                *xi += pi;
+            }
+            // ---- FFN block (SwiGLU) ----
+            rmsnorm(&scratch.x, &lw.norm_ffn, cfg.rms_eps, &mut scratch.normed);
+            linear(&scratch.normed, &lw.w_gate, &mut scratch.gate);
+            linear(&scratch.normed, &lw.w_up, &mut scratch.up);
+            for (g, u) in scratch.gate.iter_mut().zip(&scratch.up) {
+                *g = silu(*g) * u;
+            }
+            linear(&scratch.gate, &lw.w_down, &mut scratch.ffn);
+            for (xi, fi) in scratch.x.iter_mut().zip(&scratch.ffn) {
+                *xi += fi;
+            }
+        }
+        state.pos += 1;
+
+        if !want_logits {
+            return None;
+        }
+        // Final norm + tied LM head.
+        rmsnorm(&scratch.x, &w.norm_final, cfg.rms_eps, &mut scratch.normed);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        // logits = E @ normed (E rows are embeddings).
+        for (t, l) in logits.iter_mut().enumerate() {
+            *l = crate::tensor::ops::dot(w.embedding.row(t), &scratch.normed);
+        }
+        Some(logits)
+    }
+
+    /// Run a full prompt, returning logits after the last token.
+    pub fn prefill(&self, state: &mut SequenceState, scratch: &mut Scratch, tokens: &[usize]) -> Vec<f32> {
+        assert!(!tokens.is_empty());
+        for &t in &tokens[..tokens.len() - 1] {
+            self.step(state, scratch, t, false);
+        }
+        self.step(state, scratch, tokens[tokens.len() - 1], true).unwrap()
+    }
+
+    /// Greedy generation of `n` tokens after a prompt.
+    pub fn generate_greedy(
+        &self,
+        state: &mut SequenceState,
+        scratch: &mut Scratch,
+        prompt: &[usize],
+        n: usize,
+    ) -> Vec<usize> {
+        let mut logits = self.prefill(state, scratch, prompt);
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let next = crate::tensor::ops::argmax(&logits);
+            out.push(next);
+            if state.pos >= self.cfg.max_seq {
+                break;
+            }
+            logits = self.step(state, scratch, next, true).unwrap();
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::{AttnShape, FullAttention};
+
+    fn full_factory(cfg: &ModelConfig) -> Box<BackendFactory> {
+        let shape = cfg.attn_shape();
+        Box::new(move |_layer| Box::new(FullAttention::new(shape)) as Box<dyn AttentionBackend + Send>)
+    }
+
+    #[test]
+    fn decode_produces_finite_logits() {
+        let cfg = ModelConfig::tiny_mha(64);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 11)));
+        let factory = full_factory(&cfg);
+        let mut state = SequenceState::new(&cfg, &factory);
+        let mut scratch = Scratch::new(&cfg);
+        let logits = model.prefill(&mut state, &mut scratch, &[1, 2, 3, 4, 5]);
+        assert_eq!(logits.len(), cfg.vocab);
+        assert!(logits.iter().all(|x| x.is_finite()));
+        assert_eq!(state.pos, 5);
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let cfg = ModelConfig::tiny_mha(64);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 13)));
+        let factory = full_factory(&cfg);
+        let run = || {
+            let mut state = SequenceState::new(&cfg, &factory);
+            let mut scratch = Scratch::new(&cfg);
+            model.generate_greedy(&mut state, &mut scratch, &[7, 8, 9], 5)
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn per_token_decode_matches_prefill_path() {
+        // prefill() is just repeated step(); verify logits equivalence by
+        // construction: run the same tokens manually.
+        let cfg = ModelConfig::tiny_gqa(64);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 17)));
+        let factory = full_factory(&cfg);
+        let tokens = [3usize, 1, 4, 1, 5];
+        let mut s1 = SequenceState::new(&cfg, &factory);
+        let mut sc1 = Scratch::new(&cfg);
+        let a = model.prefill(&mut s1, &mut sc1, &tokens);
+        let mut s2 = SequenceState::new(&cfg, &factory);
+        let mut sc2 = Scratch::new(&cfg);
+        let mut b = None;
+        for (i, &t) in tokens.iter().enumerate() {
+            b = model.step(&mut s2, &mut sc2, t, i == tokens.len() - 1);
+        }
+        assert_eq!(a, b.unwrap());
+    }
+
+    #[test]
+    fn kv_bytes_grow_with_tokens() {
+        let cfg = ModelConfig::tiny_mha(64);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 19)));
+        let factory = full_factory(&cfg);
+        let mut state = SequenceState::new(&cfg, &factory);
+        let mut scratch = Scratch::new(&cfg);
+        model.step(&mut state, &mut scratch, 1, false);
+        let b1 = state.kv_bytes();
+        model.step(&mut state, &mut scratch, 2, false);
+        assert!(state.kv_bytes() > b1);
+        let shape: AttnShape = cfg.attn_shape();
+        assert_eq!(state.kv_bytes(), 2 * cfg.n_layers * 2 * shape.kv_dim() * 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of vocab")]
+    fn rejects_bad_token() {
+        let cfg = ModelConfig::tiny_mha(32);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 23)));
+        let factory = full_factory(&cfg);
+        let mut state = SequenceState::new(&cfg, &factory);
+        let mut scratch = Scratch::new(&cfg);
+        model.step(&mut state, &mut scratch, 99_999, false);
+    }
+}

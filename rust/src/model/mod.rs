@@ -1,0 +1,14 @@
+//! CPU reference model: LLaMA-style decoder with pluggable per-layer
+//! attention backends, the offline calibration pass, the method registry,
+//! and the constructed retrieval model for accuracy-proxy experiments.
+
+pub mod backends;
+pub mod config;
+pub mod llama;
+pub mod retrieval;
+pub mod weights;
+
+pub use backends::{calibrate, fit_calibration, make_factory, Calibration, FittedCalibration, Method, SparsityParams};
+pub use config::ModelConfig;
+pub use llama::{BackendFactory, Model, Scratch, SequenceState};
+pub use weights::Weights;

@@ -1,0 +1,129 @@
+//! Model weights: seeded random initialization and the constructed
+//! retrieval circuit used for accuracy-proxy experiments.
+
+use super::config::ModelConfig;
+use crate::tensor::Mat;
+use crate::util::rng::Rng;
+
+/// Per-layer weights.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    /// (d_model, n_heads*head_dim)
+    pub wq: Mat,
+    /// (d_model, kv_dim)
+    pub wk: Mat,
+    /// (d_model, kv_dim)
+    pub wv: Mat,
+    /// (n_heads*head_dim, d_model)
+    pub wo: Mat,
+    /// (d_model, d_ff)
+    pub w_gate: Mat,
+    /// (d_model, d_ff)
+    pub w_up: Mat,
+    /// (d_ff, d_model)
+    pub w_down: Mat,
+    /// (d_model,) attention-input RMSNorm weight
+    pub norm_attn: Vec<f32>,
+    /// (d_model,) FFN-input RMSNorm weight
+    pub norm_ffn: Vec<f32>,
+}
+
+/// Full model weights.
+#[derive(Clone, Debug)]
+pub struct Weights {
+    /// (vocab, d_model) token embedding; also the (tied) LM head.
+    pub embedding: Mat,
+    pub layers: Vec<LayerWeights>,
+    /// (d_model,) final RMSNorm weight.
+    pub norm_final: Vec<f32>,
+}
+
+impl Weights {
+    /// Standard scaled-Gaussian init (seeded, deterministic).
+    pub fn random(cfg: &ModelConfig, seed: u64) -> Weights {
+        let mut rng = Rng::new(seed);
+        let dm = cfg.d_model;
+        let kvd = cfg.kv_dim();
+        let std = 1.0 / (dm as f32).sqrt();
+        let layers = (0..cfg.n_layers)
+            .map(|_| LayerWeights {
+                wq: Mat::randn(dm, cfg.n_heads * cfg.head_dim, std, &mut rng),
+                wk: Mat::randn(dm, kvd, std, &mut rng),
+                wv: Mat::randn(dm, kvd, std, &mut rng),
+                wo: Mat::randn(cfg.n_heads * cfg.head_dim, dm, std, &mut rng),
+                w_gate: Mat::randn(dm, cfg.d_ff, std, &mut rng),
+                w_up: Mat::randn(dm, cfg.d_ff, std, &mut rng),
+                w_down: Mat::randn(cfg.d_ff, dm, 1.0 / (cfg.d_ff as f32).sqrt(), &mut rng),
+                norm_attn: vec![1.0; dm],
+                norm_ffn: vec![1.0; dm],
+            })
+            .collect();
+        Weights {
+            embedding: Mat::randn(cfg.vocab, dm, 1.0, &mut rng),
+            layers,
+            norm_final: vec![1.0; dm],
+        }
+    }
+
+    /// Like [`Weights::random`] but with low-rank key projections
+    /// (`wk = A·B`, inner rank `key_rank`). Real LLMs' pre-RoPE keys are
+    /// empirically low-rank (the §2.1 premise); plain Gaussian wk would be
+    /// full-rank and unrepresentative for calibration/rank analyses.
+    pub fn random_lowrank_keys(cfg: &ModelConfig, seed: u64, key_rank: usize) -> Weights {
+        let mut w = Weights::random(cfg, seed);
+        let mut rng = Rng::new(seed ^ 0x10F0);
+        let kvd = cfg.kv_dim();
+        let std = 1.0 / (cfg.d_model as f32).sqrt();
+        for l in &mut w.layers {
+            let a = Mat::randn(cfg.d_model, key_rank, std, &mut rng);
+            let b = Mat::randn(key_rank, kvd, 1.0 / (key_rank as f32).sqrt(), &mut rng);
+            l.wk = a.matmul(&b);
+        }
+        w
+    }
+
+    /// Rough memory footprint in bytes.
+    pub fn nbytes(&self) -> usize {
+        let mut n = self.embedding.data.len() + self.norm_final.len();
+        for l in &self.layers {
+            n += l.wq.data.len()
+                + l.wk.data.len()
+                + l.wv.data.len()
+                + l.wo.data.len()
+                + l.w_gate.data.len()
+                + l.w_up.data.len()
+                + l.w_down.data.len()
+                + l.norm_attn.len()
+                + l.norm_ffn.len();
+        }
+        n * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn random_weights_deterministic() {
+        let cfg = ModelConfig::tiny_mha(64);
+        let a = Weights::random(&cfg, 7);
+        let b = Weights::random(&cfg, 7);
+        assert_eq!(a.embedding.data, b.embedding.data);
+        assert_eq!(a.layers[3].w_down.data, b.layers[3].w_down.data);
+        let c = Weights::random(&cfg, 8);
+        assert_ne!(a.embedding.data, c.embedding.data);
+    }
+
+    #[test]
+    fn shapes_match_config() {
+        let cfg = ModelConfig::tiny_gqa(64);
+        let w = Weights::random(&cfg, 1);
+        assert_eq!(w.layers.len(), cfg.n_layers);
+        let l = &w.layers[0];
+        assert_eq!((l.wq.rows, l.wq.cols), (cfg.d_model, cfg.n_heads * cfg.head_dim));
+        assert_eq!((l.wk.rows, l.wk.cols), (cfg.d_model, cfg.kv_dim()));
+        assert_eq!((l.wo.rows, l.wo.cols), (cfg.n_heads * cfg.head_dim, cfg.d_model));
+        assert_eq!((l.w_down.rows, l.w_down.cols), (cfg.d_ff, cfg.d_model));
+    }
+}

@@ -1,0 +1,264 @@
+//! Appendable channel-wise group-quantized token store — the SALS value
+//! cache (§5.1: "channel-wise group quantisation that mirrors the key-cache
+//! setting", with a high-precision recent window following KIVI).
+//!
+//! Layout: tokens arrive as (dim,)-rows. The newest `window` tokens stay in
+//! fp32 (the high-precision window); once `group` tokens age out of the
+//! window they are quantized **per channel** (each channel's group of
+//! `group` consecutive token values shares one scale/zero pair).
+//!
+//! Storage layout (§Perf L3 iteration 2): frozen groups are flat pages —
+//! one contiguous nibble/crumb code buffer in row-major (token, channel)
+//! order plus per-channel scale/zero arrays. Dequantizing a row is then a
+//! single unit-stride scan; the original per-channel `QuantGroup` objects
+//! cost one heap indirection per *element* and dominated the SALS decode
+//! profile (see EXPERIMENTS.md §Perf).
+
+use super::Bits;
+
+/// One frozen page: `group` tokens × `dim` channels.
+#[derive(Clone, Debug)]
+struct Page {
+    /// Packed codes, row-major (token-within-group, channel).
+    codes: Vec<u8>,
+    /// Per-channel affine params.
+    scale: Vec<f32>,
+    zero: Vec<f32>,
+}
+
+/// Appendable quantized token store with an fp32 recent window.
+#[derive(Clone, Debug)]
+pub struct TokenQuantStore {
+    pub dim: usize,
+    pub bits: Bits,
+    pub group: usize,
+    pub window: usize,
+    pages: Vec<Page>,
+    /// Tokens in the quantized region (== pages.len() * group).
+    frozen: usize,
+    /// fp32 tail: tokens [frozen, len) row-major (len-frozen, dim).
+    tail: Vec<f32>,
+    len: usize,
+}
+
+impl TokenQuantStore {
+    pub fn new(dim: usize, bits: Bits, group: usize, window: usize) -> TokenQuantStore {
+        assert!(group > 0);
+        TokenQuantStore { dim, bits, group, window, pages: Vec::new(), frozen: 0, tail: Vec::new(), len: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Tokens currently held in fp32 (recent window + not-yet-full group).
+    pub fn fp32_len(&self) -> usize {
+        self.len - self.frozen
+    }
+
+    /// Append one token row; freezes (quantizes) aged-out full groups.
+    pub fn append(&mut self, row: &[f32]) {
+        assert_eq!(row.len(), self.dim);
+        self.tail.extend_from_slice(row);
+        self.len += 1;
+        // Freeze while a full group sits entirely outside the window.
+        while self.len - self.frozen >= self.window + self.group {
+            self.freeze_group();
+        }
+    }
+
+    fn freeze_group(&mut self) {
+        let g = self.group;
+        let d = self.dim;
+        let levels = (self.bits.levels() - 1) as f32;
+        let per = self.bits.per_byte();
+        let b = self.bits.bits();
+        let mask = (self.bits.levels() - 1) as u8;
+
+        let mut scale = vec![1.0f32; d];
+        let mut zero = vec![0.0f32; d];
+        // Per-channel min/max over the oldest g tail tokens.
+        for c in 0..d {
+            let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+            for t in 0..g {
+                let x = self.tail[t * d + c];
+                lo = lo.min(x);
+                hi = hi.max(x);
+            }
+            zero[c] = lo;
+            scale[c] = if hi > lo { (hi - lo) / levels } else { 1.0 };
+        }
+        // Pack codes row-major (token, channel) — unit-stride reads later.
+        let mut codes = vec![0u8; (g * d).div_ceil(per)];
+        for t in 0..g {
+            for c in 0..d {
+                let i = t * d + c;
+                let x = self.tail[i];
+                let code =
+                    (((x - zero[c]) / scale[c]).round() as i64).clamp(0, levels as i64) as u8 & mask;
+                codes[i / per] |= code << ((i % per) as u32 * b);
+            }
+        }
+        self.pages.push(Page { codes, scale, zero });
+        self.tail.drain(..g * d);
+        self.frozen += g;
+    }
+
+    /// Dequantize token `i` into `out`. Recent/fp32 tokens are exact.
+    pub fn get(&self, i: usize, out: &mut [f32]) {
+        assert!(i < self.len, "token {i} out of range {}", self.len);
+        assert_eq!(out.len(), self.dim);
+        if i >= self.frozen {
+            let t = i - self.frozen;
+            out.copy_from_slice(&self.tail[t * self.dim..(t + 1) * self.dim]);
+            return;
+        }
+        let page = &self.pages[i / self.group];
+        let t = i % self.group;
+        let base = t * self.dim;
+        let b = self.bits.bits();
+        let mask = (self.bits.levels() - 1) as u8;
+        match self.bits {
+            Bits::B8 => {
+                for (c, o) in out.iter_mut().enumerate() {
+                    *o = page.codes[base + c] as f32 * page.scale[c] + page.zero[c];
+                }
+            }
+            Bits::B4 => {
+                for (c, o) in out.iter_mut().enumerate() {
+                    let i = base + c;
+                    let code = (page.codes[i >> 1] >> ((i & 1) as u32 * 4)) & 0x0F;
+                    *o = code as f32 * page.scale[c] + page.zero[c];
+                }
+            }
+            Bits::B2 => {
+                for (c, o) in out.iter_mut().enumerate() {
+                    let i = base + c;
+                    let code = (page.codes[i >> 2] >> ((i & 3) as u32 * b)) & mask;
+                    *o = code as f32 * page.scale[c] + page.zero[c];
+                }
+            }
+        }
+    }
+
+    /// Bytes needed to read token `i` from the store (for traffic metering):
+    /// packed codes + its group's scale/zero amortized, or fp32 row.
+    pub fn row_read_bytes(&self, i: usize) -> usize {
+        if i >= self.frozen {
+            self.dim * 4
+        } else {
+            // dim channels × (bits/8 payload + amortized params)
+            self.dim * self.bits.bits() as usize / 8 + (self.dim * 8).div_ceil(self.group)
+        }
+    }
+
+    /// Resident bytes of the whole store.
+    pub fn nbytes(&self) -> usize {
+        let packed: usize =
+            self.pages.iter().map(|p| p.codes.len() + 4 * (p.scale.len() + p.zero.len())).sum();
+        packed + self.tail.len() * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+    use crate::util::stats::rel_l2;
+
+    #[test]
+    fn recent_tokens_exact() {
+        let mut st = TokenQuantStore::new(4, Bits::B2, 8, 16);
+        let mut rng = Rng::new(61);
+        let rows: Vec<Vec<f32>> = (0..40).map(|_| rng.normal_vec(4, 1.0)).collect();
+        for r in &rows {
+            st.append(r);
+        }
+        let mut out = vec![0.0; 4];
+        // Newest 16 tokens must be bit-exact.
+        for i in 40 - 16..40 {
+            st.get(i, &mut out);
+            assert_eq!(out, rows[i][..], "row {i}");
+        }
+    }
+
+    #[test]
+    fn frozen_tokens_approximate() {
+        let mut st = TokenQuantStore::new(8, Bits::B4, 8, 8);
+        let mut rng = Rng::new(63);
+        let rows: Vec<Vec<f32>> = (0..64).map(|_| rng.normal_vec(8, 1.0)).collect();
+        for r in &rows {
+            st.append(r);
+        }
+        assert!(st.fp32_len() < 8 + 8 + 1);
+        let mut out = vec![0.0; 8];
+        let mut errs = Vec::new();
+        for (i, r) in rows.iter().enumerate().take(st.len() - st.fp32_len()) {
+            st.get(i, &mut out);
+            errs.push(rel_l2(&out, r));
+        }
+        let mean = errs.iter().sum::<f64>() / errs.len() as f64;
+        assert!(mean > 0.0 && mean < 0.2, "mean rel err {mean}");
+    }
+
+    #[test]
+    fn quant_error_bounded_by_half_step_per_channel() {
+        let mut st = TokenQuantStore::new(6, Bits::B4, 4, 4);
+        let mut rng = Rng::new(69);
+        let rows: Vec<Vec<f32>> = (0..32).map(|_| rng.normal_vec(6, 2.0)).collect();
+        for r in &rows {
+            st.append(r);
+        }
+        let mut out = vec![0.0; 6];
+        for (i, r) in rows.iter().enumerate().take(st.frozen) {
+            st.get(i, &mut out);
+            let page = &st.pages[i / st.group];
+            for c in 0..6 {
+                assert!(
+                    (out[c] - r[c]).abs() <= page.scale[c] * 0.5 + 1e-5,
+                    "row {i} ch {c}: {} vs {}",
+                    out[c],
+                    r[c]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn freeze_boundary_counts() {
+        let mut st = TokenQuantStore::new(2, Bits::B4, 4, 4);
+        for i in 0..12 {
+            st.append(&[i as f32, -(i as f32)]);
+        }
+        // len 12, window 4, group 4 -> frozen groups while fp32_len >= 8.
+        assert_eq!(st.len(), 12);
+        assert!(st.fp32_len() >= 4 && st.fp32_len() < 8);
+        assert_eq!(st.frozen % 4, 0);
+    }
+
+    #[test]
+    fn quantized_rows_cost_fewer_bytes() {
+        let mut st = TokenQuantStore::new(64, Bits::B2, 16, 16);
+        let mut rng = Rng::new(65);
+        for _ in 0..128 {
+            st.append(&rng.normal_vec(64, 1.0));
+        }
+        assert!(st.row_read_bytes(0) < st.row_read_bytes(st.len() - 1));
+        // 2-bit: 64ch × 2/8 = 16B payload + 32B params amortized
+        assert_eq!(st.row_read_bytes(0), 64 / 4 + (64 * 8) / 16);
+    }
+
+    #[test]
+    fn nbytes_smaller_than_fp32() {
+        let mut st = TokenQuantStore::new(32, Bits::B2, 16, 16);
+        let mut rng = Rng::new(67);
+        for _ in 0..512 {
+            st.append(&rng.normal_vec(32, 1.0));
+        }
+        assert!(st.nbytes() < 512 * 32 * 4 / 4, "nbytes {}", st.nbytes());
+    }
+}

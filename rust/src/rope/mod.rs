@@ -1,0 +1,160 @@
+//! Rotary Position Embedding (RoPE, Su et al. 2021) — LLaMA convention.
+//!
+//! LLaMA/HF rotate-half layout: a head vector x of dim d is split into two
+//! halves (x1 = x[..d/2], x2 = x[d/2..]); dimension pair (i, i+d/2) is
+//! rotated by angle θ_i·pos with θ_i = base^(-2i/d).
+//!
+//! The paper's central observation (§3.1, Appendix A) is that applying this
+//! rotation to keys *increases the variance / effective rank* of the key
+//! distribution, which is why SALS compresses keys **pre-RoPE** and applies
+//! RoPE only to the small reconstructed subset (§4.4, Algorithm 1 line 7).
+
+/// Precomputed cos/sin tables for one head dimension.
+#[derive(Clone, Debug)]
+pub struct RopeTable {
+    pub head_dim: usize,
+    pub max_pos: usize,
+    /// (max_pos, head_dim/2) row-major
+    cos: Vec<f32>,
+    sin: Vec<f32>,
+}
+
+impl RopeTable {
+    /// Build tables for positions [0, max_pos) with the given base
+    /// (10_000.0 for LLaMA2/Mistral; 500_000.0 for LLaMA3).
+    pub fn new(head_dim: usize, max_pos: usize, base: f32) -> RopeTable {
+        assert!(head_dim % 2 == 0, "RoPE head_dim must be even");
+        let half = head_dim / 2;
+        let mut cos = vec![0.0; max_pos * half];
+        let mut sin = vec![0.0; max_pos * half];
+        for pos in 0..max_pos {
+            for i in 0..half {
+                let theta = (pos as f64) * (base as f64).powf(-2.0 * i as f64 / head_dim as f64);
+                cos[pos * half + i] = theta.cos() as f32;
+                sin[pos * half + i] = theta.sin() as f32;
+            }
+        }
+        RopeTable { head_dim, max_pos, cos, sin }
+    }
+
+    /// Rotate a single head vector in place for position `pos`.
+    #[inline]
+    pub fn apply(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len(), self.head_dim);
+        assert!(pos < self.max_pos, "RoPE position {pos} >= max {}", self.max_pos);
+        let half = self.head_dim / 2;
+        let cos = &self.cos[pos * half..(pos + 1) * half];
+        let sin = &self.sin[pos * half..(pos + 1) * half];
+        for i in 0..half {
+            let a = x[i];
+            let b = x[i + half];
+            x[i] = a * cos[i] - b * sin[i];
+            x[i + half] = b * cos[i] + a * sin[i];
+        }
+    }
+
+    /// Rotate every head slice of a multi-head vector (n_heads × head_dim,
+    /// concatenated) in place for position `pos`.
+    pub fn apply_multihead(&self, x: &mut [f32], pos: usize) {
+        assert_eq!(x.len() % self.head_dim, 0);
+        for h in 0..x.len() / self.head_dim {
+            self.apply(&mut x[h * self.head_dim..(h + 1) * self.head_dim], pos);
+        }
+    }
+
+    /// Rotate row `t` of a (seq, n_heads*head_dim) buffer for position
+    /// `positions[t]`, for all rows.
+    pub fn apply_rows(&self, buf: &mut [f32], row_dim: usize, positions: &[usize]) {
+        assert_eq!(buf.len(), row_dim * positions.len());
+        for (t, &pos) in positions.iter().enumerate() {
+            self.apply_multihead(&mut buf[t * row_dim..(t + 1) * row_dim], pos);
+        }
+    }
+
+    /// Inverse rotation (rotate by -pos). Used in tests and in the
+    /// Figure-1(b)/Figure-4 analyses.
+    pub fn apply_inverse(&self, x: &mut [f32], pos: usize) {
+        debug_assert_eq!(x.len(), self.head_dim);
+        let half = self.head_dim / 2;
+        let cos = &self.cos[pos * half..(pos + 1) * half];
+        let sin = &self.sin[pos * half..(pos + 1) * half];
+        for i in 0..half {
+            let a = x[i];
+            let b = x[i + half];
+            x[i] = a * cos[i] + b * sin[i];
+            x[i + half] = b * cos[i] - a * sin[i];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn position_zero_is_identity() {
+        let t = RopeTable::new(8, 16, 10_000.0);
+        let mut x: Vec<f32> = (0..8).map(|i| i as f32).collect();
+        let orig = x.clone();
+        t.apply(&mut x, 0);
+        assert_eq!(x, orig);
+    }
+
+    #[test]
+    fn rotation_preserves_norm() {
+        let t = RopeTable::new(64, 128, 10_000.0);
+        let mut rng = Rng::new(4);
+        let mut x = rng.normal_vec(64, 1.0);
+        let n0: f32 = x.iter().map(|v| v * v).sum();
+        t.apply(&mut x, 77);
+        let n1: f32 = x.iter().map(|v| v * v).sum();
+        assert!((n0 - n1).abs() / n0 < 1e-5);
+    }
+
+    #[test]
+    fn inverse_undoes_rotation() {
+        let t = RopeTable::new(32, 64, 10_000.0);
+        let mut rng = Rng::new(6);
+        let mut x = rng.normal_vec(32, 1.0);
+        let orig = x.clone();
+        t.apply(&mut x, 33);
+        t.apply_inverse(&mut x, 33);
+        for (a, b) in x.iter().zip(&orig) {
+            assert!((a - b).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn relative_position_property() {
+        // <RoPE(q, i), RoPE(k, j)> must depend only on i - j.
+        let t = RopeTable::new(16, 256, 10_000.0);
+        let mut rng = Rng::new(8);
+        let q = rng.normal_vec(16, 1.0);
+        let k = rng.normal_vec(16, 1.0);
+        let score = |i: usize, j: usize| {
+            let mut qa = q.clone();
+            let mut ka = k.clone();
+            t.apply(&mut qa, i);
+            t.apply(&mut ka, j);
+            crate::tensor::ops::dot(&qa, &ka)
+        };
+        let s1 = score(10, 3);
+        let s2 = score(107, 100);
+        assert!((s1 - s2).abs() < 1e-3, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn multihead_rotates_each_head() {
+        let t = RopeTable::new(4, 8, 10_000.0);
+        let mut rng = Rng::new(10);
+        let head = rng.normal_vec(4, 1.0);
+        let mut two_heads = [head.clone(), head.clone()].concat();
+        t.apply_multihead(&mut two_heads, 5);
+        // Both heads must have received the identical rotation.
+        assert_eq!(&two_heads[..4], &two_heads[4..]);
+        let mut single = head;
+        t.apply(&mut single, 5);
+        assert_eq!(&two_heads[..4], single.as_slice());
+    }
+}

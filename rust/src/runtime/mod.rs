@@ -1,0 +1,155 @@
+//! PJRT runtime: load AOT-compiled HLO text artifacts and execute them from
+//! the Rust hot path. Python authored + lowered these at `make artifacts`
+//! time; at serve time the binary is self-contained.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: HLO **text** is the
+//! interchange format (jax ≥0.5 emits HloModuleProto with 64-bit ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids).
+
+pub mod xla_model;
+
+pub use xla_model::{ArtifactMeta, XlaModel, XlaVariant};
+
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A loaded-and-compiled artifact registry backed by one PJRT CPU client.
+pub struct ArtifactRuntime {
+    client: xla::PjRtClient,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl ArtifactRuntime {
+    /// Create a CPU PJRT client rooted at an artifacts directory.
+    pub fn new(dir: impl AsRef<Path>) -> Result<ArtifactRuntime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(ArtifactRuntime { client, executables: HashMap::new(), dir: dir.as_ref().to_path_buf() })
+    }
+
+    /// Platform string (for logs).
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load `<dir>/<name>.hlo.txt`, compile, and cache under `name`.
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.executables.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            return Err(Error::Config(format!(
+                "artifact {} missing — run `make artifacts`",
+                path.display()
+            )));
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| Error::Config("non-utf8 artifact path".into()))?,
+        )?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.executables.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Names of loaded artifacts.
+    pub fn loaded(&self) -> Vec<&str> {
+        self.executables.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Execute a loaded artifact on f32 tensors.
+    ///
+    /// `inputs`: (data, dims) pairs; the jax side lowers with
+    /// `return_tuple=True`, so the single output is a tuple whose elements
+    /// are returned as flat f32 vectors (with their dims).
+    pub fn run_f32(
+        &self,
+        name: &str,
+        inputs: &[(&[f32], &[usize])],
+    ) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| Error::Config(format!("artifact {name} not loaded")))?;
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let dims_i64: Vec<i64> = dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims_i64)?;
+            literals.push(lit);
+        }
+        let mut result = exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let tuple = result.decompose_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            // Convert whatever dtype came back to f32 host data.
+            let lit_f32 = lit.convert(xla::PrimitiveType::F32)?;
+            out.push(lit_f32.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+
+    /// Execute returning raw literals (for non-f32 outputs like token ids).
+    pub fn run_literals(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| Error::Config(format!("artifact {name} not loaded")))?;
+        let mut result = exe.execute::<xla::Literal>(inputs)?[0][0].to_literal_sync()?;
+        Ok(result.decompose_tuple()?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    /// Minimal HLO module computing (x+y,) over f32[2,2] — hand-written so
+    /// the runtime tests don't depend on `make artifacts` having run.
+    const ADD_HLO: &str = r#"HloModule add_mod, entry_computation_layout={(f32[2,2]{1,0}, f32[2,2]{1,0})->(f32[2,2]{1,0})}
+
+ENTRY main.5 {
+  Arg_0.1 = f32[2,2]{1,0} parameter(0)
+  Arg_1.2 = f32[2,2]{1,0} parameter(1)
+  add.3 = f32[2,2]{1,0} add(Arg_0.1, Arg_1.2)
+  ROOT tuple.4 = (f32[2,2]{1,0}) tuple(add.3)
+}
+"#;
+
+    fn write_artifact(dir: &Path, name: &str, text: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        let mut f = std::fs::File::create(dir.join(format!("{name}.hlo.txt"))).unwrap();
+        f.write_all(text.as_bytes()).unwrap();
+    }
+
+    #[test]
+    fn loads_and_runs_handwritten_hlo() {
+        let dir = std::env::temp_dir().join("sals_runtime_test");
+        write_artifact(&dir, "add", ADD_HLO);
+        let mut rt = ArtifactRuntime::new(&dir).unwrap();
+        rt.load("add").unwrap();
+        assert!(rt.loaded().contains(&"add"));
+        let x = [1.0f32, 2.0, 3.0, 4.0];
+        let y = [10.0f32, 20.0, 30.0, 40.0];
+        let out = rt.run_f32("add", &[(&x, &[2, 2]), (&y, &[2, 2])]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0], vec![11.0, 22.0, 33.0, 44.0]);
+    }
+
+    #[test]
+    fn missing_artifact_is_config_error() {
+        let dir = std::env::temp_dir().join("sals_runtime_test_missing");
+        let mut rt = ArtifactRuntime::new(&dir).unwrap();
+        let err = rt.load("nope").unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn run_unloaded_name_errors() {
+        let dir = std::env::temp_dir().join("sals_runtime_test2");
+        let rt = ArtifactRuntime::new(&dir).unwrap();
+        assert!(rt.run_f32("ghost", &[]).is_err());
+    }
+}

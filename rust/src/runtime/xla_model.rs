@@ -1,0 +1,196 @@
+//! Host-side driver for the AOT decode-step artifacts: owns the KV caches
+//! and advances one token at a time through the compiled HLO.
+//!
+//! This is the piece that proves the three-layer composition: the HLO was
+//! lowered from the L2 JAX graph whose attention stages are the L1 Pallas
+//! kernels; this struct (L3) feeds it tokens from the serving loop.
+
+use super::ArtifactRuntime;
+use crate::util::{Error, Result};
+use std::collections::HashMap;
+use std::path::Path;
+
+/// Shape contract parsed from `artifacts/meta.txt`.
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub head_dim: usize,
+    pub max_seq: usize,
+    pub rank: usize,
+    pub r_star: usize,
+    pub k_sel: usize,
+}
+
+impl ArtifactMeta {
+    pub fn kv_dim(&self) -> usize {
+        self.n_heads * self.head_dim
+    }
+
+    /// Parse `meta.txt` (see python/compile/aot.py).
+    pub fn load(dir: impl AsRef<Path>) -> Result<ArtifactMeta> {
+        let text = std::fs::read_to_string(dir.as_ref().join("meta.txt"))?;
+        let mut kv = HashMap::new();
+        let mut lines = text.lines();
+        let magic = lines.next().unwrap_or("");
+        if magic.trim() != "sals-artifacts v1" {
+            return Err(Error::Config(format!("bad meta magic: {magic}")));
+        }
+        for line in lines {
+            if let Some((k, v)) = line.split_once(' ') {
+                kv.insert(k.to_string(), v.trim().to_string());
+            }
+        }
+        let get = |k: &str| -> Result<usize> {
+            kv.get(k)
+                .and_then(|v| v.parse().ok())
+                .ok_or_else(|| Error::Config(format!("meta missing field {k}")))
+        };
+        Ok(ArtifactMeta {
+            vocab: get("vocab")?,
+            d_model: get("d_model")?,
+            n_layers: get("n_layers")?,
+            n_heads: get("n_heads")?,
+            head_dim: get("head_dim")?,
+            max_seq: get("max_seq")?,
+            rank: get("rank")?,
+            r_star: get("r_star")?,
+            k_sel: get("k_sel")?,
+        })
+    }
+}
+
+/// Which decode artifact to drive.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum XlaVariant {
+    Sals,
+    Dense,
+}
+
+impl XlaVariant {
+    fn artifact(self) -> &'static str {
+        match self {
+            XlaVariant::Sals => "sals_decode",
+            XlaVariant::Dense => "dense_decode",
+        }
+    }
+}
+
+/// One decoding sequence over a compiled decode-step executable.
+pub struct XlaModel {
+    pub meta: ArtifactMeta,
+    variant: XlaVariant,
+    /// (L, S, r) for SALS keys / (L, S, kv) dense keys — flat host buffer.
+    k_cache: Vec<f32>,
+    /// (L, S, kv) values.
+    v_cache: Vec<f32>,
+    pub pos: usize,
+}
+
+impl XlaModel {
+    /// Prepare caches for a fresh sequence; loads the artifact if needed.
+    pub fn new(rt: &mut ArtifactRuntime, dir: impl AsRef<Path>, variant: XlaVariant) -> Result<XlaModel> {
+        let meta = ArtifactMeta::load(&dir)?;
+        rt.load(variant.artifact())?;
+        let k_width = match variant {
+            XlaVariant::Sals => meta.rank,
+            XlaVariant::Dense => meta.kv_dim(),
+        };
+        Ok(XlaModel {
+            k_cache: vec![0.0; meta.n_layers * meta.max_seq * k_width],
+            v_cache: vec![0.0; meta.n_layers * meta.max_seq * meta.kv_dim()],
+            pos: 0,
+            meta,
+            variant,
+        })
+    }
+
+    fn k_width(&self) -> usize {
+        match self.variant {
+            XlaVariant::Sals => self.meta.rank,
+            XlaVariant::Dense => self.meta.kv_dim(),
+        }
+    }
+
+    /// Resident KV bytes of this sequence's caches at the current length
+    /// (latent keys are `rank/kv_dim` of dense — the Table 2/3 comp ratio).
+    pub fn kv_bytes_at_len(&self) -> usize {
+        self.pos * self.meta.n_layers * (self.k_width() + self.meta.kv_dim()) * 4
+    }
+
+    /// Feed one token; returns the next-token logits.
+    pub fn step(&mut self, rt: &ArtifactRuntime, token: usize) -> Result<Vec<f32>> {
+        if self.pos >= self.meta.max_seq {
+            return Err(Error::Coordinator("sequence exceeds artifact max_seq".into()));
+        }
+        if token >= self.meta.vocab {
+            return Err(Error::Config(format!("token {token} out of vocab")));
+        }
+        let m = &self.meta;
+        let kw = self.k_width();
+        let tok = xla::Literal::scalar(token as i32);
+        let pos = xla::Literal::scalar(self.pos as i32);
+        let kdims: Vec<i64> = vec![m.n_layers as i64, m.max_seq as i64, kw as i64];
+        let vdims: Vec<i64> = vec![m.n_layers as i64, m.max_seq as i64, m.kv_dim() as i64];
+        let kc = xla::Literal::vec1(self.k_cache.as_slice()).reshape(&kdims)?;
+        let vc = xla::Literal::vec1(self.v_cache.as_slice()).reshape(&vdims)?;
+        let outs = rt.run_literals(self.variant.artifact(), &[tok, pos, kc, vc])?;
+        if outs.len() != 3 {
+            return Err(Error::Xla(format!("expected 3 outputs, got {}", outs.len())));
+        }
+        let logits = outs[0].convert(xla::PrimitiveType::F32).map_err(|e| Error::Xla(e.to_string()))?.to_vec::<f32>()?;
+        self.k_cache = outs[1].convert(xla::PrimitiveType::F32).map_err(|e| Error::Xla(e.to_string()))?.to_vec::<f32>()?;
+        self.v_cache = outs[2].convert(xla::PrimitiveType::F32).map_err(|e| Error::Xla(e.to_string()))?.to_vec::<f32>()?;
+        self.pos += 1;
+        Ok(logits)
+    }
+
+    /// Greedy generation: prefill the prompt, then decode `n` tokens.
+    pub fn generate(&mut self, rt: &ArtifactRuntime, prompt: &[usize], n: usize) -> Result<Vec<usize>> {
+        assert!(!prompt.is_empty());
+        let mut logits = Vec::new();
+        for &t in prompt {
+            logits = self.step(rt, t)?;
+        }
+        let mut out = Vec::with_capacity(n);
+        for _ in 0..n {
+            let next = crate::tensor::ops::argmax(&logits);
+            out.push(next);
+            if self.pos >= self.meta.max_seq {
+                break;
+            }
+            logits = self.step(rt, next)?;
+        }
+        Ok(out)
+    }
+
+    /// Reset to an empty sequence (reuse the compiled executable).
+    pub fn reset(&mut self) {
+        self.k_cache.fill(0.0);
+        self.v_cache.fill(0.0);
+        self.pos = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn meta_parses_and_rejects_garbage() {
+        let dir = std::env::temp_dir().join("sals_meta_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("meta.txt"),
+            "sals-artifacts v1\nvocab 256\nd_model 128\nn_layers 4\nn_heads 4\nhead_dim 32\nmax_seq 512\nrank 32\nr_star 16\nk_sel 64\n",
+        )
+        .unwrap();
+        let m = ArtifactMeta::load(&dir).unwrap();
+        assert_eq!(m.kv_dim(), 128);
+        assert_eq!(m.max_seq, 512);
+        std::fs::write(dir.join("meta.txt"), "not-a-meta\n").unwrap();
+        assert!(ArtifactMeta::load(&dir).is_err());
+    }
+}

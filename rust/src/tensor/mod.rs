@@ -1,0 +1,158 @@
+//! Dense row-major f32 tensor substrate.
+//!
+//! All host-side math in the coordinator, the baselines and the CPU model
+//! goes through this module. The hot paths (`matmul`, `matmul_tn`,
+//! `softmax_rows`) are written for cache-friendliness: the inner loops are
+//! unit-stride and `matmul` packs the RHS when it pays off.
+
+pub mod ops;
+pub mod topk;
+
+pub use ops::*;
+pub use topk::{top_k_indices, top_k_indices_into};
+
+use crate::util::rng::Rng;
+
+/// Row-major 2-D matrix of f32.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    /// Zero-filled matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// Build from existing data (length must equal rows*cols).
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "Mat::from_vec length mismatch");
+        Mat { rows, cols, data }
+    }
+
+    /// Gaussian-initialized matrix with std `std`.
+    pub fn randn(rows: usize, cols: usize, std: f32, rng: &mut Rng) -> Mat {
+        Mat { rows, cols, data: rng.normal_vec(rows * cols, std) }
+    }
+
+    /// Identity matrix.
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m.data[i * n + i] = 1.0;
+        }
+        m
+    }
+
+    /// Immutable row view.
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Mutable row view.
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Element accessor (debug/test convenience).
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    /// Transposed copy.
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out.data[c * self.rows + r] = self.data[r * self.cols + c];
+            }
+        }
+        out
+    }
+
+    /// `self @ other` — see [`ops::matmul`].
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.cols);
+        ops::matmul(&self.data, &other.data, &mut out.data, self.rows, self.cols, other.cols);
+        out
+    }
+
+    /// `self @ otherᵀ` — other is (n, k) with k == self.cols.
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "matmul_t shape mismatch");
+        let mut out = Mat::zeros(self.rows, other.rows);
+        ops::matmul_tn(&self.data, &other.data, &mut out.data, self.rows, self.cols, other.rows);
+        out
+    }
+
+    /// Frobenius norm.
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Select rows by index into a new matrix.
+    pub fn gather_rows(&self, idx: &[usize]) -> Mat {
+        let mut out = Mat::zeros(idx.len(), self.cols);
+        for (o, &i) in idx.iter().enumerate() {
+            out.row_mut(o).copy_from_slice(self.row(i));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eye_matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Mat::randn(4, 4, 1.0, &mut rng);
+        let i = Mat::eye(4);
+        let ai = a.matmul(&i);
+        for (x, y) in ai.data.iter().zip(&a.data) {
+            assert!((x - y).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Mat::randn(5, 7, 1.0, &mut rng);
+        let b = Mat::randn(3, 7, 1.0, &mut rng);
+        let via_t = a.matmul_t(&b);
+        let explicit = a.matmul(&b.transpose());
+        for (x, y) in via_t.data.iter().zip(&explicit.data) {
+            assert!((x - y).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let mut rng = Rng::new(3);
+        let a = Mat::randn(6, 2, 1.0, &mut rng);
+        assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn gather_rows_picks() {
+        let m = Mat::from_vec(3, 2, vec![0., 1., 10., 11., 20., 21.]);
+        let g = m.gather_rows(&[2, 0]);
+        assert_eq!(g.data, vec![20., 21., 0., 1.]);
+    }
+
+    #[test]
+    #[should_panic(expected = "matmul shape mismatch")]
+    fn matmul_shape_checked() {
+        let a = Mat::zeros(2, 3);
+        let b = Mat::zeros(2, 3);
+        let _ = a.matmul(&b);
+    }
+}

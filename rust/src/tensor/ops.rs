@@ -1,0 +1,218 @@
+//! Slice-level numeric kernels (matmul, softmax, norms, elementwise).
+//!
+//! These operate on raw `&[f32]` so the KV-cache and attention hot paths can
+//! run without constructing `Mat` wrappers or allocating.
+
+/// out[m,n] = a[m,k] @ b[k,n]   (row-major, out must be zeroed or will be overwritten)
+///
+/// i-k-j loop order keeps both the `b` row and `out` row unit-stride, which
+/// is the standard cache-friendly ordering for row-major operands.
+pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue; // sparse rows (masked tokens) short-circuit
+            }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[m,n] = a[m,k] @ b[n,k]ᵀ — both operands row-major; the inner loop is a
+/// dot product of two unit-stride rows (ideal for auto-vectorization).
+pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), n * k);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        for j in 0..n {
+            let brow = &b[j * k..(j + 1) * k];
+            out[i * n + j] = dot(arow, brow);
+        }
+    }
+}
+
+/// Unit-stride dot product.
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    debug_assert_eq!(a.len(), b.len());
+    // 4-way unrolled accumulation; lets LLVM vectorize without -ffast-math.
+    let chunks = a.len() / 4;
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+    for c in 0..chunks {
+        let i = c * 4;
+        s0 += a[i] * b[i];
+        s1 += a[i + 1] * b[i + 1];
+        s2 += a[i + 2] * b[i + 2];
+        s3 += a[i + 3] * b[i + 3];
+    }
+    let mut s = s0 + s1 + s2 + s3;
+    for i in chunks * 4..a.len() {
+        s += a[i] * b[i];
+    }
+    s
+}
+
+/// y += alpha * x
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    debug_assert_eq!(x.len(), y.len());
+    for (yi, xi) in y.iter_mut().zip(x) {
+        *yi += alpha * xi;
+    }
+}
+
+/// In-place numerically-stable softmax over one row.
+pub fn softmax(row: &mut [f32]) {
+    if row.is_empty() {
+        return;
+    }
+    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+    let mut sum = 0.0f32;
+    for x in row.iter_mut() {
+        *x = (*x - max).exp();
+        sum += *x;
+    }
+    let inv = 1.0 / sum;
+    for x in row.iter_mut() {
+        *x *= inv;
+    }
+}
+
+/// Softmax over each row of an (m, n) row-major buffer.
+pub fn softmax_rows(buf: &mut [f32], m: usize, n: usize) {
+    assert_eq!(buf.len(), m * n);
+    for r in 0..m {
+        softmax(&mut buf[r * n..(r + 1) * n]);
+    }
+}
+
+/// RMSNorm: x * w / sqrt(mean(x²) + eps). LLaMA-style (no mean subtraction).
+pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
+    assert_eq!(x.len(), w.len());
+    assert_eq!(x.len(), out.len());
+    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let inv = 1.0 / (ms + eps).sqrt();
+    for i in 0..x.len() {
+        out[i] = x[i] * inv * w[i];
+    }
+}
+
+/// SiLU (swish) activation: x * sigmoid(x).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Scale a slice in place.
+pub fn scale(xs: &mut [f32], alpha: f32) {
+    for x in xs {
+        *x *= alpha;
+    }
+}
+
+/// argmax over a slice (first max wins). Panics on empty input.
+pub fn argmax(xs: &[f32]) -> usize {
+    assert!(!xs.is_empty());
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_2x2() {
+        // [[1,2],[3,4]] @ [[1,1],[1,1]] = [[3,3],[7,7]]
+        let a = [1., 2., 3., 4.];
+        let b = [1., 1., 1., 1.];
+        let mut out = [0.0f32; 4];
+        matmul(&a, &b, &mut out, 2, 2, 2);
+        assert_eq!(out, [3., 3., 7., 7.]);
+    }
+
+    #[test]
+    fn matmul_tn_matches_matmul() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let (m, k, n) = (3, 17, 5);
+        let a = rng.normal_vec(m * k, 1.0);
+        let bt = rng.normal_vec(n * k, 1.0); // (n,k)
+        // b = btᵀ as (k,n)
+        let mut b = vec![0.0; k * n];
+        for r in 0..n {
+            for c in 0..k {
+                b[c * n + r] = bt[r * k + c];
+            }
+        }
+        let mut o1 = vec![0.0; m * n];
+        let mut o2 = vec![0.0; m * n];
+        matmul(&a, &b, &mut o1, m, k, n);
+        matmul_tn(&a, &bt, &mut o2, m, k, n);
+        for (x, y) in o1.iter().zip(&o2) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn softmax_sums_to_one_and_orders() {
+        let mut row = [1.0f32, 2.0, 3.0];
+        softmax(&mut row);
+        let s: f32 = row.iter().sum();
+        assert!((s - 1.0).abs() < 1e-6);
+        assert!(row[2] > row[1] && row[1] > row[0]);
+    }
+
+    #[test]
+    fn softmax_stable_for_large_logits() {
+        let mut row = [1000.0f32, 1000.0, 999.0];
+        softmax(&mut row);
+        assert!(row.iter().all(|x| x.is_finite()));
+        assert!((row.iter().sum::<f32>() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rmsnorm_unit_weight_normalizes() {
+        let x = [3.0f32, 4.0];
+        let w = [1.0f32, 1.0];
+        let mut out = [0.0f32; 2];
+        rmsnorm(&x, &w, 0.0, &mut out);
+        let ms = out.iter().map(|v| v * v).sum::<f32>() / 2.0;
+        assert!((ms - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn argmax_first_max() {
+        assert_eq!(argmax(&[1.0, 5.0, 5.0, 2.0]), 1);
+    }
+
+    #[test]
+    fn dot_matches_naive() {
+        let a: Vec<f32> = (0..13).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..13).map(|i| (13 - i) as f32).collect();
+        let naive: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        assert!((dot(&a, &b) - naive).abs() < 1e-4);
+    }
+
+    #[test]
+    fn silu_known_values() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!(silu(10.0) > 9.9);
+    }
+}

@@ -1,0 +1,125 @@
+//! Top-k index selection — the critical-token selection primitive (§4.3).
+//!
+//! Decode-time selection runs per (layer, head-group, step), so this is a
+//! hot path: we use a bounded binary min-heap over (score, index) instead of
+//! sorting the whole score vector.
+
+/// Indices of the k largest entries of `scores`, in DESCENDING score order.
+/// Ties break toward the lower index. If k >= len, returns all indices
+/// sorted by score.
+pub fn top_k_indices(scores: &[f32], k: usize) -> Vec<usize> {
+    let mut out = Vec::with_capacity(k.min(scores.len()));
+    top_k_indices_into(scores, k, &mut out);
+    out
+}
+
+/// Same as [`top_k_indices`] but reuses `out`'s allocation.
+pub fn top_k_indices_into(scores: &[f32], k: usize, out: &mut Vec<usize>) {
+    out.clear();
+    let k = k.min(scores.len());
+    if k == 0 {
+        return;
+    }
+    // Min-heap of the best k seen so far, keyed by (score, Reverse(index))
+    // so that on equal scores the LOWER index is considered better and kept.
+    // Heap root = current worst of the best-k.
+    let mut heap: Vec<(f32, usize)> = Vec::with_capacity(k);
+
+    #[inline]
+    fn better(a: (f32, usize), b: (f32, usize)) -> bool {
+        // is a better (larger) than b?
+        a.0 > b.0 || (a.0 == b.0 && a.1 < b.1)
+    }
+    #[inline]
+    fn sift_down(heap: &mut [(f32, usize)], mut i: usize) {
+        loop {
+            let (l, r) = (2 * i + 1, 2 * i + 2);
+            let mut smallest = i;
+            if l < heap.len() && better(heap[smallest], heap[l]) {
+                smallest = l;
+            }
+            if r < heap.len() && better(heap[smallest], heap[r]) {
+                smallest = r;
+            }
+            if smallest == i {
+                return;
+            }
+            heap.swap(i, smallest);
+            i = smallest;
+        }
+    }
+    #[inline]
+    fn sift_up(heap: &mut [(f32, usize)], mut i: usize) {
+        while i > 0 {
+            let p = (i - 1) / 2;
+            if better(heap[p], heap[i]) {
+                heap.swap(p, i);
+                i = p;
+            } else {
+                return;
+            }
+        }
+    }
+
+    for (i, &s) in scores.iter().enumerate() {
+        let cand = (s, i);
+        if heap.len() < k {
+            heap.push(cand);
+            let last = heap.len() - 1;
+            sift_up(&mut heap, last);
+        } else if better(cand, heap[0]) {
+            heap[0] = cand;
+            sift_down(&mut heap, 0);
+        }
+    }
+
+    // Extract in descending order.
+    heap.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    out.extend(heap.iter().map(|&(_, i)| i));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn picks_largest_descending() {
+        let s = [0.1f32, 5.0, 3.0, 4.0, -1.0];
+        assert_eq!(top_k_indices(&s, 3), vec![1, 3, 2]);
+    }
+
+    #[test]
+    fn k_larger_than_len() {
+        let s = [2.0f32, 1.0];
+        assert_eq!(top_k_indices(&s, 10), vec![0, 1]);
+    }
+
+    #[test]
+    fn k_zero_and_empty() {
+        assert!(top_k_indices(&[1.0], 0).is_empty());
+        assert!(top_k_indices(&[], 3).is_empty());
+    }
+
+    #[test]
+    fn ties_prefer_lower_index() {
+        let s = [7.0f32, 7.0, 7.0, 7.0];
+        assert_eq!(top_k_indices(&s, 2), vec![0, 1]);
+    }
+
+    #[test]
+    fn matches_full_sort_randomized() {
+        let mut rng = Rng::new(99);
+        for _ in 0..50 {
+            let n = rng.range(1, 200);
+            let k = rng.range(1, n + 1);
+            let scores: Vec<f32> = (0..n).map(|_| rng.normal_f32()).collect();
+            let fast = top_k_indices(&scores, k);
+            let mut all: Vec<usize> = (0..n).collect();
+            all.sort_by(|&a, &b| {
+                scores[b].partial_cmp(&scores[a]).unwrap().then(a.cmp(&b))
+            });
+            assert_eq!(fast, all[..k].to_vec());
+        }
+    }
+}

@@ -1,0 +1,32 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors surfaced by the SALS library.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Shape mismatch between tensors or against a config.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+    /// Invalid configuration value.
+    #[error("invalid config: {0}")]
+    Config(String),
+    /// I/O error (artifact loading, trace files).
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+    /// Error bubbled up from the XLA/PJRT runtime.
+    #[error("xla error: {0}")]
+    Xla(String),
+    /// Coordinator-level failure (queue closed, session missing, ...).
+    #[error("coordinator error: {0}")]
+    Coordinator(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
+}

@@ -1,0 +1,13 @@
+//! Shared substrates: error type, PRNG, statistics, JSON writer, CLI parser,
+//! timing, thread pool, and a mini property-testing harness.
+
+pub mod cli;
+pub mod error;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+pub mod timer;
+
+pub use error::{Error, Result};

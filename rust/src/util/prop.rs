@@ -1,0 +1,121 @@
+//! Miniature property-testing harness (no `proptest` in the offline set).
+//!
+//! `check(name, cases, gen, prop)` draws `cases` random inputs from `gen`
+//! and asserts `prop` on each; on failure it performs greedy shrinking via
+//! the input's `Shrink` implementation and panics with the minimal
+//! counterexample. Used for coordinator invariants (routing, batching,
+//! cache-state) and numeric-kernel invariants.
+
+use crate::util::rng::Rng;
+
+/// Types that can propose smaller versions of themselves for shrinking.
+pub trait Shrink: Sized + Clone + std::fmt::Debug {
+    /// Candidate strictly-smaller values (may be empty).
+    fn shrink(&self) -> Vec<Self>;
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<usize> {
+        let mut out = Vec::new();
+        if *self > 0 {
+            out.push(0);
+            out.push(self / 2);
+            out.push(self - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+impl Shrink for (usize, usize) {
+    fn shrink(&self) -> Vec<(usize, usize)> {
+        let mut out = Vec::new();
+        for a in self.0.shrink() {
+            out.push((a, self.1));
+        }
+        for b in self.1.shrink() {
+            out.push((self.0, b));
+        }
+        out
+    }
+}
+
+impl Shrink for Vec<f32> {
+    fn shrink(&self) -> Vec<Vec<f32>> {
+        let mut out = Vec::new();
+        if self.len() > 1 {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+        }
+        if self.iter().any(|x| *x != 0.0) {
+            out.push(vec![0.0; self.len()]);
+        }
+        out
+    }
+}
+
+impl Shrink for Vec<usize> {
+    fn shrink(&self) -> Vec<Vec<usize>> {
+        let mut out = Vec::new();
+        if !self.is_empty() {
+            out.push(self[..self.len() / 2].to_vec());
+            out.push(self[1..].to_vec());
+        }
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs; shrink + panic on failure.
+pub fn check<T: Shrink>(
+    name: &str,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let mut rng = Rng::new(0xC0FFEE ^ name.len() as u64);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            let minimal = shrink_loop(input, &prop);
+            panic!("property '{name}' failed on case {case}; minimal counterexample: {minimal:?}");
+        }
+    }
+}
+
+fn shrink_loop<T: Shrink>(mut failing: T, prop: &impl Fn(&T) -> bool) -> T {
+    // Greedy descent: keep taking the first shrunk candidate that still fails.
+    'outer: for _ in 0..1000 {
+        for cand in failing.shrink() {
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_is_quiet() {
+        check("add-commutes", 200, |r| (r.below(100), r.below(100)), |(a, b)| a + b == b + a);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_shrinks() {
+        check("all-below-50", 500, |r| r.below(100), |&x| x < 50);
+    }
+
+    #[test]
+    fn shrink_usize_descends() {
+        let s = 10usize.shrink();
+        assert!(s.contains(&5));
+        assert!(s.contains(&9));
+        assert!(0usize.shrink().is_empty());
+    }
+}

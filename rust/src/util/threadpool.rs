@@ -1,0 +1,93 @@
+//! Fixed-size thread pool with scoped parallel-for (no rayon offline).
+//!
+//! Used by the coordinator for worker fan-out and by benches for parallel
+//! workload generation. `parallel_for` splits an index range into contiguous
+//! chunks and runs them on `std::thread::scope` threads.
+
+/// Run `f(i)` for every i in 0..n across up to `threads` OS threads.
+///
+/// `f` must be Sync; each index is processed exactly once. Chunking is
+/// contiguous so cache locality of per-index work is preserved.
+pub fn parallel_for(n: usize, threads: usize, f: impl Fn(usize) + Sync) {
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for t in 0..threads {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            if lo >= hi {
+                break;
+            }
+            let f = &f;
+            s.spawn(move || {
+                for i in lo..hi {
+                    f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over 0..n in parallel, collecting results in index order.
+pub fn parallel_map<T: Send>(n: usize, threads: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
+    // Each scope thread owns a disjoint &mut [Option<T>] chunk — no locks.
+    let mut out: Vec<Option<T>> = (0..n).map(|_| None).collect();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for (i, slot) in out.iter_mut().enumerate() {
+            *slot = Some(f(i));
+        }
+    } else {
+        let chunk = n.div_ceil(threads);
+        std::thread::scope(|s| {
+            for (t, slice) in out.chunks_mut(chunk).enumerate() {
+                let f = &f;
+                s.spawn(move || {
+                    for (j, slot) in slice.iter_mut().enumerate() {
+                        *slot = Some(f(t * chunk + j));
+                    }
+                });
+            }
+        });
+    }
+    out.into_iter().map(|o| o.expect("parallel_map slot unfilled")).collect()
+}
+
+/// Number of available CPUs (fallback 4).
+pub fn num_cpus() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn parallel_for_covers_all() {
+        let hits = AtomicUsize::new(0);
+        parallel_for(1000, 8, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_map_ordered() {
+        let out = parallel_map(100, 7, |i| i * 2);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn degenerate_sizes() {
+        parallel_for(0, 4, |_| panic!("should not run"));
+        let out = parallel_map(1, 16, |i| i + 1);
+        assert_eq!(out, vec![1]);
+    }
+}

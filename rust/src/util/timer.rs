@@ -1,0 +1,64 @@
+//! Timing helpers for the bench harness.
+
+use std::time::Instant;
+
+/// Measure one closure invocation in seconds.
+pub fn time_once<T>(f: impl FnOnce() -> T) -> (T, f64) {
+    let t0 = Instant::now();
+    let out = f();
+    (out, t0.elapsed().as_secs_f64())
+}
+
+/// Run `warmup` unmeasured then `iters` measured invocations; returns
+/// per-iteration seconds.
+pub fn time_iters(warmup: usize, iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut out = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        out.push(t0.elapsed().as_secs_f64());
+    }
+    out
+}
+
+/// Adaptively pick an iteration count so total measured time ≈ `budget_s`,
+/// then measure. Returns per-iteration seconds (at least `min_iters`).
+pub fn time_budgeted(budget_s: f64, min_iters: usize, mut f: impl FnMut()) -> Vec<f64> {
+    // Pilot run to estimate cost.
+    let t0 = Instant::now();
+    f();
+    let pilot = t0.elapsed().as_secs_f64().max(1e-9);
+    let iters = ((budget_s / pilot) as usize).clamp(min_iters, 100_000);
+    time_iters(1, iters, f)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_once_returns_value() {
+        let (v, dt) = time_once(|| 41 + 1);
+        assert_eq!(v, 42);
+        assert!(dt >= 0.0);
+    }
+
+    #[test]
+    fn time_iters_counts() {
+        let mut n = 0;
+        let ts = time_iters(2, 5, || n += 1);
+        assert_eq!(ts.len(), 5);
+        assert_eq!(n, 7);
+    }
+
+    #[test]
+    fn budgeted_respects_min() {
+        let ts = time_budgeted(0.0, 3, || {
+            std::hint::black_box(1 + 1);
+        });
+        assert!(ts.len() >= 3);
+    }
+}

@@ -1,0 +1,211 @@
+//! LongBench category proxies (Tables 3–4) and the GSM8K/CoQA-style
+//! reasoning proxies (Table 2).
+//!
+//! LongBench's six categories probe different retrieval/aggregation
+//! patterns; each proxy keeps the pattern while staying exactly scorable:
+//!
+//! * Single-QA      → one needle, moderate distractors (RULER-S2-like)
+//! * Multi-QA       → two needles must BOTH be retrieved (2 queries/trial)
+//! * Summarization  → several same-key values spread out; any counts
+//! * Few-shot       → repeated (key→value) pattern, query a seen key
+//! * Synthetic      → S1-style repetitive filler retrieval
+//! * Code           → positional-locality pattern: needle keys cluster near
+//!                    the end (recency-friendly) with exact-match queries
+//!
+//! GSM8K proxy = sequential multi-hop recall (the answer of hop i selects
+//! the key of hop i+1 — errors compound, which is why Palu's reconstruction
+//! noise collapses on it, Table 2); CoQA proxy = conversational recall with
+//! a short dialogue-like context.
+
+use super::Trial;
+use crate::model::retrieval::RetrievalModel;
+use crate::util::rng::Rng;
+
+/// LongBench category identifiers, in the paper's column order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LongBenchTask {
+    SingleQa,
+    MultiQa,
+    Summarization,
+    FewShot,
+    Synthetic,
+    Code,
+}
+
+impl LongBenchTask {
+    pub fn all() -> [LongBenchTask; 6] {
+        [
+            LongBenchTask::SingleQa,
+            LongBenchTask::MultiQa,
+            LongBenchTask::Summarization,
+            LongBenchTask::FewShot,
+            LongBenchTask::Synthetic,
+            LongBenchTask::Code,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            LongBenchTask::SingleQa => "Single-QA",
+            LongBenchTask::MultiQa => "Multi-QA",
+            LongBenchTask::Summarization => "Summarization",
+            LongBenchTask::FewShot => "Few-shot",
+            LongBenchTask::Synthetic => "Synthetic",
+            LongBenchTask::Code => "Code",
+        }
+    }
+}
+
+/// Generate trials for one LongBench category.
+pub fn generate(rm: &RetrievalModel, task: LongBenchTask, len: usize, rng: &mut Rng) -> Vec<Trial> {
+    let nk = rm.spec.n_keys;
+    let nv = rm.spec.n_vals;
+    let key = rng.below(nk);
+    let val = rng.below(nv);
+    match task {
+        LongBenchTask::SingleQa => {
+            let mut needles = vec![(key, val)];
+            for _ in 0..3 {
+                let dk = rng.below(nk);
+                if dk != key {
+                    needles.push((dk, rng.below(nv)));
+                }
+            }
+            let ctx = super::plant_needles(rm, len, &needles, rng);
+            vec![Trial { context: ctx, query_key: key, expected_values: vec![val] }]
+        }
+        LongBenchTask::MultiQa => {
+            let key2 = (key + 1 + rng.below(nk - 1)) % nk;
+            let val2 = rng.below(nv);
+            let ctx = super::plant_needles(rm, len, &[(key, val), (key2, val2)], rng);
+            vec![
+                Trial { context: ctx.clone(), query_key: key, expected_values: vec![val] },
+                Trial { context: ctx, query_key: key2, expected_values: vec![val2] },
+            ]
+        }
+        LongBenchTask::Summarization => {
+            let vals: Vec<usize> = (0..3).map(|_| rng.below(nv)).collect();
+            let needles: Vec<(usize, usize)> = vals.iter().map(|&v| (key, v)).collect();
+            let ctx = super::plant_needles(rm, len, &needles, rng);
+            vec![Trial { context: ctx, query_key: key, expected_values: vals }]
+        }
+        LongBenchTask::FewShot => {
+            let mut needles = vec![(key, val), (key, val), (key, val)];
+            for _ in 0..5 {
+                let dk = rng.below(nk);
+                if dk != key {
+                    needles.push((dk, rng.below(nv)));
+                }
+            }
+            let ctx = super::plant_needles(rm, len, &needles, rng);
+            vec![Trial { context: ctx, query_key: key, expected_values: vec![val] }]
+        }
+        LongBenchTask::Synthetic => {
+            let mut ctx: Vec<usize> = vec![rm.filler_token(1); len];
+            ctx[rng.below(len)] = rm.needle_token(key, val);
+            vec![Trial { context: ctx, query_key: key, expected_values: vec![val] }]
+        }
+        LongBenchTask::Code => {
+            // Needle in the last quarter (locality), exact-match query.
+            let mut ctx: Vec<usize> =
+                (0..len).map(|_| rm.filler_token(rng.below(rm.spec.n_fill))).collect();
+            let lo = len - len / 4;
+            let p = rng.range(lo, len);
+            ctx[p] = rm.needle_token(key, val);
+            vec![Trial { context: ctx, query_key: key, expected_values: vec![val] }]
+        }
+    }
+}
+
+/// GSM8K proxy: an h-hop chain k0→v0, where v_i selects k_{i+1} = v_i % nk.
+/// Each hop is a separate query trial; the *chain* score (all hops correct)
+/// is what the runner reports when `all_or_nothing` scoring is chosen.
+pub fn gsm8k_chain(rm: &RetrievalModel, len: usize, hops: usize, rng: &mut Rng) -> Vec<Trial> {
+    let nk = rm.spec.n_keys;
+    let nv = rm.spec.n_vals;
+    let mut key = rng.below(nk);
+    let mut needles = Vec::new();
+    let mut chain = Vec::new();
+    for _ in 0..hops {
+        let val = rng.below(nv);
+        needles.push((key, val));
+        chain.push((key, val));
+        key = val % nk;
+    }
+    let ctx = super::plant_needles(rm, len, &needles, rng);
+    chain
+        .into_iter()
+        .map(|(k, v)| Trial { context: ctx.clone(), query_key: k, expected_values: vec![v] })
+        .collect()
+}
+
+/// CoQA proxy: short conversational context, recall of an earlier turn.
+pub fn coqa_turns(rm: &RetrievalModel, len: usize, turns: usize, rng: &mut Rng) -> Vec<Trial> {
+    let nk = rm.spec.n_keys;
+    let nv = rm.spec.n_vals;
+    let mut needles = Vec::new();
+    for _ in 0..turns {
+        needles.push((rng.below(nk), rng.below(nv)));
+    }
+    let ctx = super::plant_needles(rm, len, &needles, rng);
+    // Query a random earlier turn. If a key repeats across turns, accept
+    // any of its planted values.
+    let (qk, _) = needles[rng.below(needles.len())];
+    let expected: Vec<usize> =
+        needles.iter().filter(|&&(k, _)| k == qk).map(|&(_, v)| v).collect();
+    vec![Trial { context: ctx, query_key: qk, expected_values: expected }]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::retrieval::{RetrievalModel, RetrievalSpec};
+
+    fn rm() -> RetrievalModel {
+        RetrievalModel::build(RetrievalSpec {
+            n_keys: 16,
+            n_vals: 16,
+            n_fill: 32,
+            max_seq: 512,
+            n_layers: 3,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn all_categories_generate() {
+        let rm = rm();
+        let mut rng = Rng::new(401);
+        for task in LongBenchTask::all() {
+            for t in generate(&rm, task, 96, &mut rng) {
+                assert_eq!(t.context.len(), 96, "{task:?}");
+                assert!(!t.expected_values.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn gsm8k_chain_links() {
+        let rm = rm();
+        let mut rng = Rng::new(403);
+        let trials = gsm8k_chain(&rm, 128, 4, &mut rng);
+        assert_eq!(trials.len(), 4);
+        // Hop i+1's key is hop i's value mod n_keys.
+        for w in trials.windows(2) {
+            assert_eq!(w[1].query_key, w[0].expected_values[0] % rm.spec.n_keys);
+        }
+    }
+
+    #[test]
+    fn code_needle_in_tail() {
+        let rm = rm();
+        let mut rng = Rng::new(405);
+        let t = &generate(&rm, LongBenchTask::Code, 100, &mut rng)[0];
+        let pos = t
+            .context
+            .iter()
+            .position(|&tok| rm.decode_needle(tok).is_some())
+            .unwrap();
+        assert!(pos >= 75, "{pos}");
+    }
+}

@@ -1,0 +1,219 @@
+//! RULER subtask generators (Hsieh et al., 2024) — Table 5's columns:
+//! S1, S2 (single-needle), MK1, MK2 (multi-key), MV (multi-value),
+//! MQ (multi-query), FEW (few-shot), QA1, QA2 (noisy-query QA proxies).
+
+use super::Trial;
+use crate::model::retrieval::RetrievalModel;
+use crate::util::rng::Rng;
+
+/// RULER subtask identifiers, in the paper's column order.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RulerTask {
+    S1,
+    S2,
+    Mk1,
+    Mk2,
+    Mv,
+    Mq,
+    Few,
+    Qa1,
+    Qa2,
+}
+
+impl RulerTask {
+    pub fn all() -> [RulerTask; 9] {
+        [
+            RulerTask::S1,
+            RulerTask::S2,
+            RulerTask::Mk1,
+            RulerTask::Mk2,
+            RulerTask::Mv,
+            RulerTask::Mq,
+            RulerTask::Few,
+            RulerTask::Qa1,
+            RulerTask::Qa2,
+        ]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RulerTask::S1 => "S1",
+            RulerTask::S2 => "S2",
+            RulerTask::Mk1 => "MK1",
+            RulerTask::Mk2 => "MK2",
+            RulerTask::Mv => "MV",
+            RulerTask::Mq => "MQ",
+            RulerTask::Few => "FEW",
+            RulerTask::Qa1 => "QA1",
+            RulerTask::Qa2 => "QA2",
+        }
+    }
+}
+
+/// Generate one trial of the given subtask with context length `len`.
+/// Multi-query tasks return several trials sharing one context.
+pub fn generate(rm: &RetrievalModel, task: RulerTask, len: usize, rng: &mut Rng) -> Vec<Trial> {
+    let nk = rm.spec.n_keys;
+    let nv = rm.spec.n_vals;
+    let key = rng.below(nk);
+    let val = rng.below(nv);
+    match task {
+        // S1: single needle in *repetitive* filler (one filler token).
+        RulerTask::S1 => {
+            let mut ctx: Vec<usize> = vec![rm.filler_token(0); len];
+            ctx[rng.below(len)] = rm.needle_token(key, val);
+            vec![Trial { context: ctx, query_key: key, expected_values: vec![val] }]
+        }
+        // S2: single needle in random filler.
+        RulerTask::S2 => {
+            let ctx = super::plant_needles(rm, len, &[(key, val)], rng);
+            vec![Trial { context: ctx, query_key: key, expected_values: vec![val] }]
+        }
+        // MK1: 4 distractor needles with other keys.
+        RulerTask::Mk1 => {
+            let mut needles = vec![(key, val)];
+            while needles.len() < 5 {
+                let dk = rng.below(nk);
+                if dk != key {
+                    needles.push((dk, rng.below(nv)));
+                }
+            }
+            let ctx = super::plant_needles(rm, len, &needles, rng);
+            vec![Trial { context: ctx, query_key: key, expected_values: vec![val] }]
+        }
+        // MK2: heavy distractor load (16 other-key needles) — the subtask
+        // the paper sees degrade first under 12.5% compression.
+        RulerTask::Mk2 => {
+            let mut needles = vec![(key, val)];
+            while needles.len() < 17 {
+                let dk = rng.below(nk);
+                if dk != key {
+                    needles.push((dk, rng.below(nv)));
+                }
+            }
+            let ctx = super::plant_needles(rm, len, &needles, rng);
+            vec![Trial { context: ctx, query_key: key, expected_values: vec![val] }]
+        }
+        // MV: the same key maps to 4 values at different positions; any of
+        // them counts (the constructed model blends them; retrieving any
+        // planted value is correct, mirroring RULER's per-item scoring).
+        RulerTask::Mv => {
+            let vals: Vec<usize> = (0..4).map(|_| rng.below(nv)).collect();
+            let needles: Vec<(usize, usize)> = vals.iter().map(|&v| (key, v)).collect();
+            let ctx = super::plant_needles(rm, len, &needles, rng);
+            vec![Trial { context: ctx, query_key: key, expected_values: vals }]
+        }
+        // MQ: one context, 4 queries over 4 planted keys.
+        RulerTask::Mq => {
+            let mut keys = Vec::new();
+            while keys.len() < 4 {
+                let k = rng.below(nk);
+                if !keys.contains(&k) {
+                    keys.push(k);
+                }
+            }
+            let needles: Vec<(usize, usize)> = keys.iter().map(|&k| (k, rng.below(nv))).collect();
+            let ctx = super::plant_needles(rm, len, &needles, rng);
+            needles
+                .iter()
+                .map(|&(k, v)| Trial { context: ctx.clone(), query_key: k, expected_values: vec![v] })
+                .collect()
+        }
+        // FEW: few-shot pattern — several (key -> value) examples appear
+        // early, the queried pair is repeated twice (seen pattern).
+        RulerTask::Few => {
+            let mut needles = vec![(key, val), (key, val)];
+            for _ in 0..6 {
+                let dk = rng.below(nk);
+                if dk != key {
+                    needles.push((dk, rng.below(nv)));
+                }
+            }
+            let ctx = super::plant_needles(rm, len, &needles, rng);
+            vec![Trial { context: ctx, query_key: key, expected_values: vec![val] }]
+        }
+        // QA1/QA2: same retrieval with raised filler interference — fillers
+        // get denser (shorter context budget per filler id), QA2 adds more
+        // distractor needles. Proxies the harder "reason over context" end.
+        RulerTask::Qa1 => {
+            let mut needles = vec![(key, val)];
+            for _ in 0..2 {
+                let dk = rng.below(nk);
+                if dk != key {
+                    needles.push((dk, rng.below(nv)));
+                }
+            }
+            let ctx = super::plant_needles(rm, len, &needles, rng);
+            vec![Trial { context: ctx, query_key: key, expected_values: vec![val] }]
+        }
+        RulerTask::Qa2 => {
+            let mut needles = vec![(key, val)];
+            for _ in 0..8 {
+                let dk = rng.below(nk);
+                if dk != key {
+                    needles.push((dk, rng.below(nv)));
+                }
+            }
+            let ctx = super::plant_needles(rm, len, &needles, rng);
+            vec![Trial { context: ctx, query_key: key, expected_values: vec![val] }]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::retrieval::{RetrievalModel, RetrievalSpec};
+
+    fn rm() -> RetrievalModel {
+        RetrievalModel::build(RetrievalSpec {
+            n_keys: 16,
+            n_vals: 16,
+            n_fill: 32,
+            max_seq: 512,
+            n_layers: 3,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn all_tasks_generate_valid_trials() {
+        let rm = rm();
+        let mut rng = Rng::new(311);
+        for task in RulerTask::all() {
+            let trials = generate(&rm, task, 128, &mut rng);
+            assert!(!trials.is_empty(), "{task:?}");
+            for t in &trials {
+                assert_eq!(t.context.len(), 128);
+                assert!(t.context.iter().all(|&tok| tok < rm.cfg.vocab));
+                assert!(t.query_key < rm.spec.n_keys);
+                assert!(!t.expected_values.is_empty());
+                // The expected needle must actually be in the context.
+                assert!(t
+                    .expected_values
+                    .iter()
+                    .any(|&v| t.context.contains(&rm.needle_token(t.query_key, v))));
+            }
+        }
+    }
+
+    #[test]
+    fn mq_returns_four_trials_sharing_context() {
+        let rm = rm();
+        let mut rng = Rng::new(313);
+        let trials = generate(&rm, RulerTask::Mq, 100, &mut rng);
+        assert_eq!(trials.len(), 4);
+        for t in &trials[1..] {
+            assert_eq!(t.context, trials[0].context);
+        }
+    }
+
+    #[test]
+    fn mk2_has_many_distractors() {
+        let rm = rm();
+        let mut rng = Rng::new(317);
+        let t = &generate(&rm, RulerTask::Mk2, 200, &mut rng)[0];
+        let needles = t.context.iter().filter(|&&tok| rm.decode_needle(tok).is_some()).count();
+        assert!(needles >= 17, "{needles}");
+    }
+}

@@ -1,0 +1,158 @@
+//! Task-suite evaluation: run a method over retrieval trials, score
+//! accuracy, and meter cache traffic + resident bytes — the three columns
+//! every accuracy table in the paper reports.
+
+use super::Trial;
+use crate::model::retrieval::RetrievalModel;
+use crate::model::{BackendFactory, Model, Scratch, SequenceState};
+use crate::util::threadpool;
+use std::sync::Arc;
+
+/// Alias used by benches.
+pub type TaskTrial = Trial;
+
+/// A named set of trials.
+pub struct TaskSuite {
+    pub name: String,
+    pub trials: Vec<Trial>,
+}
+
+/// Evaluation result over a suite.
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub n: usize,
+    pub correct: usize,
+    /// Total cache bytes read across all trials (attend + scoring reads).
+    pub read_bytes: u64,
+    /// Resident KV bytes at end of a trial, averaged.
+    pub kv_bytes: f64,
+}
+
+impl EvalResult {
+    pub fn accuracy(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.correct as f64 / self.n as f64
+        }
+    }
+}
+
+/// Run every trial of a suite under the backend `factory`; greedy one-shot
+/// scoring: prefill(context + query token), read logits, check the best
+/// value for the queried key against the expected set.
+pub fn evaluate(
+    rm: &RetrievalModel,
+    model: &Model,
+    factory: &BackendFactory,
+    trials: &[Trial],
+    threads: usize,
+) -> EvalResult {
+    let results = threadpool::parallel_map(trials.len(), threads.max(1), |i| {
+        let t = &trials[i];
+        let mut state = SequenceState::new(&model.cfg, factory);
+        let mut scratch = Scratch::new(&model.cfg);
+        let mut prompt = t.context.clone();
+        prompt.push(rm.query_token(t.query_key));
+        let logits = model.prefill(&mut state, &mut scratch, &prompt);
+        let got = rm.best_value_for_key(&logits, t.query_key);
+        let ok = t.expected_values.contains(&got);
+        let traffic = state.traffic();
+        (ok, traffic.read, state.kv_bytes())
+    });
+    let mut out = EvalResult { n: results.len(), correct: 0, read_bytes: 0, kv_bytes: 0.0 };
+    for (ok, read, kv) in &results {
+        if *ok {
+            out.correct += 1;
+        }
+        out.read_bytes += read;
+        out.kv_bytes += *kv as f64;
+    }
+    if !results.is_empty() {
+        out.kv_bytes /= results.len() as f64;
+    }
+    out
+}
+
+/// Build a model wrapper around the retrieval weights once.
+pub fn retrieval_model_for(rm: &RetrievalModel) -> Model {
+    Model::new(rm.cfg.clone(), Arc::new(rm.weights.clone()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::FullAttention;
+    use crate::model::retrieval::{RetrievalModel, RetrievalSpec};
+    use crate::util::rng::Rng;
+    use crate::workload::ruler::{generate, RulerTask};
+
+    fn setup() -> (RetrievalModel, Model) {
+        let rm = RetrievalModel::build(RetrievalSpec {
+            n_keys: 16,
+            n_vals: 16,
+            n_fill: 32,
+            max_seq: 256,
+            n_layers: 3,
+            ..Default::default()
+        });
+        let model = retrieval_model_for(&rm);
+        (rm, model)
+    }
+
+    #[test]
+    fn full_attention_scores_high_on_s2() {
+        let (rm, model) = setup();
+        let shape = rm.cfg.attn_shape();
+        let factory: Box<BackendFactory> =
+            Box::new(move |_| Box::new(FullAttention::new(shape)) as _);
+        let mut rng = Rng::new(501);
+        let mut trials = Vec::new();
+        for _ in 0..10 {
+            trials.extend(generate(&rm, RulerTask::S2, 96, &mut rng));
+        }
+        let res = evaluate(&rm, &model, &factory, &trials, 4);
+        assert_eq!(res.n, 10);
+        assert!(res.accuracy() >= 0.9, "accuracy {}", res.accuracy());
+        assert!(res.read_bytes > 0);
+        assert!(res.kv_bytes > 0.0);
+    }
+
+    #[test]
+    fn random_guess_scores_low() {
+        // A backend that returns zeros forces best_value_for_key to pick by
+        // embedding-key logits alone -> accuracy ~ 1/n_vals.
+        struct ZeroAttention {
+            len: usize,
+        }
+        impl crate::attention::AttentionBackend for ZeroAttention {
+            fn append(&mut self, _: &[f32], _: &[f32]) {
+                self.len += 1;
+            }
+            fn attend(&mut self, _: &[f32], out: &mut [f32]) {
+                out.fill(0.0);
+            }
+            fn len(&self) -> usize {
+                self.len
+            }
+            fn traffic(&self) -> crate::attention::Traffic {
+                crate::attention::Traffic::default()
+            }
+            fn kv_bytes(&self) -> usize {
+                0
+            }
+            fn name(&self) -> &'static str {
+                "zero"
+            }
+        }
+        let (rm, model) = setup();
+        let factory: Box<BackendFactory> = Box::new(|_| Box::new(ZeroAttention { len: 0 }) as _);
+        let mut rng = Rng::new(503);
+        let mut trials = Vec::new();
+        for _ in 0..12 {
+            trials.extend(generate(&rm, RulerTask::S2, 64, &mut rng));
+        }
+        let res = evaluate(&rm, &model, &factory, &trials, 2);
+        assert!(res.accuracy() <= 0.5, "accuracy {}", res.accuracy());
+    }
+}

@@ -1,0 +1,79 @@
+//! Integration: rust loads the python-lowered HLO artifacts and decodes.
+//!
+//! Skips (with a loud message) when `artifacts/` hasn't been built — run
+//! `make artifacts` first. CI runs `make test`, which guarantees ordering.
+
+use sals::runtime::{ArtifactRuntime, XlaModel, XlaVariant};
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("meta.txt").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+        None
+    }
+}
+
+#[test]
+fn sals_decode_runs_and_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::new(&dir).unwrap();
+    let mut m1 = XlaModel::new(&mut rt, &dir, XlaVariant::Sals).unwrap();
+    let out1 = m1.generate(&rt, &[1, 2, 3, 4, 5], 8).unwrap();
+    let mut m2 = XlaModel::new(&mut rt, &dir, XlaVariant::Sals).unwrap();
+    let out2 = m2.generate(&rt, &[1, 2, 3, 4, 5], 8).unwrap();
+    assert_eq!(out1, out2);
+    assert_eq!(out1.len(), 8);
+    assert!(out1.iter().all(|&t| t < m1.meta.vocab));
+}
+
+#[test]
+fn dense_decode_runs() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::new(&dir).unwrap();
+    let mut m = XlaModel::new(&mut rt, &dir, XlaVariant::Dense).unwrap();
+    let out = m.generate(&rt, &[7, 8, 9], 4).unwrap();
+    assert_eq!(out.len(), 4);
+}
+
+#[test]
+fn sals_and_dense_agree_on_short_prompts() {
+    // With seq << k_sel the selection covers every token, so the only gap
+    // between SALS and dense is the rank-r latent reconstruction error.
+    // Logits must be strongly correlated.
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::new(&dir).unwrap();
+    let mut sals = XlaModel::new(&mut rt, &dir, XlaVariant::Sals).unwrap();
+    let mut dense = XlaModel::new(&mut rt, &dir, XlaVariant::Dense).unwrap();
+    let prompt = [3usize, 14, 15, 9, 26, 5];
+    let mut l_sals = Vec::new();
+    let mut l_dense = Vec::new();
+    for &t in &prompt {
+        l_sals = sals.step(&rt, t).unwrap();
+        l_dense = dense.step(&rt, t).unwrap();
+    }
+    let cos = sals::util::stats::cosine(&l_sals, &l_dense);
+    assert!(cos > 0.7, "SALS/dense logit cosine {cos}");
+}
+
+#[test]
+fn reset_clears_state() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::new(&dir).unwrap();
+    let mut m = XlaModel::new(&mut rt, &dir, XlaVariant::Sals).unwrap();
+    let a = m.generate(&rt, &[2, 4, 6], 3).unwrap();
+    m.reset();
+    assert_eq!(m.pos, 0);
+    let b = m.generate(&rt, &[2, 4, 6], 3).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn standalone_kernel_artifacts_load() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = ArtifactRuntime::new(&dir).unwrap();
+    rt.load("latent_score").unwrap();
+    rt.load("sparse_attn").unwrap();
+    assert!(rt.loaded().len() >= 2);
+}

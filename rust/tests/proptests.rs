@@ -1,0 +1,286 @@
+//! Cross-module property tests: invariants that must hold for every random
+//! shape/data draw, with shrinking on failure (util::prop harness).
+
+use sals::attention::{merge_selection, AttentionBackend, AttnShape, FullAttention, SalsAttention, SalsConfig};
+use sals::lowrank::Calibrator;
+use sals::quant::{dequantize_group, quantize_group, Bits};
+use sals::rope::RopeTable;
+use sals::tensor::{top_k_indices, Mat};
+use sals::util::prop::check;
+use sals::util::rng::Rng;
+
+#[test]
+fn prop_rope_preserves_norm_all_shapes() {
+    check(
+        "rope-norm",
+        150,
+        |r| {
+            let d = 2 * r.range(1, 32);
+            let pos = r.below(256);
+            let mut v = r.normal_vec(d, 1.0);
+            v.push(pos as f32);
+            v
+        },
+        |v| {
+            let pos = *v.last().unwrap() as usize;
+            let v = &v[..v.len() - 1];
+            if v.len() < 2 || v.len() % 2 != 0 {
+                return true; // shrunk into an invalid shape — vacuous
+            }
+            let d = v.len();
+            let t = RopeTable::new(d, 256, 10_000.0);
+            let mut x = v.to_vec();
+            t.apply(&mut x, pos);
+            let n0: f32 = v.iter().map(|a| a * a).sum();
+            let n1: f32 = x.iter().map(|a| a * a).sum();
+            (n0 - n1).abs() <= 1e-4 * n0.max(1.0)
+        },
+    );
+}
+
+#[test]
+fn prop_quant_roundtrip_bounded_by_half_step() {
+    check(
+        "quant-halfstep",
+        200,
+        |r| {
+            let n = r.range(1, 200);
+            let scale = (r.f32() * 4.0).max(0.01);
+            r.normal_vec(n, scale)
+        },
+        |xs| {
+            for bits in [Bits::B2, Bits::B4, Bits::B8] {
+                let g = quantize_group(xs, bits);
+                let mut out = vec![0.0; xs.len()];
+                dequantize_group(&g, &mut out);
+                for (a, b) in xs.iter().zip(&out) {
+                    if (a - b).abs() > g.scale * 0.5 + 1e-5 {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_topk_returns_true_maxima() {
+    check(
+        "topk-maxima",
+        200,
+        |r| {
+            let n = r.range(1, 300);
+            let k = r.range(1, n + 1);
+            let mut v = r.normal_vec(n, 1.0);
+            v.push(k as f32); // smuggle k through the vec
+            v
+        },
+        |v| {
+            let k = *v.last().unwrap() as usize;
+            let scores = &v[..v.len() - 1];
+            let idx = top_k_indices(scores, k);
+            if idx.len() != k.min(scores.len()) {
+                return false;
+            }
+            // Every selected score >= every unselected score.
+            let sel_min = idx.iter().map(|&i| scores[i]).fold(f32::INFINITY, f32::min);
+            let mut unsel_max = f32::NEG_INFINITY;
+            for (i, &s) in scores.iter().enumerate() {
+                if !idx.contains(&i) {
+                    unsel_max = unsel_max.max(s);
+                }
+            }
+            idx.is_empty() || unsel_max == f32::NEG_INFINITY || sel_min >= unsel_max
+        },
+    );
+}
+
+#[test]
+fn prop_merge_selection_sorted_dedup_and_bounded() {
+    check(
+        "merge-selection",
+        200,
+        |r| {
+            let s = r.range(1, 200);
+            let mut v: Vec<usize> = (0..r.below(20)).map(|_| r.below(s * 2)).collect();
+            v.push(s); // seq len
+            v.push(r.below(16)); // sink
+            v.push(r.below(32)); // recent
+            v
+        },
+        |v| {
+            let n = v.len();
+            let (recent, sink, s) = (v[n - 1], v[n - 2], v[n - 3]);
+            let critical = &v[..n - 3];
+            let sel = merge_selection(s, sink, recent, critical);
+            // sorted, unique, in range
+            sel.windows(2).all(|w| w[0] < w[1]) && sel.iter().all(|&i| i < s)
+        },
+    );
+}
+
+#[test]
+fn prop_projector_columns_orthonormal_any_rank() {
+    check(
+        "projector-ortho",
+        25,
+        |r| {
+            let dim = r.range(4, 24);
+            let rank = r.range(1, dim + 1);
+            let n = r.range(dim + 1, 80);
+            let mut data = r.normal_vec(n * dim, 1.0);
+            data.push(rank as f32);
+            data.push(dim as f32);
+            data
+        },
+        |data| {
+            let dim = *data.last().unwrap() as usize;
+            let rank = data[data.len() - 2] as usize;
+            let rows = &data[..data.len() - 2];
+            let mut cal = Calibrator::new(dim);
+            cal.add_keys(&rows[..(rows.len() / dim) * dim]);
+            let p = match cal.fit(rank) {
+                Ok(p) => p,
+                Err(_) => return false,
+            };
+            let utu = p.u.transpose().matmul(&p.u);
+            for i in 0..rank {
+                for j in 0..rank {
+                    let expect = if i == j { 1.0 } else { 0.0 };
+                    if (utu.at(i, j) - expect).abs() > 5e-3 {
+                        return false;
+                    }
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_sals_attend_finite_and_deterministic() {
+    // For any shape draw, SALS attend must be finite and reproducible.
+    check(
+        "sals-finite",
+        20,
+        |r| {
+            let heads = 1 << r.below(3); // 1,2,4
+            let dim = 2 * r.range(2, 9); // even 4..16
+            let seq = r.range(3, 60);
+            vec![heads, dim, seq, r.below(1 << 30)]
+        },
+        |v| {
+            let (heads, dim, seq, seed) = (v[0], v[1], v[2], v[3] as u64);
+            let shape = AttnShape::mha(heads, dim, seq + 4);
+            let kvd = shape.kv_dim();
+            let mut rng = Rng::new(seed);
+            let mut cal = Calibrator::new(kvd);
+            for _ in 0..kvd * 2 {
+                cal.add_key(&rng.normal_vec(kvd, 1.0));
+            }
+            let rank = (kvd / 2).max(1);
+            let proj = cal.fit(rank).unwrap();
+            let cfg = SalsConfig {
+                rank,
+                r_star: (rank / 2).max(1),
+                sink: 1,
+                recent: 2,
+                critical: 4,
+                v_bits: Bits::B4,
+                group: 4,
+            };
+            let run = |seed2: u64| {
+                let mut rng = Rng::new(seed2);
+                let mut b = SalsAttention::new(shape, cfg.clone(), proj.clone());
+                for _ in 0..seq {
+                    let k = rng.normal_vec(kvd, 1.0);
+                    let vv = rng.normal_vec(kvd, 1.0);
+                    b.append(&k, &vv);
+                }
+                let q = rng.normal_vec(shape.q_dim(), 1.0);
+                let mut out = vec![0.0f32; shape.q_dim()];
+                b.attend(&q, &mut out);
+                out
+            };
+            let a = run(seed ^ 1);
+            let b = run(seed ^ 1);
+            a == b && a.iter().all(|x| x.is_finite())
+        },
+    );
+}
+
+#[test]
+fn prop_full_attention_is_convex_combination_of_values() {
+    // Output of each head must lie within the convex hull of cached values
+    // per dimension (softmax weights sum to 1).
+    check(
+        "full-attn-hull",
+        30,
+        |r| {
+            let dim = 2 * r.range(2, 9);
+            let seq = r.range(1, 40);
+            vec![dim, seq, r.below(1 << 30)]
+        },
+        |v| {
+            let (dim, seq, seed) = (v[0], v[1], v[2] as u64);
+            let shape = AttnShape::mha(1, dim, seq + 2);
+            let mut rng = Rng::new(seed);
+            let mut b = FullAttention::new(shape);
+            let mut vals = Vec::new();
+            for _ in 0..seq {
+                let k = rng.normal_vec(dim, 1.0);
+                let vv = rng.normal_vec(dim, 1.0);
+                vals.push(vv.clone());
+                b.append(&k, &vv);
+            }
+            let q = rng.normal_vec(dim, 1.0);
+            let mut out = vec![0.0f32; dim];
+            b.attend(&q, &mut out);
+            for c in 0..dim {
+                let lo = vals.iter().map(|v| v[c]).fold(f32::INFINITY, f32::min);
+                let hi = vals.iter().map(|v| v[c]).fold(f32::NEG_INFINITY, f32::max);
+                if out[c] < lo - 1e-3 || out[c] > hi + 1e-3 {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+#[test]
+fn prop_eig_reconstruction_any_symmetric() {
+    check(
+        "eig-reconstruct",
+        20,
+        |r| {
+            let d = r.range(2, 12);
+            let mut v = r.normal_vec(d * d, 1.0);
+            v.push(d as f32);
+            v
+        },
+        |v| {
+            let d = *v.last().unwrap() as usize;
+            let b = Mat::from_vec(d, d, v[..d * d].to_vec());
+            let a = b.matmul_t(&b); // symmetric PSD
+            let e = sals::linalg::eig_symmetric(&a, 60, 1e-10);
+            // Verify A·v_j = λ_j·v_j for the leading eigenpair.
+            let mut av = vec![0.0f32; d];
+            for i in 0..d {
+                let mut s = 0.0;
+                for k in 0..d {
+                    s += a.at(i, k) * e.vectors.at(k, 0);
+                }
+                av[i] = s;
+            }
+            let norm_a = a.fro_norm() as f32;
+            for i in 0..d {
+                if (av[i] - e.values[0] * e.vectors.at(i, 0)).abs() > 1e-3 * norm_a.max(1.0) {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
