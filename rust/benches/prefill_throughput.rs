@@ -1,0 +1,139 @@
+//! Prefill throughput: tokens/sec at 1K/4K/16K prompts, full vs SALS,
+//! batched (chunked `Model::forward_batch`) vs token-at-a-time (`step()`
+//! loop — the pre-batched-prefill engine path).
+//!
+//! Emits `BENCH_prefill.json` in the working directory so the prefill perf
+//! trajectory accumulates across PRs. Set `SALS_BENCH_QUICK=1` to skip the
+//! 16K row (the sequential 16K pass is O(seq²) attention on one core).
+
+use sals::attention::{AttentionBackend, FullAttention, SalsAttention, SalsConfig};
+use sals::harness::Table;
+use sals::lowrank::Calibrator;
+use sals::model::{BackendFactory, Model, ModelConfig, Scratch, SequenceState, SparsityParams, Weights};
+use sals::quant::Bits;
+use sals::util::json::Json;
+use sals::util::rng::Rng;
+use sals::util::timer::time_once;
+use std::sync::Arc;
+
+/// Small decoder shaped for seq² CPU attention at 16K: the point is the
+/// batched-vs-sequential ratio, not absolute model scale.
+fn cfg(max_seq: usize) -> ModelConfig {
+    ModelConfig {
+        vocab: 256,
+        d_model: 64,
+        n_layers: 4,
+        n_heads: 4,
+        n_kv_heads: 4,
+        head_dim: 16,
+        d_ff: 128,
+        max_seq,
+        rope_base: 10_000.0,
+        dense_layers: ModelConfig::default_dense_layers(4),
+        rms_eps: 1e-5,
+    }
+}
+
+fn full_factory(c: &ModelConfig) -> Box<BackendFactory> {
+    let shape = c.attn_shape();
+    Box::new(move |_| Box::new(FullAttention::new(shape)) as Box<dyn AttentionBackend + Send>)
+}
+
+fn sals_factory(c: &ModelConfig, seq: usize) -> Box<BackendFactory> {
+    let shape = c.attn_shape();
+    let kvd = c.kv_dim();
+    // Projector calibrated on a low-rank key family (real keys are
+    // low-rank; exactness is irrelevant to throughput).
+    let mut rng = Rng::new(11);
+    let basis: Vec<Vec<f32>> = (0..kvd / 8).map(|_| rng.normal_vec(kvd, 1.0)).collect();
+    let mut cal = Calibrator::new(kvd);
+    let mut row = vec![0.0f32; kvd];
+    for _ in 0..256 {
+        row.fill(0.0);
+        for b in &basis {
+            sals::tensor::ops::axpy(rng.normal_f32(), b, &mut row);
+        }
+        cal.add_key(&row);
+    }
+    let proj = cal.fit((kvd / 4).max(2)).unwrap();
+    let sp = SparsityParams::scaled(seq);
+    let sc = SalsConfig {
+        rank: (kvd / 4).max(2),
+        r_star: (kvd / 8).max(1),
+        sink: sp.sink,
+        recent: sp.recent,
+        critical: sp.critical,
+        v_bits: Bits::B4,
+        group: 32,
+    };
+    Box::new(move |_| {
+        Box::new(SalsAttention::new(shape, sc.clone(), proj.clone())) as Box<dyn AttentionBackend + Send>
+    })
+}
+
+/// Time one full prefill of `tokens`; returns tokens/sec.
+fn run_prefill(model: &Model, factory: &BackendFactory, tokens: &[usize], batched: bool) -> f64 {
+    let mut state = SequenceState::new(&model.cfg, factory);
+    let mut scratch = Scratch::new(&model.cfg);
+    let (_, secs) = time_once(|| {
+        if batched {
+            model.prefill_chunked(&mut state, &mut scratch, tokens, Model::PREFILL_CHUNK);
+        } else {
+            // The pre-batched engine path: one step() per prompt token.
+            for (i, &t) in tokens.iter().enumerate() {
+                model.step(&mut state, &mut scratch, t, i + 1 == tokens.len());
+            }
+        }
+    });
+    tokens.len() as f64 / secs
+}
+
+fn main() {
+    let quick = std::env::var("SALS_BENCH_QUICK").is_ok();
+    let seqs: Vec<usize> = if quick { vec![1024, 4096] } else { vec![1024, 4096, 16384] };
+
+    let mut table = Table::new(
+        "Prefill throughput (tokens/s) — batched chunked forward vs token-at-a-time",
+        &["Seq", "Method", "Sequential tok/s", "Batched tok/s", "Speedup"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+
+    for &seq in &seqs {
+        let c = cfg(seq + 8);
+        let model = Model::new(c.clone(), Arc::new(Weights::random(&c, 99)));
+        let mut rng = Rng::new(2024);
+        let tokens: Vec<usize> = (0..seq).map(|_| rng.below(c.vocab)).collect();
+        for (name, factory) in
+            [("full", full_factory(&c)), ("sals-25%", sals_factory(&c, seq))]
+        {
+            let seq_tps = run_prefill(&model, &factory, &tokens, false);
+            let bat_tps = run_prefill(&model, &factory, &tokens, true);
+            let speedup = bat_tps / seq_tps;
+            table.row(vec![
+                seq.to_string(),
+                name.to_string(),
+                format!("{seq_tps:.0}"),
+                format!("{bat_tps:.0}"),
+                format!("{speedup:.2}x"),
+            ]);
+            rows.push(
+                Json::obj()
+                    .field("seq", seq)
+                    .field("method", name)
+                    .field("sequential_tok_s", seq_tps)
+                    .field("batched_tok_s", bat_tps)
+                    .field("speedup", speedup),
+            );
+        }
+    }
+    table.print();
+    println!("\nacceptance: batched ≥3x sequential for full attention at 4K prefill");
+
+    let doc = Json::obj()
+        .field("bench", "prefill_throughput")
+        .field("config", "d_model=64 n_layers=4 n_heads=4 head_dim=16")
+        .field("chunk", Model::PREFILL_CHUNK)
+        .field("rows", Json::Arr(rows));
+    std::fs::write("BENCH_prefill.json", doc.to_string()).expect("write BENCH_prefill.json");
+    println!("wrote BENCH_prefill.json");
+}

@@ -35,10 +35,51 @@ impl DenseCache {
         traffic.write_f32(2 * kvd);
     }
 
+    /// Append a chunk of `n` pre-RoPE keys/values ((n, kv_dim) row-major
+    /// each) with one batched RoPE sweep over the new rows.
+    pub fn append_batch(&mut self, ks: &[f32], vs: &[f32], n: usize, traffic: &mut Traffic) {
+        let kvd = self.shape.kv_dim();
+        assert!(n > 0);
+        assert_eq!(ks.len(), n * kvd);
+        assert_eq!(vs.len(), n * kvd);
+        let base = self.keys.len();
+        self.keys.extend_from_slice(ks);
+        self.rope.apply_rows_offset(&mut self.keys[base..], kvd, self.len);
+        self.values.extend_from_slice(vs);
+        self.len += n;
+        traffic.write_f32(2 * n * kvd);
+    }
+
     /// Rotate a query for the current decode position (len - 1).
     pub fn rotate_query(&self, q: &[f32]) -> Vec<f32> {
+        self.rotate_query_at(q, self.len - 1)
+    }
+
+    /// The shared `prefill_attend` loop for DenseCache-backed baselines:
+    /// drive a per-position `attend_at(q_row, pos, out_row)` over the last
+    /// `n` cached tokens (row `t` at absolute position `len - n + t`).
+    pub fn prefill_attend_rows(
+        cache_len: usize,
+        qd: usize,
+        qs: &[f32],
+        n: usize,
+        out: &mut [f32],
+        mut attend_at: impl FnMut(&[f32], usize, &mut [f32]),
+    ) {
+        assert!(n > 0 && n <= cache_len);
+        assert_eq!(qs.len(), n * qd);
+        assert_eq!(out.len(), n * qd);
+        let start = cache_len - n;
+        for t in 0..n {
+            attend_at(&qs[t * qd..(t + 1) * qd], start + t, &mut out[t * qd..(t + 1) * qd]);
+        }
+    }
+
+    /// Rotate a query for an explicit absolute position (batched prefill
+    /// rotates each chunk row at its own position, not at len - 1).
+    pub fn rotate_query_at(&self, q: &[f32], pos: usize) -> Vec<f32> {
         let mut qr = q.to_vec();
-        self.rope.apply_multihead(&mut qr, self.len - 1);
+        self.rope.apply_multihead(&mut qr, pos);
         qr
     }
 
@@ -83,6 +124,27 @@ mod tests {
         assert_eq!(&vs[4..], vals[3].as_slice());
         assert_eq!(t.written, (5 * 2 * 4 * 4) as u64);
         assert_eq!(t.read, (2 * 2 * 4 * 4) as u64);
+    }
+
+    #[test]
+    fn append_batch_matches_append_loop() {
+        let shape = AttnShape::mha(2, 4, 32);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(95);
+        let n = 9;
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        let mut a = DenseCache::new(shape);
+        let mut b = DenseCache::new(shape);
+        let (mut ta, mut tb) = (Traffic::default(), Traffic::default());
+        a.append_batch(&ks, &vs, n, &mut ta);
+        for t in 0..n {
+            b.append(&ks[t * kvd..(t + 1) * kvd], &vs[t * kvd..(t + 1) * kvd], &mut tb);
+        }
+        assert_eq!(a.len, b.len);
+        assert_eq!(a.keys, b.keys);
+        assert_eq!(a.values, b.values);
+        assert_eq!(ta.written, tb.written);
     }
 
     #[test]

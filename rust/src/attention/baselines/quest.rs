@@ -37,16 +37,10 @@ impl QuestAttention {
         }
     }
 
-    fn n_pages(&self) -> usize {
-        self.cache.len.div_ceil(self.page)
-    }
-}
-
-impl AttentionBackend for QuestAttention {
-    fn append(&mut self, k: &[f32], v: &[f32]) {
-        self.cache.append(k, v, &mut self.traffic);
+    /// Fold one post-RoPE key row (already resident in the cache at
+    /// `pos`) into its page's min/max metadata.
+    fn update_page_meta(&mut self, pos: usize) {
         let kvd = self.cache.shape.kv_dim();
-        let pos = self.cache.len - 1;
         let rot = &self.cache.keys[pos * kvd..(pos + 1) * kvd];
         if pos % self.page == 0 {
             // New page.
@@ -64,9 +58,16 @@ impl AttentionBackend for QuestAttention {
         self.traffic.write_f32(2 * kvd);
     }
 
-    fn attend(&mut self, q: &[f32], out: &mut [f32]) {
-        assert!(self.cache.len > 0);
-        let qr = self.cache.rotate_query(q);
+    /// Attend for the query at absolute position `pos` (visible prefix
+    /// `0..=pos`). Page min/max bounds stay valid upper bounds for any
+    /// visible subset of a page, so causal page scoring just clips the
+    /// final page's token range to the prefix. (After a batched append the
+    /// last page's metadata may include chunk rows a mid-chunk query can't
+    /// see — the bound is looser than the sequential one but still sound,
+    /// so selection can differ slightly from token-at-a-time execution.)
+    fn attend_at(&mut self, q: &[f32], pos: usize, out: &mut [f32]) {
+        let vis = pos + 1;
+        let qr = self.cache.rotate_query_at(q, pos);
         let shape = self.cache.shape;
         let (d, kvd, group) = (shape.head_dim, shape.kv_dim(), shape.group_size());
         // Pooled rotated query (kv_dim) for page scoring.
@@ -78,8 +79,8 @@ impl AttentionBackend for QuestAttention {
                 *a += b * inv;
             }
         }
-        // Upper-bound page scores.
-        let np = self.n_pages();
+        // Upper-bound scores over the pages intersecting the prefix.
+        let np = vis.div_ceil(self.page);
         let mut pscores = Vec::with_capacity(np);
         for p in 0..np {
             let mut s = 0.0f32;
@@ -96,12 +97,44 @@ impl AttentionBackend for QuestAttention {
         let mut crit = Vec::with_capacity(pages_allowed * self.page);
         for &p in &top_pages {
             let lo = p * self.page;
-            let hi = ((p + 1) * self.page).min(self.cache.len);
+            let hi = ((p + 1) * self.page).min(vis);
             crit.extend(lo..hi);
         }
-        let sel = merge_selection(self.cache.len, self.sink, self.recent, &crit);
+        let sel = merge_selection(vis, self.sink, self.recent, &crit);
         let (ks, vs) = self.cache.gather(&sel, &mut self.traffic);
         exact_attention(&shape, &qr, &ks, &vs, sel.len(), out);
+    }
+}
+
+impl AttentionBackend for QuestAttention {
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        self.cache.append(k, v, &mut self.traffic);
+        self.update_page_meta(self.cache.len - 1);
+    }
+
+    fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+        assert!(self.cache.len > 0);
+        let pos = self.cache.len - 1;
+        self.attend_at(q, pos, out);
+    }
+
+    fn append_batch(&mut self, ks: &[f32], vs: &[f32], n: usize) {
+        let start = self.cache.len;
+        self.cache.append_batch(ks, vs, n, &mut self.traffic);
+        for pos in start..start + n {
+            self.update_page_meta(pos);
+        }
+    }
+
+    fn prefill_attend(&mut self, qs: &[f32], n: usize, out: &mut [f32]) {
+        let qd = self.cache.shape.q_dim();
+        let len = self.cache.len;
+        DenseCache::prefill_attend_rows(len, qd, qs, n, out, |q, pos, o| self.attend_at(q, pos, o));
+    }
+
+    fn forward_batch(&mut self, ks: &[f32], vs: &[f32], qs: &[f32], n: usize, out: &mut [f32]) {
+        self.append_batch(ks, vs, n);
+        self.prefill_attend(qs, n, out);
     }
 
     fn len(&self) -> usize {
@@ -167,6 +200,52 @@ mod tests {
         // Output should be dominated by the big-key page's values (~5 before
         // rotation mixes dims; check it is far from the small-noise scale).
         assert!(out.iter().map(|x| x.abs()).fold(0.0f32, f32::max) > 1.0, "{out:?}");
+    }
+
+    #[test]
+    fn batched_append_preserves_page_bounds() {
+        let shape = AttnShape::mha(1, 8, 128);
+        let mut rng = Rng::new(107);
+        let kvd = 8;
+        let n = 26; // not page-aligned: last page is partial
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        let mut a = QuestAttention::new(shape, 4, 0, 0, 8);
+        let mut b = QuestAttention::new(shape, 4, 0, 0, 8);
+        a.append_batch(&ks, &vs, n);
+        for t in 0..n {
+            b.append(&ks[t * kvd..(t + 1) * kvd], &vs[t * kvd..(t + 1) * kvd]);
+        }
+        assert_eq!(a.cache.len, b.cache.len);
+        assert_eq!(a.cache.keys, b.cache.keys);
+        assert_eq!(a.page_min, b.page_min);
+        assert_eq!(a.page_max, b.page_max);
+        assert_eq!(a.traffic().written, b.traffic().written);
+    }
+
+    #[test]
+    fn batched_prefill_is_causal() {
+        // A huge-magnitude KEY/VALUE planted late in the chunk must not
+        // influence the outputs of earlier chunk positions.
+        let shape = AttnShape::mha(1, 4, 128);
+        let kvd = 4;
+        let mut rng = Rng::new(109);
+        let n = 20;
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for i in 0..n {
+            ks.extend(rng.normal_vec(kvd, 0.5));
+            vs.extend(if i == n - 1 { vec![1000.0f32; kvd] } else { rng.normal_vec(kvd, 0.5) });
+        }
+        let qs = rng.normal_vec(n * kvd, 1.0);
+        let mut b = QuestAttention::new(shape, 4, 1, 2, 8);
+        let mut out = vec![0.0f32; n * kvd];
+        b.forward_batch(&ks, &vs, &qs, n, &mut out);
+        for t in 0..n - 1 {
+            for &x in &out[t * kvd..(t + 1) * kvd] {
+                assert!(x.abs() < 100.0, "future value leaked into position {t}: {x}");
+            }
+        }
     }
 
     #[test]

@@ -16,6 +16,18 @@ impl StreamingLlmAttention {
     pub fn new(shape: AttnShape, sink: usize, recent: usize) -> StreamingLlmAttention {
         StreamingLlmAttention { cache: DenseCache::new(shape), sink, recent, traffic: Traffic::default() }
     }
+
+    /// Attend for the query at absolute position `pos` (visible prefix
+    /// `0..=pos`). The fixed sink+recent pattern is position-relative, so
+    /// this is exact for any chunk position — the batched prefill path
+    /// reproduces the sequential outputs bit-for-bit.
+    fn attend_at(&mut self, q: &[f32], pos: usize, out: &mut [f32]) {
+        let vis = pos + 1;
+        let sel = merge_selection(vis, self.sink, self.recent, &[]);
+        let qr = self.cache.rotate_query_at(q, pos);
+        let (ks, vs) = self.cache.gather(&sel, &mut self.traffic);
+        exact_attention(&self.cache.shape, &qr, &ks, &vs, sel.len(), out);
+    }
 }
 
 impl AttentionBackend for StreamingLlmAttention {
@@ -30,10 +42,23 @@ impl AttentionBackend for StreamingLlmAttention {
 
     fn attend(&mut self, q: &[f32], out: &mut [f32]) {
         assert!(self.cache.len > 0);
-        let sel = merge_selection(self.cache.len, self.sink, self.recent, &[]);
-        let qr = self.cache.rotate_query(q);
-        let (ks, vs) = self.cache.gather(&sel, &mut self.traffic);
-        exact_attention(&self.cache.shape, &qr, &ks, &vs, sel.len(), out);
+        let pos = self.cache.len - 1;
+        self.attend_at(q, pos, out);
+    }
+
+    fn append_batch(&mut self, ks: &[f32], vs: &[f32], n: usize) {
+        self.cache.append_batch(ks, vs, n, &mut self.traffic);
+    }
+
+    fn prefill_attend(&mut self, qs: &[f32], n: usize, out: &mut [f32]) {
+        let qd = self.cache.shape.q_dim();
+        let len = self.cache.len;
+        DenseCache::prefill_attend_rows(len, qd, qs, n, out, |q, pos, o| self.attend_at(q, pos, o));
+    }
+
+    fn forward_batch(&mut self, ks: &[f32], vs: &[f32], qs: &[f32], n: usize, out: &mut [f32]) {
+        self.append_batch(ks, vs, n);
+        self.prefill_attend(qs, n, out);
     }
 
     fn len(&self) -> usize {
@@ -75,6 +100,30 @@ mod tests {
         let mut out = vec![0.0; 8];
         b.attend(&q, &mut out);
         assert!(out.iter().all(|x| x.abs() < 100.0), "middle token leaked: {out:?}");
+    }
+
+    #[test]
+    fn batched_prefill_matches_sequential_exactly() {
+        let shape = AttnShape::mha(2, 8, 128);
+        let kvd = shape.kv_dim();
+        let qd = shape.q_dim();
+        let mut rng = Rng::new(89);
+        let mut seq = StreamingLlmAttention::new(shape, 2, 4);
+        let mut bat = StreamingLlmAttention::new(shape, 2, 4);
+        let n = 30;
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        let qs = rng.normal_vec(n * qd, 1.0);
+        let mut o_seq = vec![0.0f32; n * qd];
+        for t in 0..n {
+            seq.append(&ks[t * kvd..(t + 1) * kvd], &vs[t * kvd..(t + 1) * kvd]);
+            seq.attend(&qs[t * qd..(t + 1) * qd], &mut o_seq[t * qd..(t + 1) * qd]);
+        }
+        let mut o_bat = vec![0.0f32; n * qd];
+        bat.forward_batch(&ks, &vs, &qs, n, &mut o_bat);
+        // Dense cache + fixed pattern: the two paths are bit-identical.
+        assert_eq!(o_seq, o_bat);
+        assert_eq!(seq.traffic().read, bat.traffic().read);
     }
 
     #[test]

@@ -5,6 +5,11 @@
 //! append). `attend` makes a single streaming pass per head with an online
 //! softmax (the FlashAttention recurrence), so its traffic is exactly the
 //! `2·s·d` elements §4.5 charges full attention with.
+//!
+//! The batched-prefill path (`append_batch`/`prefill_attend`) rotates a
+//! whole chunk of keys/queries in one sweep and runs the blocked causal
+//! kernel [`crate::tensor::ops::causal_attend_chunk`] — tiled QKᵀ,
+//! row-softmax, PV — instead of n streaming decode passes.
 
 use super::{AttentionBackend, AttnShape, Traffic};
 use crate::rope::RopeTable;
@@ -23,6 +28,8 @@ pub struct FullAttention {
     /// allocate — §Perf L3 iteration 1).
     scratch_acc: Vec<f32>,
     scratch_qr: Vec<f32>,
+    /// Panel/tile buffers for the blocked batched-prefill kernel.
+    scratch_chunk: crate::tensor::ops::ChunkAttendScratch,
 }
 
 impl FullAttention {
@@ -37,6 +44,7 @@ impl FullAttention {
             traffic: Traffic::default(),
             scratch_acc: vec![0.0; shape.head_dim],
             scratch_qr: Vec::new(),
+            scratch_chunk: crate::tensor::ops::ChunkAttendScratch::default(),
         }
     }
 
@@ -107,6 +115,67 @@ impl AttentionBackend for FullAttention {
         // query heads sharing a kv head reread it (group× for GQA) but we
         // meter the §4.5 canonical cost: 2·s·kv_dim per decode.
         self.traffic.read_f32(2 * self.len * kvd);
+    }
+
+    fn append_batch(&mut self, ks: &[f32], vs: &[f32], n: usize) {
+        let kvd = self.shape.kv_dim();
+        assert!(n > 0);
+        assert_eq!(ks.len(), n * kvd);
+        assert_eq!(vs.len(), n * kvd);
+        let start = self.len;
+        let base = self.keys.len();
+        self.keys.extend_from_slice(ks);
+        // Batched RoPE: one sweep over the chunk's rows at their positions.
+        self.rope.apply_rows_offset(&mut self.keys[base..], kvd, start);
+        self.values.extend_from_slice(vs);
+        self.len += n;
+        self.traffic.write_f32(2 * n * kvd);
+    }
+
+    fn prefill_attend(&mut self, qs: &[f32], n: usize, out: &mut [f32]) {
+        let d = self.shape.head_dim;
+        let kvd = self.shape.kv_dim();
+        let qd = self.shape.q_dim();
+        assert!(n > 0 && n <= self.len, "chunk {n} vs cache {}", self.len);
+        assert_eq!(qs.len(), n * qd);
+        assert_eq!(out.len(), n * qd);
+        let start = self.len - n;
+        // Batched query RoPE into scratch.
+        self.scratch_qr.clear();
+        self.scratch_qr.extend_from_slice(qs);
+        self.rope.apply_rows_offset(&mut self.scratch_qr, qd, start);
+        crate::tensor::ops::causal_attend_chunk(
+            &self.scratch_qr,
+            &self.keys,
+            &self.values,
+            n,
+            self.len,
+            self.shape.n_heads,
+            self.shape.n_kv_heads,
+            d,
+            &mut self.scratch_chunk,
+            out,
+        );
+        // Canonical metering: each query row pays what its single-token
+        // attend would have — 2·(visible rows)·kv_dim.
+        let visible_rows: usize = (0..n).map(|t| start + t + 1).sum();
+        self.traffic.read_f32(2 * visible_rows * kvd);
+    }
+
+    fn forward_batch(&mut self, ks: &[f32], vs: &[f32], qs: &[f32], n: usize, out: &mut [f32]) {
+        self.append_batch(ks, vs, n);
+        self.prefill_attend(qs, n, out);
+    }
+
+    fn end_prefill(&mut self) {
+        // The chunk panels scale with the full cache length (≈2·len·d
+        // floats per layer) and decode never reads them — release them.
+        // scratch_qr grew to chunk·q_dim during prefill; decode only needs
+        // q_dim, so shrink to that (not drop: decode's attend() reuses it
+        // every step under the no-alloc hot-path invariant).
+        self.scratch_chunk = crate::tensor::ops::ChunkAttendScratch::default();
+        self.scratch_qr.clear();
+        self.scratch_qr.shrink_to(self.shape.q_dim());
     }
 
     fn len(&self) -> usize {
@@ -187,6 +256,43 @@ mod tests {
         b.attend(&q, &mut out);
         let dt = b.traffic().read - t0.read;
         assert_eq!(dt, (2 * 10 * 4 * 4) as u64);
+    }
+
+    #[test]
+    fn batched_prefill_matches_sequential_and_meters_identically() {
+        let shape = AttnShape::gqa(4, 2, 8, 128);
+        let (kvd, qd) = (shape.kv_dim(), shape.q_dim());
+        let mut rng = Rng::new(57);
+        let mut seq = FullAttention::new(shape);
+        let mut bat = FullAttention::new(shape);
+        // Warm prefix.
+        for _ in 0..5 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            seq.append(&k, &v);
+            bat.append(&k, &v);
+        }
+        let n = 21;
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        let qs = rng.normal_vec(n * qd, 1.0);
+        let mut o_seq = vec![0.0f32; n * qd];
+        for t in 0..n {
+            seq.append(&ks[t * kvd..(t + 1) * kvd], &vs[t * kvd..(t + 1) * kvd]);
+            seq.attend(&qs[t * qd..(t + 1) * qd], &mut o_seq[t * qd..(t + 1) * qd]);
+        }
+        let mut o_bat = vec![0.0f32; n * qd];
+        bat.forward_batch(&ks, &vs, &qs, n, &mut o_bat);
+        for (a, b) in o_seq.iter().zip(&o_bat) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        // Cache contents and canonical traffic metering agree exactly.
+        assert_eq!(seq.len, bat.len);
+        for (a, b) in seq.keys.iter().zip(&bat.keys) {
+            assert!((a - b).abs() < 1e-6);
+        }
+        assert_eq!(seq.traffic().read, bat.traffic().read);
+        assert_eq!(seq.traffic().written, bat.traffic().written);
     }
 
     #[test]

@@ -7,6 +7,33 @@
 //! cache **memory traffic** (the quantity §4.5's roofline argument is
 //! about) and reports resident cache bytes, which drive the Memory-Access
 //! and Comp.-ratio columns of Tables 2–4.
+//!
+//! # Batched-prefill contract
+//!
+//! Prefill is a matmul-shaped workload, not a repeated decode, so the trait
+//! also carries a multi-token path:
+//!
+//! * [`AttentionBackend::append_batch`]`(ks, vs, n)` — append `n` tokens'
+//!   **pre-RoPE** stacked keys/values, both (n, kv_dim) row-major. Row `t`
+//!   lands at absolute position `len() + t`; backends apply RoPE (or latent
+//!   projection) themselves, batched where they can.
+//! * [`AttentionBackend::prefill_attend`]`(qs, n, out)` — causal
+//!   multi-token attention for the **last `n` cached tokens**: `qs` is
+//!   (n, q_dim) row-major pre-RoPE queries, row `t` has absolute position
+//!   `len() - n + t` and attends to cached positions `0..=len() - n + t`.
+//!   Masking is the backend's responsibility; callers never pre-rotate.
+//! * [`AttentionBackend::forward_batch`]`(ks, vs, qs, n, out)` — the chunk
+//!   entry point the model/engine drive: semantically equal to
+//!   interleaving `append`/`attend` token-by-token (the provided default
+//!   does exactly that, so every backend keeps working). Backends with a
+//!   native batched path override it, typically as
+//!   `append_batch` + `prefill_attend`.
+//!
+//! Traffic metering on the batched path follows the same canonical rules
+//! as decode: writes are metered per appended token exactly as `append`
+//! would, and reads charge each query row the cost its single-token
+//! `attend` would have paid at the same cache length — so Tables 2–4 and
+//! the §4.5 roofline stay comparable whichever path produced the numbers.
 
 pub mod full;
 pub mod sals;
@@ -80,6 +107,67 @@ pub trait AttentionBackend {
     /// (length q_dim); the query's position is `len() - 1` (its KV was
     /// appended first, mirroring standard decode). Returns (q_dim) output.
     fn attend(&mut self, q: &[f32], out: &mut [f32]);
+
+    /// Append `n` tokens' pre-RoPE keys/values ((n, kv_dim) row-major
+    /// each); row `t` lands at position `len() + t`. Default loops
+    /// [`AttentionBackend::append`]; backends override for batched RoPE /
+    /// batched latent projection.
+    fn append_batch(&mut self, ks: &[f32], vs: &[f32], n: usize) {
+        assert!(n > 0, "append_batch of empty chunk");
+        assert_eq!(ks.len(), vs.len());
+        assert_eq!(ks.len() % n, 0);
+        let kvd = ks.len() / n;
+        for t in 0..n {
+            self.append(&ks[t * kvd..(t + 1) * kvd], &vs[t * kvd..(t + 1) * kvd]);
+        }
+    }
+
+    /// Causal multi-token attention for the last `n` cached tokens: `qs`
+    /// is (n, q_dim) pre-RoPE, row `t` has position `len() - n + t` and
+    /// sees positions `0..=len() - n + t`. `out` is (n, q_dim).
+    ///
+    /// The default handles only `n == 1` (a plain [`AttentionBackend::attend`]):
+    /// with the whole chunk already appended, the single-token methods
+    /// cannot mask the chunk's later keys, so backends without a native
+    /// implementation are driven through [`AttentionBackend::forward_batch`]'s
+    /// interleaved default instead — callers should prefer `forward_batch`
+    /// unless they know the backend overrides this.
+    fn prefill_attend(&mut self, qs: &[f32], n: usize, out: &mut [f32]) {
+        assert_eq!(
+            n,
+            1,
+            "{}: no native batched prefill_attend; drive chunks through forward_batch()",
+            self.name()
+        );
+        self.attend(qs, out);
+    }
+
+    /// Process one prefill chunk: append `n` tokens' KV and produce every
+    /// token's causal attention output ((n, q_dim) into `out`).
+    /// Semantically identical to interleaving `append`/`attend` per token,
+    /// which is exactly what this default does — so every backend works
+    /// unbatched. Backends with batched kernels override this (typically
+    /// `append_batch` + `prefill_attend`).
+    fn forward_batch(&mut self, ks: &[f32], vs: &[f32], qs: &[f32], n: usize, out: &mut [f32]) {
+        assert!(n > 0, "forward_batch of empty chunk");
+        assert_eq!(ks.len(), vs.len());
+        assert_eq!(ks.len() % n, 0);
+        assert_eq!(qs.len() % n, 0);
+        assert_eq!(out.len(), qs.len());
+        let kvd = ks.len() / n;
+        let qd = qs.len() / n;
+        for t in 0..n {
+            self.append(&ks[t * kvd..(t + 1) * kvd], &vs[t * kvd..(t + 1) * kvd]);
+            self.attend(&qs[t * qd..(t + 1) * qd], &mut out[t * qd..(t + 1) * qd]);
+        }
+    }
+
+    /// Notification that prefill is complete and the sequence transitions
+    /// to decode: drop any chunk-sized scratch (key/value panels, score
+    /// tiles) that decode will never touch, so long-lived sequences don't
+    /// pin prefill-sized buffers through their whole decode phase.
+    /// Default no-op.
+    fn end_prefill(&mut self) {}
 
     /// Number of cached tokens.
     fn len(&self) -> usize;
@@ -160,6 +248,88 @@ pub fn merge_selection(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::util::rng::Rng;
+
+    /// Delegates the required single-token methods to FullAttention but
+    /// inherits every batched default — the "any old backend" stand-in.
+    struct LoopBackend(FullAttention);
+
+    impl AttentionBackend for LoopBackend {
+        fn append(&mut self, k: &[f32], v: &[f32]) {
+            self.0.append(k, v)
+        }
+        fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+            self.0.attend(q, out)
+        }
+        fn len(&self) -> usize {
+            self.0.len()
+        }
+        fn traffic(&self) -> Traffic {
+            self.0.traffic()
+        }
+        fn kv_bytes(&self) -> usize {
+            self.0.kv_bytes()
+        }
+        fn name(&self) -> &'static str {
+            "loop"
+        }
+    }
+
+    #[test]
+    fn default_forward_batch_matches_native_blocked_path() {
+        // The interleaved default (single-token loop) and FullAttention's
+        // blocked override must agree on every chunk position.
+        let shape = AttnShape::gqa(4, 2, 8, 128);
+        let kvd = shape.kv_dim();
+        let qd = shape.q_dim();
+        let mut rng = Rng::new(91);
+        let mut native = FullAttention::new(shape);
+        let mut looped = LoopBackend(FullAttention::new(shape));
+        // A pre-existing prefix so the chunk doesn't start at position 0.
+        for _ in 0..7 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            native.append(&k, &v);
+            looped.append(&k, &v);
+        }
+        let n = 19; // > one query tile
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        let qs = rng.normal_vec(n * qd, 1.0);
+        let mut o1 = vec![0.0f32; n * qd];
+        let mut o2 = vec![0.0f32; n * qd];
+        native.forward_batch(&ks, &vs, &qs, n, &mut o1);
+        looped.forward_batch(&ks, &vs, &qs, n, &mut o2);
+        assert_eq!(native.len(), looped.len());
+        for (a, b) in o1.iter().zip(&o2) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn default_append_batch_matches_append_loop() {
+        let shape = AttnShape::mha(2, 8, 64);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(93);
+        let ks = rng.normal_vec(5 * kvd, 1.0);
+        let vs = rng.normal_vec(5 * kvd, 1.0);
+        let mut a = LoopBackend(FullAttention::new(shape));
+        let mut b = FullAttention::new(shape);
+        a.append_batch(&ks, &vs, 5);
+        for t in 0..5 {
+            b.append(&ks[t * kvd..(t + 1) * kvd], &vs[t * kvd..(t + 1) * kvd]);
+        }
+        assert_eq!(a.len(), 5);
+        // Same cache contents -> same attend output.
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let mut o1 = vec![0.0f32; shape.q_dim()];
+        let mut o2 = vec![0.0f32; shape.q_dim()];
+        a.attend(&q, &mut o1);
+        b.attend(&q, &mut o2);
+        for (x, y) in o1.iter().zip(&o2) {
+            assert!((x - y).abs() < 1e-5);
+        }
+    }
 
     #[test]
     fn merge_selection_dedups_and_sorts() {

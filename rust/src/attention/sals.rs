@@ -18,6 +18,17 @@
 //! (kv_dim = n_kv_heads·head_dim). Queries are mean-pooled per KV group to
 //! kv_dim before projection — the single-head shared-latent analogue for
 //! grouped queries (documented in DESIGN.md §3).
+//!
+//! Batched prefill: `append_batch`/`forward_batch` compute the whole
+//! chunk's latent projection as **one** `K̃ = K·U_r` [`crate::tensor::ops::matmul_tn`]
+//! instead of n per-row projections. `forward_batch` keeps the *state*
+//! pushes interleaved with the attends — the fp32 recent-key ring and the
+//! quant store's high-precision window are position-relative, so evolving
+//! them token-by-token is what keeps the batched path bit-compatible with
+//! sequential decode. (`prefill_attend` deliberately keeps the n == 1
+//! default: with a whole chunk pre-appended, tokens that a mid-chunk query
+//! should see at full precision may already have been evicted from the
+//! ring by later chunk rows.)
 
 use super::{merge_selection, AttentionBackend, AttnShape, Traffic};
 use crate::lowrank::Projector;
@@ -102,6 +113,9 @@ pub struct SalsAttention {
     scratch_vals: Vec<f32>,
     scratch_lat: Vec<f32>,
     scratch_qr: Vec<f32>,
+    /// Chunk-latent staging buffer for the batched prefill path (kept
+    /// separate from `scratch_lat`, which `attend` overwrites per token).
+    scratch_chunk_lat: Vec<f32>,
 }
 
 impl SalsAttention {
@@ -140,6 +154,7 @@ impl SalsAttention {
             scratch_vals: Vec::new(),
             scratch_lat: Vec::new(),
             scratch_qr: Vec::new(),
+            scratch_chunk_lat: Vec::new(),
             cfg,
         }
     }
@@ -192,6 +207,33 @@ impl SalsAttention {
 
     fn recent_slot(&self, pos: usize) -> usize {
         pos % self.recent_cap
+    }
+
+    /// Push one token whose latent row is already computed: latent store,
+    /// fp32 recent-key ring, quantized values, write-traffic metering.
+    /// Shared by the batched paths (which project whole chunks at once).
+    fn push_token(&mut self, lat_row: &[f32], k: &[f32], v: &[f32]) {
+        let kvd = self.shape.kv_dim();
+        debug_assert_eq!(lat_row.len(), self.cfg.rank);
+        let pos = self.len;
+        self.latent_keys.extend_from_slice(lat_row);
+        self.traffic.write_f32(self.cfg.rank);
+        let slot = self.recent_slot(pos);
+        self.recent_keys[slot * kvd..(slot + 1) * kvd].copy_from_slice(k);
+        self.values.append(v);
+        self.traffic.write_bytes(self.values.row_read_bytes(pos));
+        self.len += 1;
+    }
+
+    /// Latent-project a chunk of pre-RoPE keys ((n, kv_dim)) into the
+    /// staging buffer as one `K̃ = K·U_r` matmul_tn against Uᵀ.
+    fn project_chunk(&mut self, ks: &[f32], n: usize) -> Vec<f32> {
+        let kvd = self.shape.kv_dim();
+        let r = self.cfg.rank;
+        let mut lat = std::mem::take(&mut self.scratch_chunk_lat);
+        lat.resize(n * r, 0.0);
+        crate::tensor::ops::matmul_tn(ks, &self.u_t.data, &mut lat, n, kvd, r);
+        lat
     }
 
     /// Is `pos` still inside the fp32 recent-key ring?
@@ -290,6 +332,53 @@ impl AttentionBackend for SalsAttention {
             n_sel,
             out,
         );
+    }
+
+    fn append_batch(&mut self, ks: &[f32], vs: &[f32], n: usize) {
+        let kvd = self.shape.kv_dim();
+        assert!(n > 0);
+        assert_eq!(ks.len(), n * kvd);
+        assert_eq!(vs.len(), n * kvd);
+        let r = self.cfg.rank;
+        let lat = self.project_chunk(ks, n);
+        for t in 0..n {
+            self.push_token(
+                &lat[t * r..(t + 1) * r],
+                &ks[t * kvd..(t + 1) * kvd],
+                &vs[t * kvd..(t + 1) * kvd],
+            );
+        }
+        self.scratch_chunk_lat = lat;
+    }
+
+    fn forward_batch(&mut self, ks: &[f32], vs: &[f32], qs: &[f32], n: usize, out: &mut [f32]) {
+        let kvd = self.shape.kv_dim();
+        let qd = self.shape.q_dim();
+        assert!(n > 0);
+        assert_eq!(ks.len(), n * kvd);
+        assert_eq!(vs.len(), n * kvd);
+        assert_eq!(qs.len(), n * qd);
+        assert_eq!(out.len(), n * qd);
+        let r = self.cfg.rank;
+        // Chunk-level batched projection; per-token state pushes + attends
+        // (see module docs: the recent ring / high-precision window are
+        // position-relative, so interleaving is what preserves exactness).
+        let lat = self.project_chunk(ks, n);
+        for t in 0..n {
+            self.push_token(
+                &lat[t * r..(t + 1) * r],
+                &ks[t * kvd..(t + 1) * kvd],
+                &vs[t * kvd..(t + 1) * kvd],
+            );
+            self.attend(&qs[t * qd..(t + 1) * qd], &mut out[t * qd..(t + 1) * qd]);
+        }
+        self.scratch_chunk_lat = lat;
+    }
+
+    fn end_prefill(&mut self) {
+        // Chunk-latent staging is (chunk, r) — small, but decode never
+        // touches it; release for symmetry with FullAttention.
+        self.scratch_chunk_lat = Vec::new();
     }
 
     fn len(&self) -> usize {
@@ -511,6 +600,80 @@ mod tests {
         for t in 46..50 {
             assert!(sel.contains(&t), "recent {t} missing: {sel:?}");
         }
+    }
+
+    #[test]
+    fn batched_forward_matches_sequential_loop() {
+        // The staged batched path must track the sequential state machine:
+        // same stores, same traffic, same outputs (modulo the one-matmul
+        // projection's fp reordering, ~1e-7).
+        let shape = AttnShape::mha(2, 8, 256);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(83);
+        let proj = make_projector(kvd, 8, 4, &mut rng);
+        let mut sample = lowrank_sampler(kvd, 4, 83);
+        // critical covers the whole sequence so the comparison is immune to
+        // top-k order flips from the ~1e-7 projection-reordering jitter;
+        // ring wraps and quant-group boundaries are still fully exercised.
+        let cfg = SalsConfig { critical: 64, ..cfg_small(8) };
+        let mut seq = SalsAttention::new(shape, cfg.clone(), proj.clone());
+        let mut bat = SalsAttention::new(shape, cfg, proj);
+        // Warm prefix through the scalar path on both.
+        for _ in 0..6 {
+            let k = sample(&mut rng);
+            let v = rng.normal_vec(kvd, 1.0);
+            seq.append(&k, &v);
+            bat.append(&k, &v);
+        }
+        let n = 40; // spans several quant groups and ring wraps
+        let mut ks = Vec::new();
+        let mut vs = Vec::new();
+        for _ in 0..n {
+            ks.extend(sample(&mut rng));
+            vs.extend(rng.normal_vec(kvd, 1.0));
+        }
+        let qs = rng.normal_vec(n * shape.q_dim(), 1.0);
+        let qd = shape.q_dim();
+        let mut o_seq = vec![0.0f32; n * qd];
+        for t in 0..n {
+            seq.append(&ks[t * kvd..(t + 1) * kvd], &vs[t * kvd..(t + 1) * kvd]);
+            seq.attend(&qs[t * qd..(t + 1) * qd], &mut o_seq[t * qd..(t + 1) * qd]);
+        }
+        let mut o_bat = vec![0.0f32; n * qd];
+        bat.forward_batch(&ks, &vs, &qs, n, &mut o_bat);
+        assert_eq!(seq.len, bat.len);
+        assert_eq!(seq.kv_bytes(), bat.kv_bytes());
+        for (a, b) in o_seq.iter().zip(&o_bat) {
+            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        }
+        for (a, b) in seq.latent_keys.iter().zip(&bat.latent_keys) {
+            assert!((a - b).abs() < 1e-4, "latent {a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn append_batch_matches_append_loop() {
+        let shape = AttnShape::mha(1, 8, 128);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(89);
+        let proj = make_projector(kvd, 4, 4, &mut rng);
+        let cfg = cfg_small(4);
+        let mut a = SalsAttention::new(shape, cfg.clone(), proj.clone());
+        let mut b = SalsAttention::new(shape, cfg, proj);
+        let n = 17;
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        a.append_batch(&ks, &vs, n);
+        for t in 0..n {
+            b.append(&ks[t * kvd..(t + 1) * kvd], &vs[t * kvd..(t + 1) * kvd]);
+        }
+        assert_eq!(a.len, b.len);
+        assert_eq!(a.kv_bytes(), b.kv_bytes());
+        assert_eq!(a.traffic().written, b.traffic().written);
+        for (x, y) in a.latent_keys.iter().zip(&b.latent_keys) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+        assert_eq!(a.recent_keys, b.recent_keys);
     }
 
     #[test]

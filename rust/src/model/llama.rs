@@ -4,11 +4,22 @@
 //! caches inside each layer's [`AttentionBackend`]) lives in
 //! [`SequenceState`]. This split is what lets the coordinator batch many
 //! sequences over one weight set, vLLM-style.
+//!
+//! Two forward paths share the weights:
+//!
+//! * [`Model::step`] — single-token decode: per-token vectors, `linear`
+//!   accumulation loops, streaming attention.
+//! * [`Model::forward_batch`] — multi-token prefill chunks: (chunk,
+//!   d_model) activation matrices driven through [`crate::tensor::ops::matmul`]
+//!   against the weight matrices and through each backend's
+//!   `forward_batch`. Prefill is matmul-shaped, so this is where chunked
+//!   prefill actually earns its name; [`Model::prefill`] consumes the
+//!   whole prompt in chunks of [`Model::PREFILL_CHUNK`].
 
 use super::config::ModelConfig;
 use super::weights::Weights;
 use crate::attention::AttentionBackend;
-use crate::tensor::ops::{rmsnorm, silu};
+use crate::tensor::ops::{matmul, rmsnorm, silu};
 use std::sync::Arc;
 
 /// Factory producing one attention backend per layer.
@@ -30,6 +41,14 @@ impl SequenceState {
         self.backends.iter().map(|b| b.kv_bytes()).sum()
     }
 
+    /// Prefill finished: let every layer backend drop chunk-sized scratch
+    /// before the (long) decode phase.
+    pub fn end_prefill(&mut self) {
+        for b in &mut self.backends {
+            b.end_prefill();
+        }
+    }
+
     /// Total cache traffic across layers.
     pub fn traffic(&self) -> crate::attention::Traffic {
         let mut t = crate::attention::Traffic::default();
@@ -49,6 +68,10 @@ pub struct Model {
 }
 
 /// Scratch buffers for one forward step (reused across steps).
+///
+/// The `b*` buffers are the batched-prefill activation matrices ((chunk, ·)
+/// row-major); they start empty and are grown to the chunk size on first
+/// use, so decode-only sequences pay nothing for them.
 pub struct Scratch {
     x: Vec<f32>,
     normed: Vec<f32>,
@@ -60,6 +83,17 @@ pub struct Scratch {
     gate: Vec<f32>,
     up: Vec<f32>,
     ffn: Vec<f32>,
+    // ---- batched prefill ((chunk, ·) matrices) ----
+    bx: Vec<f32>,
+    bnormed: Vec<f32>,
+    bq: Vec<f32>,
+    bk: Vec<f32>,
+    bv: Vec<f32>,
+    battn: Vec<f32>,
+    bproj: Vec<f32>,
+    bgate: Vec<f32>,
+    bup: Vec<f32>,
+    bffn: Vec<f32>,
 }
 
 impl Scratch {
@@ -75,7 +109,56 @@ impl Scratch {
             gate: vec![0.0; cfg.d_ff],
             up: vec![0.0; cfg.d_ff],
             ffn: vec![0.0; cfg.d_model],
+            bx: Vec::new(),
+            bnormed: Vec::new(),
+            bq: Vec::new(),
+            bk: Vec::new(),
+            bv: Vec::new(),
+            battn: Vec::new(),
+            bproj: Vec::new(),
+            bgate: Vec::new(),
+            bup: Vec::new(),
+            bffn: Vec::new(),
         }
+    }
+
+    /// Release the batched-prefill activation matrices — decode touches
+    /// only the single-token buffers, and the `b*` set is chunk-sized
+    /// (bgate/bup alone are 2·chunk·d_ff floats), so holding it through a
+    /// long decode phase would inflate every running sequence's footprint.
+    pub fn end_prefill(&mut self) {
+        for buf in [
+            &mut self.bx,
+            &mut self.bnormed,
+            &mut self.bq,
+            &mut self.bk,
+            &mut self.bv,
+            &mut self.battn,
+            &mut self.bproj,
+            &mut self.bgate,
+            &mut self.bup,
+            &mut self.bffn,
+        ] {
+            *buf = Vec::new();
+        }
+    }
+
+    /// Size the batched buffers for an `n`-token chunk (exact lengths —
+    /// the matmul kernels assert full-slice shapes).
+    fn ensure_batch(&mut self, cfg: &ModelConfig, n: usize) {
+        let d = cfg.d_model;
+        let qd = cfg.n_heads * cfg.head_dim;
+        let kvd = cfg.kv_dim();
+        self.bx.resize(n * d, 0.0);
+        self.bnormed.resize(n * d, 0.0);
+        self.bq.resize(n * qd, 0.0);
+        self.bk.resize(n * kvd, 0.0);
+        self.bv.resize(n * kvd, 0.0);
+        self.battn.resize(n * qd, 0.0);
+        self.bproj.resize(n * d, 0.0);
+        self.bgate.resize(n * cfg.d_ff, 0.0);
+        self.bup.resize(n * cfg.d_ff, 0.0);
+        self.bffn.resize(n * d, 0.0);
     }
 }
 
@@ -155,13 +238,125 @@ impl Model {
         Some(logits)
     }
 
-    /// Run a full prompt, returning logits after the last token.
-    pub fn prefill(&self, state: &mut SequenceState, scratch: &mut Scratch, tokens: &[usize]) -> Vec<f32> {
-        assert!(!tokens.is_empty());
-        for &t in &tokens[..tokens.len() - 1] {
-            self.step(state, scratch, t, false);
+    /// Default prefill chunk size (tokens per [`Model::forward_batch`] call)
+    /// used by [`Model::prefill`]. Large enough that the per-chunk matmuls
+    /// amortize, small enough that activation scratch stays modest.
+    pub const PREFILL_CHUNK: usize = 128;
+
+    /// Multi-token chunk forward: feed `tokens`, advance `state` by
+    /// `tokens.len()` positions, and return the logits after the last
+    /// token if `want_logits`.
+    ///
+    /// The chunk's activations travel as (n, d) row-major matrices —
+    /// rmsnorm per row, QKV/output/FFN projections as single matmuls
+    /// against the shared weights, and attention through each layer
+    /// backend's `forward_batch` (causal within the chunk). Semantically
+    /// equivalent to `n` calls of [`Model::step`]; the arithmetic is
+    /// reassociated into blocked kernels, so logits agree to ~1e-5, not
+    /// bit-exactly.
+    pub fn forward_batch(
+        &self,
+        state: &mut SequenceState,
+        scratch: &mut Scratch,
+        tokens: &[usize],
+        want_logits: bool,
+    ) -> Option<Vec<f32>> {
+        let cfg = &self.cfg;
+        let w = &self.weights;
+        let n = tokens.len();
+        assert!(n > 0, "forward_batch of empty chunk");
+        assert!(state.pos + n <= cfg.max_seq, "sequence exceeds max_seq");
+        let d = cfg.d_model;
+        let qd = cfg.n_heads * cfg.head_dim;
+        let kvd = cfg.kv_dim();
+        scratch.ensure_batch(cfg, n);
+
+        // Embed the chunk.
+        for (t, &tok) in tokens.iter().enumerate() {
+            assert!(tok < cfg.vocab, "token {tok} out of vocab");
+            scratch.bx[t * d..(t + 1) * d].copy_from_slice(w.embedding.row(tok));
         }
-        self.step(state, scratch, tokens[tokens.len() - 1], true).unwrap()
+
+        for (layer, lw) in w.layers.iter().enumerate() {
+            // ---- attention block ----
+            for t in 0..n {
+                rmsnorm(
+                    &scratch.bx[t * d..(t + 1) * d],
+                    &lw.norm_attn,
+                    cfg.rms_eps,
+                    &mut scratch.bnormed[t * d..(t + 1) * d],
+                );
+            }
+            matmul(&scratch.bnormed, &lw.wq.data, &mut scratch.bq, n, d, qd);
+            matmul(&scratch.bnormed, &lw.wk.data, &mut scratch.bk, n, d, kvd);
+            matmul(&scratch.bnormed, &lw.wv.data, &mut scratch.bv, n, d, kvd);
+            let backend = &mut state.backends[layer];
+            backend.forward_batch(&scratch.bk, &scratch.bv, &scratch.bq, n, &mut scratch.battn);
+            matmul(&scratch.battn, &lw.wo.data, &mut scratch.bproj, n, qd, d);
+            for (xi, pi) in scratch.bx.iter_mut().zip(&scratch.bproj) {
+                *xi += pi;
+            }
+            // ---- FFN block (SwiGLU) ----
+            for t in 0..n {
+                rmsnorm(
+                    &scratch.bx[t * d..(t + 1) * d],
+                    &lw.norm_ffn,
+                    cfg.rms_eps,
+                    &mut scratch.bnormed[t * d..(t + 1) * d],
+                );
+            }
+            matmul(&scratch.bnormed, &lw.w_gate.data, &mut scratch.bgate, n, d, cfg.d_ff);
+            matmul(&scratch.bnormed, &lw.w_up.data, &mut scratch.bup, n, d, cfg.d_ff);
+            for (g, u) in scratch.bgate.iter_mut().zip(&scratch.bup) {
+                *g = silu(*g) * u;
+            }
+            matmul(&scratch.bgate, &lw.w_down.data, &mut scratch.bffn, n, cfg.d_ff, d);
+            for (xi, fi) in scratch.bx.iter_mut().zip(&scratch.bffn) {
+                *xi += fi;
+            }
+        }
+        state.pos += n;
+
+        if !want_logits {
+            return None;
+        }
+        // Final norm + tied LM head on the chunk's last row only.
+        rmsnorm(&scratch.bx[(n - 1) * d..n * d], &w.norm_final, cfg.rms_eps, &mut scratch.normed);
+        let mut logits = vec![0.0f32; cfg.vocab];
+        for (t, l) in logits.iter_mut().enumerate() {
+            *l = crate::tensor::ops::dot(w.embedding.row(t), &scratch.normed);
+        }
+        Some(logits)
+    }
+
+    /// Run a full prompt through the batched path, returning logits after
+    /// the last token. Chunks of [`Model::PREFILL_CHUNK`].
+    pub fn prefill(&self, state: &mut SequenceState, scratch: &mut Scratch, tokens: &[usize]) -> Vec<f32> {
+        self.prefill_chunked(state, scratch, tokens, Self::PREFILL_CHUNK)
+    }
+
+    /// Chunked batched prefill with an explicit chunk size (1 recovers the
+    /// token-at-a-time schedule, `tokens.len()` a single monolithic chunk).
+    pub fn prefill_chunked(
+        &self,
+        state: &mut SequenceState,
+        scratch: &mut Scratch,
+        tokens: &[usize],
+        chunk: usize,
+    ) -> Vec<f32> {
+        assert!(!tokens.is_empty());
+        let chunk = chunk.max(1);
+        let mut logits = None;
+        let mut i = 0;
+        while i < tokens.len() {
+            let hi = (i + chunk).min(tokens.len());
+            let last = hi == tokens.len();
+            logits = self.forward_batch(state, scratch, &tokens[i..hi], last);
+            i = hi;
+        }
+        state.end_prefill();
+        scratch.end_prefill();
+        logits.unwrap()
     }
 
     /// Greedy generation of `n` tokens after a prompt.
@@ -223,23 +418,30 @@ mod tests {
     }
 
     #[test]
-    fn per_token_decode_matches_prefill_path() {
-        // prefill() is just repeated step(); verify logits equivalence by
-        // construction: run the same tokens manually.
+    fn batched_prefill_matches_per_token_decode() {
+        // The batched path reassociates the arithmetic into blocked
+        // matmuls, so equivalence with the sequential step() loop is
+        // numerical (≤1e-4), for every chunking of the prompt.
         let cfg = ModelConfig::tiny_gqa(64);
         let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 17)));
         let factory = full_factory(&cfg);
-        let tokens = [3usize, 1, 4, 1, 5];
-        let mut s1 = SequenceState::new(&cfg, &factory);
-        let mut sc1 = Scratch::new(&cfg);
-        let a = model.prefill(&mut s1, &mut sc1, &tokens);
-        let mut s2 = SequenceState::new(&cfg, &factory);
-        let mut sc2 = Scratch::new(&cfg);
-        let mut b = None;
+        let tokens = [3usize, 1, 4, 1, 5, 9, 2, 6];
+        let mut s_ref = SequenceState::new(&cfg, &factory);
+        let mut sc_ref = Scratch::new(&cfg);
+        let mut reference = None;
         for (i, &t) in tokens.iter().enumerate() {
-            b = model.step(&mut s2, &mut sc2, t, i == tokens.len() - 1);
+            reference = model.step(&mut s_ref, &mut sc_ref, t, i == tokens.len() - 1);
         }
-        assert_eq!(a, b.unwrap());
+        let reference = reference.unwrap();
+        for chunk in [1, 2, 3, tokens.len()] {
+            let mut s = SequenceState::new(&cfg, &factory);
+            let mut sc = Scratch::new(&cfg);
+            let logits = model.prefill_chunked(&mut s, &mut sc, &tokens, chunk);
+            assert_eq!(s.pos, tokens.len());
+            for (a, b) in logits.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-4, "chunk {chunk}: {a} vs {b}");
+            }
+        }
     }
 
     #[test]

@@ -71,6 +71,16 @@ impl RopeTable {
         }
     }
 
+    /// Rotate row `t` of a (n, n_heads*head_dim) buffer for position
+    /// `start + t` — the batched-prefill convention where a chunk occupies
+    /// consecutive positions. Avoids materializing a positions slice.
+    pub fn apply_rows_offset(&self, buf: &mut [f32], row_dim: usize, start: usize) {
+        assert_eq!(buf.len() % row_dim, 0);
+        for (t, row) in buf.chunks_exact_mut(row_dim).enumerate() {
+            self.apply_multihead(row, start + t);
+        }
+    }
+
     /// Inverse rotation (rotate by -pos). Used in tests and in the
     /// Figure-1(b)/Figure-4 analyses.
     pub fn apply_inverse(&self, x: &mut [f32], pos: usize) {
@@ -142,6 +152,20 @@ mod tests {
         let s1 = score(10, 3);
         let s2 = score(107, 100);
         assert!((s1 - s2).abs() < 1e-3, "{s1} vs {s2}");
+    }
+
+    #[test]
+    fn rows_offset_matches_per_row() {
+        let t = RopeTable::new(8, 64, 10_000.0);
+        let mut rng = Rng::new(12);
+        let rows = 5;
+        let mut buf = rng.normal_vec(rows * 16, 1.0); // 2 heads × dim 8
+        let mut expect = buf.clone();
+        t.apply_rows_offset(&mut buf, 16, 7);
+        for (i, row) in expect.chunks_exact_mut(16).enumerate() {
+            t.apply_multihead(row, 7 + i);
+        }
+        assert_eq!(buf, expect);
     }
 
     #[test]

@@ -121,6 +121,7 @@ impl XlaModel {
     }
 
     /// Feed one token; returns the next-token logits.
+    #[cfg(feature = "xla")]
     pub fn step(&mut self, rt: &ArtifactRuntime, token: usize) -> Result<Vec<f32>> {
         if self.pos >= self.meta.max_seq {
             return Err(Error::Coordinator("sequence exceeds artifact max_seq".into()));
@@ -145,6 +146,14 @@ impl XlaModel {
         self.v_cache = outs[2].convert(xla::PrimitiveType::F32).map_err(|e| Error::Xla(e.to_string()))?.to_vec::<f32>()?;
         self.pos += 1;
         Ok(logits)
+    }
+
+    /// Feed one token (stub: the default build has no PJRT runtime).
+    #[cfg(not(feature = "xla"))]
+    pub fn step(&mut self, _rt: &ArtifactRuntime, _token: usize) -> Result<Vec<f32>> {
+        Err(Error::Xla(
+            "sals was built without the `xla` feature; XlaModel::step is unavailable".into(),
+        ))
     }
 
     /// Greedy generation: prefill the prompt, then decode `n` tokens.

@@ -6,7 +6,10 @@
 /// out[m,n] = a[m,k] @ b[k,n]   (row-major, out must be zeroed or will be overwritten)
 ///
 /// i-k-j loop order keeps both the `b` row and `out` row unit-stride, which
-/// is the standard cache-friendly ordering for row-major operands.
+/// is the standard cache-friendly ordering for row-major operands. The
+/// inner loop is branch-free so LLVM can vectorize it; callers whose `a`
+/// rows are mostly zero (masked probability rows) should use
+/// [`matmul_masked`] instead.
 pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
@@ -16,8 +19,31 @@ pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usiz
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
         for (p, &av) in arow.iter().enumerate() {
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// [`matmul`] variant that skips zero entries of `a`.
+///
+/// Same contract as `matmul`, but each `a[i,p] == 0.0` short-circuits the
+/// whole `b` row. Only worth it when `a` rows are *structurally* sparse —
+/// causally masked score rows, gathered token subsets — because the branch
+/// defeats auto-vectorization on dense inputs.
+pub fn matmul_masked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    out.fill(0.0);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
             if av == 0.0 {
-                continue; // sparse rows (masked tokens) short-circuit
+                continue;
             }
             let brow = &b[p * n..(p + 1) * n];
             for (o, &bv) in orow.iter_mut().zip(brow) {
@@ -97,6 +123,127 @@ pub fn softmax_rows(buf: &mut [f32], m: usize, n: usize) {
     }
 }
 
+/// Reusable buffers for [`causal_attend_chunk`]: per-KV-head key/value
+/// panels plus query/score/output tiles. Callers keep one per backend so
+/// chunked prefill doesn't heap-allocate on every layer-chunk call (the
+/// crate's hot paths are otherwise allocation-free); buffers grow to the
+/// largest cache seen and are retained.
+#[derive(Default)]
+pub struct ChunkAttendScratch {
+    khead: Vec<f32>,
+    vhead: Vec<f32>,
+    qtile: Vec<f32>,
+    scores: Vec<f32>,
+    otile: Vec<f32>,
+}
+
+/// Blocked causal multi-head attention for a chunk of queries over a dense
+/// post-RoPE KV cache — the batched-prefill workhorse.
+///
+/// * `qs`: (n, n_heads·d) row-major **post-RoPE** queries; row `t` belongs
+///   to absolute position `len - n + t`.
+/// * `keys` / `values`: (len, n_kv_heads·d) row-major post-RoPE cache
+///   (the chunk's own rows are already appended, i.e. `len` includes them).
+/// * Causality: query row `t` attends to cache rows `0..=len - n + t`.
+/// * `out`: (n, n_heads·d), overwritten.
+///
+/// Blocking scheme: per KV head the (strided) key/value columns are packed
+/// once into contiguous (len, d) panels; query tiles of up to 16
+/// rows then compute a (tile, visible) score panel with one [`matmul_tn`]
+/// (QKᵀ), row-softmax over each row's causal prefix, and one PV
+/// [`matmul_masked`] (the causally masked score tails are structural
+/// zeros — exactly the sparse-row shape that kernel exists for). This
+/// turns the token-at-a-time dot/axpy decode pattern into cache-friendly
+/// matmuls with unit-stride inner loops.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attend_chunk(
+    qs: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    n: usize,
+    len: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    d: usize,
+    scratch: &mut ChunkAttendScratch,
+    out: &mut [f32],
+) {
+    assert!(n > 0 && n <= len, "chunk {n} vs cache {len}");
+    assert_eq!(n_heads % n_kv_heads, 0);
+    let kvd = n_kv_heads * d;
+    let qd = n_heads * d;
+    assert_eq!(qs.len(), n * qd);
+    assert_eq!(keys.len(), len * kvd);
+    assert_eq!(values.len(), len * kvd);
+    assert_eq!(out.len(), n * qd);
+    let group = n_heads / n_kv_heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let start = len - n; // absolute position of query row 0
+
+    const Q_TILE: usize = 16;
+    let ChunkAttendScratch { khead, vhead, qtile, scores, otile } = scratch;
+    khead.resize(len * d, 0.0);
+    vhead.resize(len * d, 0.0);
+    qtile.resize(Q_TILE * d, 0.0);
+    scores.resize(Q_TILE * len, 0.0);
+    otile.resize(Q_TILE * d, 0.0);
+
+    for kvh in 0..n_kv_heads {
+        // Pack this KV head's strided columns into contiguous panels once;
+        // every query head of the group and every tile reuses them.
+        for j in 0..len {
+            let src = j * kvd + kvh * d;
+            khead[j * d..(j + 1) * d].copy_from_slice(&keys[src..src + d]);
+            vhead[j * d..(j + 1) * d].copy_from_slice(&values[src..src + d]);
+        }
+        for h in kvh * group..(kvh + 1) * group {
+            let mut t0 = 0;
+            while t0 < n {
+                let tb = Q_TILE.min(n - t0);
+                // Pre-scaled query tile: folds the 1/sqrt(d) into QKᵀ.
+                for t in 0..tb {
+                    let src = (t0 + t) * qd + h * d;
+                    let dst = &mut qtile[t * d..(t + 1) * d];
+                    dst.copy_from_slice(&qs[src..src + d]);
+                    for x in dst.iter_mut() {
+                        *x *= scale;
+                    }
+                }
+                // Rows visible to the last query of the tile bound the panel.
+                let vis_max = start + t0 + tb;
+                matmul_tn(
+                    &qtile[..tb * d],
+                    &khead[..vis_max * d],
+                    &mut scores[..tb * vis_max],
+                    tb,
+                    d,
+                    vis_max,
+                );
+                for t in 0..tb {
+                    let vis = start + t0 + t + 1;
+                    let row = &mut scores[t * vis_max..(t + 1) * vis_max];
+                    softmax(&mut row[..vis]);
+                    row[vis..].fill(0.0); // mask future keys of later tile rows
+                }
+                // PV over rows whose masked tails are structural zeros.
+                matmul_masked(
+                    &scores[..tb * vis_max],
+                    &vhead[..vis_max * d],
+                    &mut otile[..tb * d],
+                    tb,
+                    vis_max,
+                    d,
+                );
+                for t in 0..tb {
+                    let dst = (t0 + t) * qd + h * d;
+                    out[dst..dst + d].copy_from_slice(&otile[t * d..(t + 1) * d]);
+                }
+                t0 += tb;
+            }
+        }
+    }
+}
+
 /// RMSNorm: x * w / sqrt(mean(x²) + eps). LLaMA-style (no mean subtraction).
 pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
     assert_eq!(x.len(), w.len());
@@ -167,6 +314,105 @@ mod tests {
         matmul_tn(&a, &bt, &mut o2, m, k, n);
         for (x, y) in o1.iter().zip(&o2) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn matmul_masked_matches_dense() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(9);
+        let (m, k, n) = (4, 9, 6);
+        let mut a = rng.normal_vec(m * k, 1.0);
+        // Inject structural zeros (masked tail of each row).
+        for i in 0..m {
+            for p in k - 3..k {
+                a[i * k + p] = 0.0;
+            }
+        }
+        let b = rng.normal_vec(k * n, 1.0);
+        let mut dense = vec![0.0; m * n];
+        let mut masked = vec![0.0; m * n];
+        matmul(&a, &b, &mut dense, m, k, n);
+        matmul_masked(&a, &b, &mut masked, m, k, n);
+        for (x, y) in dense.iter().zip(&masked) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    /// Naive per-query reference for causal_attend_chunk.
+    #[allow(clippy::too_many_arguments)]
+    fn causal_reference(
+        qs: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        n: usize,
+        len: usize,
+        n_heads: usize,
+        n_kv_heads: usize,
+        d: usize,
+    ) -> Vec<f32> {
+        let qd = n_heads * d;
+        let kvd = n_kv_heads * d;
+        let group = n_heads / n_kv_heads;
+        let scale = 1.0 / (d as f32).sqrt();
+        let start = len - n;
+        let mut out = vec![0.0f32; n * qd];
+        for t in 0..n {
+            let vis = start + t + 1;
+            for h in 0..n_heads {
+                let kvh = h / group;
+                let qh = &qs[t * qd + h * d..t * qd + (h + 1) * d];
+                let mut s: Vec<f32> = (0..vis)
+                    .map(|j| dot(qh, &keys[j * kvd + kvh * d..j * kvd + (kvh + 1) * d]) * scale)
+                    .collect();
+                softmax(&mut s);
+                let oh = &mut out[t * qd + h * d..t * qd + (h + 1) * d];
+                for (j, &p) in s.iter().enumerate() {
+                    axpy(p, &values[j * kvd + kvh * d..j * kvd + (kvh + 1) * d], oh);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn causal_attend_chunk_matches_reference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(21);
+        // n > Q_TILE to exercise multi-tile; GQA to exercise head groups;
+        // start > 0 to exercise a pre-existing cache prefix.
+        let (n_heads, n_kv_heads, d) = (4, 2, 8);
+        let (len, n) = (41, 23);
+        let qd = n_heads * d;
+        let kvd = n_kv_heads * d;
+        let qs = rng.normal_vec(n * qd, 1.0);
+        let keys = rng.normal_vec(len * kvd, 1.0);
+        let values = rng.normal_vec(len * kvd, 1.0);
+        let mut out = vec![0.0f32; n * qd];
+        let mut scratch = ChunkAttendScratch::default();
+        causal_attend_chunk(&qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &mut scratch, &mut out);
+        // Re-run with the now-warm scratch: reuse must not change results.
+        let mut out2 = vec![0.0f32; n * qd];
+        causal_attend_chunk(&qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &mut scratch, &mut out2);
+        assert_eq!(out, out2);
+        let reference = causal_reference(&qs, &keys, &values, n, len, n_heads, n_kv_heads, d);
+        for (a, b) in out.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn causal_attend_chunk_full_cache_single_token() {
+        // n == len == 1: softmax over a singleton returns the value row.
+        let d = 4;
+        let qs = vec![0.3f32; d];
+        let keys = vec![0.7f32; d];
+        let values: Vec<f32> = (0..d).map(|i| i as f32).collect();
+        let mut out = vec![0.0f32; d];
+        let mut scratch = ChunkAttendScratch::default();
+        causal_attend_chunk(&qs, &keys, &values, 1, 1, 1, 1, d, &mut scratch, &mut out);
+        for (o, v) in out.iter().zip(&values) {
+            assert!((o - v).abs() < 1e-6);
         }
     }
 

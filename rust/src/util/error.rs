@@ -1,30 +1,56 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: the offline build environment has
+//! no crate registry, so we do not pull in `thiserror`.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors surfaced by the SALS library.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Shape mismatch between tensors or against a config.
-    #[error("shape mismatch: {0}")]
     Shape(String),
     /// Invalid configuration value.
-    #[error("invalid config: {0}")]
     Config(String),
     /// I/O error (artifact loading, trace files).
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
     /// Error bubbled up from the XLA/PJRT runtime.
-    #[error("xla error: {0}")]
     Xla(String),
     /// Coordinator-level failure (queue closed, session missing, ...).
-    #[error("coordinator error: {0}")]
     Coordinator(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(s) => write!(f, "shape mismatch: {s}"),
+            Error::Config(s) => write!(f, "invalid config: {s}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Xla(s) => write!(f, "xla error: {s}"),
+            Error::Coordinator(s) => write!(f, "coordinator error: {s}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
 }
 
 /// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
+#[cfg(feature = "xla")]
 impl From<xla::Error> for Error {
     fn from(e: xla::Error) -> Self {
         Error::Xla(e.to_string())

@@ -1,11 +1,16 @@
 //! Integration: rust loads the python-lowered HLO artifacts and decodes.
 //!
 //! Skips (with a loud message) when `artifacts/` hasn't been built — run
-//! `make artifacts` first. CI runs `make test`, which guarantees ordering.
+//! `make artifacts` first — or when the crate was built without the `xla`
+//! feature (default offline build: the PJRT runtime is a stub).
 
 use sals::runtime::{ArtifactRuntime, XlaModel, XlaVariant};
 
 fn artifacts_dir() -> Option<std::path::PathBuf> {
+    if cfg!(not(feature = "xla")) {
+        eprintln!("SKIP: built without the `xla` feature (PJRT runtime stubbed)");
+        return None;
+    }
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if dir.join("meta.txt").exists() {
         Some(dir)
