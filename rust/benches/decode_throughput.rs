@@ -1,0 +1,220 @@
+//! Decode throughput: cross-sequence batched decode (`Model::decode_batch`)
+//! vs the per-sequence `step()` loop at batch sizes {1, 4, 16}, full vs
+//! SALS backends.
+//!
+//! The model is sized so the per-step weight stream (~58 MB fp32) exceeds
+//! typical LLC capacity — decode is then memory-bound on weights, which is
+//! exactly the regime where stacking sequences into one (batch, d) matmul
+//! pays: the weights stream once per engine step instead of once per
+//! sequence. Both paths run single-threaded (`BatchScratch` threads = 1)
+//! so the comparison isolates batching (not core count); the engine's
+//! threaded decode splits rows across workers and streams weights once
+//! per worker block, which this bench deliberately does not measure. The
+//! acceptance signal is tokens/sec/sequence at batch 16 beating batch 1
+//! on the batched path.
+//!
+//! Emits `BENCH_decode.json` in the working directory so the decode perf
+//! trajectory accumulates across PRs. `SALS_BENCH_QUICK=1` shortens the
+//! decode run (same batch grid).
+
+use sals::attention::{AttentionBackend, FullAttention, SalsAttention, SalsConfig};
+use sals::harness::Table;
+use sals::lowrank::Calibrator;
+use sals::model::{BackendFactory, BatchScratch, Model, ModelConfig, Scratch, SequenceState, Weights};
+use sals::quant::Bits;
+use sals::util::json::Json;
+use sals::util::rng::Rng;
+use sals::util::timer::time_once;
+use std::sync::Arc;
+
+const PROMPT_LEN: usize = 16;
+const BATCHES: [usize; 3] = [1, 4, 16];
+
+/// GQA decoder big enough that streaming the weights dominates a decode
+/// step (d_model 384, ~14.5M params ≈ 58 MB fp32); attention stays cheap
+/// (short sequences), so the measurement isolates the projection matmuls.
+fn cfg(max_seq: usize) -> ModelConfig {
+    ModelConfig {
+        vocab: 4096,
+        d_model: 384,
+        n_layers: 6,
+        n_heads: 6,
+        n_kv_heads: 2,
+        head_dim: 64,
+        d_ff: 1536,
+        max_seq,
+        rope_base: 10_000.0,
+        dense_layers: ModelConfig::default_dense_layers(6),
+        rms_eps: 1e-5,
+    }
+}
+
+fn full_factory(c: &ModelConfig) -> Box<BackendFactory> {
+    let shape = c.attn_shape();
+    Box::new(move |_| Box::new(FullAttention::new(shape)) as Box<dyn AttentionBackend + Send>)
+}
+
+fn sals_factory(c: &ModelConfig) -> Box<BackendFactory> {
+    let shape = c.attn_shape();
+    let kvd = c.kv_dim();
+    // Projector calibrated on a low-rank key family (real keys are
+    // low-rank; exactness is irrelevant to throughput).
+    let mut rng = Rng::new(11);
+    let basis: Vec<Vec<f32>> = (0..kvd / 8).map(|_| rng.normal_vec(kvd, 1.0)).collect();
+    let mut cal = Calibrator::new(kvd);
+    let mut row = vec![0.0f32; kvd];
+    for _ in 0..256 {
+        row.fill(0.0);
+        for b in &basis {
+            sals::tensor::ops::axpy(rng.normal_f32(), b, &mut row);
+        }
+        cal.add_key(&row);
+    }
+    let rank = (kvd / 4).max(2);
+    let proj = cal.fit(rank).unwrap();
+    let sc = SalsConfig {
+        rank,
+        r_star: (kvd / 8).max(1),
+        sink: 4,
+        recent: 16,
+        critical: 32,
+        v_bits: Bits::B4,
+        group: 32,
+    };
+    Box::new(move |_| {
+        Box::new(SalsAttention::new(shape, sc.clone(), proj.clone())) as Box<dyn AttentionBackend + Send>
+    })
+}
+
+/// Build `batch` prefilled sequences (identical prompt — decode cost is
+/// what's measured).
+fn make_states(
+    model: &Model,
+    factory: &BackendFactory,
+    batch: usize,
+    prompt: &[usize],
+) -> Vec<SequenceState> {
+    (0..batch)
+        .map(|_| {
+            let mut s = SequenceState::new(&model.cfg, factory);
+            let mut sc = Scratch::new(&model.cfg);
+            model.prefill(&mut s, &mut sc, prompt);
+            s
+        })
+        .collect()
+}
+
+fn main() {
+    let quick = std::env::var("SALS_BENCH_QUICK").is_ok();
+    let decode_n = if quick { 12 } else { 32 };
+
+    let max_seq = PROMPT_LEN + decode_n + 4;
+    let c = cfg(max_seq);
+    let model = Model::new(c.clone(), Arc::new(Weights::random(&c, 99)));
+    let mut rng = Rng::new(2025);
+    let prompt: Vec<usize> = (0..PROMPT_LEN).map(|_| rng.below(c.vocab)).collect();
+    let toks: Vec<usize> = (0..decode_n).map(|_| rng.below(c.vocab)).collect();
+
+    let mut table = Table::new(
+        "Decode throughput (tokens/s) — cross-sequence batched decode vs step() loop",
+        &["Batch", "Method", "Step-loop tok/s", "Batched tok/s", "Batched tok/s/seq", "Speedup"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut per_seq: Vec<(String, usize, f64)> = Vec::new();
+
+    // Two warmup tokens before each timed run: first-touch page faults and
+    // cold weight caches would otherwise land on whichever configuration
+    // runs first and could flip the acceptance comparison.
+    const WARMUP: usize = 2;
+    let wtoks: Vec<usize> = (0..WARMUP).map(|_| rng.below(c.vocab)).collect();
+
+    for (name, factory) in [("full", full_factory(&c)), ("sals-25%", sals_factory(&c))] {
+        for &batch in &BATCHES {
+            // Per-sequence step() loop — the pre-batched decode path.
+            let mut states = make_states(&model, &factory, batch, &prompt);
+            let mut scratches: Vec<Scratch> = (0..batch).map(|_| Scratch::new(&c)).collect();
+            for &t in &wtoks {
+                for (s, sc) in states.iter_mut().zip(scratches.iter_mut()) {
+                    model.step(s, sc, t, true);
+                }
+            }
+            let (_, seq_secs) = time_once(|| {
+                for &t in &toks {
+                    for (s, sc) in states.iter_mut().zip(scratches.iter_mut()) {
+                        model.step(s, sc, t, true);
+                    }
+                }
+            });
+            let seq_tps = (batch * decode_n) as f64 / seq_secs;
+
+            // One stacked decode_batch per step for the whole batch.
+            let mut states = make_states(&model, &factory, batch, &prompt);
+            let mut bs = BatchScratch::sized(&c, batch, 1);
+            for &t in &wtoks {
+                let tokens = vec![t; batch];
+                let mut refs: Vec<&mut SequenceState> = states.iter_mut().collect();
+                model.decode_batch(&mut refs, &tokens, &mut bs);
+            }
+            let (_, bat_secs) = time_once(|| {
+                for &t in &toks {
+                    let tokens = vec![t; batch];
+                    let mut refs: Vec<&mut SequenceState> = states.iter_mut().collect();
+                    model.decode_batch(&mut refs, &tokens, &mut bs);
+                }
+            });
+            let bat_tps = (batch * decode_n) as f64 / bat_secs;
+            let bat_tps_seq = decode_n as f64 / bat_secs;
+            let speedup = bat_tps / seq_tps;
+            per_seq.push((name.to_string(), batch, bat_tps_seq));
+
+            table.row(vec![
+                batch.to_string(),
+                name.to_string(),
+                format!("{seq_tps:.0}"),
+                format!("{bat_tps:.0}"),
+                format!("{bat_tps_seq:.0}"),
+                format!("{speedup:.2}x"),
+            ]);
+            rows.push(
+                Json::obj()
+                    .field("batch", batch)
+                    .field("method", name)
+                    .field("steploop_tok_s", seq_tps)
+                    .field("batched_tok_s", bat_tps)
+                    .field("batched_tok_s_per_seq", bat_tps_seq)
+                    .field("speedup", speedup),
+            );
+        }
+    }
+    table.print();
+
+    // Acceptance: weight-streaming amortization must be measurable — each
+    // sequence decodes *faster* inside a batch of 16 than alone.
+    let mut amortized = true;
+    for method in ["full", "sals-25%"] {
+        let at = |b: usize| {
+            per_seq
+                .iter()
+                .find(|(m, bb, _)| m == method && *bb == b)
+                .map(|&(_, _, v)| v)
+                .unwrap_or(0.0)
+        };
+        let (b1, b16) = (at(1), at(16));
+        let ok = b16 > b1;
+        amortized &= ok;
+        println!(
+            "acceptance[{method}]: batch-16 per-seq {b16:.0} tok/s {} batch-1 {b1:.0} tok/s",
+            if ok { ">" } else { "!>" }
+        );
+    }
+
+    let doc = Json::obj()
+        .field("bench", "decode_throughput")
+        .field("config", "d_model=384 n_layers=6 n_heads=6 n_kv_heads=2 head_dim=64 vocab=4096")
+        .field("prompt_len", PROMPT_LEN)
+        .field("decode_tokens", decode_n)
+        .field("batch16_per_seq_beats_batch1", amortized)
+        .field("rows", Json::Arr(rows));
+    std::fs::write("BENCH_decode.json", doc.to_string()).expect("write BENCH_decode.json");
+    println!("wrote BENCH_decode.json");
+}

@@ -34,6 +34,29 @@
 //! would, and reads charge each query row the cost its single-token
 //! `attend` would have paid at the same cache length — so Tables 2–4 and
 //! the §4.5 roofline stay comparable whichever path produced the numbers.
+//!
+//! # Cross-sequence batched decode contract
+//!
+//! The engine also batches *decode* across sequences
+//! ([`crate::model::Model::decode_batch`]): the per-token projections of
+//! all running sequences are stacked into one (batch, ·) matmul against
+//! the shared weights. Attention is NOT batched across sequences — every
+//! sequence owns private per-layer backends, so the batched step reaches
+//! each backend as the ordinary single-token [`AttentionBackend::append`]
+//! + [`AttentionBackend::attend`] pair, identical to scalar decode. What a
+//! backend must guarantee (and may rely on):
+//!
+//! * **Same calls, same order.** A backend cannot distinguish batched from
+//!   scalar decode; per-sequence call sequences are identical, so caches,
+//!   traffic meters, and `kv_bytes()` evolve identically.
+//! * **`Send`, not `Sync`.** Sequences fan out across worker threads, but
+//!   each backend is touched by exactly one thread per engine step (the
+//!   decode fan-out partitions sequences into disjoint per-worker blocks).
+//!   Interior state needs no synchronization.
+//! * **No cross-sequence state.** Anything shared between sequences (the
+//!   SALS projector, quantization tables) must be immutable or cloned per
+//!   backend — concurrent decode of many sequences reads it from many
+//!   threads at once.
 
 pub mod full;
 pub mod sals;

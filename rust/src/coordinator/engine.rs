@@ -1,33 +1,40 @@
-//! The serving engine: continuous batching + chunked prefill + pool-aware
-//! preemption over the CPU model.
+//! The serving engine: continuous batching + chunked prefill +
+//! cross-sequence batched decode + pool-aware preemption over the CPU
+//! model.
 //!
-//! The step loop is the paper's serving context (vLLM/GPT-fast class):
+//! The step loop is the paper's serving context (vLLM/GPT-fast class),
+//! structured as explicit phases:
 //!
 //! 1. **Admission**: while the running set is below `max_batch` and the
 //!    page pool can plausibly host the next waiting request, admit FCFS.
-//! 2. **Prefill**: admitted sequences consume their prompt in chunks of
-//!    `prefill_chunk` tokens per step (chunked prefill keeps decode latency
-//!    bounded for running sequences). Each chunk goes through
-//!    [`Model::forward_batch`] — ONE multi-token pass whose activations are
-//!    (chunk, d) matrices and whose attention is the backends' batched
-//!    causal path — not `prefill_chunk` repeated single-token steps. Page
-//!    accounting and preemption are per engine step, i.e. per chunk, so
-//!    admission/backpressure behavior is unchanged from the scalar path.
-//! 3. **Decode**: every running, prefilled sequence produces one token per
-//!    step (continuous batching — no static batch barrier). Decode stays
-//!    on the single-token [`Model::step`] path; cross-sequence batched
-//!    decode is a ROADMAP open item.
-//! 4. **Accounting**: after each step every sequence re-reserves pages for
+//! 2. **Partition**: split the running set into *prefilling* sequences
+//!    (prompt not yet consumed) and *decode-ready* sequences (pending
+//!    next-token logits).
+//! 3. **Prefill phase**: each prefilling sequence consumes one
+//!    `prefill_chunk`-token chunk through [`Model::forward_batch`] — ONE
+//!    multi-token pass whose activations are (chunk, d) matrices — with
+//!    sequences fanned out across worker threads. Chunked prefill keeps
+//!    decode latency bounded for running sequences; page accounting and
+//!    preemption stay per engine step, i.e. per chunk.
+//! 4. **Decode phase**: the whole decode-ready set advances one token
+//!    through a single [`Model::decode_batch`] call — per-sequence
+//!    activations stacked into (batch, d) matrices, with the batch's rows
+//!    partitioned across scoped workers so each weight matrix streams
+//!    once per *worker block* of sequences per step (not once per
+//!    sequence; serial decode streams it exactly once for the whole
+//!    batch). The engine owns one [`BatchScratch`] sized to `max_batch`;
+//!    per-sequence `Scratch` is only touched during prefill. Continuous
+//!    batching — no static batch barrier: sequences join the decode set
+//!    as their prefill completes and leave it the step they finish.
+//! 5. **Accounting**: after each step every sequence re-reserves pages for
 //!    its actual `kv_bytes()`; on pool exhaustion the youngest sequence is
 //!    preempted (caches dropped, request re-queued) — backpressure.
-//!
-//! Sequences are stepped in parallel across worker threads (the model is
-//! shared read-only), which is the CPU analogue of batched GPU kernels.
+//!    Finished sequences (flagged at decode time) are collected last.
 
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 use crate::kvcache::PagePool;
-use crate::model::{BackendFactory, Model, Scratch, SequenceState};
+use crate::model::{BackendFactory, BatchScratch, Model, Scratch, SequenceState};
 use crate::util::threadpool;
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -66,6 +73,10 @@ struct Running {
     out: Vec<usize>,
     /// Pending next-token logits (set once prefill completes).
     logits: Option<Vec<f32>>,
+    /// Set at decode time the moment a stop condition is hit (stop token,
+    /// max_new_tokens, max_seq) — collection checks this flag instead of
+    /// re-scanning `out`.
+    finished: bool,
     first_step: Option<Instant>,
     first_token: Option<Instant>,
     preemptions: usize,
@@ -79,6 +90,9 @@ pub struct Engine {
     pool: PagePool,
     waiting: VecDeque<Request>,
     running: Vec<Running>,
+    /// Engine-owned scratch for the cross-sequence batched decode phase,
+    /// sized to `max_batch` — decode needs no per-sequence scratch.
+    batch_scratch: BatchScratch,
     pub metrics: Metrics,
     done: Vec<Response>,
 }
@@ -86,6 +100,7 @@ pub struct Engine {
 impl Engine {
     pub fn new(model: Model, factory: Box<BackendFactory>, cfg: EngineConfig) -> Engine {
         let pool = PagePool::with_budget(cfg.page_bytes, cfg.pool_budget);
+        let batch_scratch = BatchScratch::sized(&model.cfg, cfg.max_batch, cfg.threads);
         Engine {
             model,
             factory,
@@ -93,6 +108,7 @@ impl Engine {
             pool,
             waiting: VecDeque::new(),
             running: Vec::new(),
+            batch_scratch,
             metrics: Metrics::default(),
             done: Vec::new(),
         }
@@ -135,6 +151,7 @@ impl Engine {
                 prefilled: 0,
                 out: Vec::new(),
                 logits: None,
+                finished: false,
                 first_step: None,
                 first_token: None,
                 preemptions: 0,
@@ -142,7 +159,11 @@ impl Engine {
         }
     }
 
-    /// One engine step. Returns the number of sequences stepped.
+    /// One engine step. Returns the number of sequences that actually did
+    /// work this step — consumed a prefill chunk or produced a decode
+    /// token. (0 only when nothing is running, e.g. admission is
+    /// pool-gated; finished sequences removed at the end of the step still
+    /// count as stepped.)
     pub fn step(&mut self) -> usize {
         self.admit();
         if self.running.is_empty() {
@@ -150,7 +171,6 @@ impl Engine {
         }
         self.metrics.steps += 1;
         let now = Instant::now();
-        let model = &self.model;
         let prefill_chunk = self.cfg.prefill_chunk.max(1);
         let threads = if self.cfg.threads == 0 {
             threadpool::num_cpus().min(self.running.len())
@@ -158,56 +178,89 @@ impl Engine {
             self.cfg.threads
         };
 
-        // ---- step every running sequence in parallel ----
+        let stepped;
         {
-            let running = &mut self.running;
-            let n = running.len();
-            let chunk = n.div_ceil(threads.max(1));
-            std::thread::scope(|s| {
-                for slice in running.chunks_mut(chunk) {
-                    s.spawn(move || {
-                        for r in slice.iter_mut() {
-                            r.first_step.get_or_insert(now);
-                            if r.prefilled < r.req.prompt.len() {
-                                // Chunked *batched* prefill: one multi-token
-                                // forward per chunk (logits only for the
-                                // prompt's final chunk).
-                                let hi = (r.prefilled + prefill_chunk).min(r.req.prompt.len());
-                                let last = hi == r.req.prompt.len();
-                                let l = model.forward_batch(
-                                    &mut r.state,
-                                    &mut r.scratch,
-                                    &r.req.prompt[r.prefilled..hi],
-                                    last,
-                                );
-                                if last {
-                                    r.logits = l;
-                                    // Transition to decode: drop the
-                                    // prefill-sized panels in every layer
-                                    // backend and the chunk-sized
-                                    // activation matrices (they'd otherwise
-                                    // pin O(prompt·d + chunk·d_ff) scratch
-                                    // all decode long).
-                                    r.state.end_prefill();
-                                    r.scratch.end_prefill();
-                                }
-                                r.prefilled = hi;
-                            } else if let Some(logits) = r.logits.take() {
-                                // Decode one token.
-                                let next = crate::tensor::ops::argmax(&logits);
-                                r.out.push(next);
-                                r.first_token.get_or_insert_with(Instant::now);
-                                let finished = r.out.len() >= r.req.params.max_new_tokens
-                                    || r.req.params.stop_token == Some(next)
-                                    || r.state.pos + 1 >= model.cfg.max_seq;
-                                if !finished {
-                                    r.logits = model.step(&mut r.state, &mut r.scratch, next, true);
-                                }
-                            }
-                        }
-                    });
+            let Engine { model, running, batch_scratch, .. } = self;
+            let model: &Model = model;
+
+            // ---- partition: prefilling vs decode-ready ----
+            // A sequence whose prefill completes this step gets its first
+            // logits now and joins the decode set next step (continuous
+            // batching, unchanged from the scalar engine).
+            let mut prefilling: Vec<&mut Running> = Vec::new();
+            let mut decoding: Vec<&mut Running> = Vec::new();
+            let mut degenerate = 0usize;
+            for r in running.iter_mut() {
+                r.first_step.get_or_insert(now);
+                if r.prefilled < r.req.prompt.len() {
+                    prefilling.push(r);
+                } else if r.logits.is_some() {
+                    decoding.push(r);
+                } else {
+                    // Degenerate: an empty prompt never produces logits
+                    // (prefill never runs), so there is nothing to decode
+                    // from — complete with whatever was generated (nothing).
+                    // Counts as stepped: the request progresses (it is
+                    // collected below), so the stall guard must not trip
+                    // on a stream of these.
+                    r.finished = true;
+                    degenerate += 1;
                 }
+            }
+            stepped = prefilling.len() + decoding.len() + degenerate;
+
+            // ---- prefill phase: one batched chunk per sequence, fanned
+            // out across worker threads (per-sequence caches + scratch are
+            // independent; the model is shared read-only) ----
+            threadpool::parallel_for_each_mut(&mut prefilling, threads, |_, r| {
+                let hi = (r.prefilled + prefill_chunk).min(r.req.prompt.len());
+                let last = hi == r.req.prompt.len();
+                let l = model.forward_batch(
+                    &mut r.state,
+                    &mut r.scratch,
+                    &r.req.prompt[r.prefilled..hi],
+                    last,
+                );
+                if last {
+                    r.logits = l;
+                    // Transition to decode: drop the prefill-sized panels
+                    // in every layer backend and the chunk-sized activation
+                    // matrices (they'd otherwise pin O(prompt·d +
+                    // chunk·d_ff) scratch all decode long). Decode uses the
+                    // engine's shared BatchScratch instead.
+                    r.state.end_prefill();
+                    r.scratch.end_prefill();
+                }
+                r.prefilled = hi;
             });
+
+            // ---- decode phase: sample pending logits, then ONE stacked
+            // forward for every sequence still generating ----
+            let mut batch: Vec<(&mut Running, usize)> = Vec::with_capacity(decoding.len());
+            for r in decoding {
+                let logits = r.logits.take().unwrap();
+                let next = crate::tensor::ops::argmax(&logits);
+                r.out.push(next);
+                r.first_token.get_or_insert_with(Instant::now);
+                if r.out.len() >= r.req.params.max_new_tokens
+                    || r.req.params.stop_token == Some(next)
+                    || r.state.pos + 1 >= model.cfg.max_seq
+                {
+                    r.finished = true;
+                } else {
+                    batch.push((r, next));
+                }
+            }
+            if !batch.is_empty() {
+                let tokens: Vec<usize> = batch.iter().map(|(_, t)| *t).collect();
+                let mut states: Vec<&mut SequenceState> =
+                    batch.iter_mut().map(|(r, _)| &mut r.state).collect();
+                let all_logits = model.decode_batch(&mut states, &tokens, batch_scratch);
+                drop(states);
+                for ((r, _), l) in batch.iter_mut().zip(all_logits) {
+                    r.logits = Some(l);
+                }
+            }
         }
 
         // ---- pool accounting + preemption ----
@@ -230,18 +283,10 @@ impl Engine {
         }
         self.metrics.peak_pool_pages = self.metrics.peak_pool_pages.max(self.pool.used_pages());
 
-        // ---- collect finished ----
+        // ---- collect finished (flag set at decode time — no O(out) scan) ----
         let mut i = 0;
         while i < self.running.len() {
-            let finished = {
-                let r = &self.running[i];
-                r.prefilled == r.req.prompt.len()
-                    && r.logits.is_none()
-                    && (r.out.len() >= r.req.params.max_new_tokens
-                        || r.req.params.stop_token.map(|t| r.out.contains(&t)).unwrap_or(false)
-                        || r.state.pos + 1 >= self.model.cfg.max_seq)
-            };
-            if finished {
+            if self.running[i].finished {
                 let r = self.running.remove(i);
                 self.pool.release(r.req.id);
                 let arrival = r.req.arrival.unwrap_or(now);
@@ -266,7 +311,7 @@ impl Engine {
                 i += 1;
             }
         }
-        self.running.len() + 1
+        stepped
     }
 
     /// Drive until every submitted request completes; returns responses in
@@ -275,6 +320,10 @@ impl Engine {
         let t0 = Instant::now();
         let mut stall_guard = 0usize;
         while self.outstanding() > 0 {
+            // step() returns the number of sequences that did work; with
+            // requests outstanding, 0 means admission is pool-gated with
+            // nothing running, so a long run of zeros is a stuck pool (a
+            // request that can never fit), not slow progress.
             let stepped = self.step();
             if stepped == 0 {
                 stall_guard += 1;
@@ -359,6 +408,113 @@ mod tests {
             let direct = model.generate_greedy(&mut state, &mut scratch, p, 6);
             assert_eq!(responses[i].tokens, direct, "request {i}");
         }
+    }
+
+    /// Engine output vs direct greedy generation for an arbitrary backend
+    /// family: batched decode must be semantically invisible for the
+    /// compressed-cache paths too, not just FullAttention. Prompts stay
+    /// under one prefill chunk so both sides run identical arithmetic
+    /// (single-chunk forward_batch + per-row decode), making the token
+    /// comparison exact.
+    fn assert_engine_matches_direct(make: &dyn Fn() -> Box<BackendFactory>, seed: u64) {
+        let prompts: Vec<Vec<usize>> = vec![vec![5, 6, 7], vec![9, 10, 11, 12], vec![42], vec![1, 2]];
+        let cfg = ModelConfig::tiny_gqa(128);
+        let mut e = Engine::new(
+            Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, seed))),
+            make(),
+            EngineConfig {
+                max_batch: 4,
+                prefill_chunk: 8,
+                page_bytes: 4096,
+                pool_budget: 1 << 24,
+                threads: 2,
+            },
+        );
+        for (i, p) in prompts.iter().enumerate() {
+            e.submit(Request::new(i as u64, p.clone(), GenParams { max_new_tokens: 6, stop_token: None }));
+        }
+        let mut responses = e.run_to_completion();
+        responses.sort_by_key(|r| r.id);
+
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, seed)));
+        let factory = make();
+        for (i, p) in prompts.iter().enumerate() {
+            let mut state = SequenceState::new(&cfg, &factory);
+            let mut scratch = Scratch::new(&cfg);
+            let direct = model.generate_greedy(&mut state, &mut scratch, p, 6);
+            assert_eq!(responses[i].tokens, direct, "request {i}");
+        }
+    }
+
+    #[test]
+    fn output_matches_unbatched_generation_sals() {
+        use crate::attention::{SalsAttention, SalsConfig};
+        use crate::lowrank::Calibrator;
+        use crate::quant::Bits;
+        use crate::util::rng::Rng;
+        let cfg = ModelConfig::tiny_gqa(128);
+        let shape = cfg.attn_shape();
+        let kvd = cfg.kv_dim();
+        let mut crng = Rng::new(61);
+        let mut cal = Calibrator::new(kvd);
+        for _ in 0..4 * kvd {
+            cal.add_key(&crng.normal_vec(kvd, 1.0));
+        }
+        let proj = cal.fit(kvd / 2).unwrap();
+        // critical ≥ any length reached here, so the selection set is
+        // insensitive to top-k score ties; the latent store, recent ring,
+        // and quantized values are all still exercised.
+        let sc = SalsConfig {
+            rank: kvd / 2,
+            r_star: kvd / 4,
+            sink: 2,
+            recent: 4,
+            critical: 64,
+            v_bits: Bits::B4,
+            group: 8,
+        };
+        assert_engine_matches_direct(
+            &move || {
+                let (p, c) = (proj.clone(), sc.clone());
+                Box::new(move |_| {
+                    Box::new(SalsAttention::new(shape, c.clone(), p.clone()))
+                        as Box<dyn crate::attention::AttentionBackend + Send>
+                })
+            },
+            53,
+        );
+    }
+
+    #[test]
+    fn output_matches_unbatched_generation_streaming_llm() {
+        use crate::attention::baselines::streaming_llm::StreamingLlmAttention;
+        let cfg = ModelConfig::tiny_gqa(128);
+        let shape = cfg.attn_shape();
+        // sink 2 + recent 4 < generated length: eviction is active, so the
+        // parity covers a backend whose cache actually drops tokens.
+        assert_engine_matches_direct(
+            &move || {
+                Box::new(move |_| {
+                    Box::new(StreamingLlmAttention::new(shape, 2, 4))
+                        as Box<dyn crate::attention::AttentionBackend + Send>
+                })
+            },
+            59,
+        );
+    }
+
+    #[test]
+    fn step_returns_count_actually_stepped() {
+        let mut e = engine(4, 1 << 24);
+        assert_eq!(e.step(), 0, "nothing submitted");
+        e.submit(Request::new(0, vec![1, 2, 3], GenParams { max_new_tokens: 2, stop_token: None }));
+        e.submit(Request::new(1, vec![4, 5], GenParams { max_new_tokens: 2, stop_token: None }));
+        assert_eq!(e.step(), 2, "both consume their single prefill chunk");
+        assert_eq!(e.step(), 2, "both decode token 1");
+        assert_eq!(e.step(), 2, "both decode token 2 and finish this step");
+        assert_eq!(e.step(), 0, "nothing left running");
+        assert_eq!(e.outstanding(), 0);
+        assert_eq!(e.metrics.requests_completed, 2);
     }
 
     #[test]

@@ -5,21 +5,33 @@
 //! [`SequenceState`]. This split is what lets the coordinator batch many
 //! sequences over one weight set, vLLM-style.
 //!
-//! Two forward paths share the weights:
+//! Three forward paths share the weights:
 //!
-//! * [`Model::step`] — single-token decode: per-token vectors, `linear`
-//!   accumulation loops, streaming attention.
-//! * [`Model::forward_batch`] — multi-token prefill chunks: (chunk,
-//!   d_model) activation matrices driven through [`crate::tensor::ops::matmul`]
-//!   against the weight matrices and through each backend's
-//!   `forward_batch`. Prefill is matmul-shaped, so this is where chunked
-//!   prefill actually earns its name; [`Model::prefill`] consumes the
-//!   whole prompt in chunks of [`Model::PREFILL_CHUNK`].
+//! * [`Model::step`] — single-token, single-sequence decode: per-token
+//!   vectors, `linear` accumulation loops, streaming attention. The
+//!   reference semantics; also what `generate_greedy` drives.
+//! * [`Model::forward_batch`] — multi-token prefill chunks for ONE
+//!   sequence: (chunk, d_model) activation matrices driven through
+//!   [`crate::tensor::ops::matmul`] against the weight matrices and through
+//!   each backend's `forward_batch` (causal within the chunk).
+//!   [`Model::prefill`] consumes the whole prompt in chunks of
+//!   [`Model::PREFILL_CHUNK`].
+//! * [`Model::decode_batch`] — one token for MANY sequences: stacks each
+//!   running sequence's current token embedding into a (batch, d_model)
+//!   matrix so every projection streams the shared weights per engine
+//!   step (not once per sequence). Every decode operation is
+//!   row-independent, so the rows are partitioned into contiguous blocks
+//!   across scoped worker threads (one spawn set per step); each worker
+//!   drives stacked matmuls, its sequences' private per-layer
+//!   `append`/`attend`, and the batched tied-embedding LM head for its
+//!   block. Per-row arithmetic is ordered identically to [`Model::step`],
+//!   so the batch dimension is numerically invisible.
 
 use super::config::ModelConfig;
 use super::weights::Weights;
 use crate::attention::AttentionBackend;
-use crate::tensor::ops::{matmul, rmsnorm, silu};
+use crate::tensor::ops::{gather_rows, lm_head_batch, matmul, rmsnorm, silu};
+use crate::util::threadpool;
 use std::sync::Arc;
 
 /// Factory producing one attention backend per layer.
@@ -144,7 +156,8 @@ impl Scratch {
     }
 
     /// Size the batched buffers for an `n`-token chunk (exact lengths —
-    /// the matmul kernels assert full-slice shapes).
+    /// the matmul kernels assert full-slice shapes; callers slice to the
+    /// active size).
     fn ensure_batch(&mut self, cfg: &ModelConfig, n: usize) {
         let d = cfg.d_model;
         let qd = cfg.n_heads * cfg.head_dim;
@@ -162,15 +175,146 @@ impl Scratch {
     }
 }
 
+/// Scratch for [`Model::decode_batch`]: (batch, ·) row-major activation
+/// matrices, owned by the *caller* (one per engine, sized to its
+/// `max_batch`) rather than per sequence — cross-sequence decode is a
+/// property of the scheduler, not of any one sequence. Buffers grow to the
+/// largest batch seen and are retained across steps, so the steady-state
+/// decode loop is allocation-free except for the returned logits.
+pub struct BatchScratch {
+    /// Worker threads for the per-sequence attention fan-out (0 = auto).
+    threads: usize,
+    bx: Vec<f32>,
+    bnormed: Vec<f32>,
+    bq: Vec<f32>,
+    bk: Vec<f32>,
+    bv: Vec<f32>,
+    battn: Vec<f32>,
+    bproj: Vec<f32>,
+    bgate: Vec<f32>,
+    bup: Vec<f32>,
+    bffn: Vec<f32>,
+    blogits: Vec<f32>,
+}
+
+impl BatchScratch {
+    /// Empty scratch; buffers grow on first [`Model::decode_batch`] call.
+    /// `threads` caps the per-step worker fan-out (0 = one per CPU; always
+    /// further capped by the batch size).
+    pub fn new(threads: usize) -> BatchScratch {
+        BatchScratch {
+            threads,
+            bx: Vec::new(),
+            bnormed: Vec::new(),
+            bq: Vec::new(),
+            bk: Vec::new(),
+            bv: Vec::new(),
+            battn: Vec::new(),
+            bproj: Vec::new(),
+            bgate: Vec::new(),
+            bup: Vec::new(),
+            bffn: Vec::new(),
+            blogits: Vec::new(),
+        }
+    }
+
+    /// Pre-sized scratch for decode batches up to `max_batch` sequences:
+    /// reserves the full-batch capacity up front so later [`Self::ensure`]
+    /// calls never reallocate (Vec capacity is retained across the exact
+    /// resizes as the engine's decode set grows and shrinks).
+    pub fn sized(cfg: &ModelConfig, max_batch: usize, threads: usize) -> BatchScratch {
+        let mut s = BatchScratch::new(threads);
+        s.ensure(cfg, max_batch.max(1));
+        s
+    }
+
+    /// Size every buffer for exactly a `b`-sequence batch — the same
+    /// exact-length policy as [`Scratch::ensure_batch`] (the matmul
+    /// kernels and residual zips assert full-slice shapes, so exactness is
+    /// load-bearing, not cosmetic). Shrinking keeps capacity, so batches
+    /// that vary step to step stay allocation-free.
+    fn ensure(&mut self, cfg: &ModelConfig, b: usize) {
+        let d = cfg.d_model;
+        let qd = cfg.n_heads * cfg.head_dim;
+        let kvd = cfg.kv_dim();
+        self.bx.resize(b * d, 0.0);
+        self.bnormed.resize(b * d, 0.0);
+        self.bq.resize(b * qd, 0.0);
+        self.bk.resize(b * kvd, 0.0);
+        self.bv.resize(b * kvd, 0.0);
+        self.battn.resize(b * qd, 0.0);
+        self.bproj.resize(b * d, 0.0);
+        self.bgate.resize(b * cfg.d_ff, 0.0);
+        self.bup.resize(b * cfg.d_ff, 0.0);
+        self.bffn.resize(b * d, 0.0);
+        self.blogits.resize(b * cfg.vocab, 0.0);
+    }
+}
+
+/// Mutable views over a contiguous block of [`BatchScratch`]'s rows — the
+/// unit of work one decode worker owns. Splitting the batch this way is
+/// safe because every decode operation is row-independent.
+struct DecodeRows<'a> {
+    bx: &'a mut [f32],
+    bnormed: &'a mut [f32],
+    bq: &'a mut [f32],
+    bk: &'a mut [f32],
+    bv: &'a mut [f32],
+    battn: &'a mut [f32],
+    bproj: &'a mut [f32],
+    bgate: &'a mut [f32],
+    bup: &'a mut [f32],
+    bffn: &'a mut [f32],
+    blogits: &'a mut [f32],
+}
+
+impl<'a> DecodeRows<'a> {
+    /// Split off the first `nb` rows of every matrix; returns (head, rest).
+    fn split_rows(self, nb: usize, cfg: &ModelConfig) -> (DecodeRows<'a>, DecodeRows<'a>) {
+        let d = cfg.d_model;
+        let qd = cfg.n_heads * cfg.head_dim;
+        let kvd = cfg.kv_dim();
+        let (bx, bx_r) = self.bx.split_at_mut(nb * d);
+        let (bnormed, bnormed_r) = self.bnormed.split_at_mut(nb * d);
+        let (bq, bq_r) = self.bq.split_at_mut(nb * qd);
+        let (bk, bk_r) = self.bk.split_at_mut(nb * kvd);
+        let (bv, bv_r) = self.bv.split_at_mut(nb * kvd);
+        let (battn, battn_r) = self.battn.split_at_mut(nb * qd);
+        let (bproj, bproj_r) = self.bproj.split_at_mut(nb * d);
+        let (bgate, bgate_r) = self.bgate.split_at_mut(nb * cfg.d_ff);
+        let (bup, bup_r) = self.bup.split_at_mut(nb * cfg.d_ff);
+        let (bffn, bffn_r) = self.bffn.split_at_mut(nb * d);
+        let (blogits, blogits_r) = self.blogits.split_at_mut(nb * cfg.vocab);
+        (
+            DecodeRows { bx, bnormed, bq, bk, bv, battn, bproj, bgate, bup, bffn, blogits },
+            DecodeRows {
+                bx: bx_r,
+                bnormed: bnormed_r,
+                bq: bq_r,
+                bk: bk_r,
+                bv: bv_r,
+                battn: battn_r,
+                bproj: bproj_r,
+                bgate: bgate_r,
+                bup: bup_r,
+                bffn: bffn_r,
+                blogits: blogits_r,
+            },
+        )
+    }
+}
+
 /// y = x @ W  for a (d_in, d_out) weight, accumulated into `out`.
+///
+/// The inner loop is branch-free (no zero-skip): activations are almost
+/// never exactly 0.0, and the data-dependent branch defeats LLVM's
+/// auto-vectorization of the axpy — the same reason `matmul` is dense.
+/// This is the batch-of-1 decode hot path.
 fn linear(x: &[f32], w: &crate::tensor::Mat, out: &mut [f32]) {
     debug_assert_eq!(x.len(), w.rows);
     debug_assert_eq!(out.len(), w.cols);
     out.fill(0.0);
     for (i, &xi) in x.iter().enumerate() {
-        if xi == 0.0 {
-            continue;
-        }
         let wrow = &w.data[i * w.cols..(i + 1) * w.cols];
         for (o, &wv) in out.iter_mut().zip(wrow) {
             *o += xi * wv;
@@ -228,13 +372,10 @@ impl Model {
         if !want_logits {
             return None;
         }
-        // Final norm + tied LM head.
+        // Final norm + tied LM head (a batch-of-1 `lm_head_batch`).
         rmsnorm(&scratch.x, &w.norm_final, cfg.rms_eps, &mut scratch.normed);
         let mut logits = vec![0.0f32; cfg.vocab];
-        // logits = E @ normed (E rows are embeddings).
-        for (t, l) in logits.iter_mut().enumerate() {
-            *l = crate::tensor::ops::dot(w.embedding.row(t), &scratch.normed);
-        }
+        lm_head_batch(&scratch.normed, &w.embedding.data, &mut logits, 1, cfg.d_model, cfg.vocab);
         Some(logits)
     }
 
@@ -323,10 +464,164 @@ impl Model {
         // Final norm + tied LM head on the chunk's last row only.
         rmsnorm(&scratch.bx[(n - 1) * d..n * d], &w.norm_final, cfg.rms_eps, &mut scratch.normed);
         let mut logits = vec![0.0f32; cfg.vocab];
-        for (t, l) in logits.iter_mut().enumerate() {
-            *l = crate::tensor::ops::dot(w.embedding.row(t), &scratch.normed);
-        }
+        lm_head_batch(&scratch.normed, &w.embedding.data, &mut logits, 1, d, cfg.vocab);
         Some(logits)
+    }
+
+    /// Cross-sequence batched decode: one token for each of `states.len()`
+    /// independent sequences in a single stacked forward pass.
+    ///
+    /// `tokens[i]` is fed to `states[i]`; returns one logits vector per
+    /// sequence, in order. The batch travels as (batch, ·) row-major
+    /// activation matrices: every rmsnorm is per-row, every projection
+    /// (QKV, output, FFN, LM head) is a stacked matmul against the shared
+    /// weights — so each weight matrix streams from memory once per engine
+    /// step for a whole block of sequences instead of once per sequence,
+    /// which is where continuous batching wins on real hardware.
+    ///
+    /// Parallelism: every decode operation is row-independent (matmul
+    /// rows, rmsnorm rows, residual rows, and attention, which is
+    /// per-sequence private cache state), so the batch's rows are
+    /// partitioned into contiguous blocks across `scratch.threads` scoped
+    /// workers — ONE spawn set per step, the same economics as the
+    /// engine's per-sequence prefill fan-out — and each worker drives the
+    /// full forward for its block, stacked matmuls included. Workers read
+    /// the shared weights concurrently and advance in lockstep-ish layer
+    /// order, so the weight stream is still amortized across the batch.
+    ///
+    /// Row `i` of every batched operation accumulates in exactly the
+    /// order [`Model::step`] would (and row partitioning cannot change
+    /// per-row arithmetic), so `decode_batch` over k sequences is
+    /// numerically indistinguishable from k independent `step` calls —
+    /// batching is a scheduling choice, not a semantic one.
+    pub fn decode_batch(
+        &self,
+        states: &mut [&mut SequenceState],
+        tokens: &[usize],
+        scratch: &mut BatchScratch,
+    ) -> Vec<Vec<f32>> {
+        let cfg = &self.cfg;
+        let b = states.len();
+        assert!(b > 0, "decode_batch of empty sequence set");
+        assert_eq!(tokens.len(), b, "one token per sequence");
+        for (i, (s, &t)) in states.iter().zip(tokens).enumerate() {
+            assert!(t < cfg.vocab, "token {t} out of vocab");
+            assert!(s.pos < cfg.max_seq, "sequence {i} exceeds max_seq");
+        }
+        scratch.ensure(cfg, b);
+        let threads =
+            (if scratch.threads == 0 { threadpool::num_cpus() } else { scratch.threads }).min(b);
+
+        let all = DecodeRows {
+            bx: &mut scratch.bx,
+            bnormed: &mut scratch.bnormed,
+            bq: &mut scratch.bq,
+            bk: &mut scratch.bk,
+            bv: &mut scratch.bv,
+            battn: &mut scratch.battn,
+            bproj: &mut scratch.bproj,
+            bgate: &mut scratch.bgate,
+            bup: &mut scratch.bup,
+            bffn: &mut scratch.bffn,
+            blogits: &mut scratch.blogits,
+        };
+        if threads <= 1 {
+            self.decode_rows(states, tokens, all);
+        } else {
+            let chunk = b.div_ceil(threads);
+            let mut rem_states: &mut [&mut SequenceState] = states;
+            let mut rem_tokens: &[usize] = tokens;
+            let mut rem = all;
+            std::thread::scope(|sc| {
+                while !rem_states.is_empty() {
+                    let nb = chunk.min(rem_states.len());
+                    let (st, rs) = std::mem::take(&mut rem_states).split_at_mut(nb);
+                    rem_states = rs;
+                    let (tk, rt) = rem_tokens.split_at(nb);
+                    rem_tokens = rt;
+                    let (views, rest) = rem.split_rows(nb, cfg);
+                    rem = rest;
+                    sc.spawn(move || self.decode_rows(st, tk, views));
+                }
+            });
+        }
+        scratch.blogits.chunks(cfg.vocab).map(|r| r.to_vec()).collect()
+    }
+
+    /// The full decode forward for one contiguous block of batch rows, on
+    /// the calling thread. [`Model::decode_batch`] partitions rows across
+    /// workers and each runs this serially; `v`'s matrices hold exactly
+    /// `states.len()` rows.
+    fn decode_rows(&self, states: &mut [&mut SequenceState], tokens: &[usize], v: DecodeRows<'_>) {
+        let cfg = &self.cfg;
+        let w = &self.weights;
+        let nb = states.len();
+        let d = cfg.d_model;
+        let qd = cfg.n_heads * cfg.head_dim;
+        let kvd = cfg.kv_dim();
+        let DecodeRows { bx, bnormed, bq, bk, bv, battn, bproj, bgate, bup, bffn, blogits } = v;
+
+        // Embed: stack each sequence's current token into one (nb, d) matrix.
+        gather_rows(&w.embedding.data, d, tokens, bx);
+
+        for (layer, lw) in w.layers.iter().enumerate() {
+            // ---- attention block ----
+            for t in 0..nb {
+                rmsnorm(
+                    &bx[t * d..(t + 1) * d],
+                    &lw.norm_attn,
+                    cfg.rms_eps,
+                    &mut bnormed[t * d..(t + 1) * d],
+                );
+            }
+            matmul(bnormed, &lw.wq.data, bq, nb, d, qd);
+            matmul(bnormed, &lw.wk.data, bk, nb, d, kvd);
+            matmul(bnormed, &lw.wv.data, bv, nb, d, kvd);
+            // Per-sequence append/attend against private caches; attention
+            // outputs land straight in this block's rows of the batch
+            // matrix, so the "gather" back is in-place.
+            for (i, (s, orow)) in states.iter_mut().zip(battn.chunks_mut(qd)).enumerate() {
+                let backend = &mut s.backends[layer];
+                backend.append(&bk[i * kvd..(i + 1) * kvd], &bv[i * kvd..(i + 1) * kvd]);
+                backend.attend(&bq[i * qd..(i + 1) * qd], orow);
+            }
+            matmul(battn, &lw.wo.data, bproj, nb, qd, d);
+            for (xi, pi) in bx.iter_mut().zip(bproj.iter()) {
+                *xi += pi;
+            }
+            // ---- FFN block (SwiGLU) ----
+            for t in 0..nb {
+                rmsnorm(
+                    &bx[t * d..(t + 1) * d],
+                    &lw.norm_ffn,
+                    cfg.rms_eps,
+                    &mut bnormed[t * d..(t + 1) * d],
+                );
+            }
+            matmul(bnormed, &lw.w_gate.data, bgate, nb, d, cfg.d_ff);
+            matmul(bnormed, &lw.w_up.data, bup, nb, d, cfg.d_ff);
+            for (g, u) in bgate.iter_mut().zip(bup.iter()) {
+                *g = silu(*g) * u;
+            }
+            matmul(bgate, &lw.w_down.data, bffn, nb, cfg.d_ff, d);
+            for (xi, fi) in bx.iter_mut().zip(bffn.iter()) {
+                *xi += fi;
+            }
+        }
+        for s in states.iter_mut() {
+            s.pos += 1;
+        }
+
+        // Final norm + one stacked tied-embedding LM head for the block.
+        for t in 0..nb {
+            rmsnorm(
+                &bx[t * d..(t + 1) * d],
+                &w.norm_final,
+                cfg.rms_eps,
+                &mut bnormed[t * d..(t + 1) * d],
+            );
+        }
+        lm_head_batch(bnormed, &w.embedding.data, blogits, nb, d, cfg.vocab);
     }
 
     /// Run a full prompt through the batched path, returning logits after
@@ -442,6 +737,98 @@ mod tests {
                 assert!((a - b).abs() < 1e-4, "chunk {chunk}: {a} vs {b}");
             }
         }
+    }
+
+    #[test]
+    fn decode_batch_matches_independent_steps() {
+        // k sequences with different prompts: one decode_batch call must
+        // reproduce k independent step() calls. Per-row arithmetic order is
+        // identical, so the tolerance is tight.
+        let cfg = ModelConfig::tiny_gqa(64);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 43)));
+        let factory = full_factory(&cfg);
+        let prompts: Vec<Vec<usize>> = vec![vec![1, 2, 3], vec![4, 5], vec![6, 7, 8, 9], vec![10]];
+        let tokens = [11usize, 12, 13, 14];
+
+        // Reference: per-sequence step() decode.
+        let mut reference = Vec::new();
+        for (p, &t) in prompts.iter().zip(&tokens) {
+            let mut state = SequenceState::new(&cfg, &factory);
+            let mut sc = Scratch::new(&cfg);
+            model.prefill(&mut state, &mut sc, p);
+            reference.push((model.step(&mut state, &mut sc, t, true).unwrap(), state));
+        }
+
+        // Batched: same prompts, one stacked decode.
+        let mut states: Vec<SequenceState> = prompts
+            .iter()
+            .map(|p| {
+                let mut s = SequenceState::new(&cfg, &factory);
+                let mut sc = Scratch::new(&cfg);
+                model.prefill(&mut s, &mut sc, p);
+                s
+            })
+            .collect();
+        let mut scratch = BatchScratch::new(2);
+        let mut refs: Vec<&mut SequenceState> = states.iter_mut().collect();
+        let logits = model.decode_batch(&mut refs, &tokens, &mut scratch);
+        assert_eq!(logits.len(), prompts.len());
+        for (i, (l, (ref_l, ref_s))) in logits.iter().zip(&reference).enumerate() {
+            assert_eq!(states[i].pos, ref_s.pos, "seq {i}: position");
+            assert_eq!(states[i].kv_bytes(), ref_s.kv_bytes(), "seq {i}: cache size");
+            for (a, b) in l.iter().zip(ref_l) {
+                assert!((a - b).abs() < 1e-5, "seq {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn decode_batch_scratch_reuse_and_growth() {
+        // A warm BatchScratch sized by a larger batch must serve a smaller
+        // one (engine batches shrink as sequences finish), and repeated
+        // steps through the same scratch must stay consistent with step().
+        let cfg = ModelConfig::tiny_mha(64);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 47)));
+        let factory = full_factory(&cfg);
+        let mut scratch = BatchScratch::sized(&cfg, 3, 1);
+
+        let mut a = SequenceState::new(&cfg, &factory);
+        let mut b = SequenceState::new(&cfg, &factory);
+        let mut c = SequenceState::new(&cfg, &factory);
+        for (s, tok) in [(&mut a, 1usize), (&mut b, 2), (&mut c, 3)] {
+            let mut sc = Scratch::new(&cfg);
+            model.prefill(s, &mut sc, &[tok, tok + 10]);
+        }
+        // Step all three, then only two (c "finished").
+        let mut refs: Vec<&mut SequenceState> = vec![&mut a, &mut b, &mut c];
+        let l3 = model.decode_batch(&mut refs, &[20, 21, 22], &mut scratch);
+        let mut refs: Vec<&mut SequenceState> = vec![&mut a, &mut b];
+        let l2 = model.decode_batch(&mut refs, &[23, 24], &mut scratch);
+        assert_eq!(l3.len(), 3);
+        assert_eq!(l2.len(), 2);
+        assert_eq!(a.pos, 4);
+        assert_eq!(c.pos, 3);
+
+        // Reference sequence driven by step() alone.
+        let mut r = SequenceState::new(&cfg, &factory);
+        let mut sc = Scratch::new(&cfg);
+        model.prefill(&mut r, &mut sc, &[1, 11]);
+        model.step(&mut r, &mut sc, 20, false);
+        let ref_l = model.step(&mut r, &mut sc, 23, true).unwrap();
+        for (x, y) in l2[0].iter().zip(&ref_l) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "one token per sequence")]
+    fn decode_batch_rejects_shape_mismatch() {
+        let cfg = ModelConfig::tiny_mha(32);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 51)));
+        let factory = full_factory(&cfg);
+        let mut s = SequenceState::new(&cfg, &factory);
+        let mut refs: Vec<&mut SequenceState> = vec![&mut s];
+        model.decode_batch(&mut refs, &[1, 2], &mut BatchScratch::new(1));
     }
 
     #[test]

@@ -244,6 +244,46 @@ pub fn causal_attend_chunk(
     }
 }
 
+/// Pack rows `idx` of a (·, row_len) row-major matrix into `out`
+/// ((idx.len(), row_len), overwritten). The batched-decode embed: stacking
+/// each sequence's current token embedding into one activation matrix is a
+/// row gather over the embedding table.
+pub fn gather_rows(src: &[f32], row_len: usize, idx: &[usize], out: &mut [f32]) {
+    assert!(row_len > 0);
+    assert_eq!(src.len() % row_len, 0);
+    assert_eq!(out.len(), idx.len() * row_len);
+    let n_rows = src.len() / row_len;
+    for (t, &i) in idx.iter().enumerate() {
+        assert!(i < n_rows, "gather_rows: row {i} out of range {n_rows}");
+        out[t * row_len..(t + 1) * row_len].copy_from_slice(&src[i * row_len..(i + 1) * row_len]);
+    }
+}
+
+/// Inverse of [`gather_rows`]: write the rows of `src`
+/// ((idx.len(), row_len) row-major) to rows `idx` of `out`. Duplicate
+/// indices are last-writer-wins (rows are processed in order).
+pub fn scatter_rows(src: &[f32], row_len: usize, idx: &[usize], out: &mut [f32]) {
+    assert!(row_len > 0);
+    assert_eq!(src.len(), idx.len() * row_len);
+    assert_eq!(out.len() % row_len, 0);
+    let n_rows = out.len() / row_len;
+    for (t, &i) in idx.iter().enumerate() {
+        assert!(i < n_rows, "scatter_rows: row {i} out of range {n_rows}");
+        out[i * row_len..(i + 1) * row_len].copy_from_slice(&src[t * row_len..(t + 1) * row_len]);
+    }
+}
+
+/// Tied-embedding LM head over a batch of final hidden states:
+/// `out[b, vocab] = x[b, d] @ embᵀ` where `emb` is the (vocab, d) embedding
+/// matrix whose rows double as output projections. One [`matmul_tn`] —
+/// the embedding table streams once for the whole batch instead of once
+/// per sequence, which is the point of cross-sequence batched decode (the
+/// LM head is the single largest weight matrix at decode time).
+pub fn lm_head_batch(x: &[f32], emb: &[f32], out: &mut [f32], b: usize, d: usize, vocab: usize) {
+    assert_eq!(emb.len(), vocab * d);
+    matmul_tn(x, emb, out, b, d, vocab);
+}
+
 /// RMSNorm: x * w / sqrt(mean(x²) + eps). LLaMA-style (no mean subtraction).
 pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
     assert_eq!(x.len(), w.len());
@@ -413,6 +453,48 @@ mod tests {
         causal_attend_chunk(&qs, &keys, &values, 1, 1, 1, 1, d, &mut scratch, &mut out);
         for (o, v) in out.iter().zip(&values) {
             assert!((o - v).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn gather_scatter_rows_roundtrip() {
+        // 5 rows of length 3.
+        let src: Vec<f32> = (0..15).map(|i| i as f32).collect();
+        let idx = [4usize, 0, 2];
+        let mut packed = vec![0.0f32; idx.len() * 3];
+        gather_rows(&src, 3, &idx, &mut packed);
+        assert_eq!(packed, vec![12., 13., 14., 0., 1., 2., 6., 7., 8.]);
+        // Scatter back into a zeroed matrix: exactly the gathered rows land.
+        let mut out = vec![0.0f32; 15];
+        scatter_rows(&packed, 3, &idx, &mut out);
+        for &i in &idx {
+            assert_eq!(out[i * 3..(i + 1) * 3], src[i * 3..(i + 1) * 3]);
+        }
+        assert_eq!(out[3..6], [0.0, 0.0, 0.0]); // untouched row stays zero
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn gather_rows_rejects_out_of_range() {
+        let src = [0.0f32; 6];
+        let mut out = [0.0f32; 2];
+        gather_rows(&src, 2, &[3], &mut out);
+    }
+
+    #[test]
+    fn lm_head_batch_matches_per_row_dot() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(17);
+        let (b, d, vocab) = (3, 8, 11);
+        let x = rng.normal_vec(b * d, 1.0);
+        let emb = rng.normal_vec(vocab * d, 1.0);
+        let mut out = vec![0.0f32; b * vocab];
+        lm_head_batch(&x, &emb, &mut out, b, d, vocab);
+        for r in 0..b {
+            for t in 0..vocab {
+                let reference = dot(&emb[t * d..(t + 1) * d], &x[r * d..(r + 1) * d]);
+                assert_eq!(out[r * vocab + t], reference, "row {r} tok {t}");
+            }
         }
     }
 

@@ -2,7 +2,10 @@
 //!
 //! Used by the coordinator for worker fan-out and by benches for parallel
 //! workload generation. `parallel_for` splits an index range into contiguous
-//! chunks and runs them on `std::thread::scope` threads.
+//! chunks and runs them on `std::thread::scope` threads;
+//! `parallel_for_each_mut` is the `&mut`-item variant the engine's prefill
+//! phase uses to fan work out over per-sequence state (each item is owned
+//! by exactly one worker thread).
 
 /// Run `f(i)` for every i in 0..n across up to `threads` OS threads.
 ///
@@ -28,6 +31,37 @@ pub fn parallel_for(n: usize, threads: usize, f: impl Fn(usize) + Sync) {
             s.spawn(move || {
                 for i in lo..hi {
                     f(i);
+                }
+            });
+        }
+    });
+}
+
+/// Run `f(i, &mut items[i])` for every item across up to `threads` OS
+/// threads. Contiguous chunking: each thread owns a disjoint `&mut` slice,
+/// so `f` gets exclusive access to its item with no locks. This is the
+/// fan-out primitive for per-sequence work over shared read-only weights
+/// (cross-sequence batched decode, parallel prefill).
+pub fn parallel_for_each_mut<T: Send>(
+    items: &mut [T],
+    threads: usize,
+    f: impl Fn(usize, &mut T) + Sync,
+) {
+    let n = items.len();
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 || n <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let chunk = n.div_ceil(threads);
+    std::thread::scope(|s| {
+        for (t, slice) in items.chunks_mut(chunk).enumerate() {
+            let f = &f;
+            s.spawn(move || {
+                for (j, item) in slice.iter_mut().enumerate() {
+                    f(t * chunk + j, item);
                 }
             });
         }
@@ -76,6 +110,21 @@ mod tests {
             hits.fetch_add(1, Ordering::Relaxed);
         });
         assert_eq!(hits.load(Ordering::Relaxed), 1000);
+    }
+
+    #[test]
+    fn parallel_for_each_mut_visits_each_item_once_with_its_index() {
+        let mut items: Vec<usize> = vec![0; 357];
+        parallel_for_each_mut(&mut items, 8, |i, item| {
+            *item += i + 1; // +1 distinguishes "visited index 0" from "missed"
+        });
+        assert_eq!(items, (0..357).map(|i| i + 1).collect::<Vec<_>>());
+        // Degenerate sizes.
+        let mut empty: Vec<usize> = Vec::new();
+        parallel_for_each_mut(&mut empty, 4, |_, _| panic!("should not run"));
+        let mut one = vec![7usize];
+        parallel_for_each_mut(&mut one, 16, |i, item| *item += i);
+        assert_eq!(one, vec![7]);
     }
 
     #[test]

@@ -3,7 +3,7 @@
 
 use sals::attention::{merge_selection, AttentionBackend, AttnShape, FullAttention, SalsAttention, SalsConfig};
 use sals::lowrank::Calibrator;
-use sals::model::{BackendFactory, Model, ModelConfig, Scratch, SequenceState, Weights};
+use sals::model::{BackendFactory, BatchScratch, Model, ModelConfig, Scratch, SequenceState, Weights};
 use sals::quant::{dequantize_group, quantize_group, Bits};
 use sals::rope::RopeTable;
 use sals::tensor::{top_k_indices, Mat};
@@ -285,6 +285,96 @@ fn prop_eig_reconstruction_any_symmetric() {
             true
         },
     );
+}
+
+/// Cross-sequence batched decode ≡ independent scalar decode: for random
+/// per-sequence prompts, one `Model::decode_batch` over k sequences must
+/// match k independent `step()` calls within 1e-4, for batch sizes
+/// {1, 2, 5}, several consecutive decode steps (scratch reuse), and both
+/// the FullAttention and SalsAttention backends.
+///
+/// As in the prefill proptest, the SALS config keeps `critical` ≥ sequence
+/// length so the comparison is immune to top-k order flips; the latent
+/// store, recent-key ring, and quantized value store are fully exercised.
+#[test]
+fn prop_decode_batch_matches_step_loop() {
+    let cfg = ModelConfig::tiny_gqa(96);
+    let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 57)));
+    let shape = cfg.attn_shape();
+    let kvd = cfg.kv_dim();
+
+    let mut crng = Rng::new(63);
+    let mut cal = Calibrator::new(kvd);
+    for _ in 0..200 {
+        cal.add_key(&crng.normal_vec(kvd, 1.0));
+    }
+    let proj = cal.fit(kvd / 2).unwrap();
+    let sals_cfg = SalsConfig {
+        rank: kvd / 2,
+        r_star: kvd / 4,
+        sink: 2,
+        recent: 8,
+        critical: 64,
+        v_bits: Bits::B4,
+        group: 8,
+    };
+
+    let full: Box<BackendFactory> =
+        Box::new(move |_| Box::new(FullAttention::new(shape)) as Box<dyn AttentionBackend + Send>);
+    let sals: Box<BackendFactory> = {
+        let (p, c) = (proj, sals_cfg);
+        Box::new(move |_| {
+            Box::new(SalsAttention::new(shape, c.clone(), p.clone())) as Box<dyn AttentionBackend + Send>
+        })
+    };
+
+    let mut rng = Rng::new(65);
+    for (name, factory) in [("full", &full), ("sals", &sals)] {
+        for &batch in &[1usize, 2, 5] {
+            // Per-sequence random prompts and decode tokens (3 steps).
+            let prompts: Vec<Vec<usize>> = (0..batch)
+                .map(|_| (0..1 + rng.below(20)).map(|_| rng.below(cfg.vocab)).collect())
+                .collect();
+            let steps: Vec<Vec<usize>> =
+                (0..batch).map(|_| (0..3).map(|_| rng.below(cfg.vocab)).collect()).collect();
+
+            // Reference: each sequence decoded independently via step().
+            let mut ref_logits: Vec<Vec<Vec<f32>>> = Vec::new();
+            for (p, toks) in prompts.iter().zip(&steps) {
+                let mut state = SequenceState::new(&cfg, factory);
+                let mut sc = Scratch::new(&cfg);
+                model.prefill(&mut state, &mut sc, p);
+                ref_logits
+                    .push(toks.iter().map(|&t| model.step(&mut state, &mut sc, t, true).unwrap()).collect());
+            }
+
+            // Batched: same prompts, one decode_batch per step, shared
+            // (reused) BatchScratch across steps.
+            let mut states: Vec<SequenceState> = prompts
+                .iter()
+                .map(|p| {
+                    let mut s = SequenceState::new(&cfg, factory);
+                    let mut sc = Scratch::new(&cfg);
+                    model.prefill(&mut s, &mut sc, p);
+                    s
+                })
+                .collect();
+            let mut bs = BatchScratch::new(2);
+            for step in 0..3 {
+                let tokens: Vec<usize> = steps.iter().map(|s| s[step]).collect();
+                let mut refs: Vec<&mut SequenceState> = states.iter_mut().collect();
+                let logits = model.decode_batch(&mut refs, &tokens, &mut bs);
+                for (i, l) in logits.iter().enumerate() {
+                    for (a, b) in l.iter().zip(&ref_logits[i][step]) {
+                        assert!(
+                            (a - b).abs() < 1e-4,
+                            "{name} batch {batch} step {step} seq {i}: {a} vs {b}"
+                        );
+                    }
+                }
+            }
+        }
+    }
 }
 
 /// Batched prefill ≡ sequential decode: for random prompts and every
