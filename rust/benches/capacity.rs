@@ -1,0 +1,130 @@
+//! Serving capacity under a FIXED KV pool budget — the serving-side
+//! analogue of the paper's compression claim (Table 2's 6.4×, Table 7's
+//! throughput): backend-aware admission must concurrently admit several
+//! times more SALS sequences than dense-fp32 ones from the same pool,
+//! with zero preemption churn (honest footprints) and the throughput to
+//! match.
+//!
+//! Emits `BENCH_capacity.json` in the working directory so the capacity
+//! trajectory accumulates across PRs. `SALS_BENCH_QUICK=1` shortens the
+//! run (shorter prompts, fewer requests).
+
+use sals::coordinator::{Engine, EngineConfig, GenParams, Request};
+use sals::harness::Table;
+use sals::model::{make_factory, Method, Model, ModelConfig, SequenceFootprint, Weights};
+use sals::util::json::Json;
+use sals::util::rng::Rng;
+use std::sync::Arc;
+
+fn main() {
+    let quick = std::env::var("SALS_BENCH_QUICK").is_ok();
+    let (prompt_len, decode_n, n_requests) = if quick { (96, 8, 8) } else { (256, 16, 12) };
+    let max_seq = prompt_len + decode_n + 8;
+
+    // Scaled-down LLaMA shape; only layer 0 dense so the SALS footprint
+    // advantage shows up across most of the stack.
+    let cfg = ModelConfig {
+        vocab: 512,
+        d_model: 256,
+        n_layers: 6,
+        n_heads: 8,
+        n_kv_heads: 8,
+        head_dim: 32,
+        d_ff: 512,
+        max_seq,
+        rope_base: 10_000.0,
+        dense_layers: vec![0],
+        rms_eps: 1e-5,
+    };
+
+    // Calibrate once on the dense model.
+    let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 88)));
+    let mut rng = Rng::new(4242);
+    let streams: Vec<Vec<usize>> =
+        (0..2).map(|_| (0..128).map(|_| rng.below(cfg.vocab)).collect()).collect();
+    let calib = sals::model::calibrate(&model, &streams);
+    let fitted = Arc::new(sals::model::fit_calibration(&cfg, &calib));
+    let sp = sals::model::SparsityParams::scaled(prompt_len);
+
+    // Pool sized to hold ~4 dense sequences at the full decode horizon:
+    // capacity differences then come purely from the per-backend footprint.
+    let horizon = prompt_len + decode_n;
+    let full_fp = SequenceFootprint::of(&cfg, &make_factory(Method::Full, &fitted, sp));
+    let pool_budget = 4 * full_fp.bytes_at(horizon);
+
+    let mut table = Table::new(
+        "Serving capacity under a fixed KV pool budget (backend-aware admission)",
+        &["Method", "Peak concurrent", "Peak pool pages", "Preemptions", "tok/s", "est bytes/seq"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut peaks: Vec<(Method, usize)> = Vec::new();
+
+    for method in [Method::Full, Method::Sals25, Method::Sals125] {
+        let est = SequenceFootprint::of(&cfg, &make_factory(method, &fitted, sp)).bytes_at(horizon);
+        let mut engine = Engine::new(
+            Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 88))),
+            make_factory(method, &fitted, sp),
+            EngineConfig {
+                max_batch: 16,
+                prefill_chunk: 64,
+                page_bytes: 4096,
+                pool_budget,
+                threads: 0,
+            },
+        );
+        let mut rng = Rng::new(777);
+        for i in 0..n_requests {
+            let prompt: Vec<usize> = (0..prompt_len).map(|_| rng.below(cfg.vocab)).collect();
+            engine.submit(Request::new(
+                i as u64,
+                prompt,
+                GenParams { max_new_tokens: decode_n, stop_token: None },
+            ));
+        }
+        let responses = engine.run_to_completion();
+        assert_eq!(responses.len(), n_requests, "{method:?}: not all requests completed");
+        let m = &engine.metrics;
+        peaks.push((method, m.peak_running));
+        table.row(vec![
+            method.name().to_string(),
+            m.peak_running.to_string(),
+            m.peak_pool_pages.to_string(),
+            m.preemptions.to_string(),
+            format!("{:.1}", m.tokens_per_second()),
+            est.to_string(),
+        ]);
+        rows.push(
+            Json::obj()
+                .field("method", method.name())
+                .field("peak_running", m.peak_running)
+                .field("peak_pool_pages", m.peak_pool_pages)
+                .field("preemptions", m.preemptions)
+                .field("tokens_per_second", m.tokens_per_second())
+                .field("est_bytes_per_seq", est),
+        );
+    }
+    table.print();
+
+    // Acceptance: the same pool must admit strictly more SALS sequences
+    // concurrently than dense fp32 — the capacity half of Table 7.
+    let peak = |m: Method| peaks.iter().find(|(mm, _)| *mm == m).map(|&(_, p)| p).unwrap_or(0);
+    let ok = peak(Method::Sals25) > peak(Method::Full);
+    println!(
+        "acceptance: SALS-25% peak concurrent {} {} full {}",
+        peak(Method::Sals25),
+        if ok { ">" } else { "!>" },
+        peak(Method::Full)
+    );
+
+    let doc = Json::obj()
+        .field("bench", "capacity")
+        .field("config", "d_model=256 n_layers=6 heads=8 head_dim=32 dense_layers=[0]")
+        .field("prompt_len", prompt_len)
+        .field("decode_tokens", decode_n)
+        .field("n_requests", n_requests)
+        .field("pool_budget_bytes", pool_budget)
+        .field("sals25_capacity_gt_full", ok)
+        .field("rows", Json::Arr(rows));
+    std::fs::write("BENCH_capacity.json", doc.to_string()).expect("write BENCH_capacity.json");
+    println!("wrote BENCH_capacity.json");
+}

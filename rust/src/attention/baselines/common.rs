@@ -99,6 +99,13 @@ impl DenseCache {
     pub fn kv_bytes(&self) -> usize {
         (self.keys.len() + self.values.len()) * 4
     }
+
+    /// Footprint rate of the dense store: one fp32 key + value row per
+    /// token. The shared base rate of every DenseCache-backed baseline's
+    /// [`crate::attention::FootprintModel`].
+    pub fn bytes_per_token(&self) -> usize {
+        2 * self.shape.kv_dim() * 4
+    }
 }
 
 #[cfg(test)]

@@ -8,7 +8,9 @@
 //! traffic, not resident memory.
 
 use crate::attention::baselines::common::DenseCache;
-use crate::attention::{exact_attention, merge_selection, AttentionBackend, AttnShape, Traffic};
+use crate::attention::{
+    exact_attention, merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic,
+};
 use crate::tensor::top_k_indices;
 
 pub struct DoubleSparseAttention {
@@ -112,6 +114,12 @@ impl AttentionBackend for DoubleSparseAttention {
 
     fn kv_bytes(&self) -> usize {
         self.cache.kv_bytes() + self.labels.len() * 4
+    }
+
+    fn footprint(&self) -> FootprintModel {
+        // Dense rate plus the per-token label-cache row (selected channels
+        // of the rotated key, fp32).
+        FootprintModel::linear(0, self.cache.bytes_per_token() + self.channels.len() * 4)
     }
 
     fn name(&self) -> &'static str {

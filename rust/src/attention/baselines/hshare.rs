@@ -9,7 +9,9 @@
 //! cloning the previous layer's index set (see `model::sparse_llama`).
 
 use crate::attention::baselines::common::DenseCache;
-use crate::attention::{exact_attention, merge_selection, AttentionBackend, AttnShape, Traffic};
+use crate::attention::{
+    exact_attention, merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic,
+};
 use crate::tensor::top_k_indices;
 
 pub struct HShareAttention {
@@ -98,6 +100,12 @@ impl AttentionBackend for HShareAttention {
 
     fn kv_bytes(&self) -> usize {
         self.cache.kv_bytes()
+    }
+
+    fn footprint(&self) -> FootprintModel {
+        // Traffic-sparse, memory-dense: plain dense rate (the shared index
+        // set is O(critical), negligible and not metered by kv_bytes).
+        FootprintModel::linear(0, self.cache.bytes_per_token())
     }
 
     fn name(&self) -> &'static str {

@@ -3,7 +3,7 @@
 //! recent window. Attention itself stays dense (every token participates),
 //! so accuracy is high but traffic scales with the full sequence.
 
-use crate::attention::{exact_attention, AttentionBackend, AttnShape, Traffic};
+use crate::attention::{exact_attention, AttentionBackend, AttnShape, FootprintModel, Traffic};
 use crate::quant::{Bits, TokenQuantStore};
 use crate::rope::RopeTable;
 
@@ -79,6 +79,15 @@ impl AttentionBackend for KiviAttention {
 
     fn kv_bytes(&self) -> usize {
         self.keys.nbytes() + self.values.nbytes()
+    }
+
+    fn footprint(&self) -> FootprintModel {
+        // Two quantized stores (K and V): each grows at its frozen rate,
+        // each carries a fixed fp32-window excess.
+        FootprintModel::linear(
+            self.keys.tail_excess_bytes() + self.values.tail_excess_bytes(),
+            self.keys.frozen_row_bytes() + self.values.frozen_row_bytes(),
+        )
     }
 
     fn name(&self) -> &'static str {

@@ -8,7 +8,9 @@
 //! post-RoPE latent space needs a higher rank for the same fidelity.
 
 use crate::attention::baselines::common::DenseCache;
-use crate::attention::{exact_attention, merge_selection, AttentionBackend, AttnShape, Traffic};
+use crate::attention::{
+    exact_attention, merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic,
+};
 use crate::lowrank::Projector;
 use crate::tensor::top_k_indices;
 
@@ -103,6 +105,12 @@ impl AttentionBackend for LokiAttention {
     fn kv_bytes(&self) -> usize {
         // Full cache + scoring latents stay resident.
         self.cache.kv_bytes() + self.latents.len() * 4
+    }
+
+    fn footprint(&self) -> FootprintModel {
+        // The cache is NOT compressed (Table 1: memory "Median"): dense
+        // rate plus r fp32 scoring latents per token.
+        FootprintModel::linear(0, self.cache.bytes_per_token() + self.r * 4)
     }
 
     fn name(&self) -> &'static str {

@@ -7,7 +7,7 @@
 //! charges Palu with "High" computation. Optional latent quantization
 //! mirrors Palu's 3-bit variant (we use the nearest supported width).
 
-use crate::attention::{exact_attention, AttentionBackend, AttnShape, Traffic};
+use crate::attention::{exact_attention, AttentionBackend, AttnShape, FootprintModel, Traffic};
 use crate::lowrank::Projector;
 use crate::quant::{dequantize_group, quantize_group, Bits, QuantGroup};
 use crate::rope::RopeTable;
@@ -132,6 +132,12 @@ impl AttentionBackend for PaluAttention {
         } else {
             (self.k_latents.len() + self.v_latents.len()) * 4
         }
+    }
+
+    fn footprint(&self) -> FootprintModel {
+        // Pure low-rank: one K latent + one V latent row per token
+        // (optionally quantized), nothing fixed.
+        FootprintModel::linear(0, 2 * self.latent_row_bytes())
     }
 
     fn name(&self) -> &'static str {

@@ -6,7 +6,9 @@
 //! token budget are selected and *all* their tokens attend exactly.
 
 use crate::attention::baselines::common::DenseCache;
-use crate::attention::{exact_attention, merge_selection, AttentionBackend, AttnShape, Traffic};
+use crate::attention::{
+    exact_attention, merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic,
+};
 use crate::tensor::top_k_indices;
 
 pub struct QuestAttention {
@@ -148,6 +150,13 @@ impl AttentionBackend for QuestAttention {
     fn kv_bytes(&self) -> usize {
         // Dense cache + page metadata (Table 1: memory "High").
         self.cache.kv_bytes() + (self.page_min.len() + self.page_max.len()) * 4
+    }
+
+    fn footprint(&self) -> FootprintModel {
+        // Dense rate plus per-page min/max metadata (2·kv_dim fp32 per
+        // page) amortized per token, rounded up.
+        let meta = (2 * self.cache.shape.kv_dim() * 4).div_ceil(self.page);
+        FootprintModel::linear(0, self.cache.bytes_per_token() + meta)
     }
 
     fn name(&self) -> &'static str {

@@ -3,7 +3,9 @@
 //! Table 1 classifies it "Fixed pattern / low data movement / low accuracy".
 
 use crate::attention::baselines::common::DenseCache;
-use crate::attention::{exact_attention, merge_selection, AttentionBackend, AttnShape, Traffic};
+use crate::attention::{
+    exact_attention, merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic,
+};
 
 pub struct StreamingLlmAttention {
     cache: DenseCache,
@@ -72,7 +74,22 @@ impl AttentionBackend for StreamingLlmAttention {
     fn kv_bytes(&self) -> usize {
         // Live set after eviction: sink + recent window.
         let live = (self.sink + self.recent).min(self.cache.len);
-        live * 2 * self.cache.shape.kv_dim() * 4
+        live * self.cache.bytes_per_token()
+    }
+
+    fn footprint(&self) -> FootprintModel {
+        // Bounded cache: dense rate up to the sink+recent window, then
+        // flat — footprint is independent of prompt length (Table 1's
+        // "low data movement" is also low *capacity* cost). Models the
+        // method's post-eviction live set, consistent with kv_bytes();
+        // this CPU reference keeps the dense rows resident (see append),
+        // so like kv_bytes this is the method's claim, not this process's
+        // RSS — flagged in the attention/mod.rs footprint contract.
+        FootprintModel {
+            fixed_bytes: 0,
+            bytes_per_token: self.cache.bytes_per_token(),
+            cap_tokens: Some(self.sink + self.recent),
+        }
     }
 
     fn name(&self) -> &'static str {

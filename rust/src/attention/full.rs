@@ -11,7 +11,7 @@
 //! kernel [`crate::tensor::ops::causal_attend_chunk`] — tiled QKᵀ,
 //! row-softmax, PV — instead of n streaming decode passes.
 
-use super::{AttentionBackend, AttnShape, Traffic};
+use super::{AttentionBackend, AttnShape, FootprintModel, Traffic};
 use crate::rope::RopeTable;
 
 /// Dense KV cache + streaming-softmax attention.
@@ -188,6 +188,11 @@ impl AttentionBackend for FullAttention {
 
     fn kv_bytes(&self) -> usize {
         (self.keys.len() + self.values.len()) * 4
+    }
+
+    fn footprint(&self) -> FootprintModel {
+        // Dense fp32: one key + one value row per token, no fixed state.
+        FootprintModel::linear(0, 2 * self.shape.kv_dim() * 4)
     }
 
     fn name(&self) -> &'static str {

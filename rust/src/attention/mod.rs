@@ -57,6 +57,36 @@
 //!   SALS projector, quantization tables) must be immutable or cloned per
 //!   backend — concurrent decode of many sequences reads it from many
 //!   threads at once.
+//!
+//! # Footprint contract: estimation vs metering
+//!
+//! Two trait surfaces describe cache memory and they must not be confused:
+//!
+//! * [`AttentionBackend::kv_bytes`] **measures** — the live resident bytes
+//!   of this backend's cache right now. It is exact and drives the
+//!   Comp.-ratio columns of Tables 2–4 and per-step pool accounting.
+//! * [`AttentionBackend::footprint`] **predicts** — a [`FootprintModel`]
+//!   giving the resident bytes this backend *will* occupy once grown to
+//!   some length. Admission control needs that number before a single
+//!   token exists, so the model must be derivable from a freshly
+//!   constructed (empty) backend: configuration only, no cache state.
+//!
+//! The contract binding them: for a sequence grown to `L` tokens,
+//! `footprint().bytes_at(L)` tracks `kv_bytes()` within ~25% (asserted in
+//! `tests/footprint.rs` for every backend family). Models may over-estimate
+//! short sequences (fixed terms like rings and quant-store windows are
+//! charged up front) — that only makes admission conservative. Erring high
+//! is always safer than erring low: an under-estimate turns into preemption
+//! churn at the engine, not a correctness bug, but it defeats the purpose
+//! of backend-aware admission (the Table-7 capacity gains exist precisely
+//! because SALS footprints are honest multiples smaller than dense fp32).
+//!
+//! Both surfaces describe the *modeled* cache, which for most backends is
+//! also the physical allocation. Known exception: StreamingLLM meters (and
+//! therefore predicts) its post-eviction live set — sink + recent — while
+//! this CPU reference keeps the dense rows resident (see the note in
+//! `baselines/streaming_llm.rs`); a production port that admits against
+//! that model must actually evict.
 
 pub mod full;
 pub mod sals;
@@ -117,6 +147,41 @@ impl AttnShape {
     /// Query heads per KV head.
     pub fn group_size(&self) -> usize {
         self.n_heads / self.n_kv_heads
+    }
+}
+
+/// Affine prediction of one backend's resident cache size:
+/// `fixed_bytes + bytes_per_token · min(tokens, cap_tokens)`.
+///
+/// See the module-level *Footprint contract* section: this struct
+/// **predicts** (admission), [`AttentionBackend::kv_bytes`] **measures**
+/// (metering). A model is built from backend configuration alone, so the
+/// engine can price a request against any backend family without
+/// instantiating a sequence.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FootprintModel {
+    /// Length-independent resident bytes: pre-allocated rings, plus the
+    /// expected steady-state excess of quantized stores' fp32 tails over
+    /// their frozen rate.
+    pub fixed_bytes: usize,
+    /// Marginal resident bytes per cached token (asymptotic rate).
+    pub bytes_per_token: usize,
+    /// Token count beyond which the cache stops growing (bounded caches
+    /// like StreamingLLM's sink+recent window); `None` = grows with the
+    /// sequence.
+    pub cap_tokens: Option<usize>,
+}
+
+impl FootprintModel {
+    /// Unbounded affine model.
+    pub fn linear(fixed_bytes: usize, bytes_per_token: usize) -> FootprintModel {
+        FootprintModel { fixed_bytes, bytes_per_token, cap_tokens: None }
+    }
+
+    /// Predicted resident cache bytes at `tokens` total cached tokens.
+    pub fn bytes_at(&self, tokens: usize) -> usize {
+        let t = self.cap_tokens.map_or(tokens, |c| tokens.min(c));
+        self.fixed_bytes + self.bytes_per_token * t
     }
 }
 
@@ -203,8 +268,15 @@ pub trait AttentionBackend {
     /// Cumulative cache memory traffic since construction.
     fn traffic(&self) -> Traffic;
 
-    /// Resident KV-cache bytes at the current length.
+    /// Resident KV-cache bytes at the current length (metering — see the
+    /// module-level *Footprint contract*).
     fn kv_bytes(&self) -> usize;
+
+    /// Predicted resident-cache model for this backend (estimation — see
+    /// the module-level *Footprint contract*). Must be answerable on a
+    /// freshly constructed backend: configuration only, independent of how
+    /// many tokens are currently cached.
+    fn footprint(&self) -> FootprintModel;
 
     /// Human-readable method name for reports.
     fn name(&self) -> &'static str;
@@ -293,6 +365,9 @@ mod tests {
         fn kv_bytes(&self) -> usize {
             self.0.kv_bytes()
         }
+        fn footprint(&self) -> FootprintModel {
+            self.0.footprint()
+        }
         fn name(&self) -> &'static str {
             "loop"
         }
@@ -364,6 +439,16 @@ mod tests {
     fn merge_selection_small_seq() {
         let sel = merge_selection(2, 4, 4, &[9]);
         assert_eq!(sel, vec![0, 1]);
+    }
+
+    #[test]
+    fn footprint_model_caps_and_accumulates() {
+        let unbounded = FootprintModel::linear(100, 8);
+        assert_eq!(unbounded.bytes_at(0), 100);
+        assert_eq!(unbounded.bytes_at(50), 100 + 400);
+        let capped = FootprintModel { fixed_bytes: 0, bytes_per_token: 8, cap_tokens: Some(10) };
+        assert_eq!(capped.bytes_at(4), 32);
+        assert_eq!(capped.bytes_at(10_000), 80, "bounded caches stop growing");
     }
 
     #[test]

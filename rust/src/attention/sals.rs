@@ -30,7 +30,7 @@
 //! should see at full precision may already have been evicted from the
 //! ring by later chunk rows.)
 
-use super::{merge_selection, AttentionBackend, AttnShape, Traffic};
+use super::{merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic};
 use crate::lowrank::Projector;
 use crate::quant::{Bits, TokenQuantStore};
 use crate::rope::RopeTable;
@@ -391,6 +391,18 @@ impl AttentionBackend for SalsAttention {
 
     fn kv_bytes(&self) -> usize {
         self.latent_keys.len() * 4 + self.recent_keys.len() * 4 + self.values.nbytes()
+    }
+
+    fn footprint(&self) -> FootprintModel {
+        // Latent keys grow at rank·4 B/token; values at the quant store's
+        // frozen rate. Fixed: the pre-allocated fp32 recent-key ring plus
+        // the expected excess of the store's fp32 tail over the frozen
+        // rate — length-independent terms, so the asymptotic rate reflects
+        // the §5.1 compression ratio admission is meant to exploit.
+        FootprintModel::linear(
+            self.recent_cap * self.shape.kv_dim() * 4 + self.values.tail_excess_bytes(),
+            self.cfg.rank * 4 + self.values.frozen_row_bytes(),
+        )
     }
 
     fn name(&self) -> &'static str {

@@ -5,8 +5,18 @@
 //! The step loop is the paper's serving context (vLLM/GPT-fast class),
 //! structured as explicit phases:
 //!
-//! 1. **Admission**: while the running set is below `max_batch` and the
-//!    page pool can plausibly host the next waiting request, admit FCFS.
+//! 1. **Admission**: while the running set is below `max_batch`, price the
+//!    next waiting request with the factory's [`SequenceFootprint`] at its
+//!    decode horizon (`prompt + max_new_tokens`, capped at `max_seq`) and
+//!    **reserve the pages immediately**; admit FCFS until a reservation
+//!    fails. Reserving at admit time means one pass cannot admit N
+//!    requests against the same free pages, and — because the footprint is
+//!    backend-aware — a pool that holds k dense-fp32 sequences holds
+//!    proportionally more SALS ones (the Table-7 capacity mechanism). A
+//!    request whose horizon exceeds even an empty pool is admitted
+//!    best-effort (whole-pool reservation) once the pool is idle, so an
+//!    early-stopping request with a huge token budget cannot stall the
+//!    queue forever.
 //! 2. **Partition**: split the running set into *prefilling* sequences
 //!    (prompt not yet consumed) and *decode-ready* sequences (pending
 //!    next-token logits).
@@ -26,15 +36,22 @@
 //!    per-sequence `Scratch` is only touched during prefill. Continuous
 //!    batching — no static batch barrier: sequences join the decode set
 //!    as their prefill completes and leave it the step they finish.
-//! 5. **Accounting**: after each step every sequence re-reserves pages for
-//!    its actual `kv_bytes()`; on pool exhaustion the youngest sequence is
-//!    preempted (caches dropped, request re-queued) — backpressure.
-//!    Finished sequences (flagged at decode time) are collected last.
+//! 5. **Accounting**: finished sequences (flagged at decode time) are
+//!    collected first, releasing their pages. Every surviving sequence
+//!    then re-reserves `max(kv_bytes(), admission reservation)` — actual
+//!    growth is tracked, but admitted headroom is never handed back
+//!    mid-flight (that would recreate the over-commit churn admission-time
+//!    reservation exists to prevent). If the pool cannot cover someone
+//!    (possible only when a footprint under-estimates), preemption is
+//!    youngest-first-*minimal*: preempt the single youngest sequence,
+//!    retry every reservation, repeat — never more evictions than needed.
+//!    Preempted requests re-queue at the front (caches dropped, vLLM
+//!    recompute mode) with their preemption count carried on the request.
 
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 use crate::kvcache::PagePool;
-use crate::model::{BackendFactory, BatchScratch, Model, Scratch, SequenceState};
+use crate::model::{BackendFactory, BatchScratch, Model, Scratch, SequenceFootprint, SequenceState};
 use crate::util::threadpool;
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -79,13 +96,18 @@ struct Running {
     finished: bool,
     first_step: Option<Instant>,
     first_token: Option<Instant>,
-    preemptions: usize,
+    /// Bytes reserved at admission (footprint at the decode horizon) —
+    /// the accounting floor while this sequence runs.
+    reserved_bytes: usize,
 }
 
 /// The serving engine.
 pub struct Engine {
     pub model: Model,
     factory: Box<BackendFactory>,
+    /// Per-sequence footprint model of `factory`'s backends, derived once
+    /// at construction — what admission prices requests with.
+    footprint: SequenceFootprint,
     pub cfg: EngineConfig,
     pool: PagePool,
     waiting: VecDeque<Request>,
@@ -101,9 +123,11 @@ impl Engine {
     pub fn new(model: Model, factory: Box<BackendFactory>, cfg: EngineConfig) -> Engine {
         let pool = PagePool::with_budget(cfg.page_bytes, cfg.pool_budget);
         let batch_scratch = BatchScratch::sized(&model.cfg, cfg.max_batch, cfg.threads);
+        let footprint = SequenceFootprint::of(&model.cfg, &factory);
         Engine {
             model,
             factory,
+            footprint,
             cfg,
             pool,
             waiting: VecDeque::new(),
@@ -114,8 +138,16 @@ impl Engine {
         }
     }
 
-    /// Enqueue a request (stamps arrival time).
+    /// Enqueue a request (stamps arrival time). The id must be unique
+    /// among in-flight requests — it keys the page-pool ledger, so a
+    /// duplicate would silently merge two sequences' reservations.
     pub fn submit(&mut self, mut req: Request) {
+        assert!(
+            !self.waiting.iter().any(|w| w.id == req.id)
+                && !self.running.iter().any(|r| r.req.id == req.id),
+            "duplicate in-flight request id {}",
+            req.id
+        );
         req.arrival.get_or_insert_with(Instant::now);
         self.metrics.requests_submitted += 1;
         self.waiting.push_back(req);
@@ -126,19 +158,37 @@ impl Engine {
         self.waiting.len() + self.running.len()
     }
 
-    /// Estimated KV bytes for a sequence of `tokens` total length — used
-    /// for admission. Conservative: dense fp32 cache across layers.
-    fn kv_estimate(&self, tokens: usize) -> usize {
-        let cfg = &self.model.cfg;
-        tokens * cfg.n_layers * 2 * cfg.kv_dim() * 4
+    /// Admission price of a request: the factory's footprint at the decode
+    /// horizon — `prompt + max_new_tokens` tokens, capped at `max_seq`
+    /// (decode stops there regardless of the token budget). Backend-aware:
+    /// a SALS factory prices the same request at a fraction of dense fp32.
+    fn admission_bytes(&self, req: &Request) -> usize {
+        // saturating: a sentinel-huge max_new_tokens ("unbounded") must
+        // clamp to max_seq, not wrap into a tiny horizon.
+        let horizon =
+            req.prompt.len().saturating_add(req.params.max_new_tokens).min(self.model.cfg.max_seq);
+        self.footprint.bytes_at(horizon)
     }
 
     fn admit(&mut self) {
         while self.running.len() < self.cfg.max_batch {
             let Some(front) = self.waiting.front() else { break };
-            // Admission gate: room for prompt + a small decode margin?
-            let est = self.kv_estimate(front.prompt.len() + 16);
-            if !self.pool.can_grow_to(front.id, est) {
+            // Reserve the full-horizon footprint NOW: later iterations of
+            // this loop see the reduced free-page count, so a burst of
+            // requests can no longer all be admitted against the same
+            // memory (the pre-PR-3 over-commit→preemption-churn bug).
+            let mut est = self.admission_bytes(front);
+            let pool_bytes = self.pool.page_bytes * self.pool.total_pages;
+            if est > pool_bytes && self.running.is_empty() {
+                // The horizon exceeds even an EMPTY pool (e.g. a huge
+                // max_new_tokens whose stop token fires early in practice).
+                // Strict pricing would park the request forever and stall
+                // the queue behind it; admit it best-effort with the whole
+                // pool instead — the accounting safety valve governs its
+                // actual growth from here.
+                est = pool_bytes;
+            }
+            if self.pool.reserve(front.id, est).is_err() {
                 break; // backpressure
             }
             let req = self.waiting.pop_front().unwrap();
@@ -154,9 +204,10 @@ impl Engine {
                 finished: false,
                 first_step: None,
                 first_token: None,
-                preemptions: 0,
+                reserved_bytes: est,
             });
         }
+        self.metrics.peak_running = self.metrics.peak_running.max(self.running.len());
     }
 
     /// One engine step. Returns the number of sequences that actually did
@@ -263,27 +314,8 @@ impl Engine {
             }
         }
 
-        // ---- pool accounting + preemption ----
-        // Re-reserve actual usage; preempt youngest-first on exhaustion.
-        let mut preempt: Vec<usize> = Vec::new();
-        for (i, r) in self.running.iter().enumerate() {
-            if self.pool.reserve(r.req.id, r.state.kv_bytes()).is_err() {
-                preempt.push(i);
-            }
-        }
-        for &i in preempt.iter().rev() {
-            let mut r = self.running.remove(i);
-            self.pool.release(r.req.id);
-            r.preemptions += 1;
-            self.metrics.preemptions += 1;
-            // Drop caches; restart from scratch later (vLLM recompute mode).
-            let mut req = r.req;
-            req.arrival = req.arrival.or(Some(now));
-            self.waiting.push_front(req);
-        }
-        self.metrics.peak_pool_pages = self.metrics.peak_pool_pages.max(self.pool.used_pages());
-
-        // ---- collect finished (flag set at decode time — no O(out) scan) ----
+        // ---- collect finished (flag set at decode time — no O(out) scan),
+        // releasing their pages before the survivors re-reserve ----
         let mut i = 0;
         while i < self.running.len() {
             if self.running[i].finished {
@@ -305,12 +337,62 @@ impl Engine {
                     queue_s: r.first_step.map(|t| t - arrival).unwrap_or_default().as_secs_f64(),
                     ttft_s: ttft,
                     e2e_s: e2e,
-                    preemptions: r.preemptions,
+                    preemptions: r.req.preemptions,
                 });
             } else {
                 i += 1;
             }
         }
+
+        // ---- pool accounting + preemption ----
+        // Re-reserve every survivor to max(actual kv_bytes, admission
+        // reservation): growth is tracked, admitted headroom is kept. A
+        // failure means a footprint under-estimated (the reserve-at-admit
+        // ledger already priced everyone's horizon) — preempt the single
+        // *youngest* sequence, retry all reservations, repeat: minimal
+        // FCFS-friendly eviction, never the old evict-everyone-that-failed.
+        loop {
+            let mut exhausted = false;
+            for r in self.running.iter() {
+                let target = r.state.kv_bytes().max(r.reserved_bytes);
+                if self.pool.reserve(r.req.id, target).is_err() {
+                    exhausted = true;
+                    break;
+                }
+            }
+            if !exhausted {
+                break;
+            }
+            // Youngest = last admitted (running keeps admission order;
+            // collection preserves it, re-admissions append).
+            let r = self.running.pop().expect("pool exhausted with nothing running");
+            self.pool.release(r.req.id);
+            // A victim that was running ALONE failed against an otherwise
+            // empty pool: its live cache exceeds the entire budget, so
+            // re-queueing would preempt/recompute-loop forever (and the
+            // stall guard never fires — recompute counts as progress).
+            // Fail loudly instead, like the stall guard does for requests
+            // that can never be admitted.
+            assert!(
+                !self.running.is_empty(),
+                "request {} can never fit: needs {} bytes, pool holds {}",
+                r.req.id,
+                r.state.kv_bytes().max(r.reserved_bytes),
+                self.pool.page_bytes * self.pool.total_pages
+            );
+            self.metrics.preemptions += 1;
+            // Drop caches; restart from scratch later (vLLM recompute
+            // mode). The count rides on the request across the re-queue.
+            let mut req = r.req;
+            req.preemptions += 1;
+            req.arrival = req.arrival.or(Some(now));
+            self.waiting.push_front(req);
+        }
+        // The pool tracks its own high-water mark inside every reserve(),
+        // so this is exact even when the peak happened mid-step (e.g. just
+        // before a finishing sequence released its pages).
+        self.metrics.peak_pool_pages = self.pool.peak_used_pages();
+
         stepped
     }
 
@@ -619,5 +701,222 @@ mod tests {
         assert!(e.metrics.tokens_per_second() > 0.0);
         assert_eq!(e.metrics.ttft.len(), 3);
         assert!(e.metrics.steps > 0);
+        assert!(e.metrics.peak_running >= 1);
+    }
+
+    #[test]
+    fn admission_reserves_and_does_not_overcommit() {
+        // tiny_mha(128): 6 layers × 2 × kv_dim 128 × 4 B = 6144 B/token.
+        // Horizon = prompt 4 + max_new 4 = 8 tokens → 49152 B → 12 pages
+        // (4096 B pages). A 16-page pool holds ONE such reservation — a
+        // burst of 4 simultaneous requests must not all be admitted in one
+        // admit() pass (the pre-reservation over-commit bug).
+        let mut e = engine(4, 16 * 4096);
+        for i in 0..4 {
+            e.submit(Request::new(i, vec![1, 2, 3, 4], GenParams { max_new_tokens: 4, stop_token: None }));
+        }
+        e.admit();
+        assert_eq!(e.running.len(), 1, "one admit() pass over-committed the pool");
+        assert_eq!(e.waiting.len(), 3);
+        let responses = e.run_to_completion();
+        assert_eq!(responses.len(), 4);
+        // Honest reserve-ahead admission means growth never outruns the
+        // pool: zero preemption churn, and every response reports so.
+        assert_eq!(e.metrics.preemptions, 0);
+        assert!(responses.iter().all(|r| r.preemptions == 0));
+        assert_eq!(e.metrics.peak_running, 1);
+    }
+
+    #[test]
+    fn oversized_horizon_is_admitted_best_effort_when_pool_idle() {
+        // max_new_tokens prices the horizon beyond the entire pool, but a
+        // stop token ends generation after one token in practice: strict
+        // horizon pricing would park the request (and the queue behind it)
+        // forever; an idle pool must admit it best-effort instead.
+        let mut e = engine(1, 40 * 6144);
+        e.submit(Request::new(0, vec![3, 4], GenParams { max_new_tokens: 8, stop_token: None }));
+        let first = e.run_to_completion()[0].tokens[0];
+
+        let mut e2 = engine(2, 40 * 6144);
+        e2.submit(Request::new(
+            1,
+            vec![3, 4],
+            GenParams { max_new_tokens: 1 << 20, stop_token: Some(first) },
+        ));
+        // A normal request queued behind it must also complete.
+        e2.submit(Request::new(2, vec![5, 6], GenParams { max_new_tokens: 4, stop_token: None }));
+        let mut rs = e2.run_to_completion();
+        rs.sort_by_key(|r| r.id);
+        assert_eq!(rs.len(), 2);
+        assert_eq!(rs[0].tokens.len(), 1, "stop token must end the oversized request");
+        assert_eq!(rs[1].tokens.len(), 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "can never fit")]
+    fn impossible_request_fails_loudly() {
+        // 8 pages ≈ 5 tokens of dense cache; the 8-token prompt alone can
+        // never fit. Best-effort admission lets it in (idle pool), growth
+        // evicts it while running alone — that must be a loud failure, not
+        // a silent preempt/recompute livelock.
+        let mut e = engine(1, 8 * 4096);
+        e.submit(Request::new(
+            0,
+            vec![1, 2, 3, 4, 5, 6, 7, 8],
+            GenParams { max_new_tokens: 4, stop_token: None },
+        ));
+        e.run_to_completion();
+    }
+
+    /// FullAttention wrapper whose footprint *lies* (claims zero growth):
+    /// forces admission to over-admit so actual `kv_bytes()` growth must
+    /// hit the preemption path — the safety valve for under-estimating
+    /// footprints.
+    struct LyingFootprint(FullAttention);
+
+    impl crate::attention::AttentionBackend for LyingFootprint {
+        fn append(&mut self, k: &[f32], v: &[f32]) {
+            self.0.append(k, v)
+        }
+        fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+            self.0.attend(q, out)
+        }
+        fn len(&self) -> usize {
+            self.0.len()
+        }
+        fn traffic(&self) -> crate::attention::Traffic {
+            self.0.traffic()
+        }
+        fn kv_bytes(&self) -> usize {
+            self.0.kv_bytes()
+        }
+        fn footprint(&self) -> crate::attention::FootprintModel {
+            crate::attention::FootprintModel::linear(0, 0)
+        }
+        fn name(&self) -> &'static str {
+            "lying-footprint"
+        }
+    }
+
+    #[test]
+    fn preempted_request_reports_preemptions() {
+        // Pool of 32 pages; two 16-token sequences need 24 pages EACH at
+        // completion (16 × 6144 B = 24 pages), so running both concurrently
+        // must preempt. The zero footprint admits both; growth evicts the
+        // youngest (id 1) at least once; the oldest (id 0) must never be
+        // touched — and the completed response must carry the count
+        // (regression: it was incremented on a dropped struct and reset to
+        // 0 on re-admission, so Response.preemptions was always 0).
+        let cfg = ModelConfig::tiny_mha(128);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 37)));
+        let shape = cfg.attn_shape();
+        let factory: Box<BackendFactory> =
+            Box::new(move |_| Box::new(LyingFootprint(FullAttention::new(shape))) as _);
+        let mut e = Engine::new(
+            model,
+            factory,
+            EngineConfig {
+                max_batch: 2,
+                prefill_chunk: 8,
+                page_bytes: 4096,
+                pool_budget: 32 * 4096,
+                threads: 2,
+            },
+        );
+        for i in 0..2 {
+            e.submit(Request::new(
+                i,
+                vec![1, 2, 3, 4, 5, 6, 7, 8],
+                GenParams { max_new_tokens: 8, stop_token: None },
+            ));
+        }
+        let mut responses = e.run_to_completion();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 2);
+        assert!(responses.iter().all(|r| r.tokens.len() == 8));
+        assert!(e.metrics.preemptions >= 1, "scenario must actually force preemption");
+        // Youngest-first-minimal: every preemption lands on id 1, id 0 runs
+        // undisturbed, and the per-request counts add up to the engine's.
+        assert_eq!(responses[0].preemptions, 0, "oldest sequence must not be preempted");
+        assert!(responses[1].preemptions >= 1, "preempted request must report it");
+        assert_eq!(
+            responses.iter().map(|r| r.preemptions).sum::<usize>(),
+            e.metrics.preemptions,
+            "Response counts must account for every engine preemption"
+        );
+    }
+
+    #[test]
+    fn sals_admits_more_concurrent_sequences_than_full() {
+        // Capacity parity under ONE pool budget (the serving-side analogue
+        // of the paper's compression claim): per token per layer, full
+        // costs 2·kv_dim·4 = 256 B while SALS costs rank·4 + quantized
+        // value rate = 80 B (tiny_gqa: kv_dim 32, rank 8, 4-bit values,
+        // group 8). At horizon 28 (prompt 24 + max_new 4) and 1 KiB pages
+        // that prices full at 42 pages/seq and SALS at 22, so an 88-page
+        // pool concurrently admits 2 full sequences but 4 SALS ones.
+        use crate::attention::{SalsAttention, SalsConfig};
+        use crate::lowrank::Calibrator;
+        use crate::quant::Bits;
+        use crate::util::rng::Rng;
+
+        let cfg = ModelConfig::tiny_gqa(128);
+        let shape = cfg.attn_shape();
+        let kvd = cfg.kv_dim();
+        let mut crng = Rng::new(67);
+        let mut cal = Calibrator::new(kvd);
+        for _ in 0..4 * kvd {
+            cal.add_key(&crng.normal_vec(kvd, 1.0));
+        }
+        let proj = cal.fit(kvd / 4).unwrap();
+        let sc = SalsConfig {
+            rank: kvd / 4,
+            r_star: kvd / 8,
+            sink: 2,
+            recent: 4,
+            critical: 8,
+            v_bits: Bits::B4,
+            group: 8,
+        };
+        let sals_factory: Box<BackendFactory> = Box::new(move |_| {
+            Box::new(SalsAttention::new(shape, sc.clone(), proj.clone()))
+                as Box<dyn crate::attention::AttentionBackend + Send>
+        });
+        let full_factory: Box<BackendFactory> =
+            Box::new(move |_| Box::new(FullAttention::new(shape)) as _);
+
+        let run = |factory: Box<BackendFactory>| {
+            let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 71)));
+            let mut e = Engine::new(
+                model,
+                factory,
+                EngineConfig {
+                    max_batch: 4,
+                    prefill_chunk: 8,
+                    page_bytes: 1024,
+                    pool_budget: 88 * 1024,
+                    threads: 2,
+                },
+            );
+            let mut rng = Rng::new(73);
+            for i in 0..6u64 {
+                let prompt: Vec<usize> = (0..24).map(|_| rng.below(cfg.vocab)).collect();
+                e.submit(Request::new(i, prompt, GenParams { max_new_tokens: 4, stop_token: None }));
+            }
+            let responses = e.run_to_completion();
+            assert_eq!(responses.len(), 6);
+            assert_eq!(e.metrics.preemptions, 0, "honest footprints must not churn");
+            e.metrics
+        };
+        let full = run(full_factory);
+        let sals = run(sals_factory);
+        assert!(
+            sals.peak_running > full.peak_running,
+            "SALS must admit strictly more concurrent sequences: {} vs {}",
+            sals.peak_running,
+            full.peak_running
+        );
+        assert_eq!(full.peak_running, 2);
+        assert_eq!(sals.peak_running, 4);
     }
 }

@@ -20,6 +20,9 @@ pub struct Metrics {
     pub wall_s: f64,
     /// Peak pool utilization (pages).
     pub peak_pool_pages: usize,
+    /// Peak concurrent running-set size — the serving-capacity number the
+    /// footprint-aware admission is meant to raise for compressed backends.
+    pub peak_running: usize,
 }
 
 impl Metrics {
@@ -56,6 +59,7 @@ impl Metrics {
             .field("e2e_p50_s", e.p50)
             .field("e2e_p99_s", e.p99)
             .field("peak_pool_pages", self.peak_pool_pages)
+            .field("peak_running", self.peak_running)
     }
 }
 

@@ -25,11 +25,15 @@ pub struct Request {
     pub params: GenParams,
     /// Arrival timestamp assigned at submit time (None until submitted).
     pub arrival: Option<Instant>,
+    /// Times this request has been preempted so far. Lives on the request
+    /// (not the engine's running slot) so the count survives re-queue and
+    /// re-admission and the final [`Response`] reports it faithfully.
+    pub preemptions: usize,
 }
 
 impl Request {
     pub fn new(id: SeqId, prompt: Vec<usize>, params: GenParams) -> Request {
-        Request { id, prompt, params, arrival: None }
+        Request { id, prompt, params, arrival: None, preemptions: 0 }
     }
 }
 

@@ -8,6 +8,18 @@
 //! manager refusing block allocation. Because SALS caches are `d_r`-times
 //! smaller, the same pool admits proportionally more concurrent sequences —
 //! the mechanism behind the Table-7 throughput gains at long contexts.
+//!
+//! The pool is a *ledger*, deliberately ignorant of what the bytes mean.
+//! Who reserves how much is the engine's policy, and it uses the pool in
+//! two modes (see the footprint contract in `crate::attention`):
+//!
+//! * **Admission reservation** — at admit time the engine reserves the
+//!   factory's predicted footprint ([`crate::model::SequenceFootprint`])
+//!   for the request's whole decode horizon, so one admission pass cannot
+//!   promise the same free pages to several requests.
+//! * **Growth accounting** — each step every running sequence re-reserves
+//!   `max(measured kv_bytes(), admission reservation)`; the estimate is
+//!   the floor, the live meter only ever raises it.
 
 use crate::util::{Error, Result};
 use std::collections::HashMap;
@@ -169,8 +181,10 @@ mod tests {
 
     #[test]
     fn property_random_ops_preserve_accounting() {
-        // Random interleavings of reserve/release never break accounting
-        // and never exceed capacity.
+        // Random interleavings of the engine's three usage patterns —
+        // admission-time reservation (check-then-act must agree), floored
+        // growth re-reservation, and release — never break accounting and
+        // never exceed capacity.
         prop::check(
             "pagepool-accounting",
             200,
@@ -182,12 +196,33 @@ mod tests {
             |ops| {
                 let mut p = PagePool::new(16, 32);
                 for chunk in ops.chunks_exact(3) {
-                    let (seq, kind, amt) = (chunk[0] % 6, chunk[1] % 3, chunk[2]);
+                    let (seq, kind, amt) = (chunk[0] % 6, chunk[1] % 4, chunk[2]);
+                    let seq = seq as SeqId;
                     match kind {
-                        0 | 1 => {
-                            let _ = p.reserve(seq as SeqId, amt);
+                        0 => {
+                            let _ = p.reserve(seq, amt);
                         }
-                        _ => p.release(seq as SeqId),
+                        1 => {
+                            // Admission: the engine's reserve-at-admit
+                            // relies on reserve succeeding exactly when
+                            // can_grow_to says it fits.
+                            let fits = p.can_grow_to(seq, amt);
+                            if p.reserve(seq, amt).is_ok() != fits {
+                                return false;
+                            }
+                        }
+                        2 => {
+                            // Growth accounting: re-reserve floored at the
+                            // current holding — must never shrink, never
+                            // fail below capacity already held.
+                            let floor = p.held_by(seq) * p.page_bytes;
+                            let held_before = p.held_by(seq);
+                            let _ = p.reserve(seq, floor.max(amt));
+                            if p.held_by(seq) < held_before {
+                                return false;
+                            }
+                        }
+                        _ => p.release(seq),
                     }
                     if p.check_invariants().is_err() || p.used_pages() > p.total_pages {
                         return false;

@@ -159,6 +159,9 @@ impl AttentionBackend for RecordingBackend {
     fn kv_bytes(&self) -> usize {
         self.inner.kv_bytes()
     }
+    fn footprint(&self) -> crate::attention::FootprintModel {
+        self.inner.footprint()
+    }
     fn name(&self) -> &'static str {
         "recording"
     }

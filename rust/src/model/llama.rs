@@ -29,13 +29,42 @@
 
 use super::config::ModelConfig;
 use super::weights::Weights;
-use crate::attention::AttentionBackend;
+use crate::attention::{AttentionBackend, FootprintModel};
 use crate::tensor::ops::{gather_rows, lm_head_batch, matmul, rmsnorm, silu};
 use crate::util::threadpool;
 use std::sync::Arc;
 
 /// Factory producing one attention backend per layer.
 pub type BackendFactory = dyn Fn(usize) -> Box<dyn AttentionBackend + Send> + Send + Sync;
+
+/// Predicted per-sequence cache footprint across all layers — one
+/// [`FootprintModel`] per layer (layers legitimately differ: dense-layer
+/// skipping, per-layer compression ratios à la LoRC/Palu). Built from a
+/// factory *without running any tokens*: each layer backend is constructed
+/// once, empty, and asked for its model. This is what the serving engine
+/// prices admission with; the live counterpart is
+/// [`SequenceState::kv_bytes`].
+pub struct SequenceFootprint {
+    layers: Vec<FootprintModel>,
+}
+
+impl SequenceFootprint {
+    /// Derive the footprint of sequences this factory would produce.
+    pub fn of(cfg: &ModelConfig, factory: &BackendFactory) -> SequenceFootprint {
+        SequenceFootprint { layers: (0..cfg.n_layers).map(|l| factory(l).footprint()).collect() }
+    }
+
+    /// Projected resident KV bytes of one sequence at `tokens` total
+    /// length (prompt + generated).
+    pub fn bytes_at(&self, tokens: usize) -> usize {
+        self.layers.iter().map(|m| m.bytes_at(tokens)).sum()
+    }
+
+    /// Per-layer models (for reports / tests).
+    pub fn layers(&self) -> &[FootprintModel] {
+        &self.layers
+    }
+}
 
 /// Per-sequence decode state: one KV backend per layer + position counter.
 pub struct SequenceState {

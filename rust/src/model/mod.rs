@@ -10,5 +10,5 @@ pub mod weights;
 
 pub use backends::{calibrate, fit_calibration, make_factory, Calibration, FittedCalibration, Method, SparsityParams};
 pub use config::ModelConfig;
-pub use llama::{BackendFactory, BatchScratch, Model, Scratch, SequenceState};
+pub use llama::{BackendFactory, BatchScratch, Model, Scratch, SequenceFootprint, SequenceState};
 pub use weights::Weights;

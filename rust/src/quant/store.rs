@@ -156,6 +156,25 @@ impl TokenQuantStore {
         }
     }
 
+    /// Asymptotic resident bytes per *frozen* token: the packed payload
+    /// plus the page's per-channel scale/zero pair amortized over the
+    /// group. Footprint estimation (the marginal rate a long sequence
+    /// converges to); [`TokenQuantStore::nbytes`] meters the live store.
+    pub fn frozen_row_bytes(&self) -> usize {
+        self.dim * self.bits.bits() as usize / 8 + (self.dim * 8).div_ceil(self.group)
+    }
+
+    /// Expected steady-state *excess* of the fp32 tail over the frozen
+    /// rate: the tail holds `window..window+group` tokens (the window plus
+    /// a group still filling), each resident as `dim` fp32s instead of a
+    /// frozen row. Charged as a fixed footprint term so an affine
+    /// `fixed + rate·tokens` model tracks `nbytes()` at any phase of the
+    /// freeze cycle; the midpoint (`window + group/2`) makes the model
+    /// exact mid-phase and off by at most `±group/2` tokens' excess.
+    pub fn tail_excess_bytes(&self) -> usize {
+        (self.window + self.group / 2) * (self.dim * 4).saturating_sub(self.frozen_row_bytes())
+    }
+
     /// Resident bytes of the whole store.
     pub fn nbytes(&self) -> usize {
         let packed: usize =
@@ -250,6 +269,30 @@ mod tests {
         assert!(st.row_read_bytes(0) < st.row_read_bytes(st.len() - 1));
         // 2-bit: 64ch × 2/8 = 16B payload + 32B params amortized
         assert_eq!(st.row_read_bytes(0), 64 / 4 + (64 * 8) / 16);
+    }
+
+    #[test]
+    fn affine_rate_tracks_live_nbytes() {
+        // fixed (tail excess) + frozen rate · len must stay within the
+        // ±group/2-token phase error of the metered nbytes(), at every
+        // phase of the freeze cycle.
+        // (The model is asymptotic: below window+group tokens nothing is
+        // frozen yet and the fixed term over-charges — fine for admission,
+        // so the bound is asserted from the first freeze onward.)
+        let mut st = TokenQuantStore::new(32, Bits::B4, 16, 24);
+        let mut rng = Rng::new(71);
+        let phase_slack = (st.group / 2) * (st.dim * 4 - st.frozen_row_bytes());
+        let steady = st.window + st.group;
+        for len in 1..=200 {
+            st.append(&rng.normal_vec(32, 1.0));
+            if len < steady {
+                continue;
+            }
+            let est = st.tail_excess_bytes() + st.frozen_row_bytes() * len;
+            let live = st.nbytes();
+            let err = est.abs_diff(live);
+            assert!(err <= phase_slack, "len {len}: est {est} vs live {live} (err {err})");
+        }
     }
 
     #[test]

@@ -141,6 +141,9 @@ mod tests {
             fn kv_bytes(&self) -> usize {
                 0
             }
+            fn footprint(&self) -> crate::attention::FootprintModel {
+                crate::attention::FootprintModel::default()
+            }
             fn name(&self) -> &'static str {
                 "zero"
             }

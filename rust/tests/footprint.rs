@@ -1,0 +1,108 @@
+//! Footprint contract (estimation vs metering, see `attention/mod.rs`):
+//! for EVERY method in the comparison matrix, the factory-derived
+//! [`FootprintModel`] prediction at length L must track the live
+//! `kv_bytes()` of a backend actually grown to L tokens within 25% —
+//! the bound backend-aware admission relies on.
+
+use sals::attention::AttentionBackend;
+use sals::model::{
+    calibrate, fit_calibration, make_factory, Method, Model, ModelConfig, SequenceFootprint,
+    SparsityParams, Weights,
+};
+use sals::util::rng::Rng;
+use std::sync::Arc;
+
+/// Long enough that quantized stores are past their fp32 windows and
+/// fixed terms are amortized (the models are asymptotic — they
+/// deliberately over-charge very short sequences, which only makes
+/// admission conservative).
+const L: usize = 240;
+
+fn all_methods() -> [Method; 12] {
+    [
+        Method::Full,
+        Method::Sals25,
+        Method::Sals125,
+        Method::Kivi4,
+        Method::Kivi2,
+        Method::Palu30,
+        Method::Palu50,
+        Method::Loki,
+        Method::DoubleSparse,
+        Method::HShare,
+        Method::Quest,
+        Method::StreamingLlm,
+    ]
+}
+
+fn setup() -> (ModelConfig, Arc<sals::model::FittedCalibration>) {
+    let mut cfg = ModelConfig::tiny_mha(512);
+    cfg.n_layers = 3;
+    cfg.dense_layers = vec![0];
+    let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 29)));
+    let mut rng = Rng::new(31);
+    let streams: Vec<Vec<usize>> =
+        (0..2).map(|_| (0..64).map(|_| rng.below(cfg.vocab)).collect()).collect();
+    let calib = calibrate(&model, &streams);
+    let fitted = Arc::new(fit_calibration(&cfg, &calib));
+    (cfg, fitted)
+}
+
+#[test]
+fn estimate_tracks_live_kv_bytes_for_every_method() {
+    let (cfg, fitted) = setup();
+    let kvd = cfg.kv_dim();
+    let sp = SparsityParams { sink: 2, recent: 8, critical: 8 };
+    let mut rng = Rng::new(33);
+    for method in all_methods() {
+        let factory = make_factory(method, &fitted, sp);
+        // Layer 1 is sparse (dense_layers = {0}), exercising the method's
+        // own backend; layer 0 covers the dense-fallback path.
+        for layer in [0usize, 1] {
+            let mut b = factory(layer);
+            let est = b.footprint().bytes_at(L);
+            for _ in 0..L {
+                let k = rng.normal_vec(kvd, 1.0);
+                let v = rng.normal_vec(kvd, 1.0);
+                b.append(&k, &v);
+            }
+            let live = b.kv_bytes();
+            assert!(live > 0, "{method:?} layer {layer} ({}) metered nothing", b.name());
+            let ratio = est as f64 / live as f64;
+            assert!(
+                (0.75..=1.25).contains(&ratio),
+                "{method:?} layer {layer} ({}): estimate {est} vs live {live} (ratio {ratio:.3})",
+                b.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn sequence_footprint_sums_per_layer_models() {
+    let (cfg, fitted) = setup();
+    let sp = SparsityParams { sink: 2, recent: 8, critical: 8 };
+    let factory = make_factory(Method::Sals25, &fitted, sp);
+    let fp = SequenceFootprint::of(&cfg, &factory);
+    assert_eq!(fp.layers().len(), cfg.n_layers);
+    let by_hand: usize = (0..cfg.n_layers).map(|l| factory(l).footprint().bytes_at(L)).sum();
+    assert_eq!(fp.bytes_at(L), by_hand);
+    // Mixed dense/sparse layers: the dense layer 0 must be priced at the
+    // dense rate, the SALS layers strictly below it.
+    let dense = factory(0).footprint().bytes_at(L);
+    let sparse = factory(1).footprint().bytes_at(L);
+    assert!(sparse < dense, "SALS layer footprint {sparse} not below dense {dense}");
+}
+
+#[test]
+fn sals_sequence_footprint_well_below_full() {
+    // The serving-capacity premise (ROADMAP / Table 7): at long context a
+    // SALS sequence must be priced at a fraction of dense fp32 — here
+    // under 60% even with one mandatory dense layer in the mix.
+    let (cfg, fitted) = setup();
+    let sp = SparsityParams { sink: 2, recent: 8, critical: 8 };
+    let full = SequenceFootprint::of(&cfg, &make_factory(Method::Full, &fitted, sp));
+    let sals = SequenceFootprint::of(&cfg, &make_factory(Method::Sals25, &fitted, sp));
+    let (f, s) = (full.bytes_at(L), sals.bytes_at(L));
+    assert!(s * 10 < f * 6, "SALS {s} not well below full {f}");
+}
