@@ -1,0 +1,392 @@
+//! SALS decode hot-path stage timings: score / select / reconstruct+gather
+//! / attend, per token, at 4K and 32K contexts — the bandwidth-exact
+//! decode refactor's regression gate.
+//!
+//! Two implementations of the same pipeline run against identical state:
+//!
+//! * **packed** — the production path (`SalsAttention::attend_instrumented`):
+//!   split-panel unit-stride latent scoring, O(k log k) range-merge
+//!   selection, recon matmul that skips recent-ring rows, page-coherent
+//!   value gather, packed `sparse_attend` epilogue.
+//! * **legacy** — a faithful in-bench replica of the pre-split-panel path:
+//!   strided score scan over (len, r) latent rows (touches the full rows
+//!   to read the leading r*), O(seq_len) mask-based selection merge
+//!   (allocating per call), reconstruction matmul over *all* selected rows
+//!   (recent rows computed then overwritten), per-row quant-store `get()`,
+//!   and the per-head strided dot/axpy attention with its per-call scores
+//!   allocation.
+//!
+//! The workload is the paper's memory-bound decode regime (long context,
+//! small critical budget, SALS-12.5% ranks — r* rows are sub-cache-line,
+//! where the strided scan's waste is maximal). Acceptance: ≥1.5× packed
+//! vs legacy on the summed four stages at 32K, and the score stage's
+//! metered traffic ≈ r*·4 bytes per context token (not r·4).
+//!
+//! Emits `BENCH_sals_hotpath.json`; CI runs this under `SALS_BENCH_QUICK=1`
+//! and fails if `accepted` is false. Quick mode shortens the timing loops
+//! (same contexts and shapes).
+
+use sals::attention::{AttentionBackend, SalsAttention, SalsConfig, SalsStageTimes};
+use sals::harness::Table;
+use sals::lowrank::{Calibrator, Projector};
+use sals::quant::{Bits, TokenQuantStore};
+use sals::rope::RopeTable;
+use sals::tensor::ops::{axpy, dot, matmul, softmax};
+use sals::tensor::top_k_indices_into;
+use sals::util::json::Json;
+use sals::util::rng::Rng;
+use std::time::Instant;
+
+const N_HEADS: usize = 4;
+const HEAD_DIM: usize = 32;
+const RANK: usize = 16; // SALS-12.5% of kvd=128
+const R_STAR: usize = 8;
+const SINK: usize = 4;
+const RECENT: usize = 64;
+const V_BITS: Bits = Bits::B2;
+const QGROUP: usize = 32;
+const CONTEXTS: [usize; 2] = [4096, 32768];
+
+fn kvd() -> usize {
+    N_HEADS * HEAD_DIM
+}
+
+fn critical_for(ctx: usize) -> usize {
+    (ctx / 256).max(32)
+}
+
+/// Low-rank key-family projector (real LLM keys are low-rank; exactness is
+/// irrelevant to the timing).
+fn make_projector(rng: &mut Rng) -> Projector {
+    let kvd = kvd();
+    let basis: Vec<Vec<f32>> = (0..RANK).map(|_| rng.normal_vec(kvd, 1.0)).collect();
+    let mut cal = Calibrator::new(kvd);
+    let mut row = vec![0.0f32; kvd];
+    for _ in 0..512 {
+        row.fill(0.0);
+        for b in &basis {
+            axpy(rng.normal_f32(), b, &mut row);
+        }
+        cal.add_key(&row);
+    }
+    cal.fit(RANK).unwrap()
+}
+
+/// The pre-PR decode state + scratch: (len, r) row-major latents, fp32
+/// recent-key ring, quantized value store — the layout the split panels
+/// replaced.
+struct Legacy {
+    proj: Projector,
+    u_t: Vec<f32>, // (r, kvd)
+    rope: RopeTable,
+    lat: Vec<f32>, // (len, RANK) row-major
+    ring: Vec<f32>,
+    recent_cap: usize,
+    store: TokenQuantStore,
+    len: usize,
+    critical: usize,
+    // Reused scratch, as the pre-PR backend had:
+    qlat: Vec<f32>,
+    scores: Vec<f32>,
+    idx: Vec<usize>,
+    lat_sel: Vec<f32>,
+    keys: Vec<f32>,
+    vals: Vec<f32>,
+    qr: Vec<f32>,
+}
+
+impl Legacy {
+    fn new(proj: Projector, max_seq: usize, critical: usize) -> Legacy {
+        let kvd = kvd();
+        let mut u_t = vec![0.0f32; RANK * kvd];
+        for i in 0..kvd {
+            for j in 0..RANK {
+                u_t[j * kvd + i] = proj.u.data[i * proj.rank + j];
+            }
+        }
+        Legacy {
+            proj,
+            u_t,
+            rope: RopeTable::new(HEAD_DIM, max_seq, 10_000.0),
+            lat: Vec::new(),
+            ring: vec![0.0; RECENT * kvd],
+            recent_cap: RECENT,
+            store: TokenQuantStore::new(kvd, V_BITS, QGROUP, RECENT.max(QGROUP)),
+            len: 0,
+            critical,
+            qlat: vec![0.0; RANK],
+            scores: Vec::new(),
+            idx: Vec::new(),
+            lat_sel: Vec::new(),
+            keys: Vec::new(),
+            vals: Vec::new(),
+            qr: Vec::new(),
+        }
+    }
+
+    fn append(&mut self, k: &[f32], v: &[f32]) {
+        let kvd = kvd();
+        let start = self.lat.len();
+        self.lat.resize(start + RANK, 0.0);
+        self.proj.project(k, &mut self.lat[start..start + RANK]);
+        let slot = self.len % self.recent_cap;
+        self.ring[slot * kvd..(slot + 1) * kvd].copy_from_slice(k);
+        self.store.append(v);
+        self.len += 1;
+    }
+
+    /// The pre-PR mask-based O(seq_len) selection merge (allocating).
+    fn mask_merge(seq_len: usize, sink: usize, recent: usize, critical: &[usize]) -> Vec<usize> {
+        let mut mask = vec![false; seq_len];
+        for m in mask.iter_mut().take(sink.min(seq_len)) {
+            *m = true;
+        }
+        for m in mask[seq_len.saturating_sub(recent)..].iter_mut() {
+            *m = true;
+        }
+        for &i in critical {
+            if i < seq_len {
+                mask[i] = true;
+            }
+        }
+        mask.iter().enumerate().filter_map(|(i, &m)| m.then_some(i)).collect()
+    }
+
+    /// One decode attend through the pre-PR pipeline, accumulating
+    /// per-stage wall times.
+    fn attend(&mut self, q: &[f32], out: &mut [f32], times: &mut SalsStageTimes) {
+        let kvd = kvd();
+        let t0 = Instant::now();
+        // Stage 1 (legacy): strided scan over the (len, r) rows.
+        self.proj.project(q, &mut self.qlat); // MHA: pooled query == q
+        self.scores.clear();
+        self.scores.reserve(self.len);
+        let ql = &self.qlat[..R_STAR];
+        for j in 0..self.len {
+            self.scores.push(dot(ql, &self.lat[j * RANK..j * RANK + R_STAR]));
+        }
+        let t1 = Instant::now();
+        // Stage 2 (legacy): top-k + mask merge.
+        top_k_indices_into(&self.scores, self.critical, &mut self.idx);
+        let sel = Self::mask_merge(self.len, SINK, RECENT, &self.idx);
+        let n_sel = sel.len();
+        let t2 = Instant::now();
+        // Stage 3 (legacy): gather + reconstruct ALL selected rows (recent
+        // rows included, then overwritten), per-row value get().
+        self.lat_sel.resize(n_sel * RANK, 0.0);
+        self.keys.resize(n_sel * kvd, 0.0);
+        self.vals.resize(n_sel * kvd, 0.0);
+        for (row, &j) in sel.iter().enumerate() {
+            self.lat_sel[row * RANK..(row + 1) * RANK]
+                .copy_from_slice(&self.lat[j * RANK..(j + 1) * RANK]);
+        }
+        matmul(&self.lat_sel, &self.u_t, &mut self.keys, n_sel, RANK, kvd);
+        for (row, &j) in sel.iter().enumerate() {
+            if j + self.recent_cap >= self.len {
+                let slot = j % self.recent_cap;
+                self.keys[row * kvd..(row + 1) * kvd]
+                    .copy_from_slice(&self.ring[slot * kvd..(slot + 1) * kvd]);
+            }
+            self.rope.apply_multihead(&mut self.keys[row * kvd..(row + 1) * kvd], j);
+            self.store.get(j, &mut self.vals[row * kvd..(row + 1) * kvd]);
+        }
+        let t3 = Instant::now();
+        // Stage 4 (legacy): per-head strided dot/axpy exact attention with
+        // the per-call scores allocation.
+        self.qr.clear();
+        self.qr.extend_from_slice(q);
+        self.rope.apply_multihead(&mut self.qr, self.len - 1);
+        let scale = 1.0 / (HEAD_DIM as f32).sqrt();
+        let mut s = vec![0.0f32; n_sel];
+        out.fill(0.0);
+        for h in 0..N_HEADS {
+            let qh = &self.qr[h * HEAD_DIM..(h + 1) * HEAD_DIM];
+            for (j, sj) in s.iter_mut().enumerate() {
+                let krow = &self.keys[j * kvd + h * HEAD_DIM..j * kvd + (h + 1) * HEAD_DIM];
+                *sj = dot(qh, krow) * scale;
+            }
+            softmax(&mut s);
+            let oh = &mut out[h * HEAD_DIM..(h + 1) * HEAD_DIM];
+            for (j, &p) in s.iter().enumerate() {
+                let vrow = &self.vals[j * kvd + h * HEAD_DIM..j * kvd + (h + 1) * HEAD_DIM];
+                axpy(p, vrow, oh);
+            }
+        }
+        let t4 = Instant::now();
+        times.score += (t1 - t0).as_secs_f64();
+        times.select += (t2 - t1).as_secs_f64();
+        times.reconstruct += (t3 - t2).as_secs_f64();
+        times.attend += (t4 - t3).as_secs_f64();
+    }
+}
+
+struct CtxResult {
+    packed: SalsStageTimes,
+    legacy: SalsStageTimes,
+    speedup: f64,
+    score_bytes_per_ctx_token: f64,
+}
+
+fn run_context(ctx: usize, reps: usize, decode_tokens: usize, rng: &mut Rng) -> CtxResult {
+    let kvd = kvd();
+    let qd = N_HEADS * HEAD_DIM;
+    let max_seq = ctx + 8;
+    let shape = sals::attention::AttnShape::mha(N_HEADS, HEAD_DIM, max_seq);
+    let proj = make_projector(rng);
+    let critical = critical_for(ctx);
+    let cfg = SalsConfig {
+        rank: RANK,
+        r_star: R_STAR,
+        sink: SINK,
+        recent: RECENT,
+        critical,
+        v_bits: V_BITS,
+        group: QGROUP,
+    };
+    let mut packed = SalsAttention::new(shape, cfg, proj.clone());
+    let mut legacy = Legacy::new(proj, max_seq, critical);
+
+    // Prefill both to `ctx` tokens from the same stream (chunked batched
+    // appends for the packed path, per-row appends for the legacy one).
+    const CHUNK: usize = 1024;
+    let mut done = 0;
+    while done < ctx {
+        let n = CHUNK.min(ctx - done);
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        packed.append_batch(&ks, &vs, n);
+        for t in 0..n {
+            legacy.append(&ks[t * kvd..(t + 1) * kvd], &vs[t * kvd..(t + 1) * kvd]);
+        }
+        done += n;
+    }
+    packed.end_prefill();
+
+    // Score-stage traffic probe: the panel scan must meter ≈ r*·4 bytes
+    // per context token.
+    let q = rng.normal_vec(qd, 1.0);
+    let before = packed.traffic().read;
+    let _ = packed.latent_scores(&q);
+    let score_bytes_per_ctx_token = (packed.traffic().read - before) as f64 / ctx as f64;
+
+    // Attends do not mutate cache state, so both paths are timed against
+    // the identical frozen context; best-of-`reps` per path.
+    let mut out = vec![0.0f32; qd];
+    let mut best_packed = SalsStageTimes::default();
+    let mut best_legacy = SalsStageTimes::default();
+    let (mut best_packed_total, mut best_legacy_total) = (f64::INFINITY, f64::INFINITY);
+    for _ in 0..reps {
+        let mut tp = SalsStageTimes::default();
+        for _ in 0..decode_tokens {
+            packed.attend_instrumented(&q, &mut out, &mut tp);
+        }
+        if tp.total() < best_packed_total {
+            best_packed_total = tp.total();
+            best_packed = tp;
+        }
+        let mut tl = SalsStageTimes::default();
+        for _ in 0..decode_tokens {
+            legacy.attend(&q, &mut out, &mut tl);
+        }
+        if tl.total() < best_legacy_total {
+            best_legacy_total = tl.total();
+            best_legacy = tl;
+        }
+    }
+    let scale_to_per_token = |t: SalsStageTimes| SalsStageTimes {
+        score: t.score / decode_tokens as f64,
+        select: t.select / decode_tokens as f64,
+        reconstruct: t.reconstruct / decode_tokens as f64,
+        attend: t.attend / decode_tokens as f64,
+    };
+    let packed_t = scale_to_per_token(best_packed);
+    let legacy_t = scale_to_per_token(best_legacy);
+    CtxResult {
+        packed: packed_t,
+        legacy: legacy_t,
+        speedup: legacy_t.total() / packed_t.total(),
+        score_bytes_per_ctx_token,
+    }
+}
+
+fn main() {
+    let quick = std::env::var("SALS_BENCH_QUICK").is_ok();
+    let (reps, decode_tokens) = if quick { (3, 5) } else { (3, 10) };
+    let mut rng = Rng::new(2026);
+
+    let mut table = Table::new(
+        "SALS decode hot path — per-token stage times (µs), packed vs legacy",
+        &["Ctx", "Path", "Score", "Select", "Reconstruct", "Attend", "Total", "Speedup"],
+    );
+    let mut rows: Vec<Json> = Vec::new();
+    let mut speedup_32k = 0.0;
+    let mut score_bytes_ok = true;
+    let rstar_bytes = (R_STAR * 4) as f64;
+
+    for &ctx in &CONTEXTS {
+        let res = run_context(ctx, reps, decode_tokens, &mut rng);
+        let us = 1e6;
+        for (path, t, speed) in [
+            ("legacy", res.legacy, String::new()),
+            ("packed", res.packed, format!("{:.2}x", res.speedup)),
+        ] {
+            table.row(vec![
+                ctx.to_string(),
+                path.to_string(),
+                format!("{:.1}", t.score * us),
+                format!("{:.1}", t.select * us),
+                format!("{:.1}", t.reconstruct * us),
+                format!("{:.1}", t.attend * us),
+                format!("{:.1}", t.total() * us),
+                speed,
+            ]);
+            rows.push(
+                Json::obj()
+                    .field("ctx", ctx)
+                    .field("path", path)
+                    .field("score_us", t.score * us)
+                    .field("select_us", t.select * us)
+                    .field("reconstruct_us", t.reconstruct * us)
+                    .field("attend_us", t.attend * us)
+                    .field("total_us", t.total() * us),
+            );
+        }
+        println!(
+            "ctx {ctx}: score stage streams {:.1} B/ctx-token (r*·4 = {rstar_bytes}, r·4 = {})",
+            res.score_bytes_per_ctx_token,
+            RANK * 4
+        );
+        // The meter must reflect the panel scan: r*·4, not r·4.
+        score_bytes_ok &= res.score_bytes_per_ctx_token <= rstar_bytes * 1.01;
+        if ctx == 32768 {
+            speedup_32k = res.speedup;
+        }
+    }
+    table.print();
+
+    let accepted = speedup_32k >= 1.5 && score_bytes_ok;
+    println!(
+        "acceptance: 32K attend-operator speedup {speedup_32k:.2}x {} 1.5x, score bytes/ctx-token {} r*·4",
+        if speedup_32k >= 1.5 { ">=" } else { "<" },
+        if score_bytes_ok { "==" } else { "!=" },
+    );
+
+    let doc = Json::obj()
+        .field("bench", "sals_hotpath")
+        .field(
+            "config",
+            "mha n_heads=4 head_dim=32 kvd=128 rank=16 r_star=8 v_bits=2 sink=4 recent=64 critical=ctx/256",
+        )
+        .field("quick", quick)
+        .field("decode_tokens", decode_tokens)
+        .field("reps", reps)
+        .field("speedup_32k", speedup_32k)
+        .field("score_bytes_per_ctx_token_ok", score_bytes_ok)
+        .field("accepted", accepted)
+        .field("rows", Json::Arr(rows));
+    std::fs::write("BENCH_sals_hotpath.json", doc.to_string()).expect("write BENCH_sals_hotpath.json");
+    println!("wrote BENCH_sals_hotpath.json");
+    if !accepted {
+        std::process::exit(1);
+    }
+}

@@ -1,7 +1,65 @@
-//! Shared plumbing for baseline backends: a dense post-RoPE KV cache.
+//! Shared plumbing for baseline backends: a dense post-RoPE KV cache plus
+//! the backend-owned decode scratch that keeps every baseline's hot path
+//! allocation-free (the `attention/mod.rs` decode hot-path contract).
 
 use crate::attention::{AttnShape, Traffic};
 use crate::rope::RopeTable;
+use crate::tensor::ops::SparseAttendScratch;
+
+/// Per-backend decode scratch shared by the DenseCache baselines. Every
+/// per-(layer, token) buffer the selection→gather→attend pipeline needs
+/// lives here and grows to its high-water mark; steady-state decode never
+/// heap-allocates.
+#[derive(Default)]
+pub struct BaselineScratch {
+    /// Rotated query (q_dim).
+    pub qr: Vec<f32>,
+    /// Query heads mean-pooled per KV group (kv_dim).
+    pub pooled: Vec<f32>,
+    /// Per-token (or per-page) approximate scores.
+    pub scores: Vec<f32>,
+    /// Top-k output.
+    pub idx: Vec<usize>,
+    /// Expanded critical candidates (page→token expansion etc.).
+    pub crit: Vec<usize>,
+    /// Sort/dedup staging for [`crate::attention::merge_selection_into`].
+    pub crit_sorted: Vec<usize>,
+    /// Merged sorted selection.
+    pub sel: Vec<usize>,
+    /// Gathered key rows ((n_sel, kv_dim)).
+    pub keys: Vec<f32>,
+    /// Gathered value rows ((n_sel, kv_dim)).
+    pub vals: Vec<f32>,
+    /// Panel/tile buffers for [`crate::tensor::ops::sparse_attend`].
+    pub attend: SparseAttendScratch,
+    /// Projection/label staging (Loki query latent, DoubleSparse channel
+    /// gather, Loki append-row latent).
+    pub lat: Vec<f32>,
+}
+
+/// Mean-pool a rotated query's heads per KV group into (kv_dim) — the
+/// leader-query used for approximate scoring by SALS, Loki, DoubleSparse,
+/// HShare, and Quest (see DESIGN.md §3 on GQA pooling). `pooled` is a
+/// reused buffer.
+pub fn pool_query(shape: &AttnShape, qr: &[f32], pooled: &mut Vec<f32>) {
+    let d = shape.head_dim;
+    let kvd = shape.kv_dim();
+    let group = shape.group_size();
+    pooled.resize(kvd, 0.0);
+    if group == 1 {
+        pooled.copy_from_slice(&qr[..kvd]);
+        return;
+    }
+    pooled.fill(0.0);
+    let inv = 1.0 / group as f32;
+    for h in 0..shape.n_heads {
+        let kvh = h / group;
+        let qh = &qr[h * d..(h + 1) * d];
+        for (a, &b) in pooled[kvh * d..(kvh + 1) * d].iter_mut().zip(qh) {
+            *a += b * inv;
+        }
+    }
+}
 
 /// Dense fp32 KV cache with keys rotated at append time. Most token-sparse
 /// baselines (Loki, DoubleSparse, HShare, Quest, StreamingLLM) keep the full
@@ -22,14 +80,15 @@ impl DenseCache {
         DenseCache { shape, rope, keys: Vec::new(), values: Vec::new(), len: 0 }
     }
 
-    /// Append pre-RoPE key (rotated here) + value.
+    /// Append pre-RoPE key (rotated in place after the copy — no temporary
+    /// row allocation) + value.
     pub fn append(&mut self, k: &[f32], v: &[f32], traffic: &mut Traffic) {
         let kvd = self.shape.kv_dim();
         assert_eq!(k.len(), kvd);
         assert_eq!(v.len(), kvd);
-        let mut kr = k.to_vec();
-        self.rope.apply_multihead(&mut kr, self.len);
-        self.keys.extend_from_slice(&kr);
+        let base = self.keys.len();
+        self.keys.extend_from_slice(k);
+        self.rope.apply_multihead(&mut self.keys[base..], self.len);
         self.values.extend_from_slice(v);
         self.len += 1;
         traffic.write_f32(2 * kvd);
@@ -48,11 +107,6 @@ impl DenseCache {
         self.values.extend_from_slice(vs);
         self.len += n;
         traffic.write_f32(2 * n * kvd);
-    }
-
-    /// Rotate a query for the current decode position (len - 1).
-    pub fn rotate_query(&self, q: &[f32]) -> Vec<f32> {
-        self.rotate_query_at(q, self.len - 1)
     }
 
     /// The shared `prefill_attend` loop for DenseCache-backed baselines:
@@ -75,25 +129,41 @@ impl DenseCache {
         }
     }
 
-    /// Rotate a query for an explicit absolute position (batched prefill
-    /// rotates each chunk row at its own position, not at len - 1).
-    pub fn rotate_query_at(&self, q: &[f32], pos: usize) -> Vec<f32> {
-        let mut qr = q.to_vec();
-        self.rope.apply_multihead(&mut qr, pos);
-        qr
+    /// Rotate a query for an explicit absolute position into a reused
+    /// buffer, allocation-free (batched prefill rotates each chunk row at
+    /// its own position; decode rotates at `len - 1`).
+    pub fn rotate_query_into(&self, q: &[f32], pos: usize, out: &mut Vec<f32>) {
+        out.clear();
+        out.extend_from_slice(q);
+        self.rope.apply_multihead(out, pos);
     }
 
     /// Gather rows of keys+values for a selection, metering reads.
+    /// Allocates; decode hot paths use [`DenseCache::gather_into`].
     pub fn gather(&self, sel: &[usize], traffic: &mut Traffic) -> (Vec<f32>, Vec<f32>) {
+        let (mut ks, mut vs) = (Vec::new(), Vec::new());
+        self.gather_into(sel, &mut ks, &mut vs, traffic);
+        (ks, vs)
+    }
+
+    /// Allocation-free K/V row gather into reused (n_sel, kv_dim) buffers.
+    pub fn gather_into(
+        &self,
+        sel: &[usize],
+        ks: &mut Vec<f32>,
+        vs: &mut Vec<f32>,
+        traffic: &mut Traffic,
+    ) {
         let kvd = self.shape.kv_dim();
-        let mut ks = Vec::with_capacity(sel.len() * kvd);
-        let mut vs = Vec::with_capacity(sel.len() * kvd);
+        ks.clear();
+        vs.clear();
+        ks.reserve(sel.len() * kvd);
+        vs.reserve(sel.len() * kvd);
         for &j in sel {
             ks.extend_from_slice(&self.keys[j * kvd..(j + 1) * kvd]);
             vs.extend_from_slice(&self.values[j * kvd..(j + 1) * kvd]);
         }
         traffic.read_f32(2 * sel.len() * kvd);
-        (ks, vs)
     }
 
     pub fn kv_bytes(&self) -> usize {
@@ -164,5 +234,17 @@ mod tests {
         c.append(&k, &k, &mut t); // pos 1: rotated
         assert_eq!(&c.keys[..4], k.as_slice());
         assert_ne!(&c.keys[4..8], k.as_slice());
+    }
+
+    #[test]
+    fn pool_query_mha_is_identity_gqa_is_mean() {
+        let mha = AttnShape::mha(2, 4, 16);
+        let q = vec![1.0f32, 2., 3., 4., 5., 6., 7., 8.];
+        let mut pooled = Vec::new();
+        pool_query(&mha, &q, &mut pooled);
+        assert_eq!(pooled, q);
+        let gqa = AttnShape::gqa(2, 1, 4, 16);
+        pool_query(&gqa, &q, &mut pooled);
+        assert_eq!(pooled, vec![3.0, 4.0, 5.0, 6.0]);
     }
 }

@@ -7,22 +7,25 @@
 //! tokens from the full-precision cache. Like Loki/HShare it reduces
 //! traffic, not resident memory.
 
-use crate::attention::baselines::common::DenseCache;
+use crate::attention::baselines::common::{pool_query, BaselineScratch, DenseCache};
 use crate::attention::{
-    exact_attention, merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic,
+    merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
 };
-use crate::tensor::top_k_indices;
+use crate::tensor::ops::sparse_attend;
+use crate::tensor::{top_k_indices, top_k_indices_into};
 
 pub struct DoubleSparseAttention {
     cache: DenseCache,
     /// Offline-selected important channel indices (into kv_dim).
     channels: Vec<usize>,
-    /// (len, channels.len()) label cache: selected channels of rotated keys.
+    /// (len, channels.len()) label cache: selected channels of rotated
+    /// keys — contiguous rows, so scoring is a unit-stride matmul_tn.
     labels: Vec<f32>,
     sink: usize,
     recent: usize,
     critical: usize,
     traffic: Traffic,
+    scratch: BaselineScratch,
 }
 
 impl DoubleSparseAttention {
@@ -43,6 +46,7 @@ impl DoubleSparseAttention {
             recent,
             critical,
             traffic: Traffic::default(),
+            scratch: BaselineScratch::default(),
         }
     }
 
@@ -78,30 +82,54 @@ impl AttentionBackend for DoubleSparseAttention {
 
     fn attend(&mut self, q: &[f32], out: &mut [f32]) {
         assert!(self.cache.len > 0);
-        let qr = self.cache.rotate_query(q);
         let shape = self.cache.shape;
-        let (d, group) = (shape.head_dim, shape.group_size());
+        let len = self.cache.len;
+        self.cache.rotate_query_into(q, len - 1, &mut self.scratch.qr);
         // Pool rotated query heads to kv_dim, pick the important channels.
-        let kvd = shape.kv_dim();
-        let mut pooled = vec![0.0f32; kvd];
-        let inv = 1.0 / group as f32;
-        for h in 0..shape.n_heads {
-            let kvh = h / group;
-            for (a, &b) in pooled[kvh * d..(kvh + 1) * d].iter_mut().zip(&qr[h * d..(h + 1) * d]) {
-                *a += b * inv;
-            }
+        pool_query(&shape, &self.scratch.qr, &mut self.scratch.pooled);
+        self.scratch.lat.clear();
+        for &c in &self.channels {
+            self.scratch.lat.push(self.scratch.pooled[c]);
         }
-        let qc: Vec<f32> = self.channels.iter().map(|&c| pooled[c]).collect();
         let nc = self.channels.len();
-        let mut scores = Vec::with_capacity(self.cache.len);
-        for j in 0..self.cache.len {
-            scores.push(crate::tensor::ops::dot(&qc, &self.labels[j * nc..(j + 1) * nc]));
-        }
-        self.traffic.read_f32(self.cache.len * nc);
-        let crit = top_k_indices(&scores, self.critical);
-        let sel = merge_selection(self.cache.len, self.sink, self.recent, &crit);
-        let (ks, vs) = self.cache.gather(&sel, &mut self.traffic);
-        exact_attention(&shape, &qr, &ks, &vs, sel.len(), out);
+        // Label-cache scoring: one unit-stride matmul_tn over the
+        // contiguous (len, nc) label rows.
+        self.scratch.scores.resize(len, 0.0);
+        crate::tensor::ops::matmul_tn(
+            &self.scratch.lat,
+            &self.labels,
+            &mut self.scratch.scores,
+            1,
+            nc,
+            len,
+        );
+        self.traffic.read_f32(len * nc);
+        top_k_indices_into(&self.scratch.scores, self.critical, &mut self.scratch.idx);
+        merge_selection_into(
+            len,
+            self.sink,
+            self.recent,
+            &self.scratch.idx,
+            &mut self.scratch.crit_sorted,
+            &mut self.scratch.sel,
+        );
+        self.cache.gather_into(
+            &self.scratch.sel,
+            &mut self.scratch.keys,
+            &mut self.scratch.vals,
+            &mut self.traffic,
+        );
+        sparse_attend(
+            &self.scratch.qr,
+            &self.scratch.keys,
+            &self.scratch.vals,
+            self.scratch.sel.len(),
+            shape.n_heads,
+            shape.n_kv_heads,
+            shape.head_dim,
+            &mut self.scratch.attend,
+            out,
+        );
     }
 
     fn len(&self) -> usize {

@@ -8,11 +8,12 @@
 //! step-level reuse; layer-level sharing is wired in the model layer by
 //! cloning the previous layer's index set (see `model::sparse_llama`).
 
-use crate::attention::baselines::common::DenseCache;
+use crate::attention::baselines::common::{pool_query, BaselineScratch, DenseCache};
 use crate::attention::{
-    exact_attention, merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic,
+    merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
 };
-use crate::tensor::top_k_indices;
+use crate::tensor::ops::sparse_attend;
+use crate::tensor::top_k_indices_into;
 
 pub struct HShareAttention {
     cache: DenseCache,
@@ -24,6 +25,7 @@ pub struct HShareAttention {
     steps: usize,
     shared_indices: Vec<usize>,
     traffic: Traffic,
+    scratch: BaselineScratch,
 }
 
 impl HShareAttention {
@@ -37,6 +39,7 @@ impl HShareAttention {
             steps: 0,
             shared_indices: Vec::new(),
             traffic: Traffic::default(),
+            scratch: BaselineScratch::default(),
         }
     }
 
@@ -60,34 +63,56 @@ impl AttentionBackend for HShareAttention {
 
     fn attend(&mut self, q: &[f32], out: &mut [f32]) {
         assert!(self.cache.len > 0);
-        let qr = self.cache.rotate_query(q);
         let shape = self.cache.shape;
-        let (d, kvd, group) = (shape.head_dim, shape.kv_dim(), shape.group_size());
+        let kvd = shape.kv_dim();
+        let len = self.cache.len;
+        self.cache.rotate_query_into(q, len - 1, &mut self.scratch.qr);
 
         let needs_refresh = self.steps % self.refresh == 0 || self.shared_indices.is_empty();
         if needs_refresh {
             // Leader scoring: pooled query against full keys (one head-group
-            // pass instead of n_heads passes — the head-level sharing).
-            let mut pooled = vec![0.0f32; kvd];
-            let inv = 1.0 / group as f32;
-            for h in 0..shape.n_heads {
-                let kvh = h / group;
-                for (a, &b) in pooled[kvh * d..(kvh + 1) * d].iter_mut().zip(&qr[h * d..(h + 1) * d]) {
-                    *a += b * inv;
-                }
-            }
-            let mut scores = Vec::with_capacity(self.cache.len);
-            for j in 0..self.cache.len {
-                scores.push(crate::tensor::ops::dot(&pooled, &self.cache.keys[j * kvd..(j + 1) * kvd]));
-            }
-            self.traffic.read_f32(self.cache.len * kvd);
-            self.shared_indices = top_k_indices(&scores, self.critical);
+            // pass instead of n_heads passes — the head-level sharing); the
+            // dense key rows are contiguous, so this is one matmul_tn.
+            pool_query(&shape, &self.scratch.qr, &mut self.scratch.pooled);
+            self.scratch.scores.resize(len, 0.0);
+            crate::tensor::ops::matmul_tn(
+                &self.scratch.pooled,
+                &self.cache.keys,
+                &mut self.scratch.scores,
+                1,
+                kvd,
+                len,
+            );
+            self.traffic.read_f32(len * kvd);
+            top_k_indices_into(&self.scratch.scores, self.critical, &mut self.shared_indices);
         }
         self.steps += 1;
 
-        let sel = merge_selection(self.cache.len, self.sink, self.recent, &self.shared_indices);
-        let (ks, vs) = self.cache.gather(&sel, &mut self.traffic);
-        exact_attention(&shape, &qr, &ks, &vs, sel.len(), out);
+        merge_selection_into(
+            len,
+            self.sink,
+            self.recent,
+            &self.shared_indices,
+            &mut self.scratch.crit_sorted,
+            &mut self.scratch.sel,
+        );
+        self.cache.gather_into(
+            &self.scratch.sel,
+            &mut self.scratch.keys,
+            &mut self.scratch.vals,
+            &mut self.traffic,
+        );
+        sparse_attend(
+            &self.scratch.qr,
+            &self.scratch.keys,
+            &self.scratch.vals,
+            self.scratch.sel.len(),
+            shape.n_heads,
+            shape.n_kv_heads,
+            shape.head_dim,
+            &mut self.scratch.attend,
+            out,
+        );
     }
 
     fn len(&self) -> usize {

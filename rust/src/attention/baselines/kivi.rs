@@ -3,9 +3,10 @@
 //! recent window. Attention itself stays dense (every token participates),
 //! so accuracy is high but traffic scales with the full sequence.
 
-use crate::attention::{exact_attention, AttentionBackend, AttnShape, FootprintModel, Traffic};
+use crate::attention::{AttentionBackend, AttnShape, FootprintModel, Traffic};
 use crate::quant::{Bits, TokenQuantStore};
 use crate::rope::RopeTable;
+use crate::tensor::ops::{sparse_attend, SparseAttendScratch};
 
 pub struct KiviAttention {
     shape: AttnShape,
@@ -20,6 +21,9 @@ pub struct KiviAttention {
     traffic: Traffic,
     scratch_k: Vec<f32>,
     scratch_v: Vec<f32>,
+    scratch_kr: Vec<f32>,
+    scratch_qr: Vec<f32>,
+    scratch_attend: SparseAttendScratch,
 }
 
 impl KiviAttention {
@@ -34,39 +38,51 @@ impl KiviAttention {
             traffic: Traffic::default(),
             scratch_k: Vec::new(),
             scratch_v: Vec::new(),
+            scratch_kr: Vec::new(),
+            scratch_qr: Vec::new(),
+            scratch_attend: SparseAttendScratch::default(),
         }
     }
 }
 
 impl AttentionBackend for KiviAttention {
     fn append(&mut self, k: &[f32], v: &[f32]) {
-        let kvd = self.shape.kv_dim();
-        let mut kr = k.to_vec();
-        self.rope.apply_multihead(&mut kr, self.len);
-        self.keys.append(&kr);
+        self.scratch_kr.clear();
+        self.scratch_kr.extend_from_slice(k);
+        self.rope.apply_multihead(&mut self.scratch_kr, self.len);
+        self.keys.append(&self.scratch_kr);
         self.values.append(v);
         self.len += 1;
         self.traffic.write_bytes(self.keys.row_read_bytes(self.len - 1));
         self.traffic.write_bytes(self.values.row_read_bytes(self.len - 1));
-        let _ = kvd;
     }
 
     fn attend(&mut self, q: &[f32], out: &mut [f32]) {
         assert!(self.len > 0);
         let kvd = self.shape.kv_dim();
-        let mut qr = q.to_vec();
-        self.rope.apply_multihead(&mut qr, self.len - 1);
-        // Dequantize the whole cache (dense attention), metering quantized
-        // byte counts — the bandwidth saving KIVI actually delivers.
+        self.scratch_qr.clear();
+        self.scratch_qr.extend_from_slice(q);
+        self.rope.apply_multihead(&mut self.scratch_qr, self.len - 1);
+        // Dequantize the whole cache (dense attention) with the
+        // page-coherent sequential walk, metering the quantized bytes the
+        // stream actually moves — the bandwidth saving KIVI delivers.
         self.scratch_k.resize(self.len * kvd, 0.0);
         self.scratch_v.resize(self.len * kvd, 0.0);
-        for j in 0..self.len {
-            self.keys.get(j, &mut self.scratch_k[j * kvd..(j + 1) * kvd]);
-            self.values.get(j, &mut self.scratch_v[j * kvd..(j + 1) * kvd]);
-            self.traffic.read_bytes(self.keys.row_read_bytes(j));
-            self.traffic.read_bytes(self.values.row_read_bytes(j));
-        }
-        exact_attention(&self.shape, &qr, &self.scratch_k, &self.scratch_v, self.len, out);
+        self.keys.read_all(&mut self.scratch_k);
+        self.values.read_all(&mut self.scratch_v);
+        self.traffic.read_bytes(self.keys.read_all_bytes());
+        self.traffic.read_bytes(self.values.read_all_bytes());
+        sparse_attend(
+            &self.scratch_qr,
+            &self.scratch_k,
+            &self.scratch_v,
+            self.len,
+            self.shape.n_heads,
+            self.shape.n_kv_heads,
+            self.shape.head_dim,
+            &mut self.scratch_attend,
+            out,
+        );
     }
 
     fn len(&self) -> usize {

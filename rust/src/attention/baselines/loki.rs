@@ -7,12 +7,13 @@
 //! Table 1: memory "Median"). SALS's §3.1 argument is precisely that this
 //! post-RoPE latent space needs a higher rank for the same fidelity.
 
-use crate::attention::baselines::common::DenseCache;
+use crate::attention::baselines::common::{pool_query, BaselineScratch, DenseCache};
 use crate::attention::{
-    exact_attention, merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic,
+    merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
 };
 use crate::lowrank::Projector;
-use crate::tensor::top_k_indices;
+use crate::tensor::ops::sparse_attend;
+use crate::tensor::top_k_indices_into;
 
 pub struct LokiAttention {
     cache: DenseCache,
@@ -20,12 +21,14 @@ pub struct LokiAttention {
     projector: Projector,
     /// Scoring dims (Loki's r).
     r: usize,
-    /// (len, r) latent copies of the rotated keys, for scoring only.
+    /// (len, r) latent copies of the rotated keys, for scoring only —
+    /// contiguous r-length rows, so scoring is a unit-stride matmul_tn.
     latents: Vec<f32>,
     sink: usize,
     recent: usize,
     critical: usize,
     traffic: Traffic,
+    scratch: BaselineScratch,
 }
 
 impl LokiAttention {
@@ -49,6 +52,7 @@ impl LokiAttention {
             recent,
             critical,
             traffic: Traffic::default(),
+            scratch: BaselineScratch::default(),
         }
     }
 }
@@ -58,40 +62,63 @@ impl AttentionBackend for LokiAttention {
         self.cache.append(k, v, &mut self.traffic);
         // Latent copy of the *rotated* key (post-RoPE PCA).
         let kvd = self.cache.shape.kv_dim();
+        self.scratch.lat.resize(self.projector.rank, 0.0);
         let rot = &self.cache.keys[(self.cache.len - 1) * kvd..self.cache.len * kvd];
-        let mut lat = vec![0.0f32; self.projector.rank];
-        self.projector.project(rot, &mut lat);
-        self.latents.extend_from_slice(&lat[..self.r]);
+        self.projector.project(rot, &mut self.scratch.lat);
+        self.latents.extend_from_slice(&self.scratch.lat[..self.r]);
         self.traffic.write_f32(self.r);
     }
 
     fn attend(&mut self, q: &[f32], out: &mut [f32]) {
         assert!(self.cache.len > 0);
-        let qr = self.cache.rotate_query(q);
+        let shape = self.cache.shape;
+        let len = self.cache.len;
+        self.cache.rotate_query_into(q, len - 1, &mut self.scratch.qr);
         // Pool rotated query heads to kv_dim, then project (mirrors SALS's
         // GQA handling so the comparison is apples-to-apples).
-        let shape = self.cache.shape;
-        let (d, kvd, group) = (shape.head_dim, shape.kv_dim(), shape.group_size());
-        let mut pooled = vec![0.0f32; kvd];
-        let inv = 1.0 / group as f32;
-        for h in 0..shape.n_heads {
-            let kvh = h / group;
-            for (a, &b) in pooled[kvh * d..(kvh + 1) * d].iter_mut().zip(&qr[h * d..(h + 1) * d]) {
-                *a += b * inv;
-            }
-        }
-        let mut qlat = vec![0.0f32; self.projector.rank];
-        self.projector.project(&pooled, &mut qlat);
-        // Score all tokens in the post-RoPE latent space.
-        let mut scores = Vec::with_capacity(self.cache.len);
-        for j in 0..self.cache.len {
-            scores.push(crate::tensor::ops::dot(&qlat[..self.r], &self.latents[j * self.r..(j + 1) * self.r]));
-        }
-        self.traffic.read_f32(self.cache.len * self.r);
-        let crit = top_k_indices(&scores, self.critical);
-        let sel = merge_selection(self.cache.len, self.sink, self.recent, &crit);
-        let (ks, vs) = self.cache.gather(&sel, &mut self.traffic);
-        exact_attention(&shape, &qr, &ks, &vs, sel.len(), out);
+        pool_query(&shape, &self.scratch.qr, &mut self.scratch.pooled);
+        self.scratch.lat.resize(self.projector.rank, 0.0);
+        let pooled = std::mem::take(&mut self.scratch.pooled);
+        self.projector.project(&pooled, &mut self.scratch.lat);
+        self.scratch.pooled = pooled;
+        // Score all tokens in the post-RoPE latent space: one unit-stride
+        // matmul_tn over the contiguous (len, r) latent rows.
+        self.scratch.scores.resize(len, 0.0);
+        crate::tensor::ops::matmul_tn(
+            &self.scratch.lat[..self.r],
+            &self.latents,
+            &mut self.scratch.scores,
+            1,
+            self.r,
+            len,
+        );
+        self.traffic.read_f32(len * self.r);
+        top_k_indices_into(&self.scratch.scores, self.critical, &mut self.scratch.idx);
+        merge_selection_into(
+            len,
+            self.sink,
+            self.recent,
+            &self.scratch.idx,
+            &mut self.scratch.crit_sorted,
+            &mut self.scratch.sel,
+        );
+        self.cache.gather_into(
+            &self.scratch.sel,
+            &mut self.scratch.keys,
+            &mut self.scratch.vals,
+            &mut self.traffic,
+        );
+        sparse_attend(
+            &self.scratch.qr,
+            &self.scratch.keys,
+            &self.scratch.vals,
+            self.scratch.sel.len(),
+            shape.n_heads,
+            shape.n_kv_heads,
+            shape.head_dim,
+            &mut self.scratch.attend,
+            out,
+        );
     }
 
     fn len(&self) -> usize {

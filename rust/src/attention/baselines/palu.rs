@@ -7,10 +7,11 @@
 //! charges Palu with "High" computation. Optional latent quantization
 //! mirrors Palu's 3-bit variant (we use the nearest supported width).
 
-use crate::attention::{exact_attention, AttentionBackend, AttnShape, FootprintModel, Traffic};
+use crate::attention::{AttentionBackend, AttnShape, FootprintModel, Traffic};
 use crate::lowrank::Projector;
 use crate::quant::{dequantize_group, quantize_group, Bits, QuantGroup};
 use crate::rope::RopeTable;
+use crate::tensor::ops::{sparse_attend, SparseAttendScratch};
 
 pub struct PaluAttention {
     shape: AttnShape,
@@ -28,6 +29,9 @@ pub struct PaluAttention {
     traffic: Traffic,
     scratch_k: Vec<f32>,
     scratch_v: Vec<f32>,
+    scratch_qr: Vec<f32>,
+    scratch_lat: Vec<f32>,
+    scratch_attend: SparseAttendScratch,
 }
 
 impl PaluAttention {
@@ -58,6 +62,9 @@ impl PaluAttention {
             traffic: Traffic::default(),
             scratch_k: Vec::new(),
             scratch_v: Vec::new(),
+            scratch_qr: Vec::new(),
+            scratch_lat: Vec::new(),
+            scratch_attend: SparseAttendScratch::default(),
         }
     }
 
@@ -80,17 +87,19 @@ impl PaluAttention {
 impl AttentionBackend for PaluAttention {
     fn append(&mut self, k: &[f32], v: &[f32]) {
         let r = self.rank;
-        let mut klat = vec![0.0f32; r];
-        let mut vlat = vec![0.0f32; r];
-        self.k_proj.project(k, &mut klat);
-        self.v_proj.project(v, &mut vlat);
+        let mut lat = std::mem::take(&mut self.scratch_lat);
+        lat.resize(2 * r, 0.0);
+        let (klat, vlat) = lat.split_at_mut(r);
+        self.k_proj.project(k, klat);
+        self.v_proj.project(v, vlat);
         if let Some(bits) = self.quant_bits {
-            self.k_quant.push(quantize_group(&klat, bits));
-            self.v_quant.push(quantize_group(&vlat, bits));
+            self.k_quant.push(quantize_group(klat, bits));
+            self.v_quant.push(quantize_group(vlat, bits));
         } else {
-            self.k_latents.extend_from_slice(&klat);
-            self.v_latents.extend_from_slice(&vlat);
+            self.k_latents.extend_from_slice(klat);
+            self.v_latents.extend_from_slice(vlat);
         }
+        self.scratch_lat = lat;
         self.traffic.write_bytes(2 * self.latent_row_bytes());
         self.len += 1;
     }
@@ -99,23 +108,36 @@ impl AttentionBackend for PaluAttention {
         assert!(self.len > 0);
         let kvd = self.shape.kv_dim();
         let r = self.rank;
-        let mut qr = q.to_vec();
-        self.rope.apply_multihead(&mut qr, self.len - 1);
+        self.scratch_qr.clear();
+        self.scratch_qr.extend_from_slice(q);
+        self.rope.apply_multihead(&mut self.scratch_qr, self.len - 1);
 
         // FULL reconstruction of the key and value caches — the Figure-1(a)
         // overhead: O(s·r·kv_dim) work and O(s·r) cache traffic per step.
         self.scratch_k.resize(self.len * kvd, 0.0);
         self.scratch_v.resize(self.len * kvd, 0.0);
-        let mut lat = vec![0.0f32; r];
+        let mut lat = std::mem::take(&mut self.scratch_lat);
+        lat.resize(2 * r, 0.0);
         for j in 0..self.len {
-            self.latent_row(&self.k_quant, &self.k_latents, j, &mut lat);
-            self.k_proj.reconstruct(&lat, &mut self.scratch_k[j * kvd..(j + 1) * kvd]);
+            self.latent_row(&self.k_quant, &self.k_latents, j, &mut lat[..r]);
+            self.k_proj.reconstruct(&lat[..r], &mut self.scratch_k[j * kvd..(j + 1) * kvd]);
             self.rope.apply_multihead(&mut self.scratch_k[j * kvd..(j + 1) * kvd], j);
-            self.latent_row(&self.v_quant, &self.v_latents, j, &mut lat);
-            self.v_proj.reconstruct(&lat, &mut self.scratch_v[j * kvd..(j + 1) * kvd]);
+            self.latent_row(&self.v_quant, &self.v_latents, j, &mut lat[..r]);
+            self.v_proj.reconstruct(&lat[..r], &mut self.scratch_v[j * kvd..(j + 1) * kvd]);
             self.traffic.read_bytes(2 * self.latent_row_bytes());
         }
-        exact_attention(&self.shape, &qr, &self.scratch_k, &self.scratch_v, self.len, out);
+        self.scratch_lat = lat;
+        sparse_attend(
+            &self.scratch_qr,
+            &self.scratch_k,
+            &self.scratch_v,
+            self.len,
+            self.shape.n_heads,
+            self.shape.n_kv_heads,
+            self.shape.head_dim,
+            &mut self.scratch_attend,
+            out,
+        );
     }
 
     fn len(&self) -> usize {

@@ -5,11 +5,12 @@
 //! upper-bound score Σ_c max(q_c·min_c, q_c·max_c); the top pages within the
 //! token budget are selected and *all* their tokens attend exactly.
 
-use crate::attention::baselines::common::DenseCache;
+use crate::attention::baselines::common::{pool_query, BaselineScratch, DenseCache};
 use crate::attention::{
-    exact_attention, merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic,
+    merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
 };
-use crate::tensor::top_k_indices;
+use crate::tensor::ops::sparse_attend;
+use crate::tensor::top_k_indices_into;
 
 pub struct QuestAttention {
     cache: DenseCache,
@@ -22,6 +23,7 @@ pub struct QuestAttention {
     /// Token budget for selected pages.
     budget: usize,
     traffic: Traffic,
+    scratch: BaselineScratch,
 }
 
 impl QuestAttention {
@@ -36,6 +38,7 @@ impl QuestAttention {
             recent,
             budget,
             traffic: Traffic::default(),
+            scratch: BaselineScratch::default(),
         }
     }
 
@@ -69,42 +72,58 @@ impl QuestAttention {
     /// so selection can differ slightly from token-at-a-time execution.)
     fn attend_at(&mut self, q: &[f32], pos: usize, out: &mut [f32]) {
         let vis = pos + 1;
-        let qr = self.cache.rotate_query_at(q, pos);
         let shape = self.cache.shape;
-        let (d, kvd, group) = (shape.head_dim, shape.kv_dim(), shape.group_size());
+        let kvd = shape.kv_dim();
+        self.cache.rotate_query_into(q, pos, &mut self.scratch.qr);
         // Pooled rotated query (kv_dim) for page scoring.
-        let mut pooled = vec![0.0f32; kvd];
-        let inv = 1.0 / group as f32;
-        for h in 0..shape.n_heads {
-            let kvh = h / group;
-            for (a, &b) in pooled[kvh * d..(kvh + 1) * d].iter_mut().zip(&qr[h * d..(h + 1) * d]) {
-                *a += b * inv;
-            }
-        }
+        pool_query(&shape, &self.scratch.qr, &mut self.scratch.pooled);
         // Upper-bound scores over the pages intersecting the prefix.
         let np = vis.div_ceil(self.page);
-        let mut pscores = Vec::with_capacity(np);
+        self.scratch.scores.clear();
+        self.scratch.scores.reserve(np);
         for p in 0..np {
             let mut s = 0.0f32;
             for c in 0..kvd {
-                let qv = pooled[c];
+                let qv = self.scratch.pooled[c];
                 s += (qv * self.page_min[p * kvd + c]).max(qv * self.page_max[p * kvd + c]);
             }
-            pscores.push(s);
+            self.scratch.scores.push(s);
         }
         self.traffic.read_f32(2 * np * kvd);
-        // Select top pages within the token budget.
+        // Select top pages within the token budget, expand to tokens.
         let pages_allowed = (self.budget / self.page).max(1);
-        let top_pages = top_k_indices(&pscores, pages_allowed);
-        let mut crit = Vec::with_capacity(pages_allowed * self.page);
-        for &p in &top_pages {
+        top_k_indices_into(&self.scratch.scores, pages_allowed, &mut self.scratch.idx);
+        self.scratch.crit.clear();
+        for &p in &self.scratch.idx {
             let lo = p * self.page;
             let hi = ((p + 1) * self.page).min(vis);
-            crit.extend(lo..hi);
+            self.scratch.crit.extend(lo..hi);
         }
-        let sel = merge_selection(vis, self.sink, self.recent, &crit);
-        let (ks, vs) = self.cache.gather(&sel, &mut self.traffic);
-        exact_attention(&shape, &qr, &ks, &vs, sel.len(), out);
+        merge_selection_into(
+            vis,
+            self.sink,
+            self.recent,
+            &self.scratch.crit,
+            &mut self.scratch.crit_sorted,
+            &mut self.scratch.sel,
+        );
+        self.cache.gather_into(
+            &self.scratch.sel,
+            &mut self.scratch.keys,
+            &mut self.scratch.vals,
+            &mut self.traffic,
+        );
+        sparse_attend(
+            &self.scratch.qr,
+            &self.scratch.keys,
+            &self.scratch.vals,
+            self.scratch.sel.len(),
+            shape.n_heads,
+            shape.n_kv_heads,
+            shape.head_dim,
+            &mut self.scratch.attend,
+            out,
+        );
     }
 }
 

@@ -2,21 +2,29 @@
 //! attention sinks (first tokens) + a sliding recent window, nothing else.
 //! Table 1 classifies it "Fixed pattern / low data movement / low accuracy".
 
-use crate::attention::baselines::common::DenseCache;
+use crate::attention::baselines::common::{BaselineScratch, DenseCache};
 use crate::attention::{
-    exact_attention, merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic,
+    merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
 };
+use crate::tensor::ops::sparse_attend;
 
 pub struct StreamingLlmAttention {
     cache: DenseCache,
     sink: usize,
     recent: usize,
     traffic: Traffic,
+    scratch: BaselineScratch,
 }
 
 impl StreamingLlmAttention {
     pub fn new(shape: AttnShape, sink: usize, recent: usize) -> StreamingLlmAttention {
-        StreamingLlmAttention { cache: DenseCache::new(shape), sink, recent, traffic: Traffic::default() }
+        StreamingLlmAttention {
+            cache: DenseCache::new(shape),
+            sink,
+            recent,
+            traffic: Traffic::default(),
+            scratch: BaselineScratch::default(),
+        }
     }
 
     /// Attend for the query at absolute position `pos` (visible prefix
@@ -25,10 +33,33 @@ impl StreamingLlmAttention {
     /// reproduces the sequential outputs bit-for-bit.
     fn attend_at(&mut self, q: &[f32], pos: usize, out: &mut [f32]) {
         let vis = pos + 1;
-        let sel = merge_selection(vis, self.sink, self.recent, &[]);
-        let qr = self.cache.rotate_query_at(q, pos);
-        let (ks, vs) = self.cache.gather(&sel, &mut self.traffic);
-        exact_attention(&self.cache.shape, &qr, &ks, &vs, sel.len(), out);
+        let shape = self.cache.shape;
+        merge_selection_into(
+            vis,
+            self.sink,
+            self.recent,
+            &[],
+            &mut self.scratch.crit_sorted,
+            &mut self.scratch.sel,
+        );
+        self.cache.rotate_query_into(q, pos, &mut self.scratch.qr);
+        self.cache.gather_into(
+            &self.scratch.sel,
+            &mut self.scratch.keys,
+            &mut self.scratch.vals,
+            &mut self.traffic,
+        );
+        sparse_attend(
+            &self.scratch.qr,
+            &self.scratch.keys,
+            &self.scratch.vals,
+            self.scratch.sel.len(),
+            shape.n_heads,
+            shape.n_kv_heads,
+            shape.head_dim,
+            &mut self.scratch.attend,
+            out,
+        );
     }
 }
 

@@ -87,6 +87,31 @@
 //! this CPU reference keeps the dense rows resident (see the note in
 //! `baselines/streaming_llm.rs`); a production port that admits against
 //! that model must actually evict.
+//!
+//! # Decode hot-path contract: shared kernels, zero allocation
+//!
+//! Every sparse backend's `append`/`attend` pair runs per (layer, token)
+//! at decode time, so the path is held to two rules:
+//!
+//! * **Shared packed kernels.** Token scoring is a unit-stride
+//!   [`crate::tensor::ops::matmul_tn`] over a contiguous scoring panel
+//!   (SALS stores its latents split at r* for exactly this — see
+//!   `sals.rs`); selection merge is [`merge_selection_into`]; the exact
+//!   attention epilogue is [`crate::tensor::ops::sparse_attend`]; and
+//!   quantized value reads go through the page-coherent
+//!   [`crate::quant::TokenQuantStore::gather_rows`].
+//! * **Zero per-call heap allocation.** All per-token buffers (rotated
+//!   query, pooled query, scores, top-k indices, merged selection,
+//!   gathered K/V panels, kernel scratch) are backend-owned and grow to a
+//!   high-water mark; steady-state decode never allocates. Baselines share
+//!   `baselines::common::BaselineScratch` for this.
+//!
+//! Traffic metering stays canonical under the shared kernels: scoring
+//! meters exactly the panel bytes it scans (`len·r*` f32 for SALS — not
+//! the full `len·r` rows), and quantized gathers meter per-row payload
+//! plus each touched page's scale/zero params **once per page**
+//! ([`crate::quant::TokenQuantStore::gather_read_bytes`]), so the BENCH
+//! tables reflect the bytes the layout actually streams.
 
 pub mod full;
 pub mod sals;
@@ -104,7 +129,7 @@ pub mod baselines {
 }
 
 pub use full::FullAttention;
-pub use sals::{SalsAttention, SalsConfig};
+pub use sals::{SalsAttention, SalsConfig, SalsStageTimes};
 pub use traffic::Traffic;
 
 /// Shape parameters of one attention layer.
@@ -282,10 +307,13 @@ pub trait AttentionBackend {
     fn name(&self) -> &'static str;
 }
 
-/// Exact per-head attention over an explicit (post-RoPE) K/V token subset —
-/// the shared "exact sparse attention" epilogue (Eq. 5). `keys`/`values` are
-/// (n_sel, kv_dim) row-major; `q` is post-RoPE (q_dim). Output accumulates
-/// into `out` (q_dim). Returns nothing; caller meters traffic.
+/// Naive exact per-head attention over an explicit (post-RoPE) K/V token
+/// subset (Eq. 5) — the **reference implementation** the parity tests
+/// compare against. Production decode goes through the packed
+/// [`crate::tensor::ops::sparse_attend`] kernel instead (panel packing,
+/// matmul-shaped QKᵀ/PV, caller-owned scratch); this strided dot/axpy
+/// version is kept only to pin the kernel's semantics in tests.
+#[cfg(test)]
 pub(crate) fn exact_attention(
     shape: &AttnShape,
     q: &[f32],
@@ -318,26 +346,46 @@ pub(crate) fn exact_attention(
 
 /// Merge sink tokens, a recent window, and selected critical indices into a
 /// sorted, deduplicated index set (the paper's x sink + y critical + z
-/// recent composition, §5.2).
+/// recent composition, §5.2). Allocates; decode hot paths use
+/// [`merge_selection_into`] with backend-owned scratch.
 pub fn merge_selection(
     seq_len: usize,
     sink: usize,
     recent: usize,
     critical: &[usize],
 ) -> Vec<usize> {
-    let mut mask = vec![false; seq_len];
-    for i in 0..sink.min(seq_len) {
-        mask[i] = true;
-    }
-    for i in seq_len.saturating_sub(recent)..seq_len {
-        mask[i] = true;
-    }
-    for &i in critical {
-        if i < seq_len {
-            mask[i] = true;
-        }
-    }
-    mask.iter().enumerate().filter_map(|(i, &m)| if m { Some(i) } else { None }).collect()
+    let mut crit_scratch = Vec::new();
+    let mut out = Vec::new();
+    merge_selection_into(seq_len, sink, recent, critical, &mut crit_scratch, &mut out);
+    out
+}
+
+/// Allocation-free [`merge_selection`]: `crit_scratch` and `out` are
+/// backend-owned buffers reused across calls (cleared here, capacity
+/// retained). Unlike the original mask-based merge this is
+/// O(|critical|·log|critical| + |selection|), **not** O(seq_len) — the
+/// selection stage no longer touches a sequence-length mask per
+/// (layer, token) call: sink and recent are contiguous ranges, so sorting
+/// the critical indices and emitting the three ranges in order produces
+/// the same sorted, deduplicated set.
+pub fn merge_selection_into(
+    seq_len: usize,
+    sink: usize,
+    recent: usize,
+    critical: &[usize],
+    crit_scratch: &mut Vec<usize>,
+    out: &mut Vec<usize>,
+) {
+    let sink_end = sink.min(seq_len);
+    let recent_lo = seq_len.saturating_sub(recent);
+    crit_scratch.clear();
+    crit_scratch.extend(critical.iter().copied().filter(|&i| i >= sink_end && i < recent_lo));
+    crit_scratch.sort_unstable();
+    crit_scratch.dedup();
+    out.clear();
+    out.extend(0..sink_end);
+    out.extend_from_slice(crit_scratch);
+    out.extend(recent_lo.max(sink_end)..seq_len);
 }
 
 #[cfg(test)]
@@ -439,6 +487,40 @@ mod tests {
     fn merge_selection_small_seq() {
         let sel = merge_selection(2, 4, 4, &[9]);
         assert_eq!(sel, vec![0, 1]);
+    }
+
+    #[test]
+    fn merge_selection_into_reuses_buffers_and_matches_mask_semantics() {
+        // Reference: the original O(seq_len) mask-based merge.
+        fn mask_merge(seq_len: usize, sink: usize, recent: usize, critical: &[usize]) -> Vec<usize> {
+            let mut mask = vec![false; seq_len];
+            for i in 0..sink.min(seq_len) {
+                mask[i] = true;
+            }
+            for i in seq_len.saturating_sub(recent)..seq_len {
+                mask[i] = true;
+            }
+            for &i in critical {
+                if i < seq_len {
+                    mask[i] = true;
+                }
+            }
+            mask.iter().enumerate().filter_map(|(i, &m)| m.then_some(i)).collect()
+        }
+        let mut crit_scratch = Vec::new();
+        let mut out = Vec::new();
+        let cases: [(usize, usize, usize, &[usize]); 6] = [
+            (10, 2, 3, &[5, 1, 7, 7, 99]),
+            (1, 0, 0, &[0]),
+            (50, 4, 8, &[49, 0, 25, 25, 3, 41]),
+            (8, 8, 8, &[2]),
+            (20, 0, 0, &[]),
+            (20, 3, 20, &[10]),
+        ];
+        for (s, sink, recent, crit) in cases {
+            merge_selection_into(s, sink, recent, crit, &mut crit_scratch, &mut out);
+            assert_eq!(out, mask_merge(s, sink, recent, crit), "s={s} sink={sink} recent={recent}");
+        }
     }
 
     #[test]

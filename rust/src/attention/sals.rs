@@ -1,18 +1,42 @@
 //! SALS decode attention (Algorithm 1): latent KV cache, critical-token
 //! selection in latent space, selective reconstruction + RoPE, exact sparse
-//! attention.
+//! attention — restructured so the decode hot loop is **bandwidth-exact**
+//! (streams only the bytes it scores) and **allocation-free**.
 //!
-//! Per decode step:
-//! 1. `k̃ = U_rᵀ k` — append the new token's key as an r-dim latent
-//!    (pre-RoPE, §3.1: post-RoPE keys have higher effective rank); values go
-//!    to the channel-wise group-quantized store with an fp32 recent window.
-//! 2. `s_j = q̃[:r*] · k̃_j[:r*]` — cheap RoPE-free scores over the whole
-//!    latent cache using only the leading r* latent dims (§4.3).
-//! 3. `C = sink ∪ recent ∪ top-k(s)` — critical-token set (§5.2 layout).
-//! 4. `K_C = K̃_C U_rᵀ`, RoPE(K_C), RoPE(q) — reconstruct only |C| keys.
-//!    Recent-window keys are kept fp32 and skip reconstruction (the paper's
-//!    half-compressed high-precision window; exactness is the limit case).
-//! 5. Exact softmax attention over (K_C, V_C) per head (Eq. 5).
+//! Per decode step, four stages (each a private `stage_*` method so the
+//! hotpath bench can time them independently):
+//!
+//! 1. **Score** — `k̃ = U_rᵀ k` appends the new token's key as an r-dim
+//!    latent (pre-RoPE, §3.1: post-RoPE keys have higher effective rank);
+//!    values go to the channel-wise group-quantized store with an fp32
+//!    recent window. Scoring `s_j = q̃[:r*] · k̃_j[:r*]` (§4.3) runs as one
+//!    unit-stride [`crate::tensor::ops::matmul_tn`] over the **scoring
+//!    panel**: latents are stored split — a contiguous (len, r*) panel
+//!    holding each row's leading r* dims and a (len, r−r*) remainder panel
+//!    — so the scan streams exactly `len·r*` floats. The previous (len, r)
+//!    row-major store made scoring a strided scan that *touched* the full
+//!    `len·r` rows to use half of each (at the paper's r* = r/2, 2× the
+//!    score-stage bytes).
+//! 2. **Select** — `C = sink ∪ recent ∪ top-k(s)` (§5.2 layout) via
+//!    [`super::merge_selection_into`]: O(k·log k) range-merge into
+//!    backend-owned scratch, not an O(seq_len) mask allocated per call.
+//! 3. **Reconstruct + gather** — `K_C = K̃_C U_r`, RoPE(K_C). The selection
+//!    is partitioned first: rows inside the fp32 recent-key ring take their
+//!    exact pre-RoPE keys from the ring (the paper's half-compressed
+//!    high-precision window) and are **excluded from the reconstruction
+//!    matmul** — previously they were matmul-reconstructed and then
+//!    overwritten, pure wasted FLOPs. Non-recent rows gather their split
+//!    panels back into full latent rows and reconstruct as ONE
+//!    (m, r)·(r, kvd) matmul. Values dequantize through the page-coherent
+//!    [`crate::quant::TokenQuantStore::gather_rows`] (sorted selection →
+//!    per-page setup hoisted), metered per page via `gather_read_bytes`.
+//! 4. **Attend** — RoPE(q), then exact softmax attention over (K_C, V_C)
+//!    (Eq. 5) through the packed [`crate::tensor::ops::sparse_attend`]
+//!    kernel shared by every sparse backend.
+//!
+//! Every stage writes only backend-owned scratch: steady-state decode
+//! performs zero heap allocations (the `attention/mod.rs` decode hot-path
+//! contract).
 //!
 //! GQA: the latent space is calibrated on stacked **KV-head** keys
 //! (kv_dim = n_kv_heads·head_dim). Queries are mean-pooled per KV group to
@@ -21,19 +45,22 @@
 //!
 //! Batched prefill: `append_batch`/`forward_batch` compute the whole
 //! chunk's latent projection as **one** `K̃ = K·U_r` [`crate::tensor::ops::matmul_tn`]
-//! instead of n per-row projections. `forward_batch` keeps the *state*
-//! pushes interleaved with the attends — the fp32 recent-key ring and the
-//! quant store's high-precision window are position-relative, so evolving
-//! them token-by-token is what keeps the batched path bit-compatible with
+//! instead of n per-row projections; rows are then split into the two
+//! panels at push time. `forward_batch` keeps the *state* pushes
+//! interleaved with the attends — the fp32 recent-key ring and the quant
+//! store's high-precision window are position-relative, so evolving them
+//! token-by-token is what keeps the batched path bit-compatible with
 //! sequential decode. (`prefill_attend` deliberately keeps the n == 1
 //! default: with a whole chunk pre-appended, tokens that a mid-chunk query
 //! should see at full precision may already have been evicted from the
 //! ring by later chunk rows.)
 
-use super::{merge_selection, AttentionBackend, AttnShape, FootprintModel, Traffic};
+use super::baselines::common::pool_query;
+use super::{merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic};
 use crate::lowrank::Projector;
 use crate::quant::{Bits, TokenQuantStore};
 use crate::rope::RopeTable;
+use crate::tensor::ops::SparseAttendScratch;
 use crate::tensor::top_k_indices_into;
 
 /// SALS hyper-parameters (§5.1/§5.2 defaults).
@@ -84,6 +111,29 @@ impl SalsConfig {
     }
 }
 
+/// Wall-time of one decode attend, split by pipeline stage (seconds) —
+/// filled by [`SalsAttention::attend_instrumented`] for
+/// `benches/sals_hotpath.rs`. Stages are accumulated (`+=`) so one struct
+/// can aggregate a whole decode run.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct SalsStageTimes {
+    /// Stage 1: query pool/projection + latent panel scoring.
+    pub score: f64,
+    /// Stage 2: top-k + sink/recent merge.
+    pub select: f64,
+    /// Stage 3: latent gather + reconstruction matmul + RoPE + value gather.
+    pub reconstruct: f64,
+    /// Stage 4: query RoPE + packed sparse attention.
+    pub attend: f64,
+}
+
+impl SalsStageTimes {
+    /// Sum of all four stages.
+    pub fn total(&self) -> f64 {
+        self.score + self.select + self.reconstruct + self.attend
+    }
+}
+
 /// SALS attention backend for one layer.
 pub struct SalsAttention {
     shape: AttnShape,
@@ -94,8 +144,12 @@ pub struct SalsAttention {
     /// per-row rank-length dots were the decode-op bottleneck).
     u_t: crate::tensor::Mat,
     rope: RopeTable,
-    /// (len, rank) pre-RoPE latent keys.
-    latent_keys: Vec<f32>,
+    /// (len, r*) scoring panel: each latent row's leading r* dims,
+    /// contiguous — the only latent bytes Stage-1 scoring streams.
+    latent_score: Vec<f32>,
+    /// (len, r − r*) remainder panel: the trailing dims, touched only when
+    /// a selected row is reconstructed.
+    latent_rem: Vec<f32>,
     /// fp32 pre-RoPE keys for the recent window (ring buffer of
     /// `recent + 1` rows, indexed by absolute position % capacity).
     recent_keys: Vec<f32>,
@@ -107,12 +161,17 @@ pub struct SalsAttention {
     // ---- scratch buffers (hot path must not allocate) ----
     scratch_scores: Vec<f32>,
     scratch_idx: Vec<usize>,
+    scratch_crit: Vec<usize>,
+    scratch_sel: Vec<usize>,
     scratch_qlat: Vec<f32>,
     scratch_pool: Vec<f32>,
     scratch_keys: Vec<f32>,
     scratch_vals: Vec<f32>,
     scratch_lat: Vec<f32>,
+    scratch_recon: Vec<f32>,
     scratch_qr: Vec<f32>,
+    scratch_lat_row: Vec<f32>,
+    scratch_attend: SparseAttendScratch,
     /// Chunk-latent staging buffer for the batched prefill path (kept
     /// separate from `scratch_lat`, which `attend` overwrites per token).
     scratch_chunk_lat: Vec<f32>,
@@ -140,7 +199,8 @@ impl SalsAttention {
             projector,
             u_t,
             rope,
-            latent_keys: Vec::new(),
+            latent_score: Vec::new(),
+            latent_rem: Vec::new(),
             recent_keys: vec![0.0; recent_cap * shape.kv_dim()],
             recent_cap,
             values,
@@ -148,75 +208,195 @@ impl SalsAttention {
             traffic: Traffic::default(),
             scratch_scores: Vec::new(),
             scratch_idx: Vec::new(),
+            scratch_crit: Vec::new(),
+            scratch_sel: Vec::new(),
             scratch_qlat: vec![0.0; cfg.rank],
             scratch_pool: vec![0.0; shape.kv_dim()],
             scratch_keys: Vec::new(),
             scratch_vals: Vec::new(),
             scratch_lat: Vec::new(),
+            scratch_recon: Vec::new(),
             scratch_qr: Vec::new(),
+            scratch_lat_row: Vec::new(),
+            scratch_attend: SparseAttendScratch::default(),
             scratch_chunk_lat: Vec::new(),
             cfg,
         }
     }
 
     /// Latent scores of every cached token for a pre-RoPE query — exposed
-    /// for the Figure-2 overlap-score analysis.
+    /// for the Figure-2 overlap-score analysis and the hotpath bench's
+    /// score-stage traffic probe.
     pub fn latent_scores(&mut self, q: &[f32]) -> Vec<f32> {
-        self.compute_scores(q);
+        self.stage_score(q);
         self.scratch_scores.clone()
     }
 
     /// Pool query heads per KV group (mean) then project to latent space.
     fn project_query(&mut self, q: &[f32]) {
-        let d = self.shape.head_dim;
-        let group = self.shape.group_size();
-        let kvd = self.shape.kv_dim();
-        if group == 1 {
-            self.scratch_pool[..kvd].copy_from_slice(q);
-        } else {
-            let inv = 1.0 / group as f32;
-            self.scratch_pool.fill(0.0);
-            for h in 0..self.shape.n_heads {
-                let kvh = h / group;
-                let qh = &q[h * d..(h + 1) * d];
-                let dst = &mut self.scratch_pool[kvh * d..(kvh + 1) * d];
-                for (a, &b) in dst.iter_mut().zip(qh) {
-                    *a += b * inv;
-                }
-            }
-        }
+        pool_query(&self.shape, q, &mut self.scratch_pool);
         let pool = std::mem::take(&mut self.scratch_pool);
         self.projector.project(&pool, &mut self.scratch_qlat);
         self.scratch_pool = pool;
     }
 
-    /// Fill scratch_scores with r*-dim latent scores for all cached tokens.
-    fn compute_scores(&mut self, q: &[f32]) {
+    /// Stage 1: r*-dim latent scores for all cached tokens — one
+    /// unit-stride matmul_tn over the (len, r*) scoring panel. Meters
+    /// exactly the panel bytes the scan streams.
+    fn stage_score(&mut self, q: &[f32]) {
         self.project_query(q);
+        let rs = self.cfg.r_star;
+        self.scratch_scores.resize(self.len, 0.0);
+        crate::tensor::ops::matmul_tn(
+            &self.scratch_qlat[..rs],
+            &self.latent_score,
+            &mut self.scratch_scores,
+            1,
+            rs,
+            self.len,
+        );
+        self.traffic.read_f32(self.len * rs);
+    }
+
+    /// Stage 2: top-k over the scores, then sink/recent/critical merge into
+    /// the backend-owned selection buffer. Returns the selection size.
+    fn stage_select(&mut self) -> usize {
+        top_k_indices_into(&self.scratch_scores, self.cfg.critical, &mut self.scratch_idx);
+        merge_selection_into(
+            self.len,
+            self.cfg.sink,
+            self.cfg.recent,
+            &self.scratch_idx,
+            &mut self.scratch_crit,
+            &mut self.scratch_sel,
+        );
+        self.scratch_sel.len()
+    }
+
+    /// Stage 3: selective reconstruction + RoPE + value gather. The
+    /// selection is partitioned: recent-ring rows skip the reconstruction
+    /// matmul entirely (their exact fp32 keys come from the ring), the
+    /// rest reconstruct in one (m, r)·(r, kvd) matmul.
+    fn stage_reconstruct(&mut self) {
+        let kvd = self.shape.kv_dim();
         let r = self.cfg.rank;
         let rs = self.cfg.r_star;
-        self.scratch_scores.clear();
-        self.scratch_scores.reserve(self.len);
-        let qlat = &self.scratch_qlat[..rs];
-        for j in 0..self.len {
-            let krow = &self.latent_keys[j * r..j * r + rs];
-            self.scratch_scores.push(crate::tensor::ops::dot(qlat, krow));
+        let rem = r - rs;
+        let n_sel = self.scratch_sel.len();
+        // First ring slot: positions >= recent_lo are in the fp32 ring.
+        let recent_lo = if self.cfg.recent > 0 {
+            self.len.saturating_sub(self.recent_cap)
+        } else {
+            usize::MAX
+        };
+
+        // Gather the non-recent rows' split panels back into full latent
+        // rows, contiguous in selection order.
+        self.scratch_lat.clear();
+        self.scratch_lat.reserve(n_sel * r);
+        let mut m = 0;
+        for &j in &self.scratch_sel {
+            if j < recent_lo {
+                self.scratch_lat.extend_from_slice(&self.latent_score[j * rs..(j + 1) * rs]);
+                self.scratch_lat.extend_from_slice(&self.latent_rem[j * rem..(j + 1) * rem]);
+                m += 1;
+            }
         }
-        self.traffic.read_f32(self.len * rs);
+        self.scratch_recon.resize(m * kvd, 0.0);
+        crate::tensor::ops::matmul(
+            &self.scratch_lat,
+            &self.u_t.data,
+            &mut self.scratch_recon,
+            m,
+            r,
+            kvd,
+        );
+
+        // Distribute into the (n_sel, kvd) key panel: reconstructed rows in
+        // order, recent rows straight from the ring; RoPE each at its
+        // original position (Algorithm 1, line 7).
+        self.scratch_keys.resize(n_sel * kvd, 0.0);
+        let mut rc = 0;
+        for (si, &j) in self.scratch_sel.iter().enumerate() {
+            let dst = si * kvd..(si + 1) * kvd;
+            if j < recent_lo {
+                self.scratch_keys[dst.clone()]
+                    .copy_from_slice(&self.scratch_recon[rc * kvd..(rc + 1) * kvd]);
+                rc += 1;
+                self.traffic.read_f32(r);
+            } else {
+                // High-precision window: exact pre-RoPE key, no
+                // reconstruction work and no wasted latent read.
+                let slot = self.recent_slot(j);
+                self.scratch_keys[dst.clone()]
+                    .copy_from_slice(&self.recent_keys[slot * kvd..(slot + 1) * kvd]);
+                self.traffic.read_f32(kvd);
+            }
+            self.rope.apply_multihead(&mut self.scratch_keys[dst], j);
+        }
+
+        // Values: page-coherent dequantizing gather over the sorted
+        // selection (recent rows are exact fp32), metered per page.
+        self.scratch_vals.resize(n_sel * kvd, 0.0);
+        self.values.gather_rows(&self.scratch_sel, &mut self.scratch_vals);
+        self.traffic.read_bytes(self.values.gather_read_bytes(&self.scratch_sel));
+    }
+
+    /// Stage 4: RoPE the query at its position and run the packed sparse
+    /// attention kernel over the gathered panels.
+    fn stage_attend(&mut self, q: &[f32], out: &mut [f32]) {
+        let pos = self.len - 1;
+        self.scratch_qr.clear();
+        self.scratch_qr.extend_from_slice(q);
+        self.rope.apply_multihead(&mut self.scratch_qr, pos);
+        crate::tensor::ops::sparse_attend(
+            &self.scratch_qr,
+            &self.scratch_keys,
+            &self.scratch_vals,
+            self.scratch_sel.len(),
+            self.shape.n_heads,
+            self.shape.n_kv_heads,
+            self.shape.head_dim,
+            &mut self.scratch_attend,
+            out,
+        );
+    }
+
+    /// [`AttentionBackend::attend`] with per-stage wall times accumulated
+    /// into `times` — the hotpath bench's probe. Identical work to
+    /// `attend` plus four `Instant` reads.
+    pub fn attend_instrumented(&mut self, q: &[f32], out: &mut [f32], times: &mut SalsStageTimes) {
+        assert_eq!(q.len(), self.shape.q_dim());
+        assert!(self.len > 0, "attend on empty cache");
+        let t0 = std::time::Instant::now();
+        self.stage_score(q);
+        let t1 = std::time::Instant::now();
+        self.stage_select();
+        let t2 = std::time::Instant::now();
+        self.stage_reconstruct();
+        let t3 = std::time::Instant::now();
+        self.stage_attend(q, out);
+        let t4 = std::time::Instant::now();
+        times.score += (t1 - t0).as_secs_f64();
+        times.select += (t2 - t1).as_secs_f64();
+        times.reconstruct += (t3 - t2).as_secs_f64();
+        times.attend += (t4 - t3).as_secs_f64();
     }
 
     fn recent_slot(&self, pos: usize) -> usize {
         pos % self.recent_cap
     }
 
-    /// Push one token whose latent row is already computed: latent store,
-    /// fp32 recent-key ring, quantized values, write-traffic metering.
-    /// Shared by the batched paths (which project whole chunks at once).
+    /// Push one token whose latent row is already computed: split-panel
+    /// latent store, fp32 recent-key ring, quantized values, write-traffic
+    /// metering. Shared by the scalar and batched append paths.
     fn push_token(&mut self, lat_row: &[f32], k: &[f32], v: &[f32]) {
         let kvd = self.shape.kv_dim();
         debug_assert_eq!(lat_row.len(), self.cfg.rank);
+        let rs = self.cfg.r_star;
         let pos = self.len;
-        self.latent_keys.extend_from_slice(lat_row);
+        self.latent_score.extend_from_slice(&lat_row[..rs]);
+        self.latent_rem.extend_from_slice(&lat_row[rs..]);
         self.traffic.write_f32(self.cfg.rank);
         let slot = self.recent_slot(pos);
         self.recent_keys[slot * kvd..(slot + 1) * kvd].copy_from_slice(k);
@@ -236,10 +416,6 @@ impl SalsAttention {
         lat
     }
 
-    /// Is `pos` still inside the fp32 recent-key ring?
-    fn in_recent(&self, pos: usize) -> bool {
-        pos + self.recent_cap >= self.len && self.cfg.recent > 0
-    }
 }
 
 impl AttentionBackend for SalsAttention {
@@ -247,91 +423,22 @@ impl AttentionBackend for SalsAttention {
         let kvd = self.shape.kv_dim();
         assert_eq!(k.len(), kvd);
         assert_eq!(v.len(), kvd);
-        let r = self.cfg.rank;
-        let pos = self.len;
-        // Latent projection of the pre-RoPE key (Algorithm 1, line 2).
-        let start = self.latent_keys.len();
-        self.latent_keys.resize(start + r, 0.0);
-        self.projector.project(k, &mut self.latent_keys[start..start + r]);
-        self.traffic.write_f32(r);
-        // fp32 recent-key ring.
-        let slot = self.recent_slot(pos);
-        self.recent_keys[slot * kvd..(slot + 1) * kvd].copy_from_slice(k);
-        // Quantized value store (fp32 recent window inside).
-        self.values.append(v);
-        self.traffic.write_bytes(self.values.row_read_bytes(pos));
-        self.len += 1;
+        // Latent projection of the pre-RoPE key (Algorithm 1, line 2) into
+        // the reusable row buffer, then split into the panels.
+        let mut lat = std::mem::take(&mut self.scratch_lat_row);
+        lat.resize(self.cfg.rank, 0.0);
+        self.projector.project(k, &mut lat);
+        self.push_token(&lat, k, v);
+        self.scratch_lat_row = lat;
     }
 
     fn attend(&mut self, q: &[f32], out: &mut [f32]) {
-        let kvd = self.shape.kv_dim();
-        let r = self.cfg.rank;
         assert_eq!(q.len(), self.shape.q_dim());
         assert!(self.len > 0, "attend on empty cache");
-        let pos = self.len - 1;
-
-        // ---- Stage 2: latent scoring (lines 3–4) ----
-        self.compute_scores(q);
-
-        // ---- Stage 2: top-k + sink/recent merge (line 5) ----
-        let scores = std::mem::take(&mut self.scratch_scores);
-        top_k_indices_into(&scores, self.cfg.critical, &mut self.scratch_idx);
-        self.scratch_scores = scores;
-        let sel = merge_selection(self.len, self.cfg.sink, self.cfg.recent, &self.scratch_idx);
-        let n_sel = sel.len();
-
-        // ---- Stage 3: selective reconstruction + RoPE (lines 6–7) ----
-        // Batched reconstruction: gather selected latents contiguously and
-        // run ONE (n_sel, r) @ (r, kvd) matmul whose inner loop is a
-        // unit-stride kvd-length axpy (SIMD), then overwrite recent rows
-        // with their exact fp32 keys (high-precision window).
-        self.scratch_keys.resize(n_sel * kvd, 0.0);
-        self.scratch_vals.resize(n_sel * kvd, 0.0);
-        self.scratch_lat.resize(n_sel * r, 0.0);
-        for (row, &j) in sel.iter().enumerate() {
-            self.scratch_lat[row * r..(row + 1) * r]
-                .copy_from_slice(&self.latent_keys[j * r..(j + 1) * r]);
-        }
-        crate::tensor::ops::matmul(
-            &self.scratch_lat,
-            &self.u_t.data,
-            &mut self.scratch_keys,
-            n_sel,
-            r,
-            kvd,
-        );
-        for (row, &j) in sel.iter().enumerate() {
-            let kdst_range = row * kvd..(row + 1) * kvd;
-            if self.in_recent(j) {
-                // High-precision window: exact pre-RoPE key, no reconstruction.
-                let slot = self.recent_slot(j);
-                self.scratch_keys[kdst_range.clone()]
-                    .copy_from_slice(&self.recent_keys[slot * kvd..(slot + 1) * kvd]);
-                self.traffic.read_f32(kvd);
-            } else {
-                self.traffic.read_f32(r);
-            }
-            // RoPE at the token's original position (line 7).
-            self.rope.apply_multihead(&mut self.scratch_keys[kdst_range], j);
-            // Values: dequantize (recent rows are exact fp32).
-            self.values.get(j, &mut self.scratch_vals[row * kvd..(row + 1) * kvd]);
-            self.traffic.read_bytes(self.values.row_read_bytes(j));
-        }
-
-        // RoPE the query at its position.
-        self.scratch_qr.clear();
-        self.scratch_qr.extend_from_slice(q);
-        self.rope.apply_multihead(&mut self.scratch_qr, pos);
-
-        // ---- Stage 3: exact sparse attention (lines 8–9, Eq. 5) ----
-        super::exact_attention(
-            &self.shape,
-            &self.scratch_qr,
-            &self.scratch_keys,
-            &self.scratch_vals,
-            n_sel,
-            out,
-        );
+        self.stage_score(q);
+        self.stage_select();
+        self.stage_reconstruct();
+        self.stage_attend(q, out);
     }
 
     fn append_batch(&mut self, ks: &[f32], vs: &[f32], n: usize) {
@@ -390,15 +497,18 @@ impl AttentionBackend for SalsAttention {
     }
 
     fn kv_bytes(&self) -> usize {
-        self.latent_keys.len() * 4 + self.recent_keys.len() * 4 + self.values.nbytes()
+        (self.latent_score.len() + self.latent_rem.len()) * 4
+            + self.recent_keys.len() * 4
+            + self.values.nbytes()
     }
 
     fn footprint(&self) -> FootprintModel {
-        // Latent keys grow at rank·4 B/token; values at the quant store's
-        // frozen rate. Fixed: the pre-allocated fp32 recent-key ring plus
-        // the expected excess of the store's fp32 tail over the frozen
-        // rate — length-independent terms, so the asymptotic rate reflects
-        // the §5.1 compression ratio admission is meant to exploit.
+        // Latent panels together grow at rank·4 B/token; values at the
+        // quant store's frozen rate. Fixed: the pre-allocated fp32
+        // recent-key ring plus the expected excess of the store's fp32
+        // tail over the frozen rate — length-independent terms, so the
+        // asymptotic rate reflects the §5.1 compression ratio admission is
+        // meant to exploit.
         FootprintModel::linear(
             self.recent_cap * self.shape.kv_dim() * 4 + self.values.tail_excess_bytes(),
             self.cfg.rank * 4 + self.values.frozen_row_bytes(),
@@ -528,6 +638,45 @@ mod tests {
     }
 
     #[test]
+    fn split_panels_hold_leading_and_trailing_latent_dims() {
+        // The scoring panel must hold exactly each projected row's leading
+        // r* dims and the remainder panel the trailing r - r* dims.
+        let shape = AttnShape::mha(1, 8, 64);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(85);
+        let proj = make_projector(kvd, 6, 4, &mut rng);
+        let cfg = SalsConfig { rank: 6, r_star: 4, ..cfg_small(6) };
+        let mut sals = SalsAttention::new(shape, cfg, proj.clone());
+        let mut keys = Vec::new();
+        for _ in 0..20 {
+            let k = rng.normal_vec(kvd, 1.0);
+            keys.push(k.clone());
+            sals.append(&k, &rng.normal_vec(kvd, 1.0));
+        }
+        let mut lat = vec![0.0f32; proj.rank];
+        for (j, k) in keys.iter().enumerate() {
+            proj.project(k, &mut lat);
+            for (c, &v) in lat[..4].iter().enumerate() {
+                let p = sals.latent_score[j * 4 + c];
+                assert!((p - v).abs() < 1e-5, "score panel row {j} dim {c}: {p} vs {v}");
+            }
+            for (c, &v) in lat[4..6].iter().enumerate() {
+                let p = sals.latent_rem[j * 2 + c];
+                assert!((p - v).abs() < 1e-5, "rem panel row {j} dim {c}: {p} vs {v}");
+            }
+        }
+        // And scoring streams the panel: scores == q̃[..r*] · panel rows.
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let scores = sals.latent_scores(&q);
+        proj.project(&q, &mut lat);
+        for (j, &s) in scores.iter().enumerate() {
+            let expect =
+                crate::tensor::ops::dot(&lat[..4], &sals.latent_score[j * 4..(j + 1) * 4]);
+            assert!((s - expect).abs() < 1e-5, "score {j}: {s} vs {expect}");
+        }
+    }
+
+    #[test]
     fn traffic_much_lower_than_full() {
         let shape = AttnShape::mha(4, 16, 1024);
         let kvd = shape.kv_dim();
@@ -607,7 +756,7 @@ mod tests {
         let q = rng.normal_vec(shape.q_dim(), 1.0);
         let scores = sals.latent_scores(&q);
         let idx = crate::tensor::top_k_indices(&scores, 2);
-        let sel = merge_selection(50, 2, 4, &idx);
+        let sel = crate::attention::merge_selection(50, 2, 4, &idx);
         assert!(sel.contains(&0) && sel.contains(&1), "sink missing: {sel:?}");
         for t in 46..50 {
             assert!(sel.contains(&t), "recent {t} missing: {sel:?}");
@@ -658,8 +807,12 @@ mod tests {
         for (a, b) in o_seq.iter().zip(&o_bat) {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
-        for (a, b) in seq.latent_keys.iter().zip(&bat.latent_keys) {
-            assert!((a - b).abs() < 1e-4, "latent {a} vs {b}");
+        // Both split panels must agree between the two paths.
+        for (a, b) in seq.latent_score.iter().zip(&bat.latent_score) {
+            assert!((a - b).abs() < 1e-4, "score panel {a} vs {b}");
+        }
+        for (a, b) in seq.latent_rem.iter().zip(&bat.latent_rem) {
+            assert!((a - b).abs() < 1e-4, "rem panel {a} vs {b}");
         }
     }
 
@@ -682,10 +835,38 @@ mod tests {
         assert_eq!(a.len, b.len);
         assert_eq!(a.kv_bytes(), b.kv_bytes());
         assert_eq!(a.traffic().written, b.traffic().written);
-        for (x, y) in a.latent_keys.iter().zip(&b.latent_keys) {
+        for (x, y) in a.latent_score.iter().zip(&b.latent_score) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+        for (x, y) in a.latent_rem.iter().zip(&b.latent_rem) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
         }
         assert_eq!(a.recent_keys, b.recent_keys);
+    }
+
+    #[test]
+    fn instrumented_attend_matches_plain_attend() {
+        let shape = AttnShape::mha(2, 8, 256);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(87);
+        let proj = make_projector(kvd, 8, 4, &mut rng);
+        let mut a = SalsAttention::new(shape, cfg_small(8), proj.clone());
+        let mut b = SalsAttention::new(shape, cfg_small(8), proj);
+        for _ in 0..60 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            a.append(&k, &v);
+            b.append(&k, &v);
+        }
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let mut o1 = vec![0.0; shape.q_dim()];
+        let mut o2 = vec![0.0; shape.q_dim()];
+        let mut times = SalsStageTimes::default();
+        a.attend(&q, &mut o1);
+        b.attend_instrumented(&q, &mut o2, &mut times);
+        assert_eq!(o1, o2, "instrumentation must not change the math");
+        assert_eq!(a.traffic(), b.traffic(), "or the metering");
+        assert!(times.total() > 0.0 && times.total().is_finite());
     }
 
     #[test]

@@ -117,32 +117,107 @@ impl TokenQuantStore {
             out.copy_from_slice(&self.tail[t * self.dim..(t + 1) * self.dim]);
             return;
         }
-        let page = &self.pages[i / self.group];
-        let t = i % self.group;
-        let base = t * self.dim;
+        self.unpack_page_rows(&self.pages[i / self.group], std::iter::once(i), out);
+    }
+
+    /// Dequantize the selected rows of one frozen page: `idx` yields
+    /// absolute token indices, all inside `page`; `out` is (n, dim) for n
+    /// yielded rows. The bits dispatch and the page's scale/zero borrows
+    /// are hoisted outside the row loop — the per-page setup happens once
+    /// per page, not once per row.
+    fn unpack_page_rows(&self, page: &Page, idx: impl Iterator<Item = usize>, out: &mut [f32]) {
+        let d = self.dim;
         let b = self.bits.bits();
         let mask = (self.bits.levels() - 1) as u8;
+        let (scale, zero) = (&page.scale[..d], &page.zero[..d]);
         match self.bits {
             Bits::B8 => {
-                for (c, o) in out.iter_mut().enumerate() {
-                    *o = page.codes[base + c] as f32 * page.scale[c] + page.zero[c];
+                for (row, j) in idx.enumerate() {
+                    let base = (j % self.group) * d;
+                    for (c, o) in out[row * d..(row + 1) * d].iter_mut().enumerate() {
+                        *o = page.codes[base + c] as f32 * scale[c] + zero[c];
+                    }
                 }
             }
             Bits::B4 => {
-                for (c, o) in out.iter_mut().enumerate() {
-                    let i = base + c;
-                    let code = (page.codes[i >> 1] >> ((i & 1) as u32 * 4)) & 0x0F;
-                    *o = code as f32 * page.scale[c] + page.zero[c];
+                for (row, j) in idx.enumerate() {
+                    let base = (j % self.group) * d;
+                    for (c, o) in out[row * d..(row + 1) * d].iter_mut().enumerate() {
+                        let i = base + c;
+                        let code = (page.codes[i >> 1] >> ((i & 1) as u32 * 4)) & 0x0F;
+                        *o = code as f32 * scale[c] + zero[c];
+                    }
                 }
             }
             Bits::B2 => {
-                for (c, o) in out.iter_mut().enumerate() {
-                    let i = base + c;
-                    let code = (page.codes[i >> 2] >> ((i & 3) as u32 * b)) & mask;
-                    *o = code as f32 * page.scale[c] + page.zero[c];
+                for (row, j) in idx.enumerate() {
+                    let base = (j % self.group) * d;
+                    for (c, o) in out[row * d..(row + 1) * d].iter_mut().enumerate() {
+                        let i = base + c;
+                        let code = (page.codes[i >> 2] >> ((i & 3) as u32 * b)) & mask;
+                        *o = code as f32 * scale[c] + zero[c];
+                    }
                 }
             }
         }
+    }
+
+    /// Page-coherent gather: dequantize rows `sorted_idx` (strictly
+    /// increasing) into `out` ((sorted_idx.len(), dim) row-major).
+    /// Equivalent to one [`TokenQuantStore::get`] per row, but selected
+    /// tokens are walked **grouped by quant page**, so each touched page's
+    /// scale/zero and bit-unpack setup is hoisted across all of its
+    /// selected rows and the fp32 tail is copied directly — the decode-time
+    /// value-read path of SALS (sorted critical selections) and KIVI.
+    pub fn gather_rows(&self, sorted_idx: &[usize], out: &mut [f32]) {
+        let d = self.dim;
+        assert_eq!(out.len(), sorted_idx.len() * d);
+        debug_assert!(
+            sorted_idx.windows(2).all(|w| w[0] < w[1]),
+            "gather_rows needs strictly increasing indices"
+        );
+        let mut i = 0;
+        while i < sorted_idx.len() {
+            let j = sorted_idx[i];
+            assert!(j < self.len, "token {j} out of range {}", self.len);
+            if j >= self.frozen {
+                // fp32 tail — sorted indices mean everything from here on
+                // is a tail row; copy them in one run.
+                for (row, &jt) in sorted_idx[i..].iter().enumerate() {
+                    let t = jt - self.frozen;
+                    out[(i + row) * d..(i + row + 1) * d]
+                        .copy_from_slice(&self.tail[t * d..(t + 1) * d]);
+                }
+                return;
+            }
+            let p = j / self.group;
+            let mut e = i + 1;
+            while e < sorted_idx.len() && sorted_idx[e] / self.group == p {
+                e += 1;
+            }
+            self.unpack_page_rows(
+                &self.pages[p],
+                sorted_idx[i..e].iter().copied(),
+                &mut out[i * d..e * d],
+            );
+            i = e;
+        }
+    }
+
+    /// Dequantize the whole store into `out` ((len, dim) row-major): pages
+    /// stream sequentially with their setup hoisted, the fp32 tail is
+    /// copied directly — the dense-attention (KIVI) read path.
+    pub fn read_all(&self, out: &mut [f32]) {
+        let d = self.dim;
+        assert_eq!(out.len(), self.len * d);
+        let g = self.group;
+        for (p, page) in self.pages.iter().enumerate() {
+            // All `group` rows of the page, in token order: codes are
+            // row-major (token, channel), so this is one linear scan.
+            let lo = p * g;
+            self.unpack_page_rows(page, lo..lo + g, &mut out[lo * d..(lo + g) * d]);
+        }
+        out[self.frozen * d..self.len * d].copy_from_slice(&self.tail);
     }
 
     /// Bytes needed to read token `i` from the store (for traffic metering):
@@ -154,6 +229,40 @@ impl TokenQuantStore {
             // dim channels × (bits/8 payload + amortized params)
             self.dim * self.bits.bits() as usize / 8 + (self.dim * 8).div_ceil(self.group)
         }
+    }
+
+    /// Traffic cost of a [`TokenQuantStore::gather_rows`] over `sorted_idx`:
+    /// per-row packed payload (or fp32 tail row) plus each **touched page's**
+    /// scale/zero params charged once per page — the bytes the page-coherent
+    /// walk actually streams. [`TokenQuantStore::row_read_bytes`] amortizes
+    /// params per row, which misprices sparse selections: a selection
+    /// touching one row per page streams the full params for every page.
+    pub fn gather_read_bytes(&self, sorted_idx: &[usize]) -> usize {
+        let payload = self.dim * self.bits.bits() as usize / 8;
+        let params = self.dim * 2 * 4; // per-channel scale + zero, fp32
+        let mut bytes = 0;
+        let mut last_page = usize::MAX;
+        for &j in sorted_idx {
+            if j >= self.frozen {
+                bytes += self.dim * 4;
+            } else {
+                bytes += payload;
+                let p = j / self.group;
+                if p != last_page {
+                    bytes += params;
+                    last_page = p;
+                }
+            }
+        }
+        bytes
+    }
+
+    /// Traffic cost of [`TokenQuantStore::read_all`]: every page's packed
+    /// codes and params once, plus the fp32 tail.
+    pub fn read_all_bytes(&self) -> usize {
+        let pages: usize =
+            self.pages.iter().map(|p| p.codes.len() + 4 * (p.scale.len() + p.zero.len())).sum();
+        pages + self.tail.len() * 4
     }
 
     /// Asymptotic resident bytes per *frozen* token: the packed payload
@@ -293,6 +402,62 @@ mod tests {
             let err = est.abs_diff(live);
             assert!(err <= phase_slack, "len {len}: est {est} vs live {live} (err {err})");
         }
+    }
+
+    #[test]
+    fn gather_rows_matches_per_row_get() {
+        for bits in [Bits::B2, Bits::B4, Bits::B8] {
+            let mut st = TokenQuantStore::new(6, bits, 8, 12);
+            let mut rng = Rng::new(73);
+            for _ in 0..70 {
+                st.append(&rng.normal_vec(6, 1.0));
+            }
+            // Mixed selection: page-interior runs, page boundaries, a page
+            // with a single row, and fp32 tail rows.
+            let idx = [0usize, 1, 7, 8, 15, 16, 17, 30, 55, 60, 68, 69];
+            let mut gathered = vec![0.0f32; idx.len() * 6];
+            st.gather_rows(&idx, &mut gathered);
+            let mut row = vec![0.0f32; 6];
+            for (t, &j) in idx.iter().enumerate() {
+                st.get(j, &mut row);
+                assert_eq!(&gathered[t * 6..(t + 1) * 6], &row[..], "{bits:?} row {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn read_all_matches_per_row_get() {
+        let mut st = TokenQuantStore::new(5, Bits::B4, 4, 6);
+        let mut rng = Rng::new(79);
+        for _ in 0..37 {
+            st.append(&rng.normal_vec(5, 1.0));
+        }
+        let mut all = vec![0.0f32; 37 * 5];
+        st.read_all(&mut all);
+        let mut row = vec![0.0f32; 5];
+        for j in 0..37 {
+            st.get(j, &mut row);
+            assert_eq!(&all[j * 5..(j + 1) * 5], &row[..], "row {j}");
+        }
+    }
+
+    #[test]
+    fn gather_read_bytes_charges_params_per_page() {
+        let mut st = TokenQuantStore::new(32, Bits::B4, 16, 16);
+        let mut rng = Rng::new(81);
+        for _ in 0..128 {
+            st.append(&rng.normal_vec(32, 1.0));
+        }
+        let payload = 32 * 4 / 8; // 16 B/row
+        let params = 32 * 8; // 256 B/page (scale + zero)
+        // Two rows in one page: params once.
+        assert_eq!(st.gather_read_bytes(&[0, 1]), 2 * payload + params);
+        // Two rows in two pages: params twice.
+        assert_eq!(st.gather_read_bytes(&[0, 16]), 2 * payload + 2 * params);
+        // Tail row: plain fp32.
+        assert_eq!(st.gather_read_bytes(&[127]), 32 * 4);
+        // read_all cost equals the resident store size.
+        assert_eq!(st.read_all_bytes(), st.nbytes());
     }
 
     #[test]

@@ -2,6 +2,15 @@
 //!
 //! These operate on raw `&[f32]` so the KV-cache and attention hot paths can
 //! run without constructing `Mat` wrappers or allocating.
+//!
+//! The two attention workhorses live here with caller-owned scratch:
+//! [`causal_attend_chunk`] + [`ChunkAttendScratch`] for batched prefill
+//! (many queries over a dense causal cache) and [`sparse_attend`] +
+//! [`SparseAttendScratch`] for sparse decode (one query over a gathered
+//! token subset). Both follow the same contract: strided per-KV-head
+//! columns are packed once into contiguous panels, every matmul inner loop
+//! is unit-stride, and repeated calls reuse the scratch so steady-state
+//! decode performs zero heap allocations.
 
 /// out[m,n] = a[m,k] @ b[k,n]   (row-major, out must be zeroed or will be overwritten)
 ///
@@ -244,6 +253,93 @@ pub fn causal_attend_chunk(
     }
 }
 
+/// Reusable buffers for [`sparse_attend`]: per-KV-head key/value panels, a
+/// pre-scaled query tile, and the score rows. One per backend — the decode
+/// hot path must not heap-allocate per (layer, token) call (see the
+/// crate-wide invariant in `attention/mod.rs`); buffers grow to the largest
+/// selection seen and are retained.
+#[derive(Default)]
+pub struct SparseAttendScratch {
+    khead: Vec<f32>,
+    vhead: Vec<f32>,
+    qtile: Vec<f32>,
+    scores: Vec<f32>,
+}
+
+/// Packed exact sparse attention over a gathered token subset — the shared
+/// decode epilogue of every token-sparse backend (SALS Eq. 5, and the
+/// gathered-attention step of Quest/Loki/DoubleSparse/HShare/StreamingLLM;
+/// KIVI/Palu use it over their full dequantized/reconstructed caches).
+///
+/// * `q`: **post-RoPE** stacked query, (n_heads·d).
+/// * `keys` / `values`: (n_sel, n_kv_heads·d) row-major post-RoPE subset.
+/// * `out`: (n_heads·d), overwritten. `n_sel == 0` writes zeros.
+///
+/// Blocking scheme (the decode-shaped sibling of [`causal_attend_chunk`]):
+/// per KV head the strided key/value columns are packed **once** into
+/// contiguous (n_sel, d) panels (skipped entirely when `n_kv_heads == 1`,
+/// where the cache rows already are the panel); the group's query heads —
+/// consecutive in `q` — form one pre-scaled (group, d) tile, so QKᵀ is a
+/// single [`matmul_tn`], softmax is [`softmax_rows`], and PV is one
+/// [`matmul`], all with unit-stride inner loops. This replaces the
+/// per-head strided dot/axpy loop (and its per-call scores allocation)
+/// that previously dominated the sparse decode profile.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attend(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    n_sel: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    d: usize,
+    scratch: &mut SparseAttendScratch,
+    out: &mut [f32],
+) {
+    assert_eq!(n_heads % n_kv_heads, 0);
+    let kvd = n_kv_heads * d;
+    let qd = n_heads * d;
+    assert_eq!(q.len(), qd);
+    assert_eq!(keys.len(), n_sel * kvd);
+    assert_eq!(values.len(), n_sel * kvd);
+    assert_eq!(out.len(), qd);
+    let group = n_heads / n_kv_heads;
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let SparseAttendScratch { khead, vhead, qtile, scores } = scratch;
+    qtile.resize(group * d, 0.0);
+    scores.resize(group * n_sel, 0.0);
+    if n_kv_heads > 1 {
+        khead.resize(n_sel * d, 0.0);
+        vhead.resize(n_sel * d, 0.0);
+    }
+
+    for kvh in 0..n_kv_heads {
+        // Contiguous (n_sel, d) panels for this KV head. A single-KV-head
+        // cache IS the panel — no copy.
+        let (kp, vp): (&[f32], &[f32]) = if n_kv_heads == 1 {
+            (keys, values)
+        } else {
+            for j in 0..n_sel {
+                let src = j * kvd + kvh * d;
+                khead[j * d..(j + 1) * d].copy_from_slice(&keys[src..src + d]);
+                vhead[j * d..(j + 1) * d].copy_from_slice(&values[src..src + d]);
+            }
+            (&khead[..], &vhead[..])
+        };
+        // The group's query heads are consecutive rows of q: one tile,
+        // pre-scaled so 1/sqrt(d) folds into QKᵀ.
+        let qbase = kvh * group * d;
+        qtile.copy_from_slice(&q[qbase..qbase + group * d]);
+        for x in qtile.iter_mut() {
+            *x *= scale;
+        }
+        matmul_tn(qtile, kp, scores, group, d, n_sel);
+        softmax_rows(scores, group, n_sel);
+        matmul(scores, vp, &mut out[qbase..qbase + group * d], group, n_sel, d);
+    }
+}
+
 /// Pack rows `idx` of a (·, row_len) row-major matrix into `out`
 /// ((idx.len(), row_len), overwritten). The batched-decode embed: stacking
 /// each sequence's current token embedding into one activation matrix is a
@@ -454,6 +550,71 @@ mod tests {
         for (o, v) in out.iter().zip(&values) {
             assert!((o - v).abs() < 1e-6);
         }
+    }
+
+    /// Naive per-head reference for sparse_attend (the pre-packing decode
+    /// pattern: strided dot/axpy per query head).
+    fn sparse_reference(
+        q: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        n_sel: usize,
+        n_heads: usize,
+        n_kv_heads: usize,
+        d: usize,
+    ) -> Vec<f32> {
+        let kvd = n_kv_heads * d;
+        let group = n_heads / n_kv_heads;
+        let scale = 1.0 / (d as f32).sqrt();
+        let mut out = vec![0.0f32; n_heads * d];
+        let mut scores = vec![0.0f32; n_sel];
+        for h in 0..n_heads {
+            let kvh = h / group;
+            let qh = &q[h * d..(h + 1) * d];
+            for (j, s) in scores.iter_mut().enumerate() {
+                *s = dot(qh, &keys[j * kvd + kvh * d..j * kvd + (kvh + 1) * d]) * scale;
+            }
+            softmax(&mut scores);
+            let oh = &mut out[h * d..(h + 1) * d];
+            for (j, &p) in scores.iter().enumerate() {
+                axpy(p, &values[j * kvd + kvh * d..j * kvd + (kvh + 1) * d], oh);
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn sparse_attend_matches_reference_mha_and_gqa() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(29);
+        for (n_heads, n_kv_heads, d, n_sel) in
+            [(1usize, 1usize, 8usize, 13usize), (4, 4, 8, 7), (4, 2, 16, 21), (8, 2, 4, 1)]
+        {
+            let kvd = n_kv_heads * d;
+            let q = rng.normal_vec(n_heads * d, 1.0);
+            let keys = rng.normal_vec(n_sel * kvd, 1.0);
+            let values = rng.normal_vec(n_sel * kvd, 1.0);
+            let mut out = vec![0.0f32; n_heads * d];
+            let mut scratch = SparseAttendScratch::default();
+            sparse_attend(&q, &keys, &values, n_sel, n_heads, n_kv_heads, d, &mut scratch, &mut out);
+            // Warm-scratch rerun must be identical (buffer reuse safety).
+            let mut out2 = vec![0.0f32; n_heads * d];
+            sparse_attend(&q, &keys, &values, n_sel, n_heads, n_kv_heads, d, &mut scratch, &mut out2);
+            assert_eq!(out, out2);
+            let reference = sparse_reference(&q, &keys, &values, n_sel, n_heads, n_kv_heads, d);
+            for (a, b) in out.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-4, "{n_heads}h/{n_kv_heads}kv: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_attend_empty_selection_zeroes_out() {
+        let mut scratch = SparseAttendScratch::default();
+        let q = vec![1.0f32; 8];
+        let mut out = vec![7.0f32; 8];
+        sparse_attend(&q, &[], &[], 0, 2, 1, 4, &mut scratch, &mut out);
+        assert!(out.iter().all(|&x| x == 0.0));
     }
 
     #[test]

@@ -4,8 +4,9 @@
 use sals::attention::{merge_selection, AttentionBackend, AttnShape, FullAttention, SalsAttention, SalsConfig};
 use sals::lowrank::Calibrator;
 use sals::model::{BackendFactory, BatchScratch, Model, ModelConfig, Scratch, SequenceState, Weights};
-use sals::quant::{dequantize_group, quantize_group, Bits};
+use sals::quant::{dequantize_group, quantize_group, Bits, TokenQuantStore};
 use sals::rope::RopeTable;
+use sals::tensor::ops::{softmax, sparse_attend, SparseAttendScratch};
 use sals::tensor::{top_k_indices, Mat};
 use sals::util::prop::check;
 use sals::util::rng::Rng;
@@ -156,6 +157,199 @@ fn prop_projector_columns_orthonormal_any_rank() {
                 }
             }
             true
+        },
+    );
+}
+
+/// Naive per-head exact sparse attention — the per-row reference the
+/// packed kernel must bit-match (≤1e-4; only fp summation order differs).
+fn naive_sparse_attention(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    n_sel: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    d: usize,
+) -> Vec<f32> {
+    let kvd = n_kv_heads * d;
+    let group = n_heads / n_kv_heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let mut out = vec![0.0f32; n_heads * d];
+    let mut scores = vec![0.0f32; n_sel];
+    for h in 0..n_heads {
+        let kvh = h / group;
+        let qh = &q[h * d..(h + 1) * d];
+        for (j, s) in scores.iter_mut().enumerate() {
+            let krow = &keys[j * kvd + kvh * d..j * kvd + (kvh + 1) * d];
+            *s = qh.iter().zip(krow).map(|(a, b)| a * b).sum::<f32>() * scale;
+        }
+        softmax(&mut scores);
+        for (j, &p) in scores.iter().enumerate() {
+            let vrow = &values[j * kvd + kvh * d..j * kvd + (kvh + 1) * d];
+            for (o, &v) in out[h * d..(h + 1) * d].iter_mut().zip(vrow) {
+                *o += p * v;
+            }
+        }
+    }
+    out
+}
+
+#[test]
+fn prop_sparse_attend_matches_naive_reference() {
+    // The packed kernel (panel packing + matmul QKᵀ/PV) must match the
+    // per-row strided reference for every MHA/GQA shape draw.
+    check(
+        "sparse-attend-parity",
+        60,
+        |r| {
+            let n_kv_heads = 1 << r.below(3); // 1, 2, 4
+            let group = 1 << r.below(3); // MHA (1) and GQA groups
+            let d = 2 * r.range(1, 9);
+            let n_sel = r.range(1, 40);
+            vec![n_kv_heads, group, d, n_sel, r.below(1 << 30)]
+        },
+        |v| {
+            let (n_kv_heads, group, d, n_sel, seed) = (v[0], v[1], v[2], v[3], v[4] as u64);
+            let n_heads = n_kv_heads * group;
+            let kvd = n_kv_heads * d;
+            let mut rng = Rng::new(seed);
+            let q = rng.normal_vec(n_heads * d, 1.0);
+            let keys = rng.normal_vec(n_sel * kvd, 1.0);
+            let values = rng.normal_vec(n_sel * kvd, 1.0);
+            let mut out = vec![0.0f32; n_heads * d];
+            let mut scratch = SparseAttendScratch::default();
+            sparse_attend(&q, &keys, &values, n_sel, n_heads, n_kv_heads, d, &mut scratch, &mut out);
+            let reference = naive_sparse_attention(&q, &keys, &values, n_sel, n_heads, n_kv_heads, d);
+            out.iter().zip(&reference).all(|(a, b)| (a - b).abs() < 1e-4)
+        },
+    );
+}
+
+#[test]
+fn prop_quant_gather_rows_matches_per_row_get() {
+    // Page-coherent gather ≡ per-row get() for any store shape and any
+    // sorted selection spanning quant-group boundaries and the fp32 tail.
+    check(
+        "quant-gather-parity",
+        80,
+        |r| {
+            let dim = r.range(1, 12);
+            let group = r.range(1, 10);
+            let window = r.range(1, 16);
+            let len = r.range(1, 120);
+            let bits = r.below(3);
+            vec![dim, group, window, len, bits, r.below(1 << 30)]
+        },
+        |v| {
+            let (dim, group, window, len, bits, seed) =
+                (v[0], v[1], v[2], v[3], v[4], v[5] as u64);
+            let bits = [Bits::B2, Bits::B4, Bits::B8][bits];
+            let mut rng = Rng::new(seed);
+            let mut st = TokenQuantStore::new(dim, bits, group, window);
+            for _ in 0..len {
+                st.append(&rng.normal_vec(dim, 1.0));
+            }
+            // Random sorted subset (keep each index with p ≈ 1/2).
+            let idx: Vec<usize> = (0..len).filter(|_| rng.below(2) == 0).collect();
+            let mut gathered = vec![0.0f32; idx.len() * dim];
+            st.gather_rows(&idx, &mut gathered);
+            let mut row = vec![0.0f32; dim];
+            for (t, &j) in idx.iter().enumerate() {
+                st.get(j, &mut row);
+                if gathered[t * dim..(t + 1) * dim] != row[..] {
+                    return false;
+                }
+            }
+            // read_all must agree too.
+            let mut all = vec![0.0f32; len * dim];
+            st.read_all(&mut all);
+            for j in 0..len {
+                st.get(j, &mut row);
+                if all[j * dim..(j + 1) * dim] != row[..] {
+                    return false;
+                }
+            }
+            true
+        },
+    );
+}
+
+/// SALS end-to-end decode parity: the split-panel scoring + partitioned
+/// reconstruction + page-coherent value gather + packed sparse_attend
+/// pipeline must match a per-row reference implementation (projector
+/// project/reconstruct per row, per-row quant get(), naive per-head
+/// attention) within 1e-4 — across MHA/GQA shapes, recent-ring wraps, and
+/// quant-group boundaries. `critical >= len` pins the selection to the
+/// whole sequence so the comparison is immune to top-k tie flips.
+#[test]
+fn prop_sals_pipeline_matches_per_row_reference() {
+    check(
+        "sals-pipeline-parity",
+        12,
+        |r| {
+            let n_kv_heads = 1 + r.below(2); // 1 or 2
+            let group = 1 + r.below(2); // MHA and GQA
+            let d = 2 * r.range(2, 5); // 4..8
+            let seq = r.range(12, 70); // wraps the ring (recent 8)
+            vec![n_kv_heads, group, d, seq, r.below(1 << 30)]
+        },
+        |v| {
+            let (n_kv_heads, group, d, seq, seed) = (v[0], v[1], v[2], v[3], v[4] as u64);
+            let n_heads = n_kv_heads * group;
+            let shape = AttnShape::gqa(n_heads, n_kv_heads, d, seq + 4);
+            let kvd = shape.kv_dim();
+            let mut rng = Rng::new(seed);
+            let mut cal = Calibrator::new(kvd);
+            for _ in 0..kvd * 4 {
+                cal.add_key(&rng.normal_vec(kvd, 1.0));
+            }
+            let rank = (kvd / 2).max(2);
+            let proj = cal.fit(rank).unwrap();
+            let cfg = SalsConfig {
+                rank,
+                r_star: rank / 2,
+                sink: 2,
+                recent: 8,
+                critical: seq + 4, // cover everything
+                v_bits: Bits::B4,
+                group: 4, // several quant pages per sequence
+            };
+            let mut sals = SalsAttention::new(shape, cfg.clone(), proj.clone());
+            let mut store = TokenQuantStore::new(kvd, cfg.v_bits, cfg.group, cfg.recent.max(cfg.group));
+            let mut keys = Vec::new();
+            for _ in 0..seq {
+                let k = rng.normal_vec(kvd, 1.0);
+                let v = rng.normal_vec(kvd, 1.0);
+                sals.append(&k, &v);
+                store.append(&v);
+                keys.push(k);
+            }
+            let q = rng.normal_vec(shape.q_dim(), 1.0);
+            let mut out = vec![0.0f32; shape.q_dim()];
+            sals.attend(&q, &mut out);
+
+            // ---- per-row reference pipeline ----
+            let rope = RopeTable::new(d, seq + 4, shape.rope_base);
+            let recent_cap = cfg.recent.max(1);
+            let mut lat = vec![0.0f32; rank];
+            let mut rk = vec![0.0f32; seq * kvd];
+            let mut rv = vec![0.0f32; seq * kvd];
+            for (j, k) in keys.iter().enumerate() {
+                let dst = &mut rk[j * kvd..(j + 1) * kvd];
+                if j + recent_cap >= seq {
+                    dst.copy_from_slice(k); // exact fp32 recent window
+                } else {
+                    proj.project(k, &mut lat);
+                    proj.reconstruct(&lat, dst);
+                }
+                rope.apply_multihead(dst, j);
+                store.get(j, &mut rv[j * kvd..(j + 1) * kvd]);
+            }
+            let mut qr = q.clone();
+            rope.apply_multihead(&mut qr, seq - 1);
+            let reference = naive_sparse_attention(&qr, &rk, &rv, seq, n_heads, n_kv_heads, d);
+            out.iter().zip(&reference).all(|(a, b)| (a - b).abs() < 1e-4)
         },
     );
 }
