@@ -125,6 +125,7 @@ fn main() {
         .field("pool_budget_bytes", pool_budget)
         .field("sals25_capacity_gt_full", ok)
         .field("rows", Json::Arr(rows));
-    std::fs::write("BENCH_capacity.json", doc.to_string()).expect("write BENCH_capacity.json");
-    println!("wrote BENCH_capacity.json");
+    let path = sals::harness::bench_artifact_path("BENCH_capacity.json");
+    std::fs::write(&path, doc.to_string()).expect("write BENCH_capacity.json");
+    println!("wrote {}", path.display());
 }

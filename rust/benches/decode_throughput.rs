@@ -215,6 +215,7 @@ fn main() {
         .field("decode_tokens", decode_n)
         .field("batch16_per_seq_beats_batch1", amortized)
         .field("rows", Json::Arr(rows));
-    std::fs::write("BENCH_decode.json", doc.to_string()).expect("write BENCH_decode.json");
-    println!("wrote BENCH_decode.json");
+    let path = sals::harness::bench_artifact_path("BENCH_decode.json");
+    std::fs::write(&path, doc.to_string()).expect("write BENCH_decode.json");
+    println!("wrote {}", path.display());
 }

@@ -134,6 +134,7 @@ fn main() {
         .field("config", "d_model=64 n_layers=4 n_heads=4 head_dim=16")
         .field("chunk", Model::PREFILL_CHUNK)
         .field("rows", Json::Arr(rows));
-    std::fs::write("BENCH_prefill.json", doc.to_string()).expect("write BENCH_prefill.json");
-    println!("wrote BENCH_prefill.json");
+    let path = sals::harness::bench_artifact_path("BENCH_prefill.json");
+    std::fs::write(&path, doc.to_string()).expect("write BENCH_prefill.json");
+    println!("wrote {}", path.display());
 }

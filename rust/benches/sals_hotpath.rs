@@ -1,13 +1,8 @@
-//! SALS decode hot-path stage timings: score / select / reconstruct+gather
-//! / attend, per token, at 4K and 32K contexts — the bandwidth-exact
-//! decode refactor's regression gate.
+//! SALS decode hot-path stage timings per token at 4K and 32K contexts —
+//! the decode-operator regression gate.
 //!
-//! Two implementations of the same pipeline run against identical state:
+//! Four implementations of the same pipeline run against identical state:
 //!
-//! * **packed** — the production path (`SalsAttention::attend_instrumented`):
-//!   split-panel unit-stride latent scoring, O(k log k) range-merge
-//!   selection, recon matmul that skips recent-ring rows, page-coherent
-//!   value gather, packed `sparse_attend` epilogue.
 //! * **legacy** — a faithful in-bench replica of the pre-split-panel path:
 //!   strided score scan over (len, r) latent rows (touches the full rows
 //!   to read the leading r*), O(seq_len) mask-based selection merge
@@ -15,16 +10,34 @@
 //!   (recent rows computed then overwritten), per-row quant-store `get()`,
 //!   and the per-head strided dot/axpy attention with its per-call scores
 //!   allocation.
+//! * **staged** — the PR-4 pipeline (`attend_staged_instrumented`):
+//!   split-panel unit-stride latent scoring, O(k log k) range-merge
+//!   selection, recon matmul that skips recent-ring rows into a
+//!   materialized (n_sel, kvd) key panel, page-coherent value gather,
+//!   packed `sparse_attend` epilogue.
+//! * **fused** — the production path (`attend_instrumented`, threads=1):
+//!   same score/select, then the §4.4 fused reconstruct·RoPE·QKᵀ kernel —
+//!   L1-resident per-KV-head tiles + online softmax; the key panel and
+//!   full score row never materialize.
+//! * **fused ×N** — the fused path with the worker share set to
+//!   min(num_cpus, 8): token-block-parallel score scan + per-KV-head
+//!   parallel tile loops (bit-identical output, faster wall clock).
 //!
 //! The workload is the paper's memory-bound decode regime (long context,
 //! small critical budget, SALS-12.5% ranks — r* rows are sub-cache-line,
-//! where the strided scan's waste is maximal). Acceptance: ≥1.5× packed
-//! vs legacy on the summed four stages at 32K, and the score stage's
-//! metered traffic ≈ r*·4 bytes per context token (not r·4).
+//! where the strided scan's waste is maximal). Acceptance at 32K:
+//! staged ≥ 1.5× legacy on total; fused kernel ≥ 1.2× the staged
+//! reconstruct+attend stages (the stages the fusion replaces),
+//! single-threaded; the threads=N total not regressing below threads=1
+//! (the gate guards against a parallelization that *hurts* — parity on
+//! tolerance in quick mode, with the measured speedup reported in the
+//! column and JSON; real multicore hardware is expected to show > 1×);
+//! and the score stage's metered traffic ≈ r*·4 bytes per context token
+//! (not r·4).
 //!
-//! Emits `BENCH_sals_hotpath.json`; CI runs this under `SALS_BENCH_QUICK=1`
-//! and fails if `accepted` is false. Quick mode shortens the timing loops
-//! (same contexts and shapes).
+//! Emits `BENCH_sals_hotpath.json` at the repo root; CI runs this under
+//! `SALS_BENCH_QUICK=1` and fails if `accepted` is false. Quick mode
+//! shortens the timing loops (same contexts and shapes).
 
 use sals::attention::{AttentionBackend, SalsAttention, SalsConfig, SalsStageTimes};
 use sals::harness::Table;
@@ -221,13 +234,27 @@ impl Legacy {
 }
 
 struct CtxResult {
-    packed: SalsStageTimes,
     legacy: SalsStageTimes,
-    speedup: f64,
+    staged: SalsStageTimes,
+    fused: SalsStageTimes,
+    fused_mt: SalsStageTimes,
+    /// staged total vs legacy total (the PR-4 gate).
+    staged_speedup: f64,
+    /// Fused kernel vs the staged stages it replaces:
+    /// (staged.reconstruct + staged.attend) / fused.attend.
+    fused_kernel_speedup: f64,
+    /// fused threads=1 total vs threads=N total.
+    mt_speedup: f64,
     score_bytes_per_ctx_token: f64,
 }
 
-fn run_context(ctx: usize, reps: usize, decode_tokens: usize, rng: &mut Rng) -> CtxResult {
+fn run_context(
+    ctx: usize,
+    reps: usize,
+    decode_tokens: usize,
+    threads_n: usize,
+    rng: &mut Rng,
+) -> CtxResult {
     let kvd = kvd();
     let qd = N_HEADS * HEAD_DIM;
     let max_seq = ctx + 8;
@@ -269,29 +296,45 @@ fn run_context(ctx: usize, reps: usize, decode_tokens: usize, rng: &mut Rng) -> 
     let _ = packed.latent_scores(&q);
     let score_bytes_per_ctx_token = (packed.traffic().read - before) as f64 / ctx as f64;
 
-    // Attends do not mutate cache state, so both paths are timed against
-    // the identical frozen context; best-of-`reps` per path.
+    // Attends do not mutate cache state, so all four paths are timed
+    // against the identical frozen context; best-of-`reps` per path.
     let mut out = vec![0.0f32; qd];
-    let mut best_packed = SalsStageTimes::default();
-    let mut best_legacy = SalsStageTimes::default();
-    let (mut best_packed_total, mut best_legacy_total) = (f64::INFINITY, f64::INFINITY);
+    let mut best = [SalsStageTimes::default(); 4]; // legacy, staged, fused, fused_mt
+    let mut best_total = [f64::INFINITY; 4];
+    fn keep(
+        slot: usize,
+        t: SalsStageTimes,
+        best: &mut [SalsStageTimes; 4],
+        best_total: &mut [f64; 4],
+    ) {
+        if t.total() < best_total[slot] {
+            best_total[slot] = t.total();
+            best[slot] = t;
+        }
+    }
     for _ in 0..reps {
-        let mut tp = SalsStageTimes::default();
-        for _ in 0..decode_tokens {
-            packed.attend_instrumented(&q, &mut out, &mut tp);
-        }
-        if tp.total() < best_packed_total {
-            best_packed_total = tp.total();
-            best_packed = tp;
-        }
         let mut tl = SalsStageTimes::default();
         for _ in 0..decode_tokens {
             legacy.attend(&q, &mut out, &mut tl);
         }
-        if tl.total() < best_legacy_total {
-            best_legacy_total = tl.total();
-            best_legacy = tl;
+        keep(0, tl, &mut best, &mut best_total);
+        let mut ts = SalsStageTimes::default();
+        for _ in 0..decode_tokens {
+            packed.attend_staged_instrumented(&q, &mut out, &mut ts);
         }
+        keep(1, ts, &mut best, &mut best_total);
+        packed.set_threads(1);
+        let mut tf = SalsStageTimes::default();
+        for _ in 0..decode_tokens {
+            packed.attend_instrumented(&q, &mut out, &mut tf);
+        }
+        keep(2, tf, &mut best, &mut best_total);
+        packed.set_threads(threads_n);
+        let mut tm = SalsStageTimes::default();
+        for _ in 0..decode_tokens {
+            packed.attend_instrumented(&q, &mut out, &mut tm);
+        }
+        keep(3, tm, &mut best, &mut best_total);
     }
     let scale_to_per_token = |t: SalsStageTimes| SalsStageTimes {
         score: t.score / decode_tokens as f64,
@@ -299,12 +342,18 @@ fn run_context(ctx: usize, reps: usize, decode_tokens: usize, rng: &mut Rng) -> 
         reconstruct: t.reconstruct / decode_tokens as f64,
         attend: t.attend / decode_tokens as f64,
     };
-    let packed_t = scale_to_per_token(best_packed);
-    let legacy_t = scale_to_per_token(best_legacy);
+    let legacy_t = scale_to_per_token(best[0]);
+    let staged_t = scale_to_per_token(best[1]);
+    let fused_t = scale_to_per_token(best[2]);
+    let fused_mt_t = scale_to_per_token(best[3]);
     CtxResult {
-        packed: packed_t,
         legacy: legacy_t,
-        speedup: legacy_t.total() / packed_t.total(),
+        staged: staged_t,
+        fused: fused_t,
+        fused_mt: fused_mt_t,
+        staged_speedup: legacy_t.total() / staged_t.total(),
+        fused_kernel_speedup: (staged_t.reconstruct + staged_t.attend) / fused_t.attend,
+        mt_speedup: fused_t.total() / fused_mt_t.total(),
         score_bytes_per_ctx_token,
     }
 }
@@ -312,23 +361,29 @@ fn run_context(ctx: usize, reps: usize, decode_tokens: usize, rng: &mut Rng) -> 
 fn main() {
     let quick = std::env::var("SALS_BENCH_QUICK").is_ok();
     let (reps, decode_tokens) = if quick { (3, 5) } else { (3, 10) };
+    let threads_n = sals::util::threadpool::num_cpus().min(8);
     let mut rng = Rng::new(2026);
 
     let mut table = Table::new(
-        "SALS decode hot path — per-token stage times (µs), packed vs legacy",
+        "SALS decode hot path — per-token stage times (µs): legacy vs staged vs fused",
         &["Ctx", "Path", "Score", "Select", "Reconstruct", "Attend", "Total", "Speedup"],
     );
     let mut rows: Vec<Json> = Vec::new();
-    let mut speedup_32k = 0.0;
+    let mut staged_speedup_32k = 0.0;
+    let mut fused_kernel_speedup_32k = 0.0;
+    let mut mt_speedup_32k = 0.0;
     let mut score_bytes_ok = true;
     let rstar_bytes = (R_STAR * 4) as f64;
 
     for &ctx in &CONTEXTS {
-        let res = run_context(ctx, reps, decode_tokens, &mut rng);
+        let res = run_context(ctx, reps, decode_tokens, threads_n, &mut rng);
         let us = 1e6;
+        let fused_mt_label = format!("fused x{threads_n}");
         for (path, t, speed) in [
             ("legacy", res.legacy, String::new()),
-            ("packed", res.packed, format!("{:.2}x", res.speedup)),
+            ("staged", res.staged, format!("{:.2}x vs legacy", res.staged_speedup)),
+            ("fused", res.fused, format!("{:.2}x kernel vs staged", res.fused_kernel_speedup)),
+            (fused_mt_label.as_str(), res.fused_mt, format!("{:.2}x vs fused x1", res.mt_speedup)),
         ] {
             table.row(vec![
                 ctx.to_string(),
@@ -359,15 +414,33 @@ fn main() {
         // The meter must reflect the panel scan: r*·4, not r·4.
         score_bytes_ok &= res.score_bytes_per_ctx_token <= rstar_bytes * 1.01;
         if ctx == 32768 {
-            speedup_32k = res.speedup;
+            staged_speedup_32k = res.staged_speedup;
+            fused_kernel_speedup_32k = res.fused_kernel_speedup;
+            mt_speedup_32k = res.mt_speedup;
         }
     }
     table.print();
 
-    let accepted = speedup_32k >= 1.5 && score_bytes_ok;
+    // Gates: the PR-4 staged-vs-legacy floor; the fused kernel vs the two
+    // staged stages it replaces (reconstruct+attend), single-threaded; and
+    // — on multicore only — the threads=N total must not regress below
+    // threads=1 (a no-worse floor, NOT a strict-speedup gate: gating
+    // strictly above 1.0 on a microsecond-scale measurement would flake;
+    // the measured mt speedup is reported in the column/JSON for the
+    // trajectory). Quick mode (CI's 2-vCPU runners, 5-token timing loops)
+    // tolerates 5% scheduler noise around that floor.
+    let staged_ok = staged_speedup_32k >= 1.5;
+    let fused_ok = fused_kernel_speedup_32k >= 1.2;
+    let mt_floor = if quick { 0.95 } else { 1.0 };
+    let mt_ok = threads_n <= 1 || mt_speedup_32k >= mt_floor;
+    let accepted = staged_ok && fused_ok && mt_ok && score_bytes_ok;
     println!(
-        "acceptance: 32K attend-operator speedup {speedup_32k:.2}x {} 1.5x, score bytes/ctx-token {} r*·4",
-        if speedup_32k >= 1.5 { ">=" } else { "<" },
+        "acceptance: 32K staged {staged_speedup_32k:.2}x {} 1.5x legacy; fused kernel \
+         {fused_kernel_speedup_32k:.2}x {} 1.2x staged recon+attend; fused x{threads_n} \
+         {mt_speedup_32k:.2}x {} {mt_floor}x fused x1; score bytes/ctx-token {} r*·4",
+        if staged_ok { ">=" } else { "<" },
+        if fused_ok { ">=" } else { "<" },
+        if mt_ok { ">=" } else { "<" },
         if score_bytes_ok { "==" } else { "!=" },
     );
 
@@ -380,12 +453,16 @@ fn main() {
         .field("quick", quick)
         .field("decode_tokens", decode_tokens)
         .field("reps", reps)
-        .field("speedup_32k", speedup_32k)
+        .field("threads_n", threads_n as i64)
+        .field("speedup_32k", staged_speedup_32k)
+        .field("fused_kernel_speedup_32k", fused_kernel_speedup_32k)
+        .field("fused_mt_speedup_32k", mt_speedup_32k)
         .field("score_bytes_per_ctx_token_ok", score_bytes_ok)
         .field("accepted", accepted)
         .field("rows", Json::Arr(rows));
-    std::fs::write("BENCH_sals_hotpath.json", doc.to_string()).expect("write BENCH_sals_hotpath.json");
-    println!("wrote BENCH_sals_hotpath.json");
+    let path = sals::harness::bench_artifact_path("BENCH_sals_hotpath.json");
+    std::fs::write(&path, doc.to_string()).expect("write BENCH_sals_hotpath.json");
+    println!("wrote {}", path.display());
     if !accepted {
         std::process::exit(1);
     }

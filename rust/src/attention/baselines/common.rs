@@ -35,6 +35,11 @@ pub struct BaselineScratch {
     /// Projection/label staging (Loki query latent, DoubleSparse channel
     /// gather, Loki append-row latent).
     pub lat: Vec<f32>,
+    /// Worker share for the per-KV-head attend fan-out
+    /// ([`crate::tensor::ops::sparse_attend_threaded`]); 0/1 = serial.
+    /// Set by the engine through
+    /// [`crate::attention::AttentionBackend::set_threads`].
+    pub threads: usize,
 }
 
 /// Mean-pool a rotated query's heads per KV group into (kv_dim) — the

@@ -11,7 +11,7 @@ use crate::attention::baselines::common::{pool_query, BaselineScratch, DenseCach
 use crate::attention::{
     merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
 };
-use crate::tensor::ops::sparse_attend;
+use crate::tensor::ops::sparse_attend_threaded;
 use crate::tensor::{top_k_indices, top_k_indices_into};
 
 pub struct DoubleSparseAttention {
@@ -119,7 +119,7 @@ impl AttentionBackend for DoubleSparseAttention {
             &mut self.scratch.vals,
             &mut self.traffic,
         );
-        sparse_attend(
+        sparse_attend_threaded(
             &self.scratch.qr,
             &self.scratch.keys,
             &self.scratch.vals,
@@ -127,9 +127,14 @@ impl AttentionBackend for DoubleSparseAttention {
             shape.n_heads,
             shape.n_kv_heads,
             shape.head_dim,
+            self.scratch.threads.max(1),
             &mut self.scratch.attend,
             out,
         );
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.scratch.threads = threads.max(1);
     }
 
     fn len(&self) -> usize {

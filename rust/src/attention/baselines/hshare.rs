@@ -12,7 +12,7 @@ use crate::attention::baselines::common::{pool_query, BaselineScratch, DenseCach
 use crate::attention::{
     merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
 };
-use crate::tensor::ops::sparse_attend;
+use crate::tensor::ops::sparse_attend_threaded;
 use crate::tensor::top_k_indices_into;
 
 pub struct HShareAttention {
@@ -102,7 +102,7 @@ impl AttentionBackend for HShareAttention {
             &mut self.scratch.vals,
             &mut self.traffic,
         );
-        sparse_attend(
+        sparse_attend_threaded(
             &self.scratch.qr,
             &self.scratch.keys,
             &self.scratch.vals,
@@ -110,9 +110,14 @@ impl AttentionBackend for HShareAttention {
             shape.n_heads,
             shape.n_kv_heads,
             shape.head_dim,
+            self.scratch.threads.max(1),
             &mut self.scratch.attend,
             out,
         );
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.scratch.threads = threads.max(1);
     }
 
     fn len(&self) -> usize {

@@ -6,7 +6,7 @@
 use crate::attention::{AttentionBackend, AttnShape, FootprintModel, Traffic};
 use crate::quant::{Bits, TokenQuantStore};
 use crate::rope::RopeTable;
-use crate::tensor::ops::{sparse_attend, SparseAttendScratch};
+use crate::tensor::ops::{sparse_attend_threaded, SparseAttendScratch};
 
 pub struct KiviAttention {
     shape: AttnShape,
@@ -24,6 +24,8 @@ pub struct KiviAttention {
     scratch_kr: Vec<f32>,
     scratch_qr: Vec<f32>,
     scratch_attend: SparseAttendScratch,
+    /// Worker share for the per-KV-head attend fan-out; 1 = serial.
+    threads: usize,
 }
 
 impl KiviAttention {
@@ -41,6 +43,7 @@ impl KiviAttention {
             scratch_kr: Vec::new(),
             scratch_qr: Vec::new(),
             scratch_attend: SparseAttendScratch::default(),
+            threads: 1,
         }
     }
 }
@@ -72,7 +75,7 @@ impl AttentionBackend for KiviAttention {
         self.values.read_all(&mut self.scratch_v);
         self.traffic.read_bytes(self.keys.read_all_bytes());
         self.traffic.read_bytes(self.values.read_all_bytes());
-        sparse_attend(
+        sparse_attend_threaded(
             &self.scratch_qr,
             &self.scratch_k,
             &self.scratch_v,
@@ -80,9 +83,14 @@ impl AttentionBackend for KiviAttention {
             self.shape.n_heads,
             self.shape.n_kv_heads,
             self.shape.head_dim,
+            self.threads,
             &mut self.scratch_attend,
             out,
         );
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     fn len(&self) -> usize {

@@ -12,7 +12,7 @@ use crate::attention::{
     merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
 };
 use crate::lowrank::Projector;
-use crate::tensor::ops::sparse_attend;
+use crate::tensor::ops::sparse_attend_threaded;
 use crate::tensor::top_k_indices_into;
 
 pub struct LokiAttention {
@@ -108,7 +108,7 @@ impl AttentionBackend for LokiAttention {
             &mut self.scratch.vals,
             &mut self.traffic,
         );
-        sparse_attend(
+        sparse_attend_threaded(
             &self.scratch.qr,
             &self.scratch.keys,
             &self.scratch.vals,
@@ -116,9 +116,14 @@ impl AttentionBackend for LokiAttention {
             shape.n_heads,
             shape.n_kv_heads,
             shape.head_dim,
+            self.scratch.threads.max(1),
             &mut self.scratch.attend,
             out,
         );
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.scratch.threads = threads.max(1);
     }
 
     fn len(&self) -> usize {

@@ -11,7 +11,7 @@ use crate::attention::{AttentionBackend, AttnShape, FootprintModel, Traffic};
 use crate::lowrank::Projector;
 use crate::quant::{dequantize_group, quantize_group, Bits, QuantGroup};
 use crate::rope::RopeTable;
-use crate::tensor::ops::{sparse_attend, SparseAttendScratch};
+use crate::tensor::ops::{sparse_attend_threaded, SparseAttendScratch};
 
 pub struct PaluAttention {
     shape: AttnShape,
@@ -32,6 +32,8 @@ pub struct PaluAttention {
     scratch_qr: Vec<f32>,
     scratch_lat: Vec<f32>,
     scratch_attend: SparseAttendScratch,
+    /// Worker share for the per-KV-head attend fan-out; 1 = serial.
+    threads: usize,
 }
 
 impl PaluAttention {
@@ -65,6 +67,7 @@ impl PaluAttention {
             scratch_qr: Vec::new(),
             scratch_lat: Vec::new(),
             scratch_attend: SparseAttendScratch::default(),
+            threads: 1,
         }
     }
 
@@ -127,7 +130,7 @@ impl AttentionBackend for PaluAttention {
             self.traffic.read_bytes(2 * self.latent_row_bytes());
         }
         self.scratch_lat = lat;
-        sparse_attend(
+        sparse_attend_threaded(
             &self.scratch_qr,
             &self.scratch_k,
             &self.scratch_v,
@@ -135,9 +138,14 @@ impl AttentionBackend for PaluAttention {
             self.shape.n_heads,
             self.shape.n_kv_heads,
             self.shape.head_dim,
+            self.threads,
             &mut self.scratch_attend,
             out,
         );
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     fn len(&self) -> usize {

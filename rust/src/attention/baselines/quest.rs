@@ -9,7 +9,7 @@ use crate::attention::baselines::common::{pool_query, BaselineScratch, DenseCach
 use crate::attention::{
     merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
 };
-use crate::tensor::ops::sparse_attend;
+use crate::tensor::ops::sparse_attend_threaded;
 use crate::tensor::top_k_indices_into;
 
 pub struct QuestAttention {
@@ -113,7 +113,7 @@ impl QuestAttention {
             &mut self.scratch.vals,
             &mut self.traffic,
         );
-        sparse_attend(
+        sparse_attend_threaded(
             &self.scratch.qr,
             &self.scratch.keys,
             &self.scratch.vals,
@@ -121,6 +121,7 @@ impl QuestAttention {
             shape.n_heads,
             shape.n_kv_heads,
             shape.head_dim,
+            self.scratch.threads.max(1),
             &mut self.scratch.attend,
             out,
         );
@@ -156,6 +157,10 @@ impl AttentionBackend for QuestAttention {
     fn forward_batch(&mut self, ks: &[f32], vs: &[f32], qs: &[f32], n: usize, out: &mut [f32]) {
         self.append_batch(ks, vs, n);
         self.prefill_attend(qs, n, out);
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.scratch.threads = threads.max(1);
     }
 
     fn len(&self) -> usize {

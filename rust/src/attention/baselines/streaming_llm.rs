@@ -6,7 +6,7 @@ use crate::attention::baselines::common::{BaselineScratch, DenseCache};
 use crate::attention::{
     merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
 };
-use crate::tensor::ops::sparse_attend;
+use crate::tensor::ops::sparse_attend_threaded;
 
 pub struct StreamingLlmAttention {
     cache: DenseCache,
@@ -49,7 +49,7 @@ impl StreamingLlmAttention {
             &mut self.scratch.vals,
             &mut self.traffic,
         );
-        sparse_attend(
+        sparse_attend_threaded(
             &self.scratch.qr,
             &self.scratch.keys,
             &self.scratch.vals,
@@ -57,6 +57,7 @@ impl StreamingLlmAttention {
             shape.n_heads,
             shape.n_kv_heads,
             shape.head_dim,
+            self.scratch.threads.max(1),
             &mut self.scratch.attend,
             out,
         );
@@ -92,6 +93,10 @@ impl AttentionBackend for StreamingLlmAttention {
     fn forward_batch(&mut self, ks: &[f32], vs: &[f32], qs: &[f32], n: usize, out: &mut [f32]) {
         self.append_batch(ks, vs, n);
         self.prefill_attend(qs, n, out);
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.scratch.threads = threads.max(1);
     }
 
     fn len(&self) -> usize {

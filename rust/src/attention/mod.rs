@@ -91,20 +91,32 @@
 //! # Decode hot-path contract: shared kernels, zero allocation
 //!
 //! Every sparse backend's `append`/`attend` pair runs per (layer, token)
-//! at decode time, so the path is held to two rules:
+//! at decode time, so the path is held to three rules:
 //!
 //! * **Shared packed kernels.** Token scoring is a unit-stride
 //!   [`crate::tensor::ops::matmul_tn`] over a contiguous scoring panel
 //!   (SALS stores its latents split at r* for exactly this — see
 //!   `sals.rs`); selection merge is [`merge_selection_into`]; the exact
-//!   attention epilogue is [`crate::tensor::ops::sparse_attend`]; and
-//!   quantized value reads go through the page-coherent
-//!   [`crate::quant::TokenQuantStore::gather_rows`].
+//!   attention epilogue is [`crate::tensor::ops::sparse_attend`] for the
+//!   materialized-panel backends and the tile-streaming
+//!   [`crate::tensor::ops::fused_sparse_attend`] for SALS (§4.4 —
+//!   reconstruct·RoPE·QKᵀ fused, key panel never materialized); quantized
+//!   value reads go through the page-coherent
+//!   [`crate::quant::TokenQuantStore::gather_rows`] /
+//!   [`crate::quant::TokenQuantStore::gather_rows_cols`].
 //! * **Zero per-call heap allocation.** All per-token buffers (rotated
 //!   query, pooled query, scores, top-k indices, merged selection,
 //!   gathered K/V panels, kernel scratch) are backend-owned and grow to a
 //!   high-water mark; steady-state decode never allocates. Baselines share
-//!   `baselines::common::BaselineScratch` for this.
+//!   `baselines::common::BaselineScratch` for this. (The parallel attend
+//!   paths spawn scoped worker threads, whose OS-level stacks are outside
+//!   this rule — the kernels themselves build no per-call collections; a
+//!   persistent worker pool is the filed follow-on.)
+//! * **Thread-invariant parallelism.** Intra-attend fan-out (the
+//!   [`AttentionBackend::set_threads`] worker share) partitions by KV
+//!   head and by fixed token blocks — units whose arithmetic does not
+//!   depend on which worker (or how many) runs them — so decode output is
+//!   bit-identical at every thread count.
 //!
 //! Traffic metering stays canonical under the shared kernels: scoring
 //! meters exactly the panel bytes it scans (`len·r*` f32 for SALS — not
@@ -281,6 +293,18 @@ pub trait AttentionBackend {
     /// pin prefill-sized buffers through their whole decode phase.
     /// Default no-op.
     fn end_prefill(&mut self) {}
+
+    /// Worker-thread share for *intra-attend* parallelism (per-KV-head
+    /// panel fan-out, token-block score scans). The engine plumbs its
+    /// leftover worker count here when the decode batch is smaller than
+    /// the pool — batch-1 long-context decode is exactly where a single
+    /// sequence should own the whole fan-out. Contract: the thread count
+    /// is a *scheduling* knob only — outputs, traffic meters, and
+    /// `kv_bytes()` must be bit-identical for every value (the shared
+    /// kernels partition by KV head / fixed token blocks, whose per-unit
+    /// arithmetic is thread-invariant). Backends may clamp or ignore it;
+    /// default no-op (serial).
+    fn set_threads(&mut self, _threads: usize) {}
 
     /// Number of cached tokens.
     fn len(&self) -> usize;

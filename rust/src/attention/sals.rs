@@ -1,38 +1,45 @@
 //! SALS decode attention (Algorithm 1): latent KV cache, critical-token
-//! selection in latent space, selective reconstruction + RoPE, exact sparse
-//! attention — restructured so the decode hot loop is **bandwidth-exact**
-//! (streams only the bytes it scores) and **allocation-free**.
+//! selection in latent space, fused selective reconstruction + RoPE +
+//! exact sparse attention — restructured so the decode hot loop is
+//! **bandwidth-exact** (streams only the bytes it scores),
+//! **allocation-free**, and **fused** (the reconstructed key panel never
+//! exists in memory).
 //!
-//! Per decode step, four stages (each a private `stage_*` method so the
-//! hotpath bench can time them independently):
+//! The production decode step ([`AttentionBackend::attend`]) is three
+//! stages:
 //!
 //! 1. **Score** — `k̃ = U_rᵀ k` appends the new token's key as an r-dim
 //!    latent (pre-RoPE, §3.1: post-RoPE keys have higher effective rank);
 //!    values go to the channel-wise group-quantized store with an fp32
-//!    recent window. Scoring `s_j = q̃[:r*] · k̃_j[:r*]` (§4.3) runs as one
+//!    recent window. Scoring `s_j = q̃[:r*] · k̃_j[:r*]` (§4.3) runs as a
 //!    unit-stride [`crate::tensor::ops::matmul_tn`] over the **scoring
 //!    panel**: latents are stored split — a contiguous (len, r*) panel
 //!    holding each row's leading r* dims and a (len, r−r*) remainder panel
-//!    — so the scan streams exactly `len·r*` floats. The previous (len, r)
-//!    row-major store made scoring a strided scan that *touched* the full
-//!    `len·r` rows to use half of each (at the paper's r* = r/2, 2× the
-//!    score-stage bytes).
+//!    — so the scan streams exactly `len·r*` floats. Long contexts
+//!    partition the scan into fixed token blocks across the engine-plumbed
+//!    worker share (each score is an independent dot, so the fan-out is
+//!    bit-invisible).
 //! 2. **Select** — `C = sink ∪ recent ∪ top-k(s)` (§5.2 layout) via
 //!    [`super::merge_selection_into`]: O(k·log k) range-merge into
 //!    backend-owned scratch, not an O(seq_len) mask allocated per call.
-//! 3. **Reconstruct + gather** — `K_C = K̃_C U_r`, RoPE(K_C). The selection
-//!    is partitioned first: rows inside the fp32 recent-key ring take their
-//!    exact pre-RoPE keys from the ring (the paper's half-compressed
-//!    high-precision window) and are **excluded from the reconstruction
-//!    matmul** — previously they were matmul-reconstructed and then
-//!    overwritten, pure wasted FLOPs. Non-recent rows gather their split
-//!    panels back into full latent rows and reconstruct as ONE
-//!    (m, r)·(r, kvd) matmul. Values dequantize through the page-coherent
-//!    [`crate::quant::TokenQuantStore::gather_rows`] (sorted selection →
-//!    per-page setup hoisted), metered per page via `gather_read_bytes`.
-//! 4. **Attend** — RoPE(q), then exact softmax attention over (K_C, V_C)
-//!    (Eq. 5) through the packed [`crate::tensor::ops::sparse_attend`]
-//!    kernel shared by every sparse backend.
+//! 3. **Fused reconstruct·RoPE·QKᵀ·attend** (§4.4) — the selection streams
+//!    through [`crate::tensor::ops::fused_sparse_attend`] in L1-resident,
+//!    per-KV-head tiles: non-recent rows reconstruct their gathered split
+//!    latents against this head's Uᵀ block, recent-ring rows copy their
+//!    exact fp32 head slice, every tile row is rotated at its original
+//!    position, values dequantize per head through the page-coherent
+//!    [`crate::quant::TokenQuantStore::gather_rows_cols`], and an online
+//!    softmax folds each tile's QKᵀ block into running (max, denom, PV)
+//!    state — neither the (n_sel, kvd) key panel nor the full score row
+//!    is ever materialized. KV-head panels are independent, so the tile
+//!    loop fans out per KV head across the worker share.
+//!
+//! The PR-4 **staged** pipeline (materializing reconstruct → packed
+//! [`crate::tensor::ops::sparse_attend`]) survives as
+//! [`SalsAttention::attend_staged`] — the parity reference the fused path
+//! is proptested against and the bench's comparison column; see
+//! `stage_reconstruct`/`stage_attend` for its layout details (recon
+//! matmul skips ring rows, page-coherent full-width value gather).
 //!
 //! Every stage writes only backend-owned scratch: steady-state decode
 //! performs zero heap allocations (the `attention/mod.rs` decode hot-path
@@ -60,8 +67,31 @@ use super::{merge_selection_into, AttentionBackend, AttnShape, FootprintModel, T
 use crate::lowrank::Projector;
 use crate::quant::{Bits, TokenQuantStore};
 use crate::rope::RopeTable;
-use crate::tensor::ops::SparseAttendScratch;
+use crate::tensor::ops::{FusedAttendScratch, FusedLane, SparseAttendScratch};
 use crate::tensor::top_k_indices_into;
+use crate::util::threadpool;
+
+/// Below this cache length the Stage-1 score scan runs serial: the scan is
+/// one `len·r*` unit-stride pass, and under ~4K tokens the scoped-thread
+/// spawn overhead exceeds the scan itself. Each score is an independent
+/// dot product, so the token-block partition (fixed-size blocks via
+/// [`threadpool::parallel_chunks_mut`]) is bit-invariant in the thread
+/// count.
+const SCORE_PAR_MIN_LEN: usize = 4096;
+
+/// Fixed token-block size of the parallel score scan. Constant (not
+/// derived from the thread count) so the decomposition — and therefore
+/// the timing character of each block — is stable as workers vary.
+const SCORE_PAR_BLOCK: usize = 2048;
+
+/// Below this much total attend work — `n_sel · (r + group) · d` MACs,
+/// the reconstruction matmuls plus the QKᵀ/PV tile passes — the fused
+/// attend runs serial: scoped thread spawns cost tens of microseconds
+/// per round (no persistent pool yet), so the per-head share of the work
+/// must clearly outweigh them. 64K MACs ≈ the 32K-context bench shape;
+/// its 4K rows stay serial. Per-head arithmetic is fixed, so the guard
+/// cannot change results.
+const FUSED_PAR_MIN_WORK: usize = 1 << 16;
 
 /// SALS hyper-parameters (§5.1/§5.2 defaults).
 #[derive(Clone, Debug)]
@@ -112,18 +142,22 @@ impl SalsConfig {
 }
 
 /// Wall-time of one decode attend, split by pipeline stage (seconds) —
-/// filled by [`SalsAttention::attend_instrumented`] for
-/// `benches/sals_hotpath.rs`. Stages are accumulated (`+=`) so one struct
-/// can aggregate a whole decode run.
+/// filled by [`SalsAttention::attend_instrumented`] (fused production
+/// path) and [`SalsAttention::attend_staged_instrumented`] (staged
+/// reference) for `benches/sals_hotpath.rs`. Stages are accumulated
+/// (`+=`) so one struct can aggregate a whole decode run.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct SalsStageTimes {
     /// Stage 1: query pool/projection + latent panel scoring.
     pub score: f64,
     /// Stage 2: top-k + sink/recent merge.
     pub select: f64,
-    /// Stage 3: latent gather + reconstruction matmul + RoPE + value gather.
+    /// Staged path only — latent gather + reconstruction matmul + RoPE +
+    /// value gather. The fused path has no separate reconstruct stage
+    /// (it happens inside the attend kernel): stays 0.
     pub reconstruct: f64,
-    /// Stage 4: query RoPE + packed sparse attention.
+    /// Staged: query RoPE + packed sparse attention. Fused: the whole
+    /// reconstruct·RoPE·QKᵀ·online-softmax tile loop.
     pub attend: f64,
 }
 
@@ -141,9 +175,20 @@ pub struct SalsAttention {
     projector: Projector,
     /// Uᵀ (rank, kv_dim) row-major — reconstruction as a blocked matmul
     /// with a unit-stride kv_dim inner loop (§Perf L3 iteration 3; the
-    /// per-row rank-length dots were the decode-op bottleneck).
+    /// per-row rank-length dots were the decode-op bottleneck). Used by
+    /// the chunk projection and the staged reference pipeline.
     u_t: crate::tensor::Mat,
+    /// Per-KV-head Uᵀ blocks, (n_kv_heads, rank, head_dim) flat: block
+    /// `kvh` holds Uᵀ's columns `kvh·d..(kvh+1)·d` row-major, so the
+    /// fused kernel's per-head tile reconstruction is a unit-stride
+    /// (m, r)·(r, d) matmul — summed over heads, the same FLOPs as one
+    /// full-width reconstruction (the partition is free).
+    u_t_heads: Vec<f32>,
     rope: RopeTable,
+    /// Decode worker threads for the score scan + fused attend (1 =
+    /// serial; the engine plumbs its per-sequence worker share through
+    /// [`AttentionBackend::set_threads`]).
+    threads: usize,
     /// (len, r*) scoring panel: each latent row's leading r* dims,
     /// contiguous — the only latent bytes Stage-1 scoring streams.
     latent_score: Vec<f32>,
@@ -172,6 +217,7 @@ pub struct SalsAttention {
     scratch_qr: Vec<f32>,
     scratch_lat_row: Vec<f32>,
     scratch_attend: SparseAttendScratch,
+    scratch_fused: FusedAttendScratch,
     /// Chunk-latent staging buffer for the batched prefill path (kept
     /// separate from `scratch_lat`, which `attend` overwrites per token).
     scratch_chunk_lat: Vec<f32>,
@@ -188,17 +234,30 @@ impl SalsAttention {
         let recent_cap = cfg.recent.max(1);
         let values = TokenQuantStore::new(shape.kv_dim(), cfg.v_bits, cfg.group, cfg.recent.max(cfg.group));
         // Uᵀ truncated to the configured rank.
-        let mut u_t = crate::tensor::Mat::zeros(cfg.rank, shape.kv_dim());
-        for i in 0..shape.kv_dim() {
+        let kvd = shape.kv_dim();
+        let mut u_t = crate::tensor::Mat::zeros(cfg.rank, kvd);
+        for i in 0..kvd {
             for j in 0..cfg.rank {
-                u_t.data[j * shape.kv_dim() + i] = projector.u.data[i * projector.rank + j];
+                u_t.data[j * kvd + i] = projector.u.data[i * projector.rank + j];
+            }
+        }
+        // Per-KV-head column blocks of Uᵀ for the fused kernel.
+        let d = shape.head_dim;
+        let mut u_t_heads = vec![0.0f32; cfg.rank * kvd];
+        for kvh in 0..shape.n_kv_heads {
+            for j in 0..cfg.rank {
+                let src = j * kvd + kvh * d;
+                let dst = kvh * cfg.rank * d + j * d;
+                u_t_heads[dst..dst + d].copy_from_slice(&u_t.data[src..src + d]);
             }
         }
         SalsAttention {
             shape,
             projector,
             u_t,
+            u_t_heads,
             rope,
+            threads: 1,
             latent_score: Vec::new(),
             latent_rem: Vec::new(),
             recent_keys: vec![0.0; recent_cap * shape.kv_dim()],
@@ -219,6 +278,7 @@ impl SalsAttention {
             scratch_qr: Vec::new(),
             scratch_lat_row: Vec::new(),
             scratch_attend: SparseAttendScratch::default(),
+            scratch_fused: FusedAttendScratch::default(),
             scratch_chunk_lat: Vec::new(),
             cfg,
         }
@@ -240,21 +300,45 @@ impl SalsAttention {
         self.scratch_pool = pool;
     }
 
-    /// Stage 1: r*-dim latent scores for all cached tokens — one
-    /// unit-stride matmul_tn over the (len, r*) scoring panel. Meters
-    /// exactly the panel bytes the scan streams.
+    /// Stage 1: r*-dim latent scores for all cached tokens — a unit-stride
+    /// matmul_tn over the (len, r*) scoring panel, partitioned into fixed
+    /// [`SCORE_PAR_BLOCK`]-token blocks across the worker share for long
+    /// contexts (each score is one independent dot product, so blocking
+    /// and thread count are bit-invisible). Meters exactly the panel
+    /// bytes the scan streams.
     fn stage_score(&mut self, q: &[f32]) {
         self.project_query(q);
         let rs = self.cfg.r_star;
         self.scratch_scores.resize(self.len, 0.0);
-        crate::tensor::ops::matmul_tn(
-            &self.scratch_qlat[..rs],
-            &self.latent_score,
-            &mut self.scratch_scores,
-            1,
-            rs,
-            self.len,
-        );
+        if self.threads > 1 && self.len >= SCORE_PAR_MIN_LEN {
+            let qlat = &self.scratch_qlat[..rs];
+            let panel = &self.latent_score;
+            threadpool::parallel_chunks_mut(
+                &mut self.scratch_scores,
+                SCORE_PAR_BLOCK,
+                self.threads,
+                |bi, chunk| {
+                    let lo = bi * SCORE_PAR_BLOCK;
+                    crate::tensor::ops::matmul_tn(
+                        qlat,
+                        &panel[lo * rs..(lo + chunk.len()) * rs],
+                        chunk,
+                        1,
+                        rs,
+                        chunk.len(),
+                    );
+                },
+            );
+        } else {
+            crate::tensor::ops::matmul_tn(
+                &self.scratch_qlat[..rs],
+                &self.latent_score,
+                &mut self.scratch_scores,
+                1,
+                rs,
+                self.len,
+            );
+        }
         self.traffic.read_f32(self.len * rs);
     }
 
@@ -342,8 +426,8 @@ impl SalsAttention {
         self.traffic.read_bytes(self.values.gather_read_bytes(&self.scratch_sel));
     }
 
-    /// Stage 4: RoPE the query at its position and run the packed sparse
-    /// attention kernel over the gathered panels.
+    /// Stage 4 (staged reference): RoPE the query at its position and run
+    /// the packed sparse attention kernel over the gathered panels.
     fn stage_attend(&mut self, q: &[f32], out: &mut [f32]) {
         let pos = self.len - 1;
         self.scratch_qr.clear();
@@ -362,12 +446,189 @@ impl SalsAttention {
         );
     }
 
-    /// [`AttentionBackend::attend`] with per-stage wall times accumulated
-    /// into `times` — the hotpath bench's probe. Identical work to
-    /// `attend` plus four `Instant` reads.
+    /// Stages 3+4, fused (the production path — the paper's §4.4 kernel
+    /// shape): the selection streams through
+    /// [`crate::tensor::ops::fused_sparse_attend`] in [`crate::tensor::ops::FUSED_TILE`]-row,
+    /// per-KV-head tiles. Per tile, the fill closure reconstructs the
+    /// non-recent rows' latents against this head's Uᵀ block into the
+    /// L1-resident key tile (recent rows copy their exact fp32 head slice
+    /// from the ring), rotates each tile row at its original position
+    /// ([`RopeTable::apply_rows_at`]), and dequantizes the head's value
+    /// slice page-coherently
+    /// ([`TokenQuantStore::gather_rows_cols`]) — the (n_sel, kvd) key
+    /// panel and the full score row never exist; the kernel's online
+    /// softmax folds each tile in. KV-head panels are independent, so the
+    /// worker share partitions them ([`FUSED_PAR_MIN_WORK`]-guarded);
+    /// per-lane arithmetic is fixed, making the output bit-invariant in
+    /// the thread count.
+    ///
+    /// The sorted selection makes recent-ring rows a contiguous *suffix*
+    /// (everything ≥ recent_lo), so each tile splits into a reconstruction
+    /// prefix and a ring suffix — no per-row branching inside the matmul.
+    ///
+    /// Metering: `r` f32 per reconstructed row and `kvd` f32 per ring row
+    /// (identical to the staged pipeline), plus
+    /// [`TokenQuantStore::gather_read_bytes`] summed **per tile** — the
+    /// per-head column walks of one tile sum to exactly that tile's
+    /// full-width bytes, and pages straddling a tile boundary genuinely
+    /// stream their params once per touched tile (the staged path's
+    /// single whole-selection gather charges such pages once, so the
+    /// fused meter can exceed the staged meter by that boundary-page
+    /// params delta; equal whenever the selection fits one tile).
+    fn stage_attend_fused(&mut self, q: &[f32], out: &mut [f32]) {
+        let kvd = self.shape.kv_dim();
+        let d = self.shape.head_dim;
+        let r = self.cfg.rank;
+        let rs = self.cfg.r_star;
+        let rem = r - rs;
+        let n_sel = self.scratch_sel.len();
+        let recent_lo = if self.cfg.recent > 0 {
+            self.len.saturating_sub(self.recent_cap)
+        } else {
+            usize::MAX
+        };
+        // Sorted selection ⇒ rows below recent_lo form a prefix.
+        let n_recon = self.scratch_sel.partition_point(|&j| j < recent_lo);
+
+        let pos = self.len - 1;
+        self.scratch_qr.clear();
+        self.scratch_qr.extend_from_slice(q);
+        self.rope.apply_multihead(&mut self.scratch_qr, pos);
+
+        let fused_work = n_sel * (r + self.shape.group_size()) * d;
+        let threads =
+            if self.threads > 1 && fused_work >= FUSED_PAR_MIN_WORK { self.threads } else { 1 };
+
+        // Gather the reconstruction rows' split latent panels ONCE into
+        // contiguous (n_recon, r) staging shared read-only by every
+        // KV-head lane. The latent STORE streams exactly once (what the
+        // n_recon·r meter below records); the per-head matmuls re-read
+        // the small staging from cache, which is ordinary blocked-matmul
+        // operand reuse, not store traffic.
+        self.scratch_lat.clear();
+        self.scratch_lat.reserve(n_recon * r);
+        for &j in &self.scratch_sel[..n_recon] {
+            self.scratch_lat.extend_from_slice(&self.latent_score[j * rs..(j + 1) * rs]);
+            self.scratch_lat.extend_from_slice(&self.latent_rem[j * rem..(j + 1) * rem]);
+        }
+
+        let sel = &self.scratch_sel;
+        let lat = &self.scratch_lat;
+        let recent_keys = &self.recent_keys;
+        let recent_cap = self.recent_cap;
+        let values = &self.values;
+        let rope = &self.rope;
+        let u_t_heads = &self.u_t_heads;
+        let fill = move |kvh: usize, lo: usize, hi: usize, lane: &mut FusedLane| {
+            // Reconstruction prefix of the tile: recon rows are the
+            // selection prefix, so staging rows lo..rc_hi line up with
+            // tile rows 0..m — one (m, r)·(r, d) matmul against this
+            // head's Uᵀ block, straight out of the shared staging.
+            let rc_hi = hi.min(n_recon);
+            if lo < rc_hi {
+                let m = rc_hi - lo;
+                crate::tensor::ops::matmul(
+                    &lat[lo * r..rc_hi * r],
+                    &u_t_heads[kvh * r * d..(kvh + 1) * r * d],
+                    &mut lane.ktile[..m * d],
+                    m,
+                    r,
+                    d,
+                );
+            }
+            // Ring suffix: exact pre-RoPE head slices from the fp32 ring.
+            for (row, &j) in sel[lo..hi].iter().enumerate().skip(rc_hi.saturating_sub(lo)) {
+                let slot = j % recent_cap;
+                let src = slot * kvd + kvh * d;
+                lane.ktile[row * d..(row + 1) * d]
+                    .copy_from_slice(&recent_keys[src..src + d]);
+            }
+            // RoPE every tile row at its original position.
+            rope.apply_rows_at(&mut lane.ktile[..(hi - lo) * d], d, &sel[lo..hi]);
+            // Values: this head's channel slice, page-coherent.
+            values.gather_rows_cols(&sel[lo..hi], kvh * d, (kvh + 1) * d, &mut lane.vtile);
+        };
+        crate::tensor::ops::fused_sparse_attend(
+            &self.scratch_qr,
+            n_sel,
+            self.shape.n_heads,
+            self.shape.n_kv_heads,
+            d,
+            threads,
+            fill,
+            &mut self.scratch_fused,
+            out,
+        );
+        self.traffic.read_f32(n_recon * r + (n_sel - n_recon) * kvd);
+        // Value metering is TILE-accurate: the kernel dequantizes per
+        // (head, tile), so a quant page whose selected rows straddle a
+        // tile boundary streams its scale/zero params once per touched
+        // tile (summed across the per-head column slices, params bytes
+        // per page per tile — exactly what `gather_read_bytes` charges
+        // per tile sub-selection). A whole-selection charge would
+        // under-report those boundary pages.
+        let mut vbytes = 0usize;
+        let mut lo = 0;
+        while lo < n_sel {
+            let hi = (lo + crate::tensor::ops::FUSED_TILE).min(n_sel);
+            vbytes += self.values.gather_read_bytes(&self.scratch_sel[lo..hi]);
+            lo = hi;
+        }
+        self.traffic.read_bytes(vbytes);
+    }
+
+    /// [`AttentionBackend::attend`] (the fused production path) with
+    /// per-stage wall times accumulated into `times` — the hotpath
+    /// bench's probe. The fused path has no separate reconstruct stage
+    /// (reconstruction happens inside the attend kernel), so
+    /// `times.reconstruct` is untouched and the fused kernel's whole cost
+    /// lands in `times.attend`. Identical work to `attend` plus the
+    /// `Instant` reads.
     pub fn attend_instrumented(&mut self, q: &[f32], out: &mut [f32], times: &mut SalsStageTimes) {
         assert_eq!(q.len(), self.shape.q_dim());
         assert!(self.len > 0, "attend on empty cache");
+        let t0 = std::time::Instant::now();
+        self.stage_score(q);
+        let t1 = std::time::Instant::now();
+        self.stage_select();
+        let t2 = std::time::Instant::now();
+        self.stage_attend_fused(q, out);
+        let t3 = std::time::Instant::now();
+        times.score += (t1 - t0).as_secs_f64();
+        times.select += (t2 - t1).as_secs_f64();
+        times.attend += (t3 - t2).as_secs_f64();
+    }
+
+    /// The PR-4 staged pipeline (score → select → materialize+reconstruct
+    /// → packed attend) — retained as the reference the fused path is
+    /// validated against (`prop_fused_attend_matches_staged_pipeline`)
+    /// and the bench's fused-vs-staged comparison column. Pinned serial
+    /// (the configured worker share is suspended for the call) so the
+    /// reference is the unambiguous single-threaded PR-4 baseline.
+    pub fn attend_staged(&mut self, q: &[f32], out: &mut [f32]) {
+        assert_eq!(q.len(), self.shape.q_dim());
+        assert!(self.len > 0, "attend on empty cache");
+        let saved = std::mem::replace(&mut self.threads, 1);
+        self.stage_score(q);
+        self.stage_select();
+        self.stage_reconstruct();
+        self.stage_attend(q, out);
+        self.threads = saved;
+    }
+
+    /// [`SalsAttention::attend_staged`] with per-stage wall times — the
+    /// bench's staged-path probe (what `attend_instrumented` measured
+    /// before the fused kernel became the production path). Pinned serial
+    /// like [`SalsAttention::attend_staged`].
+    pub fn attend_staged_instrumented(
+        &mut self,
+        q: &[f32],
+        out: &mut [f32],
+        times: &mut SalsStageTimes,
+    ) {
+        assert_eq!(q.len(), self.shape.q_dim());
+        assert!(self.len > 0, "attend on empty cache");
+        let saved = std::mem::replace(&mut self.threads, 1);
         let t0 = std::time::Instant::now();
         self.stage_score(q);
         let t1 = std::time::Instant::now();
@@ -377,6 +638,7 @@ impl SalsAttention {
         let t3 = std::time::Instant::now();
         self.stage_attend(q, out);
         let t4 = std::time::Instant::now();
+        self.threads = saved;
         times.score += (t1 - t0).as_secs_f64();
         times.select += (t2 - t1).as_secs_f64();
         times.reconstruct += (t3 - t2).as_secs_f64();
@@ -437,8 +699,11 @@ impl AttentionBackend for SalsAttention {
         assert!(self.len > 0, "attend on empty cache");
         self.stage_score(q);
         self.stage_select();
-        self.stage_reconstruct();
-        self.stage_attend(q, out);
+        self.stage_attend_fused(q, out);
+    }
+
+    fn set_threads(&mut self, threads: usize) {
+        self.threads = threads.max(1);
     }
 
     fn append_batch(&mut self, ks: &[f32], vs: &[f32], n: usize) {
@@ -867,6 +1132,99 @@ mod tests {
         assert_eq!(o1, o2, "instrumentation must not change the math");
         assert_eq!(a.traffic(), b.traffic(), "or the metering");
         assert!(times.total() > 0.0 && times.total().is_finite());
+        assert_eq!(times.reconstruct, 0.0, "fused path has no separate reconstruct stage");
+        // Staged probe vs staged path, same contract.
+        let mut o3 = vec![0.0; shape.q_dim()];
+        let mut o4 = vec![0.0; shape.q_dim()];
+        let mut st = SalsStageTimes::default();
+        a.attend_staged(&q, &mut o3);
+        b.attend_staged_instrumented(&q, &mut o4, &mut st);
+        assert_eq!(o3, o4);
+        assert_eq!(a.traffic(), b.traffic());
+        assert!(st.reconstruct > 0.0, "staged probe must time the reconstruct stage");
+    }
+
+    #[test]
+    fn fused_attend_matches_staged_and_meters_identically() {
+        // The fused production path vs the PR-4 staged reference on the
+        // same state: ≤1e-4 outputs (only fp summation order differs —
+        // online softmax vs materialized softmax) and bit-equal traffic
+        // meters — exact equality holds because the selection here fits
+        // ONE kernel tile (sink 2 + critical 16 + recent 8 = 26 ≤
+        // FUSED_TILE); multi-tile selections may legitimately meter MORE
+        // on the fused path (boundary pages' params per touched tile).
+        // GQA shape so per-head Uᵀ blocks, per-head value slices, and
+        // query-group tiles are all exercised; 60 tokens wraps the 8-row
+        // ring and crosses quant-group boundaries (group 8).
+        let shape = AttnShape::gqa(4, 2, 8, 256);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(97);
+        let proj = make_projector(kvd, 8, 4, &mut rng);
+        let mut fused = SalsAttention::new(shape, cfg_small(8), proj.clone());
+        let mut staged = SalsAttention::new(shape, cfg_small(8), proj);
+        for _ in 0..60 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            fused.append(&k, &v);
+            staged.append(&k, &v);
+        }
+        let t_fused0 = fused.traffic();
+        let t_staged0 = staged.traffic();
+        let qd = shape.q_dim();
+        let max_sel = 2 + 16 + 8; // sink + critical + recent of cfg_small
+        assert!(max_sel <= crate::tensor::ops::FUSED_TILE, "premise: single-tile selection");
+        for step in 0..3 {
+            let q = rng.normal_vec(qd, 1.0);
+            let mut of = vec![0.0; qd];
+            let mut os = vec![0.0; qd];
+            fused.attend(&q, &mut of);
+            staged.attend_staged(&q, &mut os);
+            for (a, b) in of.iter().zip(&os) {
+                assert!((a - b).abs() < 1e-4, "step {step}: {a} vs {b}");
+            }
+        }
+        let df = fused.traffic();
+        let ds = staged.traffic();
+        assert_eq!(df.read - t_fused0.read, ds.read - t_staged0.read, "read meters must agree");
+        assert_eq!(df.written, ds.written);
+    }
+
+    #[test]
+    fn fused_attend_output_is_thread_invariant() {
+        // Per-KV-head passes compute fixed arithmetic no matter which
+        // worker runs them, and the score-scan blocks are fixed-size, so
+        // the fused output must be BIT-identical for any thread count.
+        // Sized past both parallel guards: len 4160 ≥ SCORE_PAR_MIN_LEN,
+        // and n_sel·(r+group)·d = (4 + 900 + 16)·(8+2)·8 ≈ 74K ≥
+        // FUSED_PAR_MIN_WORK (64K).
+        let shape = AttnShape::gqa(4, 2, 8, 4200);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(101);
+        let proj = make_projector(kvd, 8, 4, &mut rng);
+        let cfg = SalsConfig {
+            rank: 8,
+            r_star: 4,
+            sink: 4,
+            recent: 16,
+            critical: 900,
+            v_bits: Bits::B4,
+            group: 8,
+        };
+        let mut sals = SalsAttention::new(shape, cfg, proj);
+        let n = 4160;
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        sals.append_batch(&ks, &vs, n);
+        let q = rng.normal_vec(shape.q_dim(), 1.0);
+        let mut reference = vec![0.0; shape.q_dim()];
+        sals.set_threads(1);
+        sals.attend(&q, &mut reference);
+        for threads in [2usize, 8] {
+            sals.set_threads(threads);
+            let mut out = vec![0.0; shape.q_dim()];
+            sals.attend(&q, &mut out);
+            assert_eq!(out, reference, "threads={threads} must be bit-identical");
+        }
     }
 
     #[test]

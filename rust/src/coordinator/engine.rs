@@ -45,8 +45,13 @@
 //!    (possible only when a footprint under-estimates), preemption is
 //!    youngest-first-*minimal*: preempt the single youngest sequence,
 //!    retry every reservation, repeat — never more evictions than needed.
-//!    Preempted requests re-queue at the front (caches dropped, vLLM
-//!    recompute mode) with their preemption count carried on the request.
+//!    Preempted requests re-queue at the front with caches dropped and
+//!    their emitted tokens + preemption count carried on the request
+//!    (vLLM recompute mode, **resuming**): re-admission prefills
+//!    `prompt ++ generated` and decode continues after the last emitted
+//!    token — preemption re-does prefill work but never re-decodes a
+//!    token (`Metrics::tokens_decoded` stays equal to
+//!    `Metrics::tokens_generated`).
 
 use super::metrics::Metrics;
 use super::request::{Request, Response};
@@ -84,9 +89,15 @@ struct Running {
     req: Request,
     state: SequenceState,
     scratch: Scratch,
-    /// Tokens of the prompt already consumed.
+    /// What prefill actually consumes: the prompt, plus — for a request
+    /// resuming after preemption — the tokens it had already generated
+    /// (recompute rebuilds their KV, decode continues after them).
+    prefill_tokens: Vec<usize>,
+    /// Tokens of `prefill_tokens` already consumed.
     prefilled: usize,
-    /// Generated tokens so far.
+    /// Generated tokens so far — seeded with the request's carried
+    /// `generated` on re-admission, so stop-condition budgets
+    /// (`max_new_tokens`) keep counting across preemptions.
     out: Vec<usize>,
     /// Pending next-token logits (set once prefill completes).
     logits: Option<Vec<f32>>,
@@ -191,19 +202,33 @@ impl Engine {
             if self.pool.reserve(front.id, est).is_err() {
                 break; // backpressure
             }
-            let req = self.waiting.pop_front().unwrap();
+            let mut req = self.waiting.pop_front().unwrap();
             let state = SequenceState::new(&self.model.cfg, &self.factory);
             let scratch = Scratch::new(&self.model.cfg);
+            // Resume support: a preempted request carries its emitted
+            // tokens — recompute prefills prompt ++ generated and decode
+            // picks up after the last emitted token (out is seeded so the
+            // max_new_tokens budget does not reset).
+            let out = std::mem::take(&mut req.generated);
+            let mut prefill_tokens = Vec::with_capacity(req.prompt.len() + out.len());
+            prefill_tokens.extend_from_slice(&req.prompt);
+            prefill_tokens.extend_from_slice(&out);
+            // Resumed requests keep their ORIGINAL scheduling/first-token
+            // timestamps: the first token is never re-emitted, so TTFT
+            // and queue delay must describe the first run.
+            let first_step = req.first_step.take();
+            let first_token = req.first_token.take();
             self.running.push(Running {
                 req,
                 state,
                 scratch,
+                prefill_tokens,
                 prefilled: 0,
-                out: Vec::new(),
+                out,
                 logits: None,
                 finished: false,
-                first_step: None,
-                first_token: None,
+                first_step,
+                first_token,
                 reserved_bytes: est,
             });
         }
@@ -223,13 +248,16 @@ impl Engine {
         self.metrics.steps += 1;
         let now = Instant::now();
         let prefill_chunk = self.cfg.prefill_chunk.max(1);
-        let threads = if self.cfg.threads == 0 {
-            threadpool::num_cpus().min(self.running.len())
-        } else {
-            self.cfg.threads
-        };
+        // Full worker pool, NOT capped at running.len(): the per-sequence
+        // fan-outs clamp themselves to their item counts, and whatever the
+        // batch dimension can't use flows to intra-attend parallelism —
+        // capping here would pin batch-1 decode (the case the attend-level
+        // fan-out exists for) to a single worker.
+        let threads =
+            if self.cfg.threads == 0 { threadpool::num_cpus() } else { self.cfg.threads };
 
         let stepped;
+        let mut decoded = 0usize;
         {
             let Engine { model, running, batch_scratch, .. } = self;
             let model: &Model = model;
@@ -243,7 +271,7 @@ impl Engine {
             let mut degenerate = 0usize;
             for r in running.iter_mut() {
                 r.first_step.get_or_insert(now);
-                if r.prefilled < r.req.prompt.len() {
+                if r.prefilled < r.prefill_tokens.len() {
                     prefilling.push(r);
                 } else if r.logits.is_some() {
                     decoding.push(r);
@@ -264,12 +292,12 @@ impl Engine {
             // out across worker threads (per-sequence caches + scratch are
             // independent; the model is shared read-only) ----
             threadpool::parallel_for_each_mut(&mut prefilling, threads, |_, r| {
-                let hi = (r.prefilled + prefill_chunk).min(r.req.prompt.len());
-                let last = hi == r.req.prompt.len();
+                let hi = (r.prefilled + prefill_chunk).min(r.prefill_tokens.len());
+                let last = hi == r.prefill_tokens.len();
                 let l = model.forward_batch(
                     &mut r.state,
                     &mut r.scratch,
-                    &r.req.prompt[r.prefilled..hi],
+                    &r.prefill_tokens[r.prefilled..hi],
                     last,
                 );
                 if last {
@@ -291,6 +319,7 @@ impl Engine {
             for r in decoding {
                 let logits = r.logits.take().unwrap();
                 let next = crate::tensor::ops::argmax(&logits);
+                decoded += 1;
                 r.out.push(next);
                 r.first_token.get_or_insert_with(Instant::now);
                 if r.out.len() >= r.req.params.max_new_tokens
@@ -304,8 +333,20 @@ impl Engine {
             }
             if !batch.is_empty() {
                 let tokens: Vec<usize> = batch.iter().map(|(_, t)| *t).collect();
+                // Divide the worker pool between cross-sequence batch rows
+                // (decode_batch's fan-out) and intra-attend parallelism:
+                // whatever the batch dimension can't use goes to each
+                // sequence's per-KV-head / score-scan fan-out, so batch-1
+                // long-context decode still saturates the workers.
+                // Re-plumbed every step — the share changes as the batch
+                // grows and shrinks. Thread counts never change outputs
+                // (the set_threads contract), only scheduling.
+                let attend_share = (threads / batch.len()).max(1);
                 let mut states: Vec<&mut SequenceState> =
                     batch.iter_mut().map(|(r, _)| &mut r.state).collect();
+                for s in states.iter_mut() {
+                    s.set_attend_threads(attend_share);
+                }
                 let all_logits = model.decode_batch(&mut states, &tokens, batch_scratch);
                 drop(states);
                 for ((r, _), l) in batch.iter_mut().zip(all_logits) {
@@ -313,6 +354,8 @@ impl Engine {
                 }
             }
         }
+
+        self.metrics.tokens_decoded += decoded;
 
         // ---- collect finished (flag set at decode time — no O(out) scan),
         // releasing their pages before the survivors re-reserve ----
@@ -381,10 +424,17 @@ impl Engine {
                 self.pool.page_bytes * self.pool.total_pages
             );
             self.metrics.preemptions += 1;
-            // Drop caches; restart from scratch later (vLLM recompute
-            // mode). The count rides on the request across the re-queue.
+            // Drop caches; recompute later (vLLM recompute mode) — but
+            // RESUME, don't restart: the emitted tokens ride on the
+            // request, re-admission prefills prompt ++ generated, and
+            // decode continues after the last emitted token. Preemption
+            // costs re-prefill work only, never re-decoded tokens. The
+            // preemption count rides along the same way.
             let mut req = r.req;
             req.preemptions += 1;
+            req.generated = r.out;
+            req.first_step = r.first_step;
+            req.first_token = r.first_token;
             req.arrival = req.arrival.or(Some(now));
             self.waiting.push_front(req);
         }
@@ -844,6 +894,17 @@ mod tests {
             e.metrics.preemptions,
             "Response counts must account for every engine preemption"
         );
+        // Recompute-RESUME: the re-queued request carries its emitted
+        // tokens, so no token is ever decoded twice — total decode
+        // samples must equal the tokens delivered, despite preemptions
+        // (the pre-fix engine dropped `out` and re-decoded the victim's
+        // whole output from scratch).
+        let delivered: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        assert_eq!(
+            e.metrics.tokens_decoded, delivered,
+            "resumed request must not re-decode already-emitted tokens"
+        );
+        assert_eq!(e.metrics.tokens_generated, delivered);
     }
 
     #[test]

@@ -10,6 +10,12 @@ pub struct Metrics {
     pub requests_completed: usize,
     pub tokens_prefilled: usize,
     pub tokens_generated: usize,
+    /// Next-token samples actually computed in decode phases. Equals
+    /// `tokens_generated` when no decode work is ever discarded — with
+    /// preemption-*resume* (emitted tokens carried across the re-queue)
+    /// the two stay equal even under preemption; a gap means re-decoded
+    /// tokens, i.e. wasted decode work.
+    pub tokens_decoded: usize,
     pub preemptions: usize,
     pub steps: usize,
     /// Per-request time-to-first-token (s).
@@ -50,6 +56,7 @@ impl Metrics {
         Json::obj()
             .field("requests_completed", self.requests_completed)
             .field("tokens_generated", self.tokens_generated)
+            .field("tokens_decoded", self.tokens_decoded)
             .field("preemptions", self.preemptions)
             .field("steps", self.steps)
             .field("wall_s", self.wall_s)

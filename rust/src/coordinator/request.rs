@@ -29,11 +29,36 @@ pub struct Request {
     /// (not the engine's running slot) so the count survives re-queue and
     /// re-admission and the final [`Response`] reports it faithfully.
     pub preemptions: usize,
+    /// Tokens already generated before a preemption (empty for fresh
+    /// requests). vLLM-style recompute **resume**: on re-admission the
+    /// engine prefills `prompt ++ generated` and decoding continues after
+    /// the last emitted token — prefill work is redone (the caches were
+    /// dropped), but no already-emitted token is ever re-decoded and the
+    /// `max_new_tokens` budget keeps counting from where it left off.
+    pub generated: Vec<usize>,
+    /// First time this request was ever scheduled (carried across
+    /// preemption so `Response::queue_s` reports the original queueing
+    /// delay, not the re-admission's).
+    pub first_step: Option<Instant>,
+    /// When this request's first token was actually emitted (carried
+    /// across preemption — the resumed run never re-emits it, so
+    /// forgetting this would inflate `Response::ttft_s` to the first
+    /// post-resume token).
+    pub first_token: Option<Instant>,
 }
 
 impl Request {
     pub fn new(id: SeqId, prompt: Vec<usize>, params: GenParams) -> Request {
-        Request { id, prompt, params, arrival: None, preemptions: 0 }
+        Request {
+            id,
+            prompt,
+            params,
+            arrival: None,
+            preemptions: 0,
+            generated: Vec::new(),
+            first_step: None,
+            first_token: None,
+        }
     }
 }
 

@@ -61,19 +61,7 @@ impl Router {
                 r
             }
             Policy::LeastLoaded => {
-                let mut best = 0;
-                for (i, &l) in self.load.iter().enumerate() {
-                    if l < self.load[best] {
-                        best = i;
-                    }
-                }
-                let _ = best;
-                self.load
-                    .iter()
-                    .enumerate()
-                    .min_by_key(|(_, &l)| l)
-                    .map(|(i, _)| i)
-                    .unwrap()
+                self.load.iter().enumerate().min_by_key(|(_, &l)| l).map(|(i, _)| i).unwrap()
             }
         };
         if let Some(sid) = session {
@@ -83,14 +71,31 @@ impl Router {
         r
     }
 
+    /// Cost estimate of one request: prompt + expected output tokens —
+    /// what [`Router::route`] adds to the chosen replica and what
+    /// [`Router::complete`]/[`Router::note_preemption`] must drain.
+    pub fn dispatch_cost(req: &Request) -> usize {
+        req.prompt.len() + req.params.max_new_tokens
+    }
+
     fn note_dispatch(&mut self, r: ReplicaId, req: &Request) {
-        // Cost estimate: prompt + expected output tokens.
-        self.load[r] += req.prompt.len() + req.params.max_new_tokens;
+        self.load[r] += Self::dispatch_cost(req);
     }
 
     /// Report completion so load drains.
     pub fn complete(&mut self, r: ReplicaId, req_cost: usize) {
         self.load[r] = self.load[r].saturating_sub(req_cost);
+    }
+
+    /// A replica preempted (re-queued) this request: drain the dispatch
+    /// cost so the load estimate does not leak. Without this, a preempted
+    /// request's cost stayed on the replica forever — `complete` only
+    /// fires at completion, which a preempted-and-rerouted request never
+    /// reaches on the original replica — skewing every later LeastLoaded
+    /// decision toward the other replicas. The caller re-`route`s the
+    /// request (session affinity, if any, still pins it).
+    pub fn note_preemption(&mut self, r: ReplicaId, req: &Request) {
+        self.complete(r, Self::dispatch_cost(req));
     }
 
     /// Drop a session's affinity (conversation ended).
@@ -148,6 +153,26 @@ mod tests {
         assert_eq!(r.load_of(0), 0);
         r.complete(0, 5); // saturating
         assert_eq!(r.load_of(0), 0);
+    }
+
+    #[test]
+    fn preemption_drains_dispatch_cost() {
+        let mut r = Router::new(2, Policy::LeastLoaded);
+        let heavy = req(0, 100); // cost 104
+        let a = r.route(&heavy, None);
+        assert_eq!(r.load_of(a), 104);
+        // Replica preempts + re-queues the request: its cost must leave
+        // the replica so it can be re-routed with honest loads.
+        r.note_preemption(a, &heavy);
+        assert_eq!(r.load_of(a), 0, "preempted cost must not leak");
+        // Re-route lands wherever is lightest again, and completion after
+        // a preempt+re-route cycle drains to exactly zero (no double
+        // counting, saturating on over-drain).
+        let b = r.route(&heavy, None);
+        r.complete(b, Router::dispatch_cost(&heavy));
+        assert_eq!(r.load_of(b), 0);
+        r.note_preemption(b, &heavy); // over-drain saturates
+        assert_eq!(r.load_of(b), 0);
     }
 
     #[test]

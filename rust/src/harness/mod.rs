@@ -120,6 +120,17 @@ impl Table {
     }
 }
 
+/// Absolute path of a bench artifact (`BENCH_*.json`) at the **repo
+/// root** — the location CHANGES.md/EXPERIMENTS.md document and CI
+/// uploads. Anchored on the crate manifest's parent rather than the CWD:
+/// `cargo bench` runs benches from the workspace root, but `cargo bench
+/// -p`, IDE runners, and CI sub-shells may not, and a CWD-relative write
+/// silently scatters the perf trajectory across directories.
+pub fn bench_artifact_path(file: &str) -> std::path::PathBuf {
+    let manifest = std::path::Path::new(env!("CARGO_MANIFEST_DIR"));
+    manifest.parent().unwrap_or(manifest).join(file)
+}
+
 /// Format a fraction as "0.123".
 pub fn f3(x: f64) -> String {
     format!("{x:.3}")

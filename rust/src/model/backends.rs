@@ -215,7 +215,7 @@ pub fn calibrate(model: &Model, streams: &[Vec<usize>]) -> Calibration {
             // Post-RoPE keys: rotate each row at its in-stream position.
             let mut rot = pre_keys;
             for (pos, row) in rot.chunks_exact_mut(kvd).enumerate() {
-                rope.apply_rows(row, kvd, &[pos]);
+                rope.apply_rows_at(row, kvd, &[pos]);
             }
             lc.post_keys.data.extend_from_slice(&rot);
             lc.post_keys.rows += n;

@@ -90,6 +90,19 @@ impl SequenceState {
         }
     }
 
+    /// Propagate the engine's per-sequence worker share to every layer
+    /// backend ([`AttentionBackend::set_threads`]): when the decode batch
+    /// is smaller than the worker pool, the leftover workers parallelize
+    /// *inside* each sequence's attend (per-KV-head panels, token-block
+    /// score scans) instead of idling — batch-1 long-context decode
+    /// finally uses the fan-out. Purely a scheduling knob: backends
+    /// guarantee bit-identical output at any thread count.
+    pub fn set_attend_threads(&mut self, threads: usize) {
+        for b in &mut self.backends {
+            b.set_threads(threads);
+        }
+    }
+
     /// Total cache traffic across layers.
     pub fn traffic(&self) -> crate::attention::Traffic {
         let mut t = crate::attention::Traffic::default();

@@ -126,7 +126,25 @@ impl TokenQuantStore {
     /// are hoisted outside the row loop — the per-page setup happens once
     /// per page, not once per row.
     fn unpack_page_rows(&self, page: &Page, idx: impl Iterator<Item = usize>, out: &mut [f32]) {
+        self.unpack_page_rows_cols(page, idx, 0, self.dim, out);
+    }
+
+    /// Column-sliced [`TokenQuantStore::unpack_page_rows`]: dequantize only
+    /// channels `c0..c1` of each selected row into `out` ((n, c1-c0)
+    /// row-major). Codes are packed row-major (token, channel), so a
+    /// channel range is a contiguous bit-run within each row — the fused
+    /// decode kernel uses this to fill per-KV-head value tiles without
+    /// unpacking the other heads' channels.
+    fn unpack_page_rows_cols(
+        &self,
+        page: &Page,
+        idx: impl Iterator<Item = usize>,
+        c0: usize,
+        c1: usize,
+        out: &mut [f32],
+    ) {
         let d = self.dim;
+        let w = c1 - c0;
         let b = self.bits.bits();
         let mask = (self.bits.levels() - 1) as u8;
         let (scale, zero) = (&page.scale[..d], &page.zero[..d]);
@@ -134,7 +152,7 @@ impl TokenQuantStore {
             Bits::B8 => {
                 for (row, j) in idx.enumerate() {
                     let base = (j % self.group) * d;
-                    for (c, o) in out[row * d..(row + 1) * d].iter_mut().enumerate() {
+                    for (o, c) in out[row * w..(row + 1) * w].iter_mut().zip(c0..c1) {
                         *o = page.codes[base + c] as f32 * scale[c] + zero[c];
                     }
                 }
@@ -142,7 +160,7 @@ impl TokenQuantStore {
             Bits::B4 => {
                 for (row, j) in idx.enumerate() {
                     let base = (j % self.group) * d;
-                    for (c, o) in out[row * d..(row + 1) * d].iter_mut().enumerate() {
+                    for (o, c) in out[row * w..(row + 1) * w].iter_mut().zip(c0..c1) {
                         let i = base + c;
                         let code = (page.codes[i >> 1] >> ((i & 1) as u32 * 4)) & 0x0F;
                         *o = code as f32 * scale[c] + zero[c];
@@ -152,7 +170,7 @@ impl TokenQuantStore {
             Bits::B2 => {
                 for (row, j) in idx.enumerate() {
                     let base = (j % self.group) * d;
-                    for (c, o) in out[row * d..(row + 1) * d].iter_mut().enumerate() {
+                    for (o, c) in out[row * w..(row + 1) * w].iter_mut().zip(c0..c1) {
                         let i = base + c;
                         let code = (page.codes[i >> 2] >> ((i & 3) as u32 * b)) & mask;
                         *o = code as f32 * scale[c] + zero[c];
@@ -170,10 +188,27 @@ impl TokenQuantStore {
     /// selected rows and the fp32 tail is copied directly — the decode-time
     /// value-read path of SALS (sorted critical selections) and KIVI.
     pub fn gather_rows(&self, sorted_idx: &[usize], out: &mut [f32]) {
+        self.gather_rows_cols(sorted_idx, 0, self.dim, out);
+    }
+
+    /// Column-sliced [`TokenQuantStore::gather_rows`]: dequantize only
+    /// channels `c0..c1` of rows `sorted_idx` into `out`
+    /// ((sorted_idx.len(), c1-c0) row-major), with the same page-coherent
+    /// walk. This is the fused decode kernel's per-KV-head value-tile
+    /// read: each KV head's worker pulls exactly its `head_dim` channel
+    /// slice, so summing the per-head walks over all heads streams the
+    /// same payload and per-page param bytes as one full-width gather of
+    /// the same index range — callers meter with
+    /// [`TokenQuantStore::gather_read_bytes`] per gathered range (per
+    /// tile for the fused kernel, whose tiles each re-touch boundary
+    /// pages' params).
+    pub fn gather_rows_cols(&self, sorted_idx: &[usize], c0: usize, c1: usize, out: &mut [f32]) {
         let d = self.dim;
-        assert_eq!(out.len(), sorted_idx.len() * d);
+        assert!(c0 < c1 && c1 <= d, "channel slice {c0}..{c1} out of dim {d}");
+        let w = c1 - c0;
+        assert_eq!(out.len(), sorted_idx.len() * w);
         debug_assert!(
-            sorted_idx.windows(2).all(|w| w[0] < w[1]),
+            sorted_idx.windows(2).all(|x| x[0] < x[1]),
             "gather_rows needs strictly increasing indices"
         );
         let mut i = 0;
@@ -185,8 +220,8 @@ impl TokenQuantStore {
                 // is a tail row; copy them in one run.
                 for (row, &jt) in sorted_idx[i..].iter().enumerate() {
                     let t = jt - self.frozen;
-                    out[(i + row) * d..(i + row + 1) * d]
-                        .copy_from_slice(&self.tail[t * d..(t + 1) * d]);
+                    out[(i + row) * w..(i + row + 1) * w]
+                        .copy_from_slice(&self.tail[t * d + c0..t * d + c1]);
                 }
                 return;
             }
@@ -195,10 +230,12 @@ impl TokenQuantStore {
             while e < sorted_idx.len() && sorted_idx[e] / self.group == p {
                 e += 1;
             }
-            self.unpack_page_rows(
+            self.unpack_page_rows_cols(
                 &self.pages[p],
                 sorted_idx[i..e].iter().copied(),
-                &mut out[i * d..e * d],
+                c0,
+                c1,
+                &mut out[i * w..e * w],
             );
             i = e;
         }
@@ -421,6 +458,34 @@ mod tests {
             for (t, &j) in idx.iter().enumerate() {
                 st.get(j, &mut row);
                 assert_eq!(&gathered[t * 6..(t + 1) * 6], &row[..], "{bits:?} row {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn gather_rows_cols_matches_full_width_slices() {
+        // Every (c0, c1) slice must equal the corresponding columns of the
+        // full-width gather, for every bit width, across pages + tail.
+        for bits in [Bits::B2, Bits::B4, Bits::B8] {
+            let mut st = TokenQuantStore::new(8, bits, 8, 12);
+            let mut rng = Rng::new(77);
+            for _ in 0..70 {
+                st.append(&rng.normal_vec(8, 1.0));
+            }
+            let idx = [0usize, 1, 7, 8, 15, 30, 55, 60, 68, 69];
+            let mut full = vec![0.0f32; idx.len() * 8];
+            st.gather_rows(&idx, &mut full);
+            for (c0, c1) in [(0usize, 4usize), (4, 8), (2, 7), (0, 8)] {
+                let w = c1 - c0;
+                let mut sliced = vec![0.0f32; idx.len() * w];
+                st.gather_rows_cols(&idx, c0, c1, &mut sliced);
+                for (t, _) in idx.iter().enumerate() {
+                    assert_eq!(
+                        &sliced[t * w..(t + 1) * w],
+                        &full[t * 8 + c0..t * 8 + c1],
+                        "{bits:?} slice {c0}..{c1} row {t}"
+                    );
+                }
             }
         }
     }

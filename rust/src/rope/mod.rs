@@ -62,9 +62,14 @@ impl RopeTable {
         }
     }
 
-    /// Rotate row `t` of a (seq, n_heads*head_dim) buffer for position
-    /// `positions[t]`, for all rows.
-    pub fn apply_rows(&self, buf: &mut [f32], row_dim: usize, positions: &[usize]) {
+    /// Rotate row `t` of a (n, n_heads*head_dim) buffer for position
+    /// `positions[t]`, for all rows — the **gathered** (non-consecutive)
+    /// positions form the fused decode kernel needs: a tile of selected
+    /// rows carries its original token positions, so each row rotates at
+    /// its own `positions[t]` (Algorithm 1 line 7). `row_dim` may be a
+    /// single head (`head_dim`, the fused kernel's per-KV-head tiles) or
+    /// any multiple of it.
+    pub fn apply_rows_at(&self, buf: &mut [f32], row_dim: usize, positions: &[usize]) {
         assert_eq!(buf.len(), row_dim * positions.len());
         for (t, &pos) in positions.iter().enumerate() {
             self.apply_multihead(&mut buf[t * row_dim..(t + 1) * row_dim], pos);
@@ -166,6 +171,31 @@ mod tests {
             t.apply_multihead(row, 7 + i);
         }
         assert_eq!(buf, expect);
+    }
+
+    #[test]
+    fn rows_at_matches_per_row_for_gathered_positions() {
+        // Non-consecutive, unordered positions — the fused-kernel tile
+        // shape — must rotate each row exactly as a per-row apply would,
+        // including single-head rows (row_dim == head_dim).
+        let t = RopeTable::new(8, 128, 10_000.0);
+        let mut rng = Rng::new(14);
+        let positions = [0usize, 97, 3, 41, 40, 3];
+        let mut single = rng.normal_vec(positions.len() * 8, 1.0);
+        let mut expect = single.clone();
+        t.apply_rows_at(&mut single, 8, &positions);
+        for (row, &pos) in expect.chunks_exact_mut(8).zip(&positions) {
+            t.apply(row, pos);
+        }
+        assert_eq!(single, expect);
+        // Multi-head rows too.
+        let mut multi = rng.normal_vec(positions.len() * 16, 1.0);
+        let mut expect = multi.clone();
+        t.apply_rows_at(&mut multi, 16, &positions);
+        for (row, &pos) in expect.chunks_exact_mut(16).zip(&positions) {
+            t.apply_multihead(row, pos);
+        }
+        assert_eq!(multi, expect);
     }
 
     #[test]

@@ -3,14 +3,20 @@
 //! These operate on raw `&[f32]` so the KV-cache and attention hot paths can
 //! run without constructing `Mat` wrappers or allocating.
 //!
-//! The two attention workhorses live here with caller-owned scratch:
+//! The attention workhorses live here with caller-owned scratch:
 //! [`causal_attend_chunk`] + [`ChunkAttendScratch`] for batched prefill
-//! (many queries over a dense causal cache) and [`sparse_attend`] +
-//! [`SparseAttendScratch`] for sparse decode (one query over a gathered
-//! token subset). Both follow the same contract: strided per-KV-head
-//! columns are packed once into contiguous panels, every matmul inner loop
-//! is unit-stride, and repeated calls reuse the scratch so steady-state
-//! decode performs zero heap allocations.
+//! (many queries over a dense causal cache), [`sparse_attend`] +
+//! [`SparseAttendScratch`] for sparse decode over a *materialized*
+//! gathered subset (with [`sparse_attend_threaded`] partitioning the
+//! independent KV-head panels across workers), and [`fused_sparse_attend`]
+//! + [`FusedAttendScratch`] for the §4.4-style fused decode where the
+//! caller streams keys/values in L1-resident tiles (reconstruct + RoPE on
+//! the fly) and an online softmax folds each tile in — the key panel and
+//! the full score row never exist. All follow the same contract: strided
+//! per-KV-head columns are packed once into contiguous panels (or arrive
+//! per-head by construction), every matmul inner loop is unit-stride, and
+//! repeated calls reuse the scratch so steady-state decode performs zero
+//! heap allocations.
 
 /// out[m,n] = a[m,k] @ b[k,n]   (row-major, out must be zeroed or will be overwritten)
 ///
@@ -54,6 +60,28 @@ pub fn matmul_masked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, 
             if av == 0.0 {
                 continue;
             }
+            let brow = &b[p * n..(p + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+}
+
+/// out[m,n] += a[m,k] @ b[k,n] — the accumulate variant of [`matmul`].
+///
+/// Same loop structure, but `out` is NOT cleared first: this is the PV
+/// partial-sum primitive of the flash-style online-softmax accumulator in
+/// [`fused_sparse_attend`], where each key/value tile folds its
+/// probability-weighted values into a running (rescaled) output.
+pub fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(out.len(), m * n);
+    for i in 0..m {
+        let arow = &a[i * k..(i + 1) * k];
+        let orow = &mut out[i * n..(i + 1) * n];
+        for (p, &av) in arow.iter().enumerate() {
             let brow = &b[p * n..(p + 1) * n];
             for (o, &bv) in orow.iter_mut().zip(brow) {
                 *o += av * bv;
@@ -253,18 +281,38 @@ pub fn causal_attend_chunk(
     }
 }
 
-/// Reusable buffers for [`sparse_attend`]: per-KV-head key/value panels, a
-/// pre-scaled query tile, and the score rows. One per backend — the decode
-/// hot path must not heap-allocate per (layer, token) call (see the
-/// crate-wide invariant in `attention/mod.rs`); buffers grow to the largest
-/// selection seen and are retained.
+/// One worker's worth of [`SparseAttendScratch`]: key/value panels, a
+/// pre-scaled query tile, and the score rows. Lanes are what makes the
+/// per-KV-head parallel partition safe — each worker owns exactly one
+/// lane plus its head chunk's disjoint slice of `out` (reusing the lane
+/// serially across its heads), so no buffer is shared.
 #[derive(Default)]
-pub struct SparseAttendScratch {
+struct SparseAttendLane {
     khead: Vec<f32>,
     vhead: Vec<f32>,
     qtile: Vec<f32>,
     scores: Vec<f32>,
 }
+
+/// Reusable buffers for [`sparse_attend`]: one [`SparseAttendLane`] per
+/// **worker** (serial runs keep exactly one lane, as before the parallel
+/// partition — a lane's panels are (n_sel, d), so per-head lanes would
+/// multiply the retained high-water scratch by n_kv_heads for dense-read
+/// backends like KIVI). One scratch per backend — the decode hot path
+/// must not heap-allocate per (layer, token) call (see the crate-wide
+/// invariant in `attention/mod.rs`); lanes grow to the largest selection
+/// seen and are retained.
+#[derive(Default)]
+pub struct SparseAttendScratch {
+    lanes: Vec<SparseAttendLane>,
+}
+
+/// Below this much per-head work (`n_sel · group · d` MACs per score pass)
+/// the scoped-thread spawn overhead of [`sparse_attend_threaded`] outweighs
+/// the fan-out; the kernel silently runs serial. Partitioning is by KV
+/// head and per-lane arithmetic is fixed, so the guard (like the thread
+/// count itself) cannot change results.
+const SPARSE_ATTEND_PAR_MIN_WORK: usize = 2048;
 
 /// Packed exact sparse attention over a gathered token subset — the shared
 /// decode epilogue of every token-sparse backend (SALS Eq. 5, and the
@@ -296,6 +344,31 @@ pub fn sparse_attend(
     scratch: &mut SparseAttendScratch,
     out: &mut [f32],
 ) {
+    sparse_attend_threaded(q, keys, values, n_sel, n_heads, n_kv_heads, d, 1, scratch, out);
+}
+
+/// [`sparse_attend`] with the per-KV-head loop partitioned across up to
+/// `threads` scoped workers. KV-head panels are fully independent — each
+/// worker owns a contiguous head chunk, one lane, and the chunk's
+/// disjoint `out` slice — so the fan-out is lock-free and, because each
+/// head's arithmetic is identical no matter which worker (or how many)
+/// runs it, **bit-invariant in the thread count**. Work below
+/// [`SPARSE_ATTEND_PAR_MIN_WORK`] runs serial regardless (the spawn
+/// overhead would dominate), as does `n_kv_heads == 1` (nothing to
+/// partition; the split-KV variant is a ROADMAP follow-on).
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attend_threaded(
+    q: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    n_sel: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    d: usize,
+    threads: usize,
+    scratch: &mut SparseAttendScratch,
+    out: &mut [f32],
+) {
     assert_eq!(n_heads % n_kv_heads, 0);
     let kvd = n_kv_heads * d;
     let qd = n_heads * d;
@@ -306,38 +379,225 @@ pub fn sparse_attend(
     let group = n_heads / n_kv_heads;
     let scale = 1.0 / (d as f32).sqrt();
 
-    let SparseAttendScratch { khead, vhead, qtile, scores } = scratch;
-    qtile.resize(group * d, 0.0);
-    scores.resize(group * n_sel, 0.0);
-    if n_kv_heads > 1 {
-        khead.resize(n_sel * d, 0.0);
-        vhead.resize(n_sel * d, 0.0);
-    }
-
-    for kvh in 0..n_kv_heads {
+    let per_head = |kvh: usize, lane: &mut SparseAttendLane, ohead: &mut [f32]| {
+        lane.qtile.resize(group * d, 0.0);
+        lane.scores.resize(group * n_sel, 0.0);
         // Contiguous (n_sel, d) panels for this KV head. A single-KV-head
         // cache IS the panel — no copy.
         let (kp, vp): (&[f32], &[f32]) = if n_kv_heads == 1 {
             (keys, values)
         } else {
+            lane.khead.resize(n_sel * d, 0.0);
+            lane.vhead.resize(n_sel * d, 0.0);
             for j in 0..n_sel {
                 let src = j * kvd + kvh * d;
-                khead[j * d..(j + 1) * d].copy_from_slice(&keys[src..src + d]);
-                vhead[j * d..(j + 1) * d].copy_from_slice(&values[src..src + d]);
+                lane.khead[j * d..(j + 1) * d].copy_from_slice(&keys[src..src + d]);
+                lane.vhead[j * d..(j + 1) * d].copy_from_slice(&values[src..src + d]);
             }
-            (&khead[..], &vhead[..])
+            (&lane.khead[..], &lane.vhead[..])
         };
         // The group's query heads are consecutive rows of q: one tile,
         // pre-scaled so 1/sqrt(d) folds into QKᵀ.
         let qbase = kvh * group * d;
-        qtile.copy_from_slice(&q[qbase..qbase + group * d]);
-        for x in qtile.iter_mut() {
+        lane.qtile.copy_from_slice(&q[qbase..qbase + group * d]);
+        for x in lane.qtile.iter_mut() {
             *x *= scale;
         }
-        matmul_tn(qtile, kp, scores, group, d, n_sel);
-        softmax_rows(scores, group, n_sel);
-        matmul(scores, vp, &mut out[qbase..qbase + group * d], group, n_sel, d);
+        matmul_tn(&lane.qtile, kp, &mut lane.scores, group, d, n_sel);
+        softmax_rows(&mut lane.scores, group, n_sel);
+        matmul(&lane.scores, vp, ohead, group, n_sel, d);
+    };
+
+    // One lane per WORKER, not per head: workers own contiguous head
+    // chunks and reuse their lane across them (each head's pass fully
+    // overwrites the lane, so reuse is deterministic), keeping serial
+    // runs at exactly one (n_sel, d) panel pair as before the partition.
+    let workers = if threads <= 1 || n_kv_heads <= 1 || n_sel * group * d < SPARSE_ATTEND_PAR_MIN_WORK
+    {
+        1
+    } else {
+        threads.min(n_kv_heads)
+    };
+    // Grow-only: shrinking would free panels a later parallel call has to
+    // re-grow (the zero-alloc steady-state invariant).
+    if scratch.lanes.len() < workers {
+        scratch.lanes.resize_with(workers, SparseAttendLane::default);
     }
+    crate::util::threadpool::parallel_units_mut(
+        &mut scratch.lanes[..workers],
+        out,
+        group * d,
+        n_kv_heads,
+        per_head,
+    );
+}
+
+/// Row count of one [`fused_sparse_attend`] key/value tile. Each tile is
+/// 32·d·4 B (16 KiB at head_dim 128), so the K/V tile pair stays
+/// L1-resident while amortizing the per-tile online-softmax bookkeeping.
+pub const FUSED_TILE: usize = 32;
+
+/// One worker's working set for [`fused_sparse_attend`]: the caller-filled
+/// key/value tiles plus the kernel's online-softmax state. Each parallel
+/// worker owns exactly one lane plus its head chunk's disjoint `out`
+/// slice (reinitializing the lane per head), so the per-KV-head fan-out
+/// shares no buffers.
+#[derive(Default)]
+pub struct FusedLane {
+    /// (tile, d) **post-RoPE** key tile for the current selection block —
+    /// written by the caller's `fill` closure, consumed by QKᵀ.
+    pub ktile: Vec<f32>,
+    /// (tile, d) value tile for the current selection block — written by
+    /// `fill`, consumed by the PV partial sum.
+    pub vtile: Vec<f32>,
+    /// Pre-scaled (group, d) query tile for this head's query group.
+    qtile: Vec<f32>,
+    /// (group, tile) score block of the current tile.
+    scores: Vec<f32>,
+    /// Per-query-head running max of all scores seen so far.
+    m: Vec<f32>,
+    /// Per-query-head running softmax denominator (rescaled to `m`).
+    l: Vec<f32>,
+    /// (group, d) running PV partial, rescaled to `m`; `out = acc / l`.
+    acc: Vec<f32>,
+}
+
+/// Reusable per-backend scratch for [`fused_sparse_attend`]: one
+/// [`FusedLane`] per worker (serial runs keep exactly one), grown to
+/// high-water marks and retained — steady-state decode performs zero
+/// heap allocations beyond the scoped thread spawns of the parallel
+/// path (persistent-pool follow-on filed on the ROADMAP).
+#[derive(Default)]
+pub struct FusedAttendScratch {
+    lanes: Vec<FusedLane>,
+}
+
+/// Fused tile-streaming sparse attention — the paper's §4.4 decode kernel
+/// shape: the caller materializes keys/values only in [`FUSED_TILE`]-row,
+/// L1-resident tiles (reconstructing + rotating them on the fly), and the
+/// kernel folds each tile's QKᵀ block into a flash-attention-style online
+/// softmax (running max `m`, rescaled denominator `l`, rescaled PV partial
+/// `acc`), so **neither the (n_sel, kv_dim) key panel nor the full score
+/// row ever exists in memory**.
+///
+/// * `q`: **post-RoPE** stacked query, (n_heads·d).
+/// * `fill(kvh, lo, hi, lane)`: write selection rows `lo..hi` of KV head
+///   `kvh` into `lane.ktile`/`lane.vtile` (both pre-sized to
+///   ((hi-lo), d)). Keys must arrive post-RoPE. The closure must touch
+///   only those two buffers and must be pure w.r.t. `(kvh, lo, hi)` — it
+///   runs from worker threads (any shared staging it reads must be
+///   prepared before the kernel call and borrowed immutably).
+/// * `threads`: per-KV-head fan-out cap (callers gate on work size; the
+///   kernel honors the cap as given so tests can force the parallel
+///   path). Per-lane arithmetic is identical regardless of which worker
+///   runs it, so results are **bit-invariant in the thread count**.
+/// * `out`: (n_heads·d), overwritten; `n_sel == 0` writes zeros.
+///
+/// The online update per tile and query head g (the standard
+/// flash-attention recurrence): with tile max `t`, when `t > m`:
+/// `l ← l·exp(m−t)`, `acc ← acc·exp(m−t)`, `m ← t`; then
+/// `p_j = exp(s_j − m)`, `l ← l + Σp_j`, `acc ← acc + p·V_tile`; epilogue
+/// `out = acc / l`. Mathematically exact softmax attention — only fp
+/// summation order differs from the materialized kernel (≤1e-4 parity,
+/// pinned by tests and the SALS staged-pipeline proptest).
+#[allow(clippy::too_many_arguments)]
+pub fn fused_sparse_attend(
+    q: &[f32],
+    n_sel: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    d: usize,
+    threads: usize,
+    fill: impl Fn(usize, usize, usize, &mut FusedLane) + Sync,
+    scratch: &mut FusedAttendScratch,
+    out: &mut [f32],
+) {
+    assert_eq!(n_heads % n_kv_heads, 0);
+    let qd = n_heads * d;
+    assert_eq!(q.len(), qd);
+    assert_eq!(out.len(), qd);
+    if n_sel == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let group = n_heads / n_kv_heads;
+    let scale = 1.0 / (d as f32).sqrt();
+
+    let run = |kvh: usize, lane: &mut FusedLane, ohead: &mut [f32]| {
+        lane.qtile.resize(group * d, 0.0);
+        lane.qtile.copy_from_slice(&q[kvh * group * d..(kvh + 1) * group * d]);
+        for x in lane.qtile.iter_mut() {
+            *x *= scale;
+        }
+        lane.scores.resize(group * FUSED_TILE, 0.0);
+        lane.m.clear();
+        lane.m.resize(group, f32::NEG_INFINITY);
+        lane.l.clear();
+        lane.l.resize(group, 0.0);
+        lane.acc.clear();
+        lane.acc.resize(group * d, 0.0);
+        let mut lo = 0;
+        while lo < n_sel {
+            let hi = (lo + FUSED_TILE).min(n_sel);
+            let t = hi - lo;
+            lane.ktile.resize(t * d, 0.0);
+            lane.vtile.resize(t * d, 0.0);
+            fill(kvh, lo, hi, lane);
+            matmul_tn(
+                &lane.qtile,
+                &lane.ktile[..t * d],
+                &mut lane.scores[..group * t],
+                group,
+                d,
+                t,
+            );
+            for g in 0..group {
+                let row = &mut lane.scores[g * t..(g + 1) * t];
+                let tile_max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                if tile_max > lane.m[g] {
+                    // Rescale history to the new max. First tile: m = -inf
+                    // so corr = 0 on (l, acc) that are already zero.
+                    let corr = (lane.m[g] - tile_max).exp();
+                    lane.l[g] *= corr;
+                    for a in lane.acc[g * d..(g + 1) * d].iter_mut() {
+                        *a *= corr;
+                    }
+                    lane.m[g] = tile_max;
+                }
+                let m = lane.m[g];
+                let mut sum = 0.0f32;
+                for x in row.iter_mut() {
+                    *x = (*x - m).exp();
+                    sum += *x;
+                }
+                lane.l[g] += sum;
+            }
+            matmul_acc(&lane.scores[..group * t], &lane.vtile[..t * d], &mut lane.acc, group, t, d);
+            lo = hi;
+        }
+        for g in 0..group {
+            let inv = if lane.l[g] > 0.0 { 1.0 / lane.l[g] } else { 0.0 };
+            for (o, &a) in ohead[g * d..(g + 1) * d].iter_mut().zip(&lane.acc[g * d..(g + 1) * d]) {
+                *o = a * inv;
+            }
+        }
+    };
+
+    // One lane per WORKER (grow-only), mirroring [`sparse_attend_threaded`]:
+    // each worker owns a contiguous head chunk and reuses its lane across
+    // them — `run` reinitializes the full accumulator state per head, so
+    // reuse is deterministic and the serial path keeps exactly one lane.
+    let workers = if threads <= 1 || n_kv_heads <= 1 { 1 } else { threads.min(n_kv_heads) };
+    if scratch.lanes.len() < workers {
+        scratch.lanes.resize_with(workers, FusedLane::default);
+    }
+    crate::util::threadpool::parallel_units_mut(
+        &mut scratch.lanes[..workers],
+        out,
+        group * d,
+        n_kv_heads,
+        run,
+    );
 }
 
 /// Pack rows `idx` of a (·, row_len) row-major matrix into `out`
@@ -615,6 +875,156 @@ mod tests {
         let mut out = vec![7.0f32; 8];
         sparse_attend(&q, &[], &[], 0, 2, 1, 4, &mut scratch, &mut out);
         assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn sparse_attend_threaded_bit_matches_serial() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(33);
+        // Big enough to clear SPARSE_ATTEND_PAR_MIN_WORK (n_sel·group·d):
+        // 80 · 2 · 16 = 2560, with 4 KV heads to partition.
+        let (n_heads, n_kv_heads, d, n_sel) = (8usize, 4usize, 16usize, 80usize);
+        let kvd = n_kv_heads * d;
+        let q = rng.normal_vec(n_heads * d, 1.0);
+        let keys = rng.normal_vec(n_sel * kvd, 1.0);
+        let values = rng.normal_vec(n_sel * kvd, 1.0);
+        let mut serial = vec![0.0f32; n_heads * d];
+        let mut scratch = SparseAttendScratch::default();
+        sparse_attend(&q, &keys, &values, n_sel, n_heads, n_kv_heads, d, &mut scratch, &mut serial);
+        for threads in [2usize, 3, 8] {
+            let mut out = vec![0.0f32; n_heads * d];
+            let mut s = SparseAttendScratch::default();
+            sparse_attend_threaded(
+                &q, &keys, &values, n_sel, n_heads, n_kv_heads, d, threads, &mut s, &mut out,
+            );
+            assert_eq!(out, serial, "threads={threads} must be bit-identical");
+        }
+    }
+
+    /// Dense-panel fill for fused_sparse_attend: slice KV head `kvh`'s
+    /// columns of pre-built (n_sel, kvd) panels into the tile buffers —
+    /// the minimal tile source, so the test isolates the online-softmax
+    /// accumulator against the materialized kernel.
+    fn panel_fill<'a>(
+        keys: &'a [f32],
+        values: &'a [f32],
+        kvd: usize,
+        d: usize,
+    ) -> impl Fn(usize, usize, usize, &mut FusedLane) + Sync + 'a {
+        move |kvh: usize, lo: usize, hi: usize, lane: &mut FusedLane| {
+            for (row, j) in (lo..hi).enumerate() {
+                let src = j * kvd + kvh * d;
+                lane.ktile[row * d..(row + 1) * d].copy_from_slice(&keys[src..src + d]);
+                lane.vtile[row * d..(row + 1) * d].copy_from_slice(&values[src..src + d]);
+            }
+        }
+    }
+
+    #[test]
+    fn fused_sparse_attend_matches_materialized_kernel() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(37);
+        // Shapes cross MHA/GQA and tile boundaries: n_sel below, at, and
+        // well past FUSED_TILE (multi-tile online-softmax rescaling).
+        for (n_heads, n_kv_heads, d, n_sel) in [
+            (1usize, 1usize, 8usize, 13usize),
+            (4, 4, 8, 32),
+            (4, 2, 16, 33),
+            (8, 2, 4, 100),
+            (6, 3, 8, 95),
+        ] {
+            let kvd = n_kv_heads * d;
+            let q = rng.normal_vec(n_heads * d, 1.0);
+            let keys = rng.normal_vec(n_sel * kvd, 1.0);
+            let values = rng.normal_vec(n_sel * kvd, 1.0);
+            let mut reference = vec![0.0f32; n_heads * d];
+            let mut sscratch = SparseAttendScratch::default();
+            sparse_attend(
+                &q, &keys, &values, n_sel, n_heads, n_kv_heads, d, &mut sscratch, &mut reference,
+            );
+            let mut out = vec![0.0f32; n_heads * d];
+            let mut scratch = FusedAttendScratch::default();
+            let fill = panel_fill(&keys, &values, kvd, d);
+            fused_sparse_attend(&q, n_sel, n_heads, n_kv_heads, d, 1, &fill, &mut scratch, &mut out);
+            for (a, b) in out.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-4, "{n_heads}h/{n_kv_heads}kv/{n_sel}sel: {a} vs {b}");
+            }
+            // Warm-scratch rerun must be identical (buffer reuse safety).
+            let mut out2 = vec![0.0f32; n_heads * d];
+            fused_sparse_attend(&q, n_sel, n_heads, n_kv_heads, d, 1, &fill, &mut scratch, &mut out2);
+            assert_eq!(out, out2);
+            // Thread count must be invisible bit-for-bit (per-lane
+            // arithmetic is fixed; only the lane→worker mapping changes).
+            for threads in [2usize, 8] {
+                let mut outn = vec![0.0f32; n_heads * d];
+                let mut sn = FusedAttendScratch::default();
+                fused_sparse_attend(
+                    &q, n_sel, n_heads, n_kv_heads, d, threads, &fill, &mut sn, &mut outn,
+                );
+                assert_eq!(out, outn, "threads={threads}");
+            }
+        }
+    }
+
+    #[test]
+    fn fused_sparse_attend_empty_selection_zeroes_out() {
+        let mut scratch = FusedAttendScratch::default();
+        let q = vec![1.0f32; 8];
+        let mut out = vec![7.0f32; 8];
+        fused_sparse_attend(
+            &q,
+            0,
+            2,
+            1,
+            4,
+            1,
+            |_, _, _, _: &mut FusedLane| panic!("fill must not run on empty selection"),
+            &mut scratch,
+            &mut out,
+        );
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn fused_online_softmax_is_stable_for_large_logits() {
+        // Keys engineered so later tiles carry much larger scores than the
+        // first: the running-max rescale path must keep everything finite.
+        let d = 4;
+        let n_sel = 3 * FUSED_TILE;
+        let q = vec![10.0f32; d];
+        let mut keys = vec![0.0f32; n_sel * d];
+        let mut values = vec![0.0f32; n_sel * d];
+        for j in 0..n_sel {
+            let mag = (j / FUSED_TILE) as f32 * 30.0; // 0, 30, 60 per tile
+            for c in 0..d {
+                keys[j * d + c] = mag;
+                values[j * d + c] = j as f32;
+            }
+        }
+        let mut out = vec![0.0f32; d];
+        let mut scratch = FusedAttendScratch::default();
+        let fill = panel_fill(&keys, &values, d, d);
+        fused_sparse_attend(&q, n_sel, 1, 1, d, 1, &fill, &mut scratch, &mut out);
+        assert!(out.iter().all(|x| x.is_finite()));
+        // All weight concentrates on the last (largest-score) tile, whose
+        // values are ≥ 2·FUSED_TILE.
+        assert!(out[0] >= 2.0 * FUSED_TILE as f32 - 1.0, "out {out:?}");
+    }
+
+    #[test]
+    fn matmul_acc_accumulates_on_top() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(41);
+        let (m, k, n) = (3, 7, 5);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let mut fresh = vec![0.0f32; m * n];
+        matmul(&a, &b, &mut fresh, m, k, n);
+        let mut acc = vec![1.0f32; m * n];
+        matmul_acc(&a, &b, &mut acc, m, k, n);
+        for (x, y) in acc.iter().zip(&fresh) {
+            assert!((x - (y + 1.0)).abs() < 1e-5, "{x} vs {y}+1");
+        }
     }
 
     #[test]

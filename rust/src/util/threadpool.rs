@@ -68,6 +68,108 @@ pub fn parallel_for_each_mut<T: Send>(
     });
 }
 
+/// Run `f(chunk_index, chunk)` over contiguous `chunk_size`-sized mutable
+/// chunks of `buf` across up to `threads` threads (last chunk may be
+/// short; chunk `i` starts at element `i * chunk_size`).
+///
+/// The decomposition is fixed by `chunk_size`, NOT by the thread count —
+/// so callers whose per-element work is independent of the chunking (e.g.
+/// the SALS latent score scan, where each score is one dot product) get
+/// bit-identical results for every `threads` value.
+pub fn parallel_chunks_mut<T: Send>(
+    buf: &mut [T],
+    chunk_size: usize,
+    threads: usize,
+    f: impl Fn(usize, &mut [T]) + Sync,
+) {
+    assert!(chunk_size > 0, "parallel_chunks_mut needs a positive chunk size");
+    if buf.is_empty() {
+        return;
+    }
+    let n_chunks = buf.len().div_ceil(chunk_size);
+    let workers = threads.max(1).min(n_chunks);
+    if workers <= 1 {
+        for (i, chunk) in buf.chunks_mut(chunk_size).enumerate() {
+            f(i, chunk);
+        }
+        return;
+    }
+    // Each worker owns a contiguous run of whole chunks (only the last
+    // run may end with the short tail chunk), carved straight off the
+    // slice — no intermediate collection is allocated (this runs per
+    // (layer, token) on the decode hot path). Chunk indices and
+    // boundaries are identical to the serial decomposition.
+    let per_worker = n_chunks.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rem: &mut [T] = buf;
+        let mut base = 0usize;
+        while !rem.is_empty() {
+            let take = (per_worker * chunk_size).min(rem.len());
+            let (head, rest) = std::mem::take(&mut rem).split_at_mut(take);
+            rem = rest;
+            let f = &f;
+            let start = base;
+            base += head.len().div_ceil(chunk_size);
+            s.spawn(move || {
+                for (k, chunk) in head.chunks_mut(chunk_size).enumerate() {
+                    f(start + k, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Partition `n_units` contiguous units of `out` (each `unit_width`
+/// elements; `out.len() == n_units * unit_width`) across one worker per
+/// lane of `lanes`: worker `w` owns lane `w`, a contiguous unit range,
+/// and the matching `out` slice, calling `f(unit_index, lane, unit_out)`
+/// serially within its range. The shared carving scaffold of the
+/// per-KV-head attention fan-outs (`sparse_attend_threaded`,
+/// `fused_sparse_attend`) — one lane per worker, slices carved straight
+/// off `out`, no per-call collection allocated (this runs per
+/// (layer, token) on the decode hot path). A single lane runs inline
+/// with no thread spawn. Bit-invariance contract: `f`'s per-unit
+/// arithmetic must not depend on the partition, so worker count cannot
+/// change results.
+pub fn parallel_units_mut<L: Send, T: Send>(
+    lanes: &mut [L],
+    out: &mut [T],
+    unit_width: usize,
+    n_units: usize,
+    f: impl Fn(usize, &mut L, &mut [T]) + Sync,
+) {
+    assert!(!lanes.is_empty(), "parallel_units_mut needs at least one lane");
+    assert!(unit_width > 0);
+    assert_eq!(out.len(), n_units * unit_width);
+    let workers = lanes.len().min(n_units.max(1));
+    if workers <= 1 {
+        let lane = &mut lanes[0];
+        for (u, unit_out) in out.chunks_mut(unit_width).enumerate() {
+            f(u, lane, unit_out);
+        }
+        return;
+    }
+    let chunk = n_units.div_ceil(workers);
+    std::thread::scope(|s| {
+        let mut rem: &mut [T] = out;
+        for (w, lane) in lanes.iter_mut().enumerate() {
+            let lo = w * chunk;
+            if lo >= n_units {
+                break;
+            }
+            let hi = (lo + chunk).min(n_units);
+            let (head, rest) = std::mem::take(&mut rem).split_at_mut((hi - lo) * unit_width);
+            rem = rest;
+            let f = &f;
+            s.spawn(move || {
+                for (i, unit_out) in head.chunks_mut(unit_width).enumerate() {
+                    f(lo + i, lane, unit_out);
+                }
+            });
+        }
+    });
+}
+
 /// Map `f` over 0..n in parallel, collecting results in index order.
 pub fn parallel_map<T: Send>(n: usize, threads: usize, f: impl Fn(usize) -> T + Sync) -> Vec<T> {
     // Each scope thread owns a disjoint &mut [Option<T>] chunk — no locks.
@@ -125,6 +227,42 @@ mod tests {
         let mut one = vec![7usize];
         parallel_for_each_mut(&mut one, 16, |i, item| *item += i);
         assert_eq!(one, vec![7]);
+    }
+
+    #[test]
+    fn parallel_chunks_mut_fixed_decomposition() {
+        // 357 elements in 16-sized chunks: every element visited once, the
+        // chunk index maps to the right offset, any thread count.
+        for threads in [1usize, 3, 8] {
+            let mut items: Vec<usize> = vec![0; 357];
+            parallel_chunks_mut(&mut items, 16, threads, |ci, chunk| {
+                for (j, x) in chunk.iter_mut().enumerate() {
+                    *x = ci * 16 + j + 1;
+                }
+            });
+            assert_eq!(items, (0..357).map(|i| i + 1).collect::<Vec<_>>(), "threads={threads}");
+        }
+        let mut empty: Vec<usize> = Vec::new();
+        parallel_chunks_mut(&mut empty, 4, 4, |_, _| panic!("should not run"));
+    }
+
+    #[test]
+    fn parallel_units_mut_partitions_units_and_lanes() {
+        // 7 units of width 3 over {1, 2, 3, 8} lanes: every unit visited
+        // once with the right offset, and each unit touched by the lane
+        // that owns its contiguous range.
+        for n_lanes in [1usize, 2, 3, 8] {
+            let mut lanes: Vec<usize> = vec![0; n_lanes];
+            let mut out: Vec<usize> = vec![0; 7 * 3];
+            parallel_units_mut(&mut lanes, &mut out, 3, 7, |u, lane, unit| {
+                *lane += 1; // worker-serial: no lock needed
+                for (k, x) in unit.iter_mut().enumerate() {
+                    *x = u * 3 + k + 1;
+                }
+            });
+            assert_eq!(out, (0..21).map(|i| i + 1).collect::<Vec<_>>(), "{n_lanes} lanes");
+            assert_eq!(lanes.iter().sum::<usize>(), 7, "every unit ran exactly once");
+        }
     }
 
     #[test]

@@ -354,6 +354,68 @@ fn prop_sals_pipeline_matches_per_row_reference() {
     );
 }
 
+/// Fused-vs-staged decode parity: the production fused pipeline (tiled
+/// reconstruct·RoPE·QKᵀ with online softmax, per-head value slices) must
+/// match the PR-4 staged reference (materialized key panel + packed
+/// `sparse_attend`) within 1e-4 on the same state — across MHA/GQA
+/// shapes, ranks with a non-empty remainder panel, recent-ring wraps, and
+/// quant-group boundaries. Unlike the per-row-reference proptest this one
+/// keeps top-k selection ACTIVE (both paths share stages 1–2, so the
+/// selection is identical by construction and tie flips cannot diverge
+/// the comparison).
+#[test]
+fn prop_fused_attend_matches_staged_pipeline() {
+    check(
+        "sals-fused-vs-staged",
+        12,
+        |r| {
+            let n_kv_heads = 1 + r.below(3); // 1..3 (non-power-of-two too)
+            let group = 1 + r.below(2); // MHA and GQA
+            let d = 2 * r.range(2, 5); // 4..8
+            let seq = r.range(12, 90); // wraps the ring (recent 8)
+            let critical = r.range(2, 20);
+            vec![n_kv_heads, group, d, seq, critical, r.below(1 << 30)]
+        },
+        |v| {
+            let (n_kv_heads, group, d, seq, critical, seed) =
+                (v[0], v[1], v[2], v[3], v[4], v[5] as u64);
+            let n_heads = n_kv_heads * group;
+            let shape = AttnShape::gqa(n_heads, n_kv_heads, d, seq + 4);
+            let kvd = shape.kv_dim();
+            let mut rng = Rng::new(seed);
+            let mut cal = Calibrator::new(kvd);
+            for _ in 0..kvd * 4 {
+                cal.add_key(&rng.normal_vec(kvd, 1.0));
+            }
+            let rank = (kvd / 2).max(2);
+            let cfg = SalsConfig {
+                rank,
+                r_star: (rank / 2).max(1), // remainder panel non-empty
+                sink: 2,
+                recent: 8,
+                critical,
+                v_bits: Bits::B4,
+                group: 4, // several quant pages per sequence
+            };
+            let proj = cal.fit(rank).unwrap();
+            let mut fused = SalsAttention::new(shape, cfg.clone(), proj.clone());
+            let mut staged = SalsAttention::new(shape, cfg, proj);
+            for _ in 0..seq {
+                let k = rng.normal_vec(kvd, 1.0);
+                let v = rng.normal_vec(kvd, 1.0);
+                fused.append(&k, &v);
+                staged.append(&k, &v);
+            }
+            let q = rng.normal_vec(shape.q_dim(), 1.0);
+            let mut of = vec![0.0f32; shape.q_dim()];
+            let mut os = vec![0.0f32; shape.q_dim()];
+            fused.attend(&q, &mut of);
+            staged.attend_staged(&q, &mut os);
+            of.iter().zip(&os).all(|(a, b)| (a - b).abs() < 1e-4)
+        },
+    );
+}
+
 #[test]
 fn prop_sals_attend_finite_and_deterministic() {
     // For any shape draw, SALS attend must be finite and reproducible.
