@@ -116,8 +116,7 @@ fn main() {
         peak(Method::Full)
     );
 
-    let doc = Json::obj()
-        .field("bench", "capacity")
+    let doc = sals::harness::bench_doc("capacity")
         .field("config", "d_model=256 n_layers=6 heads=8 head_dim=32 dense_layers=[0]")
         .field("prompt_len", prompt_len)
         .field("decode_tokens", decode_n)

@@ -208,8 +208,7 @@ fn main() {
         );
     }
 
-    let doc = Json::obj()
-        .field("bench", "decode_throughput")
+    let doc = sals::harness::bench_doc("decode_throughput")
         .field("config", "d_model=384 n_layers=6 n_heads=6 n_kv_heads=2 head_dim=64 vocab=4096")
         .field("prompt_len", PROMPT_LEN)
         .field("decode_tokens", decode_n)

@@ -129,8 +129,7 @@ fn main() {
     table.print();
     println!("\nacceptance: batched ≥3x sequential for full attention at 4K prefill");
 
-    let doc = Json::obj()
-        .field("bench", "prefill_throughput")
+    let doc = sals::harness::bench_doc("prefill_throughput")
         .field("config", "d_model=64 n_layers=4 n_heads=4 head_dim=16")
         .field("chunk", Model::PREFILL_CHUNK)
         .field("rows", Json::Arr(rows));

@@ -35,6 +35,13 @@
 //! and the score stage's metered traffic ≈ r*·4 bytes per context token
 //! (not r·4).
 //!
+//! A second table times the §Perf L6 SIMD tile kernels against the scalar
+//! reference (`tensor::simd::scalar`) at the fused kernel's own shapes: the
+//! QK dot tile, the softmax row scan, the PV axpy tile, and the int4 fused
+//! dequant-GEMV. On AVX2+FMA hosts the gates are ≥2x on the attend tile
+//! kernels (QK, softmax) and ≥1.5x on the int4 dequant-GEMV; other tiers
+//! (NEON, or `SALS_SIMD=scalar`) report the columns without gating.
+//!
 //! Emits `BENCH_sals_hotpath.json` at the repo root; CI runs this under
 //! `SALS_BENCH_QUICK=1` and fails if `accepted` is false. Quick mode
 //! shortens the timing loops (same contexts and shapes).
@@ -45,6 +52,7 @@ use sals::lowrank::{Calibrator, Projector};
 use sals::quant::{Bits, TokenQuantStore};
 use sals::rope::RopeTable;
 use sals::tensor::ops::{axpy, dot, matmul, softmax};
+use sals::tensor::simd::{self, SimdTier};
 use sals::tensor::top_k_indices_into;
 use sals::util::json::Json;
 use sals::util::rng::Rng;
@@ -358,6 +366,170 @@ fn run_context(
     }
 }
 
+/// One SIMD-vs-scalar microkernel measurement (per-call nanoseconds, best
+/// of the timing passes).
+struct MicroRow {
+    kernel: &'static str,
+    scalar_ns: f64,
+    simd_ns: f64,
+    /// Acceptance floor enforced when the dispatched tier is AVX2+FMA;
+    /// `None` = informational column. The PV axpy tile is informational
+    /// because its exact-class kernel keeps multiply and add separate (no
+    /// FMA, the scalar bit-parity contract), so its ceiling over the SSE2
+    /// auto-vectorized scalar build is too low to gate without flaking.
+    gate: Option<f64>,
+}
+
+impl MicroRow {
+    fn speedup(&self) -> f64 {
+        self.scalar_ns / self.simd_ns
+    }
+}
+
+/// Best-of-`reps` wall time (seconds) of `iters` calls to `f`. The f32
+/// checksum flows into `black_box` so the optimizer can't delete the
+/// kernel body.
+fn time_kernel(reps: usize, iters: usize, mut f: impl FnMut() -> f32) -> f64 {
+    let mut best = f64::INFINITY;
+    let mut sink = 0.0f32;
+    for _ in 0..reps {
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            sink += f();
+        }
+        best = best.min(t0.elapsed().as_secs_f64());
+    }
+    std::hint::black_box(sink);
+    best
+}
+
+/// Scalar-vs-dispatched timings for the decode tile kernels (§Perf L6).
+/// Shapes mirror the fused attend at this bench's config: d=32 head tiles
+/// over 64-row panels, a 256-wide softmax row, and an int4 dequant-GEMV
+/// over one head's 32-channel column slice of (64, kvd=128) value rows.
+fn run_simd_microbench(quick: bool, rng: &mut Rng) -> Vec<MicroRow> {
+    let iters = if quick { 4_000 } else { 40_000 };
+    let reps = 5;
+    let d = HEAD_DIM;
+    let t = 64;
+    let q = rng.normal_vec(d, 1.0);
+    let keys = rng.normal_vec(t * d, 1.0);
+    let w = rng.normal_vec(t, 1.0);
+    let row0 = rng.normal_vec(256, 1.0);
+    let mut row = row0.clone();
+    let mut acc = vec![0.0f32; d];
+    let kvdim = kvd();
+    let mut codes = vec![0u8; t * kvdim / 2];
+    for b in codes.iter_mut() {
+        *b = rng.below(256) as u8;
+    }
+    let scale = rng.normal_vec(kvdim, 0.1);
+    let zero = rng.normal_vec(kvdim, 0.1);
+    let (c0, c1) = (d, 2 * d); // head 1's channel slice: a nonzero packed offset
+
+    let qk_scalar = time_kernel(reps, iters, || {
+        let mut s = 0.0;
+        for r in 0..t {
+            s += simd::scalar::dot(&q, &keys[r * d..(r + 1) * d]);
+        }
+        s
+    });
+    let qk_simd = time_kernel(reps, iters, || {
+        let mut s = 0.0;
+        for r in 0..t {
+            s += simd::dot(&q, &keys[r * d..(r + 1) * d]);
+        }
+        s
+    });
+
+    let sm_scalar = time_kernel(reps, iters, || {
+        row.copy_from_slice(&row0);
+        let m = simd::scalar::max(&row);
+        let s = simd::scalar::exp_sum(&mut row, m);
+        simd::scalar::scale(&mut row, 1.0 / s);
+        row[0]
+    });
+    let sm_simd = time_kernel(reps, iters, || {
+        row.copy_from_slice(&row0);
+        let m = simd::max(&row);
+        let s = simd::exp_sum(&mut row, m);
+        simd::scale(&mut row, 1.0 / s);
+        row[0]
+    });
+
+    let pv_scalar = time_kernel(reps, iters, || {
+        acc.fill(0.0);
+        for r in 0..t {
+            simd::scalar::axpy(w[r], &keys[r * d..(r + 1) * d], &mut acc);
+        }
+        acc[0]
+    });
+    let pv_simd = time_kernel(reps, iters, || {
+        acc.fill(0.0);
+        for r in 0..t {
+            simd::axpy(w[r], &keys[r * d..(r + 1) * d], &mut acc);
+        }
+        acc[0]
+    });
+
+    let dq_scalar = time_kernel(reps, iters, || {
+        acc.fill(0.0);
+        for r in 0..t {
+            simd::scalar::dequant_axpy_b4(
+                w[r],
+                &codes,
+                r * kvdim + c0,
+                &scale[c0..c1],
+                &zero[c0..c1],
+                &mut acc,
+            );
+        }
+        acc[0]
+    });
+    let dq_simd = time_kernel(reps, iters, || {
+        acc.fill(0.0);
+        for r in 0..t {
+            simd::dequant_axpy_b4(
+                w[r],
+                &codes,
+                r * kvdim + c0,
+                &scale[c0..c1],
+                &zero[c0..c1],
+                &mut acc,
+            );
+        }
+        acc[0]
+    });
+
+    let ns = |secs: f64| secs / iters as f64 * 1e9;
+    vec![
+        MicroRow {
+            kernel: "attend_qk (64x d=32 dot)",
+            scalar_ns: ns(qk_scalar),
+            simd_ns: ns(qk_simd),
+            gate: Some(2.0),
+        },
+        MicroRow {
+            kernel: "attend_softmax (256 row)",
+            scalar_ns: ns(sm_scalar),
+            simd_ns: ns(sm_simd),
+            gate: Some(2.0),
+        },
+        MicroRow {
+            kernel: "pv_axpy (64x d=32)",
+            scalar_ns: ns(pv_scalar),
+            simd_ns: ns(pv_simd),
+            gate: None,
+        },
+        MicroRow {
+            kernel: "dequant_gemv_int4 (64x d=32)",
+            scalar_ns: ns(dq_scalar),
+            simd_ns: ns(dq_simd),
+            gate: Some(1.5),
+        },
+    ]
+}
+
 fn main() {
     let quick = std::env::var("SALS_BENCH_QUICK").is_ok();
     let (reps, decode_tokens) = if quick { (3, 5) } else { (3, 10) };
@@ -421,6 +593,58 @@ fn main() {
     }
     table.print();
 
+    // §Perf L6: scalar-vs-SIMD tile-kernel microbenches. Gates are enforced
+    // only when the dispatched tier is AVX2+FMA — under `SALS_SIMD=scalar`
+    // (or on a pre-AVX2 host) both columns time the same code and the
+    // speedup is ~1x by construction, and NEON hosts report without gating
+    // (the gate calibration is x86 CI hardware).
+    let tier = simd::tier();
+    let gates_enforced = tier == SimdTier::Avx2Fma;
+    let micro = run_simd_microbench(quick, &mut rng);
+    let mut mtable = Table::new(
+        &format!("SIMD microkernels — dispatched tier ({}) vs scalar reference", simd::tier_name()),
+        &["Kernel", "Scalar ns", "SIMD ns", "Speedup", "Gate"],
+    );
+    let mut micro_rows: Vec<Json> = Vec::new();
+    let mut simd_gates_ok = true;
+    for m in &micro {
+        let s = m.speedup();
+        if gates_enforced && m.gate.is_some_and(|g| s < g) {
+            simd_gates_ok = false;
+        }
+        mtable.row(vec![
+            m.kernel.to_string(),
+            format!("{:.1}", m.scalar_ns),
+            format!("{:.1}", m.simd_ns),
+            format!("{s:.2}x"),
+            match m.gate {
+                Some(g) if gates_enforced => format!(">= {g}x"),
+                Some(g) => format!("({g}x on avx2)"),
+                None => "info".to_string(),
+            },
+        ]);
+        micro_rows.push(
+            Json::obj()
+                .field("kernel", m.kernel)
+                .field("scalar_ns", m.scalar_ns)
+                .field("simd_ns", m.simd_ns)
+                .field("speedup", s)
+                .field("gate_min", m.gate.unwrap_or(0.0)),
+        );
+    }
+    mtable.print();
+    println!(
+        "simd gates ({}): {}",
+        simd::tier_name(),
+        if !gates_enforced {
+            "reported only (non-avx2 tier)"
+        } else if simd_gates_ok {
+            "pass"
+        } else {
+            "FAIL"
+        },
+    );
+
     // Gates: the PR-4 staged-vs-legacy floor; the fused kernel vs the two
     // staged stages it replaces (reconstruct+attend), single-threaded; and
     // — on multicore only — the threads=N total must not regress below
@@ -433,7 +657,7 @@ fn main() {
     let fused_ok = fused_kernel_speedup_32k >= 1.2;
     let mt_floor = if quick { 0.95 } else { 1.0 };
     let mt_ok = threads_n <= 1 || mt_speedup_32k >= mt_floor;
-    let accepted = staged_ok && fused_ok && mt_ok && score_bytes_ok;
+    let accepted = staged_ok && fused_ok && mt_ok && score_bytes_ok && simd_gates_ok;
     println!(
         "acceptance: 32K staged {staged_speedup_32k:.2}x {} 1.5x legacy; fused kernel \
          {fused_kernel_speedup_32k:.2}x {} 1.2x staged recon+attend; fused x{threads_n} \
@@ -444,8 +668,7 @@ fn main() {
         if score_bytes_ok { "==" } else { "!=" },
     );
 
-    let doc = Json::obj()
-        .field("bench", "sals_hotpath")
+    let doc = sals::harness::bench_doc("sals_hotpath")
         .field(
             "config",
             "mha n_heads=4 head_dim=32 kvd=128 rank=16 r_star=8 v_bits=2 sink=4 recent=64 critical=ctx/256",
@@ -458,7 +681,10 @@ fn main() {
         .field("fused_kernel_speedup_32k", fused_kernel_speedup_32k)
         .field("fused_mt_speedup_32k", mt_speedup_32k)
         .field("score_bytes_per_ctx_token_ok", score_bytes_ok)
+        .field("simd_gates_enforced", gates_enforced)
+        .field("simd_gates_ok", simd_gates_ok)
         .field("accepted", accepted)
+        .field("simd_rows", Json::Arr(micro_rows))
         .field("rows", Json::Arr(rows));
     let path = sals::harness::bench_artifact_path("BENCH_sals_hotpath.json");
     std::fs::write(&path, doc.to_string()).expect("write BENCH_sals_hotpath.json");

@@ -1,6 +1,15 @@
 //! Shared plumbing for baseline backends: a dense post-RoPE KV cache plus
 //! the backend-owned decode scratch that keeps every baseline's hot path
 //! allocation-free (the `attention/mod.rs` decode hot-path contract).
+//!
+//! The attend kernels every baseline funnels into
+//! ([`crate::tensor::ops::sparse_attend`] and friends) dispatch their
+//! elementwise loops through [`crate::tensor::simd`], so all baselines
+//! pick up the runtime AVX2/NEON tier — and stay comparable to SALS —
+//! without any per-backend kernel code. Quantized-value backends (KIVI)
+//! additionally route their PV stage through the fused
+//! [`crate::quant::TokenQuantStore::dequant_matmul_acc_all`], never
+//! staging an fp32 value panel (see DESIGN.md §Perf).
 
 use crate::attention::{AttnShape, Traffic};
 use crate::rope::RopeTable;

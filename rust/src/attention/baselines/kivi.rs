@@ -6,7 +6,7 @@
 use crate::attention::{AttentionBackend, AttnShape, FootprintModel, Traffic};
 use crate::quant::{Bits, TokenQuantStore};
 use crate::rope::RopeTable;
-use crate::tensor::ops::{sparse_attend_threaded, SparseAttendScratch};
+use crate::tensor::ops::{sparse_attend_pv, SparseAttendScratch};
 
 pub struct KiviAttention {
     shape: AttnShape,
@@ -20,7 +20,6 @@ pub struct KiviAttention {
     len: usize,
     traffic: Traffic,
     scratch_k: Vec<f32>,
-    scratch_v: Vec<f32>,
     scratch_kr: Vec<f32>,
     scratch_qr: Vec<f32>,
     scratch_attend: SparseAttendScratch,
@@ -39,7 +38,6 @@ impl KiviAttention {
             len: 0,
             traffic: Traffic::default(),
             scratch_k: Vec::new(),
-            scratch_v: Vec::new(),
             scratch_kr: Vec::new(),
             scratch_qr: Vec::new(),
             scratch_attend: SparseAttendScratch::default(),
@@ -66,24 +64,32 @@ impl AttentionBackend for KiviAttention {
         self.scratch_qr.clear();
         self.scratch_qr.extend_from_slice(q);
         self.rope.apply_multihead(&mut self.scratch_qr, self.len - 1);
-        // Dequantize the whole cache (dense attention) with the
-        // page-coherent sequential walk, metering the quantized bytes the
-        // stream actually moves — the bandwidth saving KIVI delivers.
+        // Keys dequantize densely (every token scores); values stream
+        // straight from their quantized pages inside the PV stage via the
+        // fused dequant-GEMV — no fp32 value panel is ever staged. Both
+        // meters charge the quantized bytes the stream actually moves (the
+        // bandwidth saving KIVI delivers) and are unchanged by the fusion:
+        // `read_all_bytes` describes what is *streamed*, not staged.
         self.scratch_k.resize(self.len * kvd, 0.0);
-        self.scratch_v.resize(self.len * kvd, 0.0);
         self.keys.read_all(&mut self.scratch_k);
-        self.values.read_all(&mut self.scratch_v);
         self.traffic.read_bytes(self.keys.read_all_bytes());
         self.traffic.read_bytes(self.values.read_all_bytes());
-        sparse_attend_threaded(
+        let d = self.shape.head_dim;
+        let group = self.shape.group_size();
+        let values = &self.values;
+        let pv = |kvh: usize, scores: &[f32], staging: &mut Vec<f32>, ohead: &mut [f32]| {
+            ohead.fill(0.0);
+            values.dequant_matmul_acc_all(kvh * d, (kvh + 1) * d, scores, group, staging, ohead);
+        };
+        sparse_attend_pv(
             &self.scratch_qr,
             &self.scratch_k,
-            &self.scratch_v,
             self.len,
             self.shape.n_heads,
             self.shape.n_kv_heads,
-            self.shape.head_dim,
+            d,
             self.threads,
+            pv,
             &mut self.scratch_attend,
             out,
         );

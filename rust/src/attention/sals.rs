@@ -27,12 +27,15 @@
 //!    per-KV-head tiles: non-recent rows reconstruct their gathered split
 //!    latents against this head's Uᵀ block, recent-ring rows copy their
 //!    exact fp32 head slice, every tile row is rotated at its original
-//!    position, values dequantize per head through the page-coherent
-//!    [`crate::quant::TokenQuantStore::gather_rows_cols`], and an online
-//!    softmax folds each tile's QKᵀ block into running (max, denom, PV)
-//!    state — neither the (n_sel, kvd) key panel nor the full score row
-//!    is ever materialized. KV-head panels are independent, so the tile
-//!    loop fans out per KV head across the worker share.
+//!    position, and the PV stage consumes the quantized value store **as
+//!    codes** through the page-coherent fused
+//!    [`crate::quant::TokenQuantStore::dequant_matmul_acc`] (§Perf L6:
+//!    int4/int2 rows never round-trip through an fp32 staging panel); an
+//!    online softmax folds each tile's QKᵀ block into running
+//!    (max, denom, PV) state — neither the (n_sel, kvd) key panel, the
+//!    full score row, nor a dequantized value tile is ever materialized.
+//!    KV-head panels are independent, so the tile loop fans out per KV
+//!    head across the worker share.
 //!
 //! The PR-4 **staged** pipeline (materializing reconstruct → packed
 //! [`crate::tensor::ops::sparse_attend`]) survives as
@@ -452,15 +455,16 @@ impl SalsAttention {
     /// per-KV-head tiles. Per tile, the fill closure reconstructs the
     /// non-recent rows' latents against this head's Uᵀ block into the
     /// L1-resident key tile (recent rows copy their exact fp32 head slice
-    /// from the ring), rotates each tile row at its original position
-    /// ([`RopeTable::apply_rows_at`]), and dequantizes the head's value
-    /// slice page-coherently
-    /// ([`TokenQuantStore::gather_rows_cols`]) — the (n_sel, kvd) key
-    /// panel and the full score row never exist; the kernel's online
-    /// softmax folds each tile in. KV-head panels are independent, so the
-    /// worker share partitions them ([`FUSED_PAR_MIN_WORK`]-guarded);
-    /// per-lane arithmetic is fixed, making the output bit-invariant in
-    /// the thread count.
+    /// from the ring) and rotates each tile row at its original position
+    /// ([`RopeTable::apply_rows_at`]); the tile's PV partial then streams
+    /// the head's value slice straight from quantized pages through the
+    /// fused [`TokenQuantStore::dequant_matmul_acc`] (bit-identical to
+    /// gather-then-matmul_acc by that kernel's contract) — the
+    /// (n_sel, kvd) key panel, the full score row, and the fp32 value
+    /// tile never exist; the kernel's online softmax folds each tile in.
+    /// KV-head panels are independent, so the worker share partitions
+    /// them ([`FUSED_PAR_MIN_WORK`]-guarded); per-lane arithmetic is
+    /// fixed, making the output bit-invariant in the thread count.
     ///
     /// The sorted selection makes recent-ring rows a contiguous *suffix*
     /// (everything ≥ recent_lo), so each tile splits into a reconstruction
@@ -545,10 +549,27 @@ impl SalsAttention {
             }
             // RoPE every tile row at its original position.
             rope.apply_rows_at(&mut lane.ktile[..(hi - lo) * d], d, &sel[lo..hi]);
-            // Values: this head's channel slice, page-coherent.
-            values.gather_rows_cols(&sel[lo..hi], kvh * d, (kvh + 1) * d, &mut lane.vtile);
         };
-        crate::tensor::ops::fused_sparse_attend(
+        // PV partial: stream this head's value slice straight from the
+        // quantized pages (fused dequant-GEMV), accumulating onto the
+        // lane's running PV state; `vtile` serves as the kernel's one-row
+        // staging scratch for grouped queries instead of holding an fp32
+        // value tile.
+        let group = self.shape.group_size();
+        let pv = move |kvh: usize, lo: usize, hi: usize, lane: &mut FusedLane| {
+            let t = hi - lo;
+            let FusedLane { scores, vtile, acc, .. } = lane;
+            values.dequant_matmul_acc(
+                &sel[lo..hi],
+                kvh * d,
+                (kvh + 1) * d,
+                &scores[..group * t],
+                group,
+                vtile,
+                acc,
+            );
+        };
+        crate::tensor::ops::fused_sparse_attend_with(
             &self.scratch_qr,
             n_sel,
             self.shape.n_heads,
@@ -556,6 +577,7 @@ impl SalsAttention {
             d,
             threads,
             fill,
+            pv,
             &mut self.scratch_fused,
             out,
         );

@@ -131,6 +131,18 @@ pub fn bench_artifact_path(file: &str) -> std::path::PathBuf {
     manifest.parent().unwrap_or(manifest).join(file)
 }
 
+/// Machine-provenance header every `BENCH_*.json` artifact embeds: bench
+/// name, the dispatched SIMD kernel tier (avx2+fma / neon / scalar), and
+/// the host's available thread count — so perf trajectories recorded on
+/// different machines are comparable (a scalar-tier number regressing
+/// against an avx2+fma number is a hardware delta, not a code delta).
+pub fn bench_doc(bench: &str) -> crate::util::json::Json {
+    crate::util::json::Json::obj()
+        .field("bench", bench)
+        .field("simd_tier", crate::tensor::simd::tier_name())
+        .field("threads_available", crate::util::threadpool::num_cpus())
+}
+
 /// Format a fraction as "0.123".
 pub fn f3(x: f64) -> String {
     format!("{x:.3}")
@@ -169,5 +181,14 @@ mod tests {
     fn formatters() {
         assert_eq!(f3(0.1234), "0.123");
         assert_eq!(pct(0.785), "78.5");
+    }
+
+    #[test]
+    fn bench_doc_stamps_tier_and_threads() {
+        let tier = crate::tensor::simd::tier_name();
+        let s = bench_doc("demo").to_string();
+        assert!(s.contains("\"bench\":\"demo\""), "{s}");
+        assert!(s.contains(&format!("\"simd_tier\":\"{tier}\"")), "{s}");
+        assert!(s.contains("\"threads_available\":"), "{s}");
     }
 }

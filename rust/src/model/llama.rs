@@ -346,22 +346,16 @@ impl<'a> DecodeRows<'a> {
     }
 }
 
-/// y = x @ W  for a (d_in, d_out) weight, accumulated into `out`.
+/// y = x @ W  for a (d_in, d_out) weight; `out` is overwritten.
 ///
-/// The inner loop is branch-free (no zero-skip): activations are almost
-/// never exactly 0.0, and the data-dependent branch defeats LLVM's
-/// auto-vectorization of the axpy — the same reason `matmul` is dense.
-/// This is the batch-of-1 decode hot path.
+/// One m = 1 [`crate::tensor::ops::matmul`] row: the batch-of-1 decode
+/// hot path rides the shared SIMD-dispatched row kernels (row_set/axpy,
+/// with the zeroing folded into the first pass) instead of keeping a
+/// private scalar loop.
 fn linear(x: &[f32], w: &crate::tensor::Mat, out: &mut [f32]) {
     debug_assert_eq!(x.len(), w.rows);
     debug_assert_eq!(out.len(), w.cols);
-    out.fill(0.0);
-    for (i, &xi) in x.iter().enumerate() {
-        let wrow = &w.data[i * w.cols..(i + 1) * w.cols];
-        for (o, &wv) in out.iter_mut().zip(wrow) {
-            *o += xi * wv;
-        }
-    }
+    matmul(x, &w.data, out, 1, w.rows, w.cols);
 }
 
 impl Model {

@@ -13,8 +13,16 @@
 //! single unit-stride scan; the original per-channel `QuantGroup` objects
 //! cost one heap indirection per *element* and dominated the SALS decode
 //! profile (see EXPERIMENTS.md §Perf).
+//!
+//! Dequantization dispatches through [`crate::tensor::simd`] (§Perf L6):
+//! the nibble/crumb unpack and the per-channel scale/zero affine run in
+//! vector lanes on AVX2/NEON hosts, and the fused
+//! [`TokenQuantStore::dequant_matmul_acc`] entry points consume pages as
+//! codes+params directly inside the attention PV stage, so quantized
+//! value rows never round-trip through an fp32 staging panel.
 
 use super::Bits;
+use crate::tensor::simd;
 
 /// One frozen page: `group` tokens × `dim` channels.
 #[derive(Clone, Debug)]
@@ -145,36 +153,30 @@ impl TokenQuantStore {
     ) {
         let d = self.dim;
         let w = c1 - c0;
-        let b = self.bits.bits();
-        let mask = (self.bits.levels() - 1) as u8;
-        let (scale, zero) = (&page.scale[..d], &page.zero[..d]);
+        let (scale, zero) = (&page.scale[c0..c1], &page.zero[c0..c1]);
+        // Row dequant dispatches through the SIMD tier: a channel range is
+        // one contiguous code run, so each row is a single vector unpack +
+        // affine scan (exact class — bit-identical across tiers).
         match self.bits {
             Bits::B8 => {
                 for (row, j) in idx.enumerate() {
                     let base = (j % self.group) * d;
-                    for (o, c) in out[row * w..(row + 1) * w].iter_mut().zip(c0..c1) {
-                        *o = page.codes[base + c] as f32 * scale[c] + zero[c];
-                    }
+                    let codes = &page.codes[base + c0..base + c1];
+                    simd::dequant_b8(codes, scale, zero, &mut out[row * w..(row + 1) * w]);
                 }
             }
             Bits::B4 => {
                 for (row, j) in idx.enumerate() {
                     let base = (j % self.group) * d;
-                    for (o, c) in out[row * w..(row + 1) * w].iter_mut().zip(c0..c1) {
-                        let i = base + c;
-                        let code = (page.codes[i >> 1] >> ((i & 1) as u32 * 4)) & 0x0F;
-                        *o = code as f32 * scale[c] + zero[c];
-                    }
+                    let orow = &mut out[row * w..(row + 1) * w];
+                    simd::dequant_b4(&page.codes, base + c0, scale, zero, orow);
                 }
             }
             Bits::B2 => {
                 for (row, j) in idx.enumerate() {
                     let base = (j % self.group) * d;
-                    for (o, c) in out[row * w..(row + 1) * w].iter_mut().zip(c0..c1) {
-                        let i = base + c;
-                        let code = (page.codes[i >> 2] >> ((i & 3) as u32 * b)) & mask;
-                        *o = code as f32 * scale[c] + zero[c];
-                    }
+                    let orow = &mut out[row * w..(row + 1) * w];
+                    simd::dequant_b2(&page.codes, base + c0, scale, zero, orow);
                 }
             }
         }
@@ -238,6 +240,160 @@ impl TokenQuantStore {
                 &mut out[i * w..e * w],
             );
             i = e;
+        }
+    }
+
+    /// Fused dequant-GEMV over a page-coherent row gather:
+    /// `acc[g] += Σ_r probs[g·n + r] · dequant(row sorted_idx[r])[c0..c1]`
+    /// for each of the `m` coefficient rows — the attention PV stage
+    /// consuming the value store **as codes**, so quantized rows never
+    /// round-trip through an fp32 staging panel. `probs` is
+    /// (m, sorted_idx.len()) row-major; `acc` is (m, c1-c0) and is
+    /// accumulated onto (callers zero it or carry a running partial).
+    ///
+    /// Bit-exactness contract: this produces exactly the floats of
+    /// [`TokenQuantStore::gather_rows_cols`] into a panel followed by
+    /// `matmul_acc(probs, panel, acc)` — per `acc` row the gathered rows
+    /// are accumulated in the same ascending order, and the fused
+    /// dequant-axpy kernels are bit-identical to dequant-then-axpy — so
+    /// swapping the staged PV for this one cannot change attention
+    /// outputs. Byte metering is also unchanged:
+    /// [`TokenQuantStore::gather_read_bytes`] describes what is
+    /// *streamed* (payload + per-page params), which is identical either
+    /// way; only the fp32 staging traffic disappears.
+    ///
+    /// `row_buf` is retained scratch for the single dequantized row shared
+    /// across `m > 1` coefficient rows (never a whole panel); with
+    /// `m == 1` frozen rows stream straight from codes into `acc`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn dequant_matmul_acc(
+        &self,
+        sorted_idx: &[usize],
+        c0: usize,
+        c1: usize,
+        probs: &[f32],
+        m: usize,
+        row_buf: &mut Vec<f32>,
+        acc: &mut [f32],
+    ) {
+        let d = self.dim;
+        assert!(c0 < c1 && c1 <= d, "channel slice {c0}..{c1} out of dim {d}");
+        let w = c1 - c0;
+        let n = sorted_idx.len();
+        assert_eq!(probs.len(), m * n);
+        assert_eq!(acc.len(), m * w);
+        let mut i = 0;
+        while i < n {
+            let j = sorted_idx[i];
+            assert!(j < self.len, "token {j} out of range {}", self.len);
+            if j >= self.frozen {
+                // fp32 tail — sorted indices mean everything from here on
+                // is a tail row; stream them as plain axpys.
+                for (r, &jt) in sorted_idx[i..].iter().enumerate() {
+                    let t = jt - self.frozen;
+                    let row = &self.tail[t * d + c0..t * d + c1];
+                    for g in 0..m {
+                        simd::axpy(probs[g * n + i + r], row, &mut acc[g * w..(g + 1) * w]);
+                    }
+                }
+                return;
+            }
+            let p = j / self.group;
+            let mut e = i + 1;
+            while e < n && sorted_idx[e] / self.group == p {
+                e += 1;
+            }
+            let rows = sorted_idx[i..e].iter().copied().enumerate().map(|(r, j)| (i + r, j));
+            self.dequant_page_rows_acc(&self.pages[p], rows, c0, c1, probs, m, n, row_buf, acc);
+            i = e;
+        }
+    }
+
+    /// [`TokenQuantStore::dequant_matmul_acc`] over the **whole** store —
+    /// the dense-attention (KIVI) PV path. Frozen pages stream
+    /// sequentially with their setup hoisted, the fp32 tail follows;
+    /// `probs` column `j` is absolute token index `j` (`probs` is
+    /// (m, len) row-major). Same bit-exactness contract, with
+    /// [`TokenQuantStore::read_all`] + `matmul_acc` as the staged
+    /// reference and [`TokenQuantStore::read_all_bytes`] as the
+    /// unchanged traffic meter.
+    pub fn dequant_matmul_acc_all(
+        &self,
+        c0: usize,
+        c1: usize,
+        probs: &[f32],
+        m: usize,
+        row_buf: &mut Vec<f32>,
+        acc: &mut [f32],
+    ) {
+        let d = self.dim;
+        assert!(c0 < c1 && c1 <= d, "channel slice {c0}..{c1} out of dim {d}");
+        let w = c1 - c0;
+        let n = self.len;
+        assert_eq!(probs.len(), m * n);
+        assert_eq!(acc.len(), m * w);
+        let g = self.group;
+        for (p, page) in self.pages.iter().enumerate() {
+            let lo = p * g;
+            let rows = (lo..lo + g).map(|j| (j, j));
+            self.dequant_page_rows_acc(page, rows, c0, c1, probs, m, n, row_buf, acc);
+        }
+        for t in 0..n - self.frozen {
+            let row = &self.tail[t * d + c0..t * d + c1];
+            let col = self.frozen + t;
+            for gq in 0..m {
+                simd::axpy(probs[gq * n + col], row, &mut acc[gq * w..(gq + 1) * w]);
+            }
+        }
+    }
+
+    /// Per-page worker of the fused dequant-GEMV walks: accumulate the
+    /// yielded `(probs column, absolute token)` rows of `page` onto `acc`.
+    /// `m == 1` fuses dequant into the axpy (codes → acc, no staging at
+    /// all); `m > 1` dequantizes each row once into `row_buf` and shares
+    /// it across the coefficient rows.
+    #[allow(clippy::too_many_arguments)]
+    fn dequant_page_rows_acc(
+        &self,
+        page: &Page,
+        rows: impl Iterator<Item = (usize, usize)>,
+        c0: usize,
+        c1: usize,
+        probs: &[f32],
+        m: usize,
+        n: usize,
+        row_buf: &mut Vec<f32>,
+        acc: &mut [f32],
+    ) {
+        let d = self.dim;
+        let w = c1 - c0;
+        let (scale, zero) = (&page.scale[c0..c1], &page.zero[c0..c1]);
+        for (col, j) in rows {
+            let base = (j % self.group) * d;
+            if m == 1 {
+                let p = probs[col];
+                match self.bits {
+                    Bits::B8 => {
+                        let codes = &page.codes[base + c0..base + c1];
+                        simd::dequant_axpy_b8(p, codes, scale, zero, acc);
+                    }
+                    Bits::B4 => simd::dequant_axpy_b4(p, &page.codes, base + c0, scale, zero, acc),
+                    Bits::B2 => simd::dequant_axpy_b2(p, &page.codes, base + c0, scale, zero, acc),
+                }
+            } else {
+                row_buf.resize(w, 0.0);
+                match self.bits {
+                    Bits::B8 => {
+                        let codes = &page.codes[base + c0..base + c1];
+                        simd::dequant_b8(codes, scale, zero, row_buf);
+                    }
+                    Bits::B4 => simd::dequant_b4(&page.codes, base + c0, scale, zero, row_buf),
+                    Bits::B2 => simd::dequant_b2(&page.codes, base + c0, scale, zero, row_buf),
+                }
+                for g in 0..m {
+                    simd::axpy(probs[g * n + col], row_buf, &mut acc[g * w..(g + 1) * w]);
+                }
+            }
         }
     }
 
@@ -485,6 +641,71 @@ mod tests {
                         &full[t * 8 + c0..t * 8 + c1],
                         "{bits:?} slice {c0}..{c1} row {t}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_matmul_acc_bit_matches_staged_gather() {
+        use crate::tensor::ops::matmul_acc;
+        // The fused path must be bit-identical to gather-then-matmul_acc
+        // for every bit width, coefficient-row count, and channel slice,
+        // over a selection crossing pages, page boundaries, and the tail.
+        for bits in [Bits::B2, Bits::B4, Bits::B8] {
+            let mut st = TokenQuantStore::new(8, bits, 8, 12);
+            let mut rng = Rng::new(83);
+            for _ in 0..70 {
+                st.append(&rng.normal_vec(8, 1.0));
+            }
+            let idx = [0usize, 1, 7, 8, 15, 30, 55, 60, 68, 69];
+            let n = idx.len();
+            for m in [1usize, 3] {
+                for (c0, c1) in [(0usize, 4usize), (4, 8), (2, 7), (0, 8)] {
+                    let w = c1 - c0;
+                    let probs = rng.normal_vec(m * n, 1.0);
+                    let mut panel = vec![0.0f32; n * w];
+                    st.gather_rows_cols(&idx, c0, c1, &mut panel);
+                    // Nonzero starting acc: both paths must accumulate on
+                    // top, not overwrite.
+                    let start = rng.normal_vec(m * w, 1.0);
+                    let mut want = start.clone();
+                    matmul_acc(&probs, &panel, &mut want, m, n, w);
+                    let mut got = start;
+                    let mut row_buf = Vec::new();
+                    st.dequant_matmul_acc(&idx, c0, c1, &probs, m, &mut row_buf, &mut got);
+                    assert_eq!(got, want, "{bits:?} m={m} slice {c0}..{c1}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_matmul_acc_all_bit_matches_staged_read_all() {
+        use crate::tensor::ops::matmul_acc;
+        for bits in [Bits::B2, Bits::B4, Bits::B8] {
+            let mut st = TokenQuantStore::new(6, bits, 4, 6);
+            let mut rng = Rng::new(85);
+            for _ in 0..37 {
+                st.append(&rng.normal_vec(6, 1.0));
+            }
+            let n = st.len();
+            let mut full = vec![0.0f32; n * 6];
+            st.read_all(&mut full);
+            for m in [1usize, 4] {
+                for (c0, c1) in [(0usize, 3usize), (3, 6), (0, 6)] {
+                    let w = c1 - c0;
+                    let probs = rng.normal_vec(m * n, 1.0);
+                    let mut sliced = vec![0.0f32; n * w];
+                    for r in 0..n {
+                        sliced[r * w..(r + 1) * w].copy_from_slice(&full[r * 6 + c0..r * 6 + c1]);
+                    }
+                    let mut want = vec![0.0f32; m * w];
+                    matmul_acc(&probs, &sliced, &mut want, m, n, w);
+                    let mut got = vec![0.0f32; m * w];
+                    let mut row_buf = Vec::new();
+                    st.dequant_matmul_acc_all(c0, c1, &probs, m, &mut row_buf, &mut got);
+                    assert_eq!(got, want, "{bits:?} m={m} slice {c0}..{c1}");
                 }
             }
         }

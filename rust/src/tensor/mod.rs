@@ -6,6 +6,7 @@
 //! unit-stride and `matmul` packs the RHS when it pays off.
 
 pub mod ops;
+pub mod simd;
 pub mod topk;
 
 pub use ops::*;

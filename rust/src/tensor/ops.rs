@@ -17,26 +17,40 @@
 //! per-head by construction), every matmul inner loop is unit-stride, and
 //! repeated calls reuse the scratch so steady-state decode performs zero
 //! heap allocations.
+//!
+//! The elementwise row kernels (dot, axpy, row-set, the softmax scans, the
+//! rmsnorm scans) dispatch through [`crate::tensor::simd`] — runtime
+//! AVX2+FMA / NEON with the pre-SIMD scalar loops retained as the parity
+//! reference (see that module's exact-vs-reassociated contract).
 
-/// out[m,n] = a[m,k] @ b[k,n]   (row-major, out must be zeroed or will be overwritten)
+use crate::tensor::simd;
+
+/// out[m,n] = a[m,k] @ b[k,n]   (row-major, out is overwritten)
 ///
 /// i-k-j loop order keeps both the `b` row and `out` row unit-stride, which
-/// is the standard cache-friendly ordering for row-major operands. The
-/// inner loop is branch-free so LLVM can vectorize it; callers whose `a`
-/// rows are mostly zero (masked probability rows) should use
-/// [`matmul_masked`] instead.
+/// is the standard cache-friendly ordering for row-major operands. The row
+/// kernels are the SIMD-dispatched [`simd::row_set`] / [`simd::axpy`]: the
+/// `p == 0` pass *writes* each output row (folding the zeroing into the
+/// first accumulation), so `out` streams once per call instead of being
+/// cleared and then re-read. Callers whose `a` rows are mostly zero
+/// (masked probability rows) should use [`matmul_masked`] instead.
 pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * n);
-    out.fill(0.0);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
+        if k == 0 {
+            orow.fill(0.0);
+            continue;
+        }
         for (p, &av) in arow.iter().enumerate() {
             let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+            if p == 0 {
+                simd::row_set(av, brow, orow);
+            } else {
+                simd::axpy(av, brow, orow);
             }
         }
     }
@@ -46,24 +60,31 @@ pub fn matmul(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usiz
 ///
 /// Same contract as `matmul`, but each `a[i,p] == 0.0` short-circuits the
 /// whole `b` row. Only worth it when `a` rows are *structurally* sparse —
-/// causally masked score rows, gathered token subsets — because the branch
-/// defeats auto-vectorization on dense inputs.
+/// causally masked score rows, gathered token subsets. Like [`matmul`],
+/// the first *surviving* row kernel writes the output row (zero-fold);
+/// an all-zero `a` row falls back to an explicit fill.
 pub fn matmul_masked(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: usize) {
     assert_eq!(a.len(), m * k);
     assert_eq!(b.len(), k * n);
     assert_eq!(out.len(), m * n);
-    out.fill(0.0);
     for i in 0..m {
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
+        let mut init = false;
         for (p, &av) in arow.iter().enumerate() {
             if av == 0.0 {
                 continue;
             }
             let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
+            if init {
+                simd::axpy(av, brow, orow);
+            } else {
+                simd::row_set(av, brow, orow);
+                init = true;
             }
+        }
+        if !init {
+            orow.fill(0.0);
         }
     }
 }
@@ -82,10 +103,7 @@ pub fn matmul_acc(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: 
         let arow = &a[i * k..(i + 1) * k];
         let orow = &mut out[i * n..(i + 1) * n];
         for (p, &av) in arow.iter().enumerate() {
-            let brow = &b[p * n..(p + 1) * n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
+            simd::axpy(av, &b[p * n..(p + 1) * n], orow);
         }
     }
 }
@@ -105,51 +123,27 @@ pub fn matmul_tn(a: &[f32], b: &[f32], out: &mut [f32], m: usize, k: usize, n: u
     }
 }
 
-/// Unit-stride dot product.
+/// Unit-stride dot product (SIMD-dispatched; see [`simd::dot`]).
 #[inline]
 pub fn dot(a: &[f32], b: &[f32]) -> f32 {
-    debug_assert_eq!(a.len(), b.len());
-    // 4-way unrolled accumulation; lets LLVM vectorize without -ffast-math.
-    let chunks = a.len() / 4;
-    let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
-    for c in 0..chunks {
-        let i = c * 4;
-        s0 += a[i] * b[i];
-        s1 += a[i + 1] * b[i + 1];
-        s2 += a[i + 2] * b[i + 2];
-        s3 += a[i + 3] * b[i + 3];
-    }
-    let mut s = s0 + s1 + s2 + s3;
-    for i in chunks * 4..a.len() {
-        s += a[i] * b[i];
-    }
-    s
+    simd::dot(a, b)
 }
 
-/// y += alpha * x
+/// y += alpha * x (SIMD-dispatched; bit-identical across tiers).
 #[inline]
 pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
-    debug_assert_eq!(x.len(), y.len());
-    for (yi, xi) in y.iter_mut().zip(x) {
-        *yi += alpha * xi;
-    }
+    simd::axpy(alpha, x, y)
 }
 
-/// In-place numerically-stable softmax over one row.
+/// In-place numerically-stable softmax over one row: the max scan, the
+/// exp/sum scan, and the 1/sum scale all dispatch through [`simd`].
 pub fn softmax(row: &mut [f32]) {
     if row.is_empty() {
         return;
     }
-    let max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-    let mut sum = 0.0f32;
-    for x in row.iter_mut() {
-        *x = (*x - max).exp();
-        sum += *x;
-    }
-    let inv = 1.0 / sum;
-    for x in row.iter_mut() {
-        *x *= inv;
-    }
+    let max = simd::max(row);
+    let sum = simd::exp_sum(row, max);
+    simd::scale(row, 1.0 / sum);
 }
 
 /// Softmax over each row of an (m, n) row-major buffer.
@@ -371,10 +365,57 @@ pub fn sparse_attend_threaded(
 ) {
     assert_eq!(n_heads % n_kv_heads, 0);
     let kvd = n_kv_heads * d;
+    assert_eq!(values.len(), n_sel * kvd);
+    let group = n_heads / n_kv_heads;
+    // Default PV stage: pack this head's value columns into a contiguous
+    // panel (the single-KV-head cache IS the panel) and run one matmul —
+    // the same packing + arithmetic the pre-split kernel performed.
+    let pv = |kvh: usize, scores: &[f32], staging: &mut Vec<f32>, ohead: &mut [f32]| {
+        let vp: &[f32] = if n_kv_heads == 1 {
+            values
+        } else {
+            staging.resize(n_sel * d, 0.0);
+            for j in 0..n_sel {
+                let src = j * kvd + kvh * d;
+                staging[j * d..(j + 1) * d].copy_from_slice(&values[src..src + d]);
+            }
+            &staging[..]
+        };
+        matmul(scores, vp, ohead, group, n_sel, d);
+    };
+    sparse_attend_pv(q, keys, n_sel, n_heads, n_kv_heads, d, threads, pv, scratch, out)
+}
+
+/// [`sparse_attend_threaded`] with a caller-supplied PV stage — the
+/// materialized-score sibling of [`fused_sparse_attend_with`].
+///
+/// The kernel packs this head's *key* panel, computes the (group, n_sel)
+/// softmaxed score block, then hands `pv(kvh, scores, staging, ohead)`
+/// the job of producing `ohead = scores @ V_head`. `staging` is the
+/// lane's retained value-panel buffer, free for the closure to use as
+/// scratch (the default PV packs the fp32 value panel into it; KIVI's
+/// fused dequant-GEMV path streams quantized rows directly into `ohead`
+/// and never stages). `pv` runs from worker threads and must be pure
+/// w.r.t. its arguments; per-head arithmetic stays thread-partition
+/// independent, so results remain bit-invariant in the thread count.
+#[allow(clippy::too_many_arguments)]
+pub fn sparse_attend_pv(
+    q: &[f32],
+    keys: &[f32],
+    n_sel: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    d: usize,
+    threads: usize,
+    pv: impl Fn(usize, &[f32], &mut Vec<f32>, &mut [f32]) + Sync,
+    scratch: &mut SparseAttendScratch,
+    out: &mut [f32],
+) {
+    assert_eq!(n_heads % n_kv_heads, 0);
+    let kvd = n_kv_heads * d;
     let qd = n_heads * d;
     assert_eq!(q.len(), qd);
     assert_eq!(keys.len(), n_sel * kvd);
-    assert_eq!(values.len(), n_sel * kvd);
     assert_eq!(out.len(), qd);
     let group = n_heads / n_kv_heads;
     let scale = 1.0 / (d as f32).sqrt();
@@ -382,30 +423,26 @@ pub fn sparse_attend_threaded(
     let per_head = |kvh: usize, lane: &mut SparseAttendLane, ohead: &mut [f32]| {
         lane.qtile.resize(group * d, 0.0);
         lane.scores.resize(group * n_sel, 0.0);
-        // Contiguous (n_sel, d) panels for this KV head. A single-KV-head
-        // cache IS the panel — no copy.
-        let (kp, vp): (&[f32], &[f32]) = if n_kv_heads == 1 {
-            (keys, values)
+        // Contiguous (n_sel, d) key panel for this KV head. A
+        // single-KV-head cache IS the panel — no copy.
+        let kp: &[f32] = if n_kv_heads == 1 {
+            keys
         } else {
             lane.khead.resize(n_sel * d, 0.0);
-            lane.vhead.resize(n_sel * d, 0.0);
             for j in 0..n_sel {
                 let src = j * kvd + kvh * d;
                 lane.khead[j * d..(j + 1) * d].copy_from_slice(&keys[src..src + d]);
-                lane.vhead[j * d..(j + 1) * d].copy_from_slice(&values[src..src + d]);
             }
-            (&lane.khead[..], &lane.vhead[..])
+            &lane.khead[..]
         };
         // The group's query heads are consecutive rows of q: one tile,
         // pre-scaled so 1/sqrt(d) folds into QKᵀ.
         let qbase = kvh * group * d;
         lane.qtile.copy_from_slice(&q[qbase..qbase + group * d]);
-        for x in lane.qtile.iter_mut() {
-            *x *= scale;
-        }
+        simd::scale(&mut lane.qtile, scale);
         matmul_tn(&lane.qtile, kp, &mut lane.scores, group, d, n_sel);
         softmax_rows(&mut lane.scores, group, n_sel);
-        matmul(&lane.scores, vp, ohead, group, n_sel, d);
+        pv(kvh, &lane.scores, &mut lane.vhead, ohead);
     };
 
     // One lane per WORKER, not per head: workers own contiguous head
@@ -448,18 +485,24 @@ pub struct FusedLane {
     /// written by the caller's `fill` closure, consumed by QKᵀ.
     pub ktile: Vec<f32>,
     /// (tile, d) value tile for the current selection block — written by
-    /// `fill`, consumed by the PV partial sum.
+    /// `fill`, consumed by the default PV partial sum. Custom `pv`
+    /// closures ([`fused_sparse_attend_with`]) that stream values from
+    /// another representation (e.g. the fused dequant-GEMV path) may
+    /// repurpose this buffer as per-row staging scratch instead.
     pub vtile: Vec<f32>,
     /// Pre-scaled (group, d) query tile for this head's query group.
     qtile: Vec<f32>,
-    /// (group, tile) score block of the current tile.
-    scores: Vec<f32>,
+    /// (group, tile) exp-score block of the current tile — by the time
+    /// `pv` runs, row g holds `exp(s_j − m_g)` for the tile's columns.
+    pub scores: Vec<f32>,
     /// Per-query-head running max of all scores seen so far.
     m: Vec<f32>,
     /// Per-query-head running softmax denominator (rescaled to `m`).
     l: Vec<f32>,
     /// (group, d) running PV partial, rescaled to `m`; `out = acc / l`.
-    acc: Vec<f32>,
+    /// `pv` accumulates the current tile's probability-weighted values
+    /// on top of it.
+    pub acc: Vec<f32>,
 }
 
 /// Reusable per-backend scratch for [`fused_sparse_attend`]: one
@@ -512,6 +555,49 @@ pub fn fused_sparse_attend(
     scratch: &mut FusedAttendScratch,
     out: &mut [f32],
 ) {
+    let group = n_heads / n_kv_heads;
+    fused_sparse_attend_with(
+        q,
+        n_sel,
+        n_heads,
+        n_kv_heads,
+        d,
+        threads,
+        fill,
+        |_kvh, lo, hi, lane: &mut FusedLane| {
+            let t = hi - lo;
+            let FusedLane { scores, vtile, acc, .. } = lane;
+            matmul_acc(&scores[..group * t], &vtile[..t * d], acc, group, t, d);
+        },
+        scratch,
+        out,
+    )
+}
+
+/// [`fused_sparse_attend`] with a caller-supplied PV stage.
+///
+/// `pv(kvh, lo, hi, lane)` runs once per tile, after the online-softmax
+/// update: `lane.scores[..group·(hi−lo)]` holds the tile's exp-scores and
+/// `lane.acc` the (already rescaled) running partial. The closure must
+/// accumulate the tile's probability-weighted values onto `lane.acc` —
+/// the default is `matmul_acc(scores, vtile, acc)`, but the SALS decode
+/// path instead streams quantized value rows straight into `acc` via the
+/// fused dequant-GEMV ([`crate::quant::TokenQuantStore::dequant_matmul_acc`]),
+/// so the fp32 value tile never exists. Like `fill`, `pv` runs from
+/// worker threads and must be pure w.r.t. `(kvh, lo, hi)`.
+#[allow(clippy::too_many_arguments)]
+pub fn fused_sparse_attend_with(
+    q: &[f32],
+    n_sel: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    d: usize,
+    threads: usize,
+    fill: impl Fn(usize, usize, usize, &mut FusedLane) + Sync,
+    pv: impl Fn(usize, usize, usize, &mut FusedLane) + Sync,
+    scratch: &mut FusedAttendScratch,
+    out: &mut [f32],
+) {
     assert_eq!(n_heads % n_kv_heads, 0);
     let qd = n_heads * d;
     assert_eq!(q.len(), qd);
@@ -526,9 +612,7 @@ pub fn fused_sparse_attend(
     let run = |kvh: usize, lane: &mut FusedLane, ohead: &mut [f32]| {
         lane.qtile.resize(group * d, 0.0);
         lane.qtile.copy_from_slice(&q[kvh * group * d..(kvh + 1) * group * d]);
-        for x in lane.qtile.iter_mut() {
-            *x *= scale;
-        }
+        simd::scale(&mut lane.qtile, scale);
         lane.scores.resize(group * FUSED_TILE, 0.0);
         lane.m.clear();
         lane.m.resize(group, f32::NEG_INFINITY);
@@ -553,26 +637,18 @@ pub fn fused_sparse_attend(
             );
             for g in 0..group {
                 let row = &mut lane.scores[g * t..(g + 1) * t];
-                let tile_max = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let tile_max = simd::max(row);
                 if tile_max > lane.m[g] {
                     // Rescale history to the new max. First tile: m = -inf
                     // so corr = 0 on (l, acc) that are already zero.
                     let corr = (lane.m[g] - tile_max).exp();
                     lane.l[g] *= corr;
-                    for a in lane.acc[g * d..(g + 1) * d].iter_mut() {
-                        *a *= corr;
-                    }
+                    simd::scale(&mut lane.acc[g * d..(g + 1) * d], corr);
                     lane.m[g] = tile_max;
                 }
-                let m = lane.m[g];
-                let mut sum = 0.0f32;
-                for x in row.iter_mut() {
-                    *x = (*x - m).exp();
-                    sum += *x;
-                }
-                lane.l[g] += sum;
+                lane.l[g] += simd::exp_sum(row, lane.m[g]);
             }
-            matmul_acc(&lane.scores[..group * t], &lane.vtile[..t * d], &mut lane.acc, group, t, d);
+            pv(kvh, lo, hi, lane);
             lo = hi;
         }
         for g in 0..group {
@@ -641,14 +717,13 @@ pub fn lm_head_batch(x: &[f32], emb: &[f32], out: &mut [f32], b: usize, d: usize
 }
 
 /// RMSNorm: x * w / sqrt(mean(x²) + eps). LLaMA-style (no mean subtraction).
+/// Both scans (Σx² and the apply pass) dispatch through [`simd`].
 pub fn rmsnorm(x: &[f32], w: &[f32], eps: f32, out: &mut [f32]) {
     assert_eq!(x.len(), w.len());
     assert_eq!(x.len(), out.len());
-    let ms = x.iter().map(|v| v * v).sum::<f32>() / x.len() as f32;
+    let ms = simd::sum_squares(x) / x.len() as f32;
     let inv = 1.0 / (ms + eps).sqrt();
-    for i in 0..x.len() {
-        out[i] = x[i] * inv * w[i];
-    }
+    simd::weighted_scale(x, w, inv, out);
 }
 
 /// SiLU (swish) activation: x * sigmoid(x).
@@ -657,11 +732,9 @@ pub fn silu(x: f32) -> f32 {
     x / (1.0 + (-x).exp())
 }
 
-/// Scale a slice in place.
+/// Scale a slice in place (SIMD-dispatched; bit-identical across tiers).
 pub fn scale(xs: &mut [f32], alpha: f32) {
-    for x in xs {
-        *x *= alpha;
-    }
+    simd::scale(xs, alpha)
 }
 
 /// argmax over a slice (first max wins). Panics on empty input.
@@ -901,6 +974,93 @@ mod tests {
         }
     }
 
+    #[test]
+    fn sparse_attend_pv_custom_stage_matches_default() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(35);
+        // A streaming PV (zero + per-row axpy, never staging a panel) must
+        // agree with the default packed-matmul PV — this is the contract
+        // the fused dequant-GEMV path builds on. Work size clears
+        // SPARSE_ATTEND_PAR_MIN_WORK so the parallel partition runs too.
+        let (n_heads, n_kv_heads, d, n_sel) = (8usize, 4usize, 16usize, 80usize);
+        let kvd = n_kv_heads * d;
+        let group = n_heads / n_kv_heads;
+        let q = rng.normal_vec(n_heads * d, 1.0);
+        let keys = rng.normal_vec(n_sel * kvd, 1.0);
+        let values = rng.normal_vec(n_sel * kvd, 1.0);
+        let mut reference = vec![0.0f32; n_heads * d];
+        let mut scratch = SparseAttendScratch::default();
+        sparse_attend_threaded(
+            &q, &keys, &values, n_sel, n_heads, n_kv_heads, d, 1, &mut scratch, &mut reference,
+        );
+        let pv = |kvh: usize, scores: &[f32], _staging: &mut Vec<f32>, ohead: &mut [f32]| {
+            ohead.fill(0.0);
+            for g in 0..group {
+                let og = &mut ohead[g * d..(g + 1) * d];
+                for j in 0..n_sel {
+                    let src = j * kvd + kvh * d;
+                    axpy(scores[g * n_sel + j], &values[src..src + d], og);
+                }
+            }
+        };
+        let mut first = Vec::new();
+        for threads in [1usize, 2, 8] {
+            let mut out = vec![0.0f32; n_heads * d];
+            let mut s = SparseAttendScratch::default();
+            sparse_attend_pv(
+                &q, &keys, n_sel, n_heads, n_kv_heads, d, threads, &pv, &mut s, &mut out,
+            );
+            for (a, b) in out.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-4, "threads={threads}: {a} vs {b}");
+            }
+            if threads == 1 {
+                first = out;
+            } else {
+                assert_eq!(out, first, "threads={threads} must be bit-identical");
+            }
+        }
+    }
+
+    #[test]
+    fn matmul_zero_fold_overwrites_stale_out() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(36);
+        let (m, k, n) = (3, 5, 4);
+        let a = rng.normal_vec(m * k, 1.0);
+        let b = rng.normal_vec(k * n, 1.0);
+        let mut clean = vec![0.0f32; m * n];
+        matmul(&a, &b, &mut clean, m, k, n);
+        // Stale garbage in `out` must be overwritten, not accumulated onto.
+        let mut stale = vec![999.0f32; m * n];
+        matmul(&a, &b, &mut stale, m, k, n);
+        assert_eq!(stale, clean);
+        // k == 0 zero-fills.
+        let mut empty = vec![7.0f32; m * n];
+        matmul(&[], &[], &mut empty, m, 0, n);
+        assert!(empty.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn matmul_masked_zero_fold_handles_fully_masked_rows() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(38);
+        let (m, k, n) = (3, 6, 5);
+        let mut a = rng.normal_vec(m * k, 1.0);
+        // Row 1 fully masked: every coefficient structurally zero.
+        for p in 0..k {
+            a[k + p] = 0.0;
+        }
+        let b = rng.normal_vec(k * n, 1.0);
+        let mut dense = vec![0.0f32; m * n];
+        matmul(&a, &b, &mut dense, m, k, n);
+        let mut masked = vec![999.0f32; m * n]; // stale garbage must vanish
+        matmul_masked(&a, &b, &mut masked, m, k, n);
+        assert!(masked[n..2 * n].iter().all(|&x| x == 0.0), "masked row must be zeroed");
+        for (x, y) in dense.iter().zip(&masked) {
+            assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
     /// Dense-panel fill for fused_sparse_attend: slice KV head `kvh`'s
     /// columns of pre-built (n_sel, kvd) panels into the tile buffers —
     /// the minimal tile source, so the test isolates the online-softmax
@@ -983,6 +1143,46 @@ mod tests {
             &mut out,
         );
         assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn fused_sparse_attend_with_custom_pv_bit_matches_default() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(39);
+        // A custom PV that streams the tile row-by-row (axpy of exp-score
+        // times value row — the shape of the fused dequant-GEMV closure)
+        // is element-order-identical to matmul_acc over the same tile, so
+        // the wrapper and the custom path must agree bit-for-bit.
+        let (n_heads, n_kv_heads, d, n_sel) = (4usize, 2usize, 8usize, 77usize);
+        let group = n_heads / n_kv_heads;
+        let kvd = n_kv_heads * d;
+        let q = rng.normal_vec(n_heads * d, 1.0);
+        let keys = rng.normal_vec(n_sel * kvd, 1.0);
+        let values = rng.normal_vec(n_sel * kvd, 1.0);
+        let fill = panel_fill(&keys, &values, kvd, d);
+        let mut reference = vec![0.0f32; n_heads * d];
+        let mut scratch = FusedAttendScratch::default();
+        fused_sparse_attend(
+            &q, n_sel, n_heads, n_kv_heads, d, 1, &fill, &mut scratch, &mut reference,
+        );
+        let pv = |_kvh: usize, lo: usize, hi: usize, lane: &mut FusedLane| {
+            let t = hi - lo;
+            let FusedLane { scores, vtile, acc, .. } = lane;
+            for g in 0..group {
+                let ag = &mut acc[g * d..(g + 1) * d];
+                for r in 0..t {
+                    axpy(scores[g * t + r], &vtile[r * d..(r + 1) * d], ag);
+                }
+            }
+        };
+        for threads in [1usize, 4] {
+            let mut out = vec![0.0f32; n_heads * d];
+            let mut s = FusedAttendScratch::default();
+            fused_sparse_attend_with(
+                &q, n_sel, n_heads, n_kv_heads, d, threads, &fill, &pv, &mut s, &mut out,
+            );
+            assert_eq!(out, reference, "threads={threads}");
+        }
     }
 
     #[test]

@@ -1,0 +1,1430 @@
+//! Runtime-dispatched SIMD microkernels for the decode hot path.
+//!
+//! Every kernel exists in (up to) three tiers, selected once per process:
+//!
+//! * **avx2+fma** — x86_64 with runtime-detected AVX2 + FMA
+//!   (`is_x86_feature_detected!`).
+//! * **neon** — aarch64 (ASIMD is architecturally mandatory there).
+//! * **scalar** — the pre-SIMD reference loops, verbatim; always compiled,
+//!   exported as [`scalar`] so tests and benches can pin the reference.
+//!
+//! `SALS_SIMD=scalar` in the environment forces the scalar tier (read once,
+//! at first dispatch).
+//!
+//! # Parity contract (exact vs. reassociated)
+//!
+//! Kernels fall into two classes, and tests hold them to different bars:
+//!
+//! * **Exact class** — vectorized across *independent output elements* with
+//!   the same per-element operation order as the scalar loop, and no FMA
+//!   contraction (multiply and add stay separate instructions). These are
+//!   **bit-identical** across all tiers: [`axpy`], [`row_set`], [`scale`],
+//!   [`max`], [`weighted_scale`], and every `dequant_*` / `dequant_axpy_*`
+//!   kernel. Hot paths built purely from this class (the matmul row
+//!   kernels, the fused dequant-GEMV value path) therefore produce the
+//!   same bits no matter which tier runs them.
+//! * **Reassociated class** — horizontal reductions using multi-lane
+//!   accumulators and FMA ([`dot`], [`sum_squares`]) or a polynomial exp
+//!   ([`exp_sum`], Cephes on AVX2). These match the scalar reference to
+//!   ≤1e-5 relative only; within a fixed tier they are still deterministic,
+//!   so thread-count bit-invariance is unaffected.
+//!
+//! # SAFETY conventions
+//!
+//! The `target_feature` kernels live in private per-arch modules and are
+//! `unsafe fn` solely because of the feature requirement — they have no
+//! other preconditions beyond their (debug-)asserted slice shapes. The
+//! *only* call sites are the dispatch `match`es in the public wrappers,
+//! where the tier value proves the feature is present; each such `unsafe`
+//! block carries a `// SAFETY:` comment (enforced by
+//! `clippy::undocumented_unsafe_blocks`).
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which kernel family dispatch selected for this process.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum SimdTier {
+    /// x86_64 with runtime-detected AVX2 and FMA.
+    Avx2Fma,
+    /// aarch64 ASIMD.
+    Neon,
+    /// Portable reference loops.
+    Scalar,
+}
+
+impl SimdTier {
+    /// Stable lowercase name, used in bench artifacts and logs.
+    pub fn name(self) -> &'static str {
+        match self {
+            SimdTier::Avx2Fma => "avx2+fma",
+            SimdTier::Neon => "neon",
+            SimdTier::Scalar => "scalar",
+        }
+    }
+}
+
+/// 0 = undetected, 1 = avx2+fma, 2 = neon, 3 = scalar.
+static TIER: AtomicU8 = AtomicU8::new(0);
+
+/// The dispatched tier (detected once; benign race — all racers store the
+/// same value, detection is deterministic per process).
+#[inline]
+pub fn tier() -> SimdTier {
+    match TIER.load(Ordering::Relaxed) {
+        1 => SimdTier::Avx2Fma,
+        2 => SimdTier::Neon,
+        3 => SimdTier::Scalar,
+        _ => {
+            let t = detect();
+            let code = match t {
+                SimdTier::Avx2Fma => 1,
+                SimdTier::Neon => 2,
+                SimdTier::Scalar => 3,
+            };
+            TIER.store(code, Ordering::Relaxed);
+            t
+        }
+    }
+}
+
+/// [`SimdTier::name`] of the dispatched tier (bench-artifact convenience).
+pub fn tier_name() -> &'static str {
+    tier().name()
+}
+
+fn detect() -> SimdTier {
+    // Escape hatch for parity debugging and scalar-reference benches.
+    if matches!(std::env::var("SALS_SIMD").as_deref(), Ok("scalar")) {
+        return SimdTier::Scalar;
+    }
+    detect_arch()
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detect_arch() -> SimdTier {
+    if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+        SimdTier::Avx2Fma
+    } else {
+        SimdTier::Scalar
+    }
+}
+
+#[cfg(target_arch = "aarch64")]
+fn detect_arch() -> SimdTier {
+    SimdTier::Neon
+}
+
+#[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+fn detect_arch() -> SimdTier {
+    SimdTier::Scalar
+}
+
+/// Scalar reference kernels — the exact loops the crate ran before the
+/// SIMD tiers existed. Public so parity tests and the scalar-vs-SIMD
+/// microbenches can call the reference directly regardless of dispatch.
+pub mod scalar {
+    /// Unit-stride dot product; 4-way unrolled accumulation (the pre-SIMD
+    /// `ops::dot`, kept verbatim as the parity reference).
+    #[inline]
+    pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let chunks = a.len() / 4;
+        let (mut s0, mut s1, mut s2, mut s3) = (0.0f32, 0.0f32, 0.0f32, 0.0f32);
+        for c in 0..chunks {
+            let i = c * 4;
+            s0 += a[i] * b[i];
+            s1 += a[i + 1] * b[i + 1];
+            s2 += a[i + 2] * b[i + 2];
+            s3 += a[i + 3] * b[i + 3];
+        }
+        let mut s = s0 + s1 + s2 + s3;
+        for i in chunks * 4..a.len() {
+            s += a[i] * b[i];
+        }
+        s
+    }
+
+    /// y += alpha * x (exact class: one mul, one add per element).
+    #[inline]
+    pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi += alpha * xi;
+        }
+    }
+
+    /// y = alpha * x (the zero-fold first pass of the matmul row loop).
+    #[inline]
+    pub fn row_set(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        for (yi, xi) in y.iter_mut().zip(x) {
+            *yi = alpha * xi;
+        }
+    }
+
+    /// xs *= alpha in place.
+    #[inline]
+    pub fn scale(xs: &mut [f32], alpha: f32) {
+        for x in xs {
+            *x *= alpha;
+        }
+    }
+
+    /// Max over a slice (−inf on empty; exact class — pure selection).
+    #[inline]
+    pub fn max(xs: &[f32]) -> f32 {
+        xs.iter().cloned().fold(f32::NEG_INFINITY, f32::max)
+    }
+
+    /// row[i] = exp(row[i] − m); returns the sum (the softmax middle scan).
+    #[inline]
+    pub fn exp_sum(row: &mut [f32], m: f32) -> f32 {
+        let mut sum = 0.0f32;
+        for x in row.iter_mut() {
+            *x = (*x - m).exp();
+            sum += *x;
+        }
+        sum
+    }
+
+    /// Σ x², sequential (the rmsnorm mean-square scan).
+    #[inline]
+    pub fn sum_squares(xs: &[f32]) -> f32 {
+        xs.iter().map(|v| v * v).sum::<f32>()
+    }
+
+    /// out[i] = x[i] * alpha * w[i] (the rmsnorm apply scan; exact class,
+    /// left-associated multiplies like the original loop).
+    #[inline]
+    pub fn weighted_scale(x: &[f32], w: &[f32], alpha: f32, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), w.len());
+        debug_assert_eq!(x.len(), out.len());
+        for ((o, &xi), &wi) in out.iter_mut().zip(x).zip(w) {
+            *o = xi * alpha * wi;
+        }
+    }
+
+    /// 8-bit dequant: out[c] = codes[c]·scale[c] + zero[c].
+    #[inline]
+    pub fn dequant_b8(codes: &[u8], scale: &[f32], zero: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(codes.len(), out.len());
+        for (((o, &c), &s), &z) in out.iter_mut().zip(codes).zip(scale).zip(zero) {
+            *o = c as f32 * s + z;
+        }
+    }
+
+    /// 4-bit dequant over packed codes starting at absolute code index
+    /// `i0` (two codes per byte, low nibble first — the store's layout).
+    #[inline]
+    pub fn dequant_b4(codes: &[u8], i0: usize, scale: &[f32], zero: &[f32], out: &mut [f32]) {
+        for (t, ((o, &s), &z)) in out.iter_mut().zip(scale).zip(zero).enumerate() {
+            let i = i0 + t;
+            let code = (codes[i >> 1] >> ((i & 1) as u32 * 4)) & 0x0F;
+            *o = code as f32 * s + z;
+        }
+    }
+
+    /// 2-bit dequant over packed codes starting at absolute code index
+    /// `i0` (four codes per byte, lowest crumb first).
+    #[inline]
+    pub fn dequant_b2(codes: &[u8], i0: usize, scale: &[f32], zero: &[f32], out: &mut [f32]) {
+        for (t, ((o, &s), &z)) in out.iter_mut().zip(scale).zip(zero).enumerate() {
+            let i = i0 + t;
+            let code = (codes[i >> 2] >> ((i & 3) as u32 * 2)) & 0x03;
+            *o = code as f32 * s + z;
+        }
+    }
+
+    /// Fused 8-bit dequant-axpy: acc[c] += p · (codes[c]·scale[c]+zero[c]).
+    /// Exact class — bit-identical to `dequant_b8` followed by `axpy`.
+    #[inline]
+    pub fn dequant_axpy_b8(p: f32, codes: &[u8], scale: &[f32], zero: &[f32], acc: &mut [f32]) {
+        debug_assert_eq!(codes.len(), acc.len());
+        for (((a, &c), &s), &z) in acc.iter_mut().zip(codes).zip(scale).zip(zero) {
+            *a += p * (c as f32 * s + z);
+        }
+    }
+
+    /// Fused 4-bit dequant-axpy (see [`dequant_b4`] for the layout).
+    #[inline]
+    pub fn dequant_axpy_b4(
+        p: f32,
+        codes: &[u8],
+        i0: usize,
+        scale: &[f32],
+        zero: &[f32],
+        acc: &mut [f32],
+    ) {
+        for (t, ((a, &s), &z)) in acc.iter_mut().zip(scale).zip(zero).enumerate() {
+            let i = i0 + t;
+            let code = (codes[i >> 1] >> ((i & 1) as u32 * 4)) & 0x0F;
+            *a += p * (code as f32 * s + z);
+        }
+    }
+
+    /// Fused 2-bit dequant-axpy (see [`dequant_b2`] for the layout).
+    #[inline]
+    pub fn dequant_axpy_b2(
+        p: f32,
+        codes: &[u8],
+        i0: usize,
+        scale: &[f32],
+        zero: &[f32],
+        acc: &mut [f32],
+    ) {
+        for (t, ((a, &s), &z)) in acc.iter_mut().zip(scale).zip(zero).enumerate() {
+            let i = i0 + t;
+            let code = (codes[i >> 2] >> ((i & 3) as u32 * 2)) & 0x03;
+            *a += p * (code as f32 * s + z);
+        }
+    }
+}
+
+/// AVX2(+FMA) kernels. `unsafe fn` solely for the `target_feature`
+/// requirement; the dispatch wrappers are the only callers and gate on the
+/// detected tier. Exact-class kernels keep multiply and add as separate
+/// instructions so each lane reproduces the scalar bits; only `dot`,
+/// `sum_squares` and `exp_sum` use FMA / multi-lane accumulators
+/// (reassociated class). Cephes exp constants are written at published
+/// precision, hence the literal-precision allow.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::excessive_precision)]
+mod avx2 {
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of all 8 lanes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_add_ps(lo, hi);
+        let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_add_ss(s, _mm_shuffle_ps::<1>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    /// Horizontal max of all 8 lanes.
+    #[target_feature(enable = "avx2")]
+    unsafe fn hmax(v: __m256) -> f32 {
+        let lo = _mm256_castps256_ps128(v);
+        let hi = _mm256_extractf128_ps::<1>(v);
+        let s = _mm_max_ps(lo, hi);
+        let s = _mm_max_ps(s, _mm_movehl_ps(s, s));
+        let s = _mm_max_ss(s, _mm_shuffle_ps::<1>(s, s));
+        _mm_cvtss_f32(s)
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let (ap, bp) = (a.as_ptr(), b.as_ptr());
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut acc2 = _mm256_setzero_ps();
+        let mut acc3 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            let (a1, b1) = (_mm256_loadu_ps(ap.add(i + 8)), _mm256_loadu_ps(bp.add(i + 8)));
+            acc1 = _mm256_fmadd_ps(a1, b1, acc1);
+            let (a2, b2) = (_mm256_loadu_ps(ap.add(i + 16)), _mm256_loadu_ps(bp.add(i + 16)));
+            acc2 = _mm256_fmadd_ps(a2, b2, acc2);
+            let (a3, b3) = (_mm256_loadu_ps(ap.add(i + 24)), _mm256_loadu_ps(bp.add(i + 24)));
+            acc3 = _mm256_fmadd_ps(a3, b3, acc3);
+            i += 32;
+        }
+        while i + 8 <= n {
+            acc0 = _mm256_fmadd_ps(_mm256_loadu_ps(ap.add(i)), _mm256_loadu_ps(bp.add(i)), acc0);
+            i += 8;
+        }
+        let acc = _mm256_add_ps(_mm256_add_ps(acc0, acc1), _mm256_add_ps(acc2, acc3));
+        let mut s = hsum(acc);
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let va = _mm256_set1_ps(alpha);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let xv = _mm256_loadu_ps(x.as_ptr().add(i));
+            let yv = _mm256_loadu_ps(y.as_ptr().add(i));
+            // mul+add kept separate (no FMA): each lane matches scalar bits.
+            let r = _mm256_add_ps(yv, _mm256_mul_ps(va, xv));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn row_set(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let va = _mm256_set1_ps(alpha);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let r = _mm256_mul_ps(va, _mm256_loadu_ps(x.as_ptr().add(i)));
+            _mm256_storeu_ps(y.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            y[i] = alpha * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn scale(xs: &mut [f32], alpha: f32) {
+        let n = xs.len();
+        let va = _mm256_set1_ps(alpha);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let r = _mm256_mul_ps(_mm256_loadu_ps(xs.as_ptr().add(i)), va);
+            _mm256_storeu_ps(xs.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            xs[i] *= alpha;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn max(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let mut i = 0usize;
+        let mut m = f32::NEG_INFINITY;
+        if n >= 8 {
+            let mut vm = _mm256_loadu_ps(xs.as_ptr());
+            i = 8;
+            while i + 8 <= n {
+                vm = _mm256_max_ps(vm, _mm256_loadu_ps(xs.as_ptr().add(i)));
+                i += 8;
+            }
+            m = hmax(vm);
+        }
+        while i < n {
+            m = m.max(xs[i]);
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn sum_squares(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let p = xs.as_ptr();
+        let mut acc0 = _mm256_setzero_ps();
+        let mut acc1 = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let v0 = _mm256_loadu_ps(p.add(i));
+            let v1 = _mm256_loadu_ps(p.add(i + 8));
+            acc0 = _mm256_fmadd_ps(v0, v0, acc0);
+            acc1 = _mm256_fmadd_ps(v1, v1, acc1);
+            i += 16;
+        }
+        while i + 8 <= n {
+            let v = _mm256_loadu_ps(p.add(i));
+            acc0 = _mm256_fmadd_ps(v, v, acc0);
+            i += 8;
+        }
+        let mut s = hsum(_mm256_add_ps(acc0, acc1));
+        while i < n {
+            s += xs[i] * xs[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn weighted_scale(x: &[f32], w: &[f32], alpha: f32, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), w.len());
+        debug_assert_eq!(x.len(), out.len());
+        let n = x.len();
+        let va = _mm256_set1_ps(alpha);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            // (x·alpha)·w, left-associated like the scalar loop.
+            let xv = _mm256_mul_ps(_mm256_loadu_ps(x.as_ptr().add(i)), va);
+            let r = _mm256_mul_ps(xv, _mm256_loadu_ps(w.as_ptr().add(i)));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), r);
+            i += 8;
+        }
+        while i < n {
+            out[i] = x[i] * alpha * w[i];
+            i += 1;
+        }
+    }
+
+    // ---- Cephes exp (vectorized f32 exp, ~1 ulp over the softmax range) ----
+
+    const EXP_HI: f32 = 88.3762626647949;
+    // Cephes uses −88.37…; tightened to −87 so floor(x·log2e + 0.5) can
+    // never reach −128, which would overflow the 2^n exponent-bits trick
+    // into the sign bit. exp(−87) ≈ 1.6e−38 ≈ 0 for softmax purposes.
+    const EXP_LO: f32 = -87.0;
+    const C1: f32 = 0.693359375;
+    const C2: f32 = -2.12194440e-4;
+    const P0: f32 = 1.9875691500e-4;
+    const P1: f32 = 1.3981999507e-3;
+    const P2: f32 = 8.3334519073e-3;
+    const P3: f32 = 4.1665795894e-2;
+    const P4: f32 = 1.6666665459e-1;
+    const P5: f32 = 5.0000001201e-1;
+
+    #[target_feature(enable = "avx2,fma")]
+    unsafe fn exp256(x: __m256) -> __m256 {
+        let x = _mm256_max_ps(_mm256_min_ps(x, _mm256_set1_ps(EXP_HI)), _mm256_set1_ps(EXP_LO));
+        // n = floor(x·log2(e) + 1/2); r = x − n·ln2 (split ln2 for accuracy).
+        let log2e = _mm256_set1_ps(std::f32::consts::LOG2_E);
+        let fx = _mm256_floor_ps(_mm256_fmadd_ps(x, log2e, _mm256_set1_ps(0.5)));
+        let mut xr = _mm256_fnmadd_ps(fx, _mm256_set1_ps(C1), x);
+        xr = _mm256_fnmadd_ps(fx, _mm256_set1_ps(C2), xr);
+        // Degree-5 minimax polynomial for exp(r) on |r| ≤ ln2/2.
+        let x2 = _mm256_mul_ps(xr, xr);
+        let mut y = _mm256_set1_ps(P0);
+        y = _mm256_fmadd_ps(y, xr, _mm256_set1_ps(P1));
+        y = _mm256_fmadd_ps(y, xr, _mm256_set1_ps(P2));
+        y = _mm256_fmadd_ps(y, xr, _mm256_set1_ps(P3));
+        y = _mm256_fmadd_ps(y, xr, _mm256_set1_ps(P4));
+        y = _mm256_fmadd_ps(y, xr, _mm256_set1_ps(P5));
+        y = _mm256_fmadd_ps(y, x2, xr);
+        y = _mm256_add_ps(y, _mm256_set1_ps(1.0));
+        // Scale by 2^n via the exponent bits.
+        let n = _mm256_cvtps_epi32(fx);
+        let bits = _mm256_slli_epi32::<23>(_mm256_add_epi32(n, _mm256_set1_epi32(127)));
+        _mm256_mul_ps(y, _mm256_castsi256_ps(bits))
+    }
+
+    #[target_feature(enable = "avx2,fma")]
+    pub unsafe fn exp_sum(row: &mut [f32], m: f32) -> f32 {
+        let n = row.len();
+        let vm = _mm256_set1_ps(m);
+        let mut vsum = _mm256_setzero_ps();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let x = _mm256_sub_ps(_mm256_loadu_ps(row.as_ptr().add(i)), vm);
+            let e = exp256(x);
+            _mm256_storeu_ps(row.as_mut_ptr().add(i), e);
+            vsum = _mm256_add_ps(vsum, e);
+            i += 8;
+        }
+        let mut sum = hsum(vsum);
+        while i < n {
+            let e = (row[i] - m).exp();
+            row[i] = e;
+            sum += e;
+            i += 1;
+        }
+        sum
+    }
+
+    // ---- sub-byte unpack + dequant (exact class: mul+add per lane) ----
+
+    /// 8 bytes (low half of `b`) → 8 f32 code values.
+    #[target_feature(enable = "avx2")]
+    unsafe fn bytes_to_ps(b: __m128i) -> __m256 {
+        _mm256_cvtepi32_ps(_mm256_cvtepu8_epi32(b))
+    }
+
+    /// 8 packed-nibble bytes → 16 codes in stored order (low nibble first),
+    /// as two 8-lane f32 vectors.
+    #[target_feature(enable = "avx2")]
+    unsafe fn unpack16_b4(bytes: __m128i) -> (__m256, __m256) {
+        let mask = _mm_set1_epi8(0x0F);
+        let lo = _mm_and_si128(bytes, mask);
+        let hi = _mm_and_si128(_mm_srli_epi16::<4>(bytes), mask);
+        let codes = _mm_unpacklo_epi8(lo, hi);
+        (bytes_to_ps(codes), bytes_to_ps(_mm_srli_si128::<8>(codes)))
+    }
+
+    /// 4 packed-crumb bytes (in the low 32 bits) → 16 codes in stored
+    /// order (lowest crumb first), as two 8-lane f32 vectors.
+    #[target_feature(enable = "avx2")]
+    unsafe fn unpack16_b2(bytes: __m128i) -> (__m256, __m256) {
+        let mask = _mm_set1_epi8(0x03);
+        let t0 = _mm_and_si128(bytes, mask);
+        let t1 = _mm_and_si128(_mm_srli_epi16::<2>(bytes), mask);
+        let t2 = _mm_and_si128(_mm_srli_epi16::<4>(bytes), mask);
+        let t3 = _mm_and_si128(_mm_srli_epi16::<6>(bytes), mask);
+        let p01 = _mm_unpacklo_epi8(t0, t1);
+        let p23 = _mm_unpacklo_epi8(t2, t3);
+        let codes = _mm_unpacklo_epi16(p01, p23);
+        (bytes_to_ps(codes), bytes_to_ps(_mm_srli_si128::<8>(codes)))
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_b8(codes: &[u8], scale: &[f32], zero: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(codes.len(), out.len());
+        let n = out.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let b = _mm_loadl_epi64(codes.as_ptr().add(i) as *const __m128i);
+            let v = bytes_to_ps(b);
+            let s = _mm256_loadu_ps(scale.as_ptr().add(i));
+            let z = _mm256_loadu_ps(zero.as_ptr().add(i));
+            _mm256_storeu_ps(out.as_mut_ptr().add(i), _mm256_add_ps(_mm256_mul_ps(v, s), z));
+            i += 8;
+        }
+        while i < n {
+            out[i] = codes[i] as f32 * scale[i] + zero[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_b4(
+        codes: &[u8],
+        i0: usize,
+        scale: &[f32],
+        zero: &[f32],
+        out: &mut [f32],
+    ) {
+        let n = out.len();
+        let mut t = 0usize;
+        // Scalar prologue to an even packed-code index (byte-aligned).
+        while t < n && (i0 + t) & 1 != 0 {
+            let i = i0 + t;
+            out[t] = ((codes[i >> 1] >> 4) & 0x0F) as f32 * scale[t] + zero[t];
+            t += 1;
+        }
+        while t + 16 <= n {
+            let byte = (i0 + t) >> 1;
+            let b = _mm_loadl_epi64(codes.as_ptr().add(byte) as *const __m128i);
+            let (c0, c1) = unpack16_b4(b);
+            let r0 = _mm256_add_ps(
+                _mm256_mul_ps(c0, _mm256_loadu_ps(scale.as_ptr().add(t))),
+                _mm256_loadu_ps(zero.as_ptr().add(t)),
+            );
+            let r1 = _mm256_add_ps(
+                _mm256_mul_ps(c1, _mm256_loadu_ps(scale.as_ptr().add(t + 8))),
+                _mm256_loadu_ps(zero.as_ptr().add(t + 8)),
+            );
+            _mm256_storeu_ps(out.as_mut_ptr().add(t), r0);
+            _mm256_storeu_ps(out.as_mut_ptr().add(t + 8), r1);
+            t += 16;
+        }
+        while t < n {
+            let i = i0 + t;
+            let code = (codes[i >> 1] >> ((i & 1) as u32 * 4)) & 0x0F;
+            out[t] = code as f32 * scale[t] + zero[t];
+            t += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_b2(
+        codes: &[u8],
+        i0: usize,
+        scale: &[f32],
+        zero: &[f32],
+        out: &mut [f32],
+    ) {
+        let n = out.len();
+        let mut t = 0usize;
+        // Scalar prologue to a byte-aligned packed-code index (i % 4 == 0).
+        while t < n && (i0 + t) & 3 != 0 {
+            let i = i0 + t;
+            let code = (codes[i >> 2] >> ((i & 3) as u32 * 2)) & 0x03;
+            out[t] = code as f32 * scale[t] + zero[t];
+            t += 1;
+        }
+        while t + 16 <= n {
+            let byte = (i0 + t) >> 2;
+            let w = u32::from_le_bytes([
+                codes[byte],
+                codes[byte + 1],
+                codes[byte + 2],
+                codes[byte + 3],
+            ]);
+            let (c0, c1) = unpack16_b2(_mm_cvtsi32_si128(w as i32));
+            let r0 = _mm256_add_ps(
+                _mm256_mul_ps(c0, _mm256_loadu_ps(scale.as_ptr().add(t))),
+                _mm256_loadu_ps(zero.as_ptr().add(t)),
+            );
+            let r1 = _mm256_add_ps(
+                _mm256_mul_ps(c1, _mm256_loadu_ps(scale.as_ptr().add(t + 8))),
+                _mm256_loadu_ps(zero.as_ptr().add(t + 8)),
+            );
+            _mm256_storeu_ps(out.as_mut_ptr().add(t), r0);
+            _mm256_storeu_ps(out.as_mut_ptr().add(t + 8), r1);
+            t += 16;
+        }
+        while t < n {
+            let i = i0 + t;
+            let code = (codes[i >> 2] >> ((i & 3) as u32 * 2)) & 0x03;
+            out[t] = code as f32 * scale[t] + zero[t];
+            t += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_axpy_b8(
+        p: f32,
+        codes: &[u8],
+        scale: &[f32],
+        zero: &[f32],
+        acc: &mut [f32],
+    ) {
+        debug_assert_eq!(codes.len(), acc.len());
+        let n = acc.len();
+        let vp = _mm256_set1_ps(p);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let b = _mm_loadl_epi64(codes.as_ptr().add(i) as *const __m128i);
+            let s = _mm256_loadu_ps(scale.as_ptr().add(i));
+            let z = _mm256_loadu_ps(zero.as_ptr().add(i));
+            let v = _mm256_add_ps(_mm256_mul_ps(bytes_to_ps(b), s), z);
+            let a = _mm256_loadu_ps(acc.as_ptr().add(i));
+            // acc + p·v with separate mul+add: matches scalar bits.
+            _mm256_storeu_ps(acc.as_mut_ptr().add(i), _mm256_add_ps(a, _mm256_mul_ps(vp, v)));
+            i += 8;
+        }
+        while i < n {
+            acc[i] += p * (codes[i] as f32 * scale[i] + zero[i]);
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_axpy_b4(
+        p: f32,
+        codes: &[u8],
+        i0: usize,
+        scale: &[f32],
+        zero: &[f32],
+        acc: &mut [f32],
+    ) {
+        let n = acc.len();
+        let vp = _mm256_set1_ps(p);
+        let mut t = 0usize;
+        while t < n && (i0 + t) & 1 != 0 {
+            let i = i0 + t;
+            let code = ((codes[i >> 1] >> 4) & 0x0F) as f32;
+            acc[t] += p * (code * scale[t] + zero[t]);
+            t += 1;
+        }
+        while t + 16 <= n {
+            let byte = (i0 + t) >> 1;
+            let b = _mm_loadl_epi64(codes.as_ptr().add(byte) as *const __m128i);
+            let (c0, c1) = unpack16_b4(b);
+            let v0 = _mm256_add_ps(
+                _mm256_mul_ps(c0, _mm256_loadu_ps(scale.as_ptr().add(t))),
+                _mm256_loadu_ps(zero.as_ptr().add(t)),
+            );
+            let v1 = _mm256_add_ps(
+                _mm256_mul_ps(c1, _mm256_loadu_ps(scale.as_ptr().add(t + 8))),
+                _mm256_loadu_ps(zero.as_ptr().add(t + 8)),
+            );
+            let a0 = _mm256_loadu_ps(acc.as_ptr().add(t));
+            let a1 = _mm256_loadu_ps(acc.as_ptr().add(t + 8));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(t), _mm256_add_ps(a0, _mm256_mul_ps(vp, v0)));
+            let s1 = _mm256_add_ps(a1, _mm256_mul_ps(vp, v1));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(t + 8), s1);
+            t += 16;
+        }
+        while t < n {
+            let i = i0 + t;
+            let code = (codes[i >> 1] >> ((i & 1) as u32 * 4)) & 0x0F;
+            acc[t] += p * (code as f32 * scale[t] + zero[t]);
+            t += 1;
+        }
+    }
+
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dequant_axpy_b2(
+        p: f32,
+        codes: &[u8],
+        i0: usize,
+        scale: &[f32],
+        zero: &[f32],
+        acc: &mut [f32],
+    ) {
+        let n = acc.len();
+        let vp = _mm256_set1_ps(p);
+        let mut t = 0usize;
+        while t < n && (i0 + t) & 3 != 0 {
+            let i = i0 + t;
+            let code = (codes[i >> 2] >> ((i & 3) as u32 * 2)) & 0x03;
+            acc[t] += p * (code as f32 * scale[t] + zero[t]);
+            t += 1;
+        }
+        while t + 16 <= n {
+            let byte = (i0 + t) >> 2;
+            let w = u32::from_le_bytes([
+                codes[byte],
+                codes[byte + 1],
+                codes[byte + 2],
+                codes[byte + 3],
+            ]);
+            let (c0, c1) = unpack16_b2(_mm_cvtsi32_si128(w as i32));
+            let v0 = _mm256_add_ps(
+                _mm256_mul_ps(c0, _mm256_loadu_ps(scale.as_ptr().add(t))),
+                _mm256_loadu_ps(zero.as_ptr().add(t)),
+            );
+            let v1 = _mm256_add_ps(
+                _mm256_mul_ps(c1, _mm256_loadu_ps(scale.as_ptr().add(t + 8))),
+                _mm256_loadu_ps(zero.as_ptr().add(t + 8)),
+            );
+            let a0 = _mm256_loadu_ps(acc.as_ptr().add(t));
+            let a1 = _mm256_loadu_ps(acc.as_ptr().add(t + 8));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(t), _mm256_add_ps(a0, _mm256_mul_ps(vp, v0)));
+            let s1 = _mm256_add_ps(a1, _mm256_mul_ps(vp, v1));
+            _mm256_storeu_ps(acc.as_mut_ptr().add(t + 8), s1);
+            t += 16;
+        }
+        while t < n {
+            let i = i0 + t;
+            let code = (codes[i >> 2] >> ((i & 3) as u32 * 2)) & 0x03;
+            acc[t] += p * (code as f32 * scale[t] + zero[t]);
+            t += 1;
+        }
+    }
+}
+
+/// NEON kernels (aarch64; ASIMD is mandatory there). The set is smaller
+/// than AVX2 — `exp_sum` and the sub-byte dequants fall back to scalar on
+/// this tier (documented in DESIGN.md). Exact-class kernels use separate
+/// `vmulq`/`vaddq` (no `vfmaq`) so lanes match the scalar bits; `dot` and
+/// `sum_squares` use FMA accumulators (reassociated class).
+#[cfg(target_arch = "aarch64")]
+mod neon {
+    use core::arch::aarch64::*;
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dot(a: &[f32], b: &[f32]) -> f32 {
+        debug_assert_eq!(a.len(), b.len());
+        let n = a.len();
+        let mut acc0 = vdupq_n_f32(0.0);
+        let mut acc1 = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+            let (av, bv) = (vld1q_f32(a.as_ptr().add(i + 4)), vld1q_f32(b.as_ptr().add(i + 4)));
+            acc1 = vfmaq_f32(acc1, av, bv);
+            i += 8;
+        }
+        while i + 4 <= n {
+            acc0 = vfmaq_f32(acc0, vld1q_f32(a.as_ptr().add(i)), vld1q_f32(b.as_ptr().add(i)));
+            i += 4;
+        }
+        let mut s = vaddvq_f32(vaddq_f32(acc0, acc1));
+        while i < n {
+            s += a[i] * b[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let va = vdupq_n_f32(alpha);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let xv = vld1q_f32(x.as_ptr().add(i));
+            let yv = vld1q_f32(y.as_ptr().add(i));
+            // Separate mul+add (no vfmaq): lanes match scalar bits.
+            vst1q_f32(y.as_mut_ptr().add(i), vaddq_f32(yv, vmulq_f32(va, xv)));
+            i += 4;
+        }
+        while i < n {
+            y[i] += alpha * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn row_set(alpha: f32, x: &[f32], y: &mut [f32]) {
+        debug_assert_eq!(x.len(), y.len());
+        let n = x.len();
+        let va = vdupq_n_f32(alpha);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(y.as_mut_ptr().add(i), vmulq_f32(va, vld1q_f32(x.as_ptr().add(i))));
+            i += 4;
+        }
+        while i < n {
+            y[i] = alpha * x[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn scale(xs: &mut [f32], alpha: f32) {
+        let n = xs.len();
+        let va = vdupq_n_f32(alpha);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            vst1q_f32(xs.as_mut_ptr().add(i), vmulq_f32(vld1q_f32(xs.as_ptr().add(i)), va));
+            i += 4;
+        }
+        while i < n {
+            xs[i] *= alpha;
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn max(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let mut i = 0usize;
+        let mut m = f32::NEG_INFINITY;
+        if n >= 4 {
+            let mut vm = vld1q_f32(xs.as_ptr());
+            i = 4;
+            while i + 4 <= n {
+                vm = vmaxq_f32(vm, vld1q_f32(xs.as_ptr().add(i)));
+                i += 4;
+            }
+            m = vmaxvq_f32(vm);
+        }
+        while i < n {
+            m = m.max(xs[i]);
+            i += 1;
+        }
+        m
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn sum_squares(xs: &[f32]) -> f32 {
+        let n = xs.len();
+        let mut acc = vdupq_n_f32(0.0);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let v = vld1q_f32(xs.as_ptr().add(i));
+            acc = vfmaq_f32(acc, v, v);
+            i += 4;
+        }
+        let mut s = vaddvq_f32(acc);
+        while i < n {
+            s += xs[i] * xs[i];
+            i += 1;
+        }
+        s
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn weighted_scale(x: &[f32], w: &[f32], alpha: f32, out: &mut [f32]) {
+        debug_assert_eq!(x.len(), w.len());
+        debug_assert_eq!(x.len(), out.len());
+        let n = x.len();
+        let va = vdupq_n_f32(alpha);
+        let mut i = 0usize;
+        while i + 4 <= n {
+            let xv = vmulq_f32(vld1q_f32(x.as_ptr().add(i)), va);
+            vst1q_f32(out.as_mut_ptr().add(i), vmulq_f32(xv, vld1q_f32(w.as_ptr().add(i))));
+            i += 4;
+        }
+        while i < n {
+            out[i] = x[i] * alpha * w[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequant_b8(codes: &[u8], scale: &[f32], zero: &[f32], out: &mut [f32]) {
+        debug_assert_eq!(codes.len(), out.len());
+        let n = out.len();
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let b = vld1_u8(codes.as_ptr().add(i));
+            let wid = vmovl_u8(b);
+            let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wid)));
+            let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wid)));
+            let r0 = vaddq_f32(
+                vmulq_f32(lo, vld1q_f32(scale.as_ptr().add(i))),
+                vld1q_f32(zero.as_ptr().add(i)),
+            );
+            let r1 = vaddq_f32(
+                vmulq_f32(hi, vld1q_f32(scale.as_ptr().add(i + 4))),
+                vld1q_f32(zero.as_ptr().add(i + 4)),
+            );
+            vst1q_f32(out.as_mut_ptr().add(i), r0);
+            vst1q_f32(out.as_mut_ptr().add(i + 4), r1);
+            i += 8;
+        }
+        while i < n {
+            out[i] = codes[i] as f32 * scale[i] + zero[i];
+            i += 1;
+        }
+    }
+
+    #[target_feature(enable = "neon")]
+    pub unsafe fn dequant_axpy_b8(
+        p: f32,
+        codes: &[u8],
+        scale: &[f32],
+        zero: &[f32],
+        acc: &mut [f32],
+    ) {
+        debug_assert_eq!(codes.len(), acc.len());
+        let n = acc.len();
+        let vp = vdupq_n_f32(p);
+        let mut i = 0usize;
+        while i + 8 <= n {
+            let b = vld1_u8(codes.as_ptr().add(i));
+            let wid = vmovl_u8(b);
+            let lo = vcvtq_f32_u32(vmovl_u16(vget_low_u16(wid)));
+            let hi = vcvtq_f32_u32(vmovl_u16(vget_high_u16(wid)));
+            let v0 = vaddq_f32(
+                vmulq_f32(lo, vld1q_f32(scale.as_ptr().add(i))),
+                vld1q_f32(zero.as_ptr().add(i)),
+            );
+            let v1 = vaddq_f32(
+                vmulq_f32(hi, vld1q_f32(scale.as_ptr().add(i + 4))),
+                vld1q_f32(zero.as_ptr().add(i + 4)),
+            );
+            let a0 = vld1q_f32(acc.as_ptr().add(i));
+            let a1 = vld1q_f32(acc.as_ptr().add(i + 4));
+            vst1q_f32(acc.as_mut_ptr().add(i), vaddq_f32(a0, vmulq_f32(vp, v0)));
+            vst1q_f32(acc.as_mut_ptr().add(i + 4), vaddq_f32(a1, vmulq_f32(vp, v1)));
+            i += 8;
+        }
+        while i < n {
+            acc[i] += p * (codes[i] as f32 * scale[i] + zero[i]);
+            i += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dispatched wrappers. Each is a plain safe fn; the `unsafe` blocks below
+// are justified by the tier check (the only way to reach an arch arm is for
+// `tier()` to have detected that arch's features at runtime).
+// ---------------------------------------------------------------------------
+
+/// Unit-stride dot product (reassociated class: ≤1e-5 vs. scalar).
+#[inline]
+pub fn dot(a: &[f32], b: &[f32]) -> f32 {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::dot(a, b) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64.
+        SimdTier::Neon => unsafe { neon::dot(a, b) },
+        _ => scalar::dot(a, b),
+    }
+}
+
+/// y += alpha · x (exact class: bit-identical across tiers).
+#[inline]
+pub fn axpy(alpha: f32, x: &[f32], y: &mut [f32]) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::axpy(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64.
+        SimdTier::Neon => unsafe { neon::axpy(alpha, x, y) },
+        _ => scalar::axpy(alpha, x, y),
+    }
+}
+
+/// y = alpha · x (exact class; the matmul zero-fold first pass).
+#[inline]
+pub fn row_set(alpha: f32, x: &[f32], y: &mut [f32]) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::row_set(alpha, x, y) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64.
+        SimdTier::Neon => unsafe { neon::row_set(alpha, x, y) },
+        _ => scalar::row_set(alpha, x, y),
+    }
+}
+
+/// xs *= alpha in place (exact class).
+#[inline]
+pub fn scale(xs: &mut [f32], alpha: f32) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::scale(xs, alpha) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64.
+        SimdTier::Neon => unsafe { neon::scale(xs, alpha) },
+        _ => scalar::scale(xs, alpha),
+    }
+}
+
+/// Max over a slice, −inf on empty (exact class — pure selection).
+#[inline]
+pub fn max(xs: &[f32]) -> f32 {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::max(xs) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64.
+        SimdTier::Neon => unsafe { neon::max(xs) },
+        _ => scalar::max(xs),
+    }
+}
+
+/// row[i] = exp(row[i] − m), returning the sum (reassociated class — the
+/// AVX2 tier uses a Cephes polynomial exp; NEON falls back to scalar).
+#[inline]
+pub fn exp_sum(row: &mut [f32], m: f32) -> f32 {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::exp_sum(row, m) },
+        _ => scalar::exp_sum(row, m),
+    }
+}
+
+/// Σ x² (reassociated class; the rmsnorm mean-square scan).
+#[inline]
+pub fn sum_squares(xs: &[f32]) -> f32 {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::sum_squares(xs) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64.
+        SimdTier::Neon => unsafe { neon::sum_squares(xs) },
+        _ => scalar::sum_squares(xs),
+    }
+}
+
+/// out[i] = x[i] · alpha · w[i] (exact class; the rmsnorm apply scan).
+#[inline]
+pub fn weighted_scale(x: &[f32], w: &[f32], alpha: f32, out: &mut [f32]) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::weighted_scale(x, w, alpha, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64.
+        SimdTier::Neon => unsafe { neon::weighted_scale(x, w, alpha, out) },
+        _ => scalar::weighted_scale(x, w, alpha, out),
+    }
+}
+
+/// 8-bit dequant of one contiguous channel run (exact class).
+#[inline]
+pub fn dequant_b8(codes: &[u8], scale: &[f32], zero: &[f32], out: &mut [f32]) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::dequant_b8(codes, scale, zero, out) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64.
+        SimdTier::Neon => unsafe { neon::dequant_b8(codes, scale, zero, out) },
+        _ => scalar::dequant_b8(codes, scale, zero, out),
+    }
+}
+
+/// 4-bit dequant starting at absolute packed-code index `i0` (exact class).
+#[inline]
+pub fn dequant_b4(codes: &[u8], i0: usize, scale: &[f32], zero: &[f32], out: &mut [f32]) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::dequant_b4(codes, i0, scale, zero, out) },
+        _ => scalar::dequant_b4(codes, i0, scale, zero, out),
+    }
+}
+
+/// 2-bit dequant starting at absolute packed-code index `i0` (exact class).
+#[inline]
+pub fn dequant_b2(codes: &[u8], i0: usize, scale: &[f32], zero: &[f32], out: &mut [f32]) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::dequant_b2(codes, i0, scale, zero, out) },
+        _ => scalar::dequant_b2(codes, i0, scale, zero, out),
+    }
+}
+
+/// Fused 8-bit dequant-GEMV row: acc += p · dequant(codes) (exact class —
+/// bit-identical to `dequant_b8` + `axpy`, with no staging write).
+#[inline]
+pub fn dequant_axpy_b8(p: f32, codes: &[u8], scale: &[f32], zero: &[f32], acc: &mut [f32]) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::dequant_axpy_b8(p, codes, scale, zero, acc) },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: NEON is architecturally mandatory on aarch64.
+        SimdTier::Neon => unsafe { neon::dequant_axpy_b8(p, codes, scale, zero, acc) },
+        _ => scalar::dequant_axpy_b8(p, codes, scale, zero, acc),
+    }
+}
+
+/// Fused 4-bit dequant-GEMV row (exact class).
+#[inline]
+pub fn dequant_axpy_b4(
+    p: f32,
+    codes: &[u8],
+    i0: usize,
+    scale: &[f32],
+    zero: &[f32],
+    acc: &mut [f32],
+) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::dequant_axpy_b4(p, codes, i0, scale, zero, acc) },
+        _ => scalar::dequant_axpy_b4(p, codes, i0, scale, zero, acc),
+    }
+}
+
+/// Fused 2-bit dequant-GEMV row (exact class).
+#[inline]
+pub fn dequant_axpy_b2(
+    p: f32,
+    codes: &[u8],
+    i0: usize,
+    scale: &[f32],
+    zero: &[f32],
+    acc: &mut [f32],
+) {
+    match tier() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: Avx2Fma is only returned after runtime AVX2+FMA detection.
+        SimdTier::Avx2Fma => unsafe { avx2::dequant_axpy_b2(p, codes, i0, scale, zero, acc) },
+        _ => scalar::dequant_axpy_b2(p, codes, i0, scale, zero, acc),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Adversarial lengths: empty, single element, below/at/above the 8-
+    /// and 16-lane widths, and a long tail-bearing run.
+    const LENS: [usize; 12] = [0, 1, 3, 5, 7, 8, 9, 15, 16, 17, 33, 100];
+
+    fn bits_eq(a: &[f32], b: &[f32], ctx: &str) {
+        assert_eq!(a.len(), b.len(), "{ctx}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{ctx}: lane {i}: {x} vs {y}");
+        }
+    }
+
+    fn rel_close(a: f32, b: f32, tol: f32, ctx: &str) {
+        let denom = a.abs().max(b.abs()).max(1.0);
+        assert!((a - b).abs() <= tol * denom, "{ctx}: {a} vs {b}");
+    }
+
+    #[test]
+    fn tier_is_stable_and_named() {
+        let t = tier();
+        assert_eq!(t, tier(), "tier must be sticky after first detection");
+        assert!(["avx2+fma", "neon", "scalar"].contains(&tier_name()));
+    }
+
+    #[test]
+    fn exact_kernels_bit_match_scalar() {
+        // axpy / row_set / scale / max / weighted_scale are exact-class:
+        // the dispatched tier must reproduce the scalar bits at every
+        // length, including non-multiples of the lane width.
+        let mut rng = Rng::new(0x51D0);
+        for &n in &LENS {
+            let x = rng.normal_vec(n, 1.0);
+            let w = rng.normal_vec(n, 1.0);
+            let y0 = rng.normal_vec(n, 1.0);
+            let alpha = 0.37f32;
+
+            let mut ya = y0.clone();
+            let mut yb = y0.clone();
+            axpy(alpha, &x, &mut ya);
+            scalar::axpy(alpha, &x, &mut yb);
+            bits_eq(&ya, &yb, &format!("axpy n={n}"));
+
+            let mut ra = vec![0.0f32; n];
+            let mut rb = vec![1.0f32; n]; // different init: row_set must overwrite
+            row_set(alpha, &x, &mut ra);
+            scalar::row_set(alpha, &x, &mut rb);
+            bits_eq(&ra, &rb, &format!("row_set n={n}"));
+
+            let mut sa = x.clone();
+            let mut sb = x.clone();
+            scale(&mut sa, alpha);
+            scalar::scale(&mut sb, alpha);
+            bits_eq(&sa, &sb, &format!("scale n={n}"));
+
+            assert_eq!(max(&x).to_bits(), scalar::max(&x).to_bits(), "max n={n}");
+
+            let mut oa = vec![0.0f32; n];
+            let mut ob = vec![0.0f32; n];
+            weighted_scale(&x, &w, alpha, &mut oa);
+            scalar::weighted_scale(&x, &w, alpha, &mut ob);
+            bits_eq(&oa, &ob, &format!("weighted_scale n={n}"));
+        }
+    }
+
+    #[test]
+    fn reassociated_kernels_match_scalar_within_1e5() {
+        let mut rng = Rng::new(0x51D1);
+        for &n in &LENS {
+            let a = rng.normal_vec(n, 1.0);
+            let b = rng.normal_vec(n, 1.0);
+            rel_close(dot(&a, &b), scalar::dot(&a, &b), 1e-5, &format!("dot n={n}"));
+            rel_close(sum_squares(&a), scalar::sum_squares(&a), 1e-5, &format!("ssq n={n}"));
+        }
+    }
+
+    #[test]
+    fn exp_sum_matches_scalar_on_softmax_range() {
+        // Softmax-shaped inputs: row − max ∈ [−20, 0]. The AVX2 Cephes exp
+        // must track libm to well under the crate's 1e-5 parity bar, both
+        // per element and in the returned sum.
+        let mut rng = Rng::new(0x51D2);
+        for &n in &LENS {
+            let base: Vec<f32> =
+                rng.normal_vec(n, 1.0).iter().map(|v| -(v.abs().min(4.0) * 5.0)).collect();
+            let mut ra = base.clone();
+            let mut rb = base.clone();
+            let sa = exp_sum(&mut ra, 0.0);
+            let sb = scalar::exp_sum(&mut rb, 0.0);
+            rel_close(sa, sb, 1e-5, &format!("exp_sum sum n={n}"));
+            for (i, (x, y)) in ra.iter().zip(&rb).enumerate() {
+                rel_close(*x, *y, 1e-5, &format!("exp_sum n={n} lane {i}"));
+            }
+            // A shifted max exercises the m-subtraction path.
+            if n > 0 {
+                let m = scalar::max(&base);
+                let mut rc = base.clone();
+                let mut rd = base.clone();
+                rel_close(
+                    exp_sum(&mut rc, m),
+                    scalar::exp_sum(&mut rd, m),
+                    1e-5,
+                    &format!("exp_sum shifted n={n}"),
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_kernels_bit_match_scalar_across_alignments() {
+        // Sub-byte kernels must agree with the scalar unpack at every
+        // starting alignment (page slices start at arbitrary channel
+        // offsets) and every width class.
+        let mut rng = Rng::new(0x51D3);
+        let codes: Vec<u8> = (0..64).map(|_| rng.below(256) as u8).collect();
+        for &w in &LENS {
+            let scale: Vec<f32> = (0..w).map(|_| 0.01 * (rng.below(100) as f32 + 1.0)).collect();
+            let zero = rng.normal_vec(w, 1.0);
+            // b8: codes are one byte per channel, no alignment dimension.
+            if w <= codes.len() {
+                let mut oa = vec![0.0f32; w];
+                let mut ob = vec![0.0f32; w];
+                dequant_b8(&codes[..w], &scale, &zero, &mut oa);
+                scalar::dequant_b8(&codes[..w], &scale, &zero, &mut ob);
+                bits_eq(&oa, &ob, &format!("dequant_b8 w={w}"));
+            }
+            for i0 in 0..5usize {
+                let mut oa = vec![0.0f32; w];
+                let mut ob = vec![0.0f32; w];
+                dequant_b4(&codes, i0, &scale, &zero, &mut oa);
+                scalar::dequant_b4(&codes, i0, &scale, &zero, &mut ob);
+                bits_eq(&oa, &ob, &format!("dequant_b4 w={w} i0={i0}"));
+
+                let mut pa = vec![0.0f32; w];
+                let mut pb = vec![0.0f32; w];
+                dequant_b2(&codes, i0, &scale, &zero, &mut pa);
+                scalar::dequant_b2(&codes, i0, &scale, &zero, &mut pb);
+                bits_eq(&pa, &pb, &format!("dequant_b2 w={w} i0={i0}"));
+            }
+        }
+    }
+
+    #[test]
+    fn dequant_axpy_is_bit_identical_to_dequant_then_axpy() {
+        // The fusion contract: skipping the staging panel must not change
+        // a single bit, at any tier — this is what lets the fused value
+        // path keep every existing attention parity test green.
+        let mut rng = Rng::new(0x51D4);
+        let codes: Vec<u8> = (0..64).map(|_| rng.below(256) as u8).collect();
+        let p = 0.123f32;
+        for &w in &LENS {
+            let scale: Vec<f32> = (0..w).map(|_| 0.01 * (rng.below(100) as f32 + 1.0)).collect();
+            let zero = rng.normal_vec(w, 1.0);
+            let acc0 = rng.normal_vec(w, 1.0);
+            for i0 in 0..5usize {
+                // b4
+                let mut fused = acc0.clone();
+                dequant_axpy_b4(p, &codes, i0, &scale, &zero, &mut fused);
+                let mut staged = vec![0.0f32; w];
+                dequant_b4(&codes, i0, &scale, &zero, &mut staged);
+                let mut unfused = acc0.clone();
+                axpy(p, &staged, &mut unfused);
+                bits_eq(&fused, &unfused, &format!("fused b4 w={w} i0={i0}"));
+                // b2
+                let mut fused2 = acc0.clone();
+                dequant_axpy_b2(p, &codes, i0, &scale, &zero, &mut fused2);
+                let mut staged2 = vec![0.0f32; w];
+                dequant_b2(&codes, i0, &scale, &zero, &mut staged2);
+                let mut unfused2 = acc0.clone();
+                axpy(p, &staged2, &mut unfused2);
+                bits_eq(&fused2, &unfused2, &format!("fused b2 w={w} i0={i0}"));
+            }
+            if w <= codes.len() {
+                let mut fused = acc0.clone();
+                dequant_axpy_b8(p, &codes[..w], &scale, &zero, &mut fused);
+                let mut staged = vec![0.0f32; w];
+                dequant_b8(&codes[..w], &scale, &zero, &mut staged);
+                let mut unfused = acc0.clone();
+                axpy(p, &staged, &mut unfused);
+                bits_eq(&fused, &unfused, &format!("fused b8 w={w}"));
+            }
+        }
+    }
+
+    #[test]
+    fn prop_axpy_parity_random_shapes() {
+        // Property form of the exact-class contract over random vectors.
+        crate::util::prop::check(
+            "simd-axpy-bit-parity",
+            100,
+            |r| {
+                let n = r.below(70);
+                r.normal_vec(n, 1.0)
+            },
+            |x| {
+                let mut ya = vec![0.25f32; x.len()];
+                let mut yb = ya.clone();
+                axpy(1.5, x, &mut ya);
+                scalar::axpy(1.5, x, &mut yb);
+                ya.iter().zip(&yb).all(|(a, b)| a.to_bits() == b.to_bits())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_dot_parity_random_shapes() {
+        crate::util::prop::check(
+            "simd-dot-parity",
+            100,
+            |r| {
+                let n = r.below(70);
+                r.normal_vec(n, 1.0)
+            },
+            |x| {
+                let d = dot(x, x);
+                let s = scalar::dot(x, x);
+                (d - s).abs() <= 1e-5 * d.abs().max(s.abs()).max(1.0)
+            },
+        );
+    }
+}
