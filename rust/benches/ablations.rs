@@ -88,6 +88,7 @@ fn main() {
                 critical: sp.critical,
                 v_bits: Bits::B4,
                 group: 32,
+                prefill: None,
             };
             Box::new(SalsAttention::new(shape, c, proj)) as _
         });

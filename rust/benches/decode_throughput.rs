@@ -80,6 +80,7 @@ fn sals_factory(c: &ModelConfig) -> Box<BackendFactory> {
         critical: 32,
         v_bits: Bits::B4,
         group: 32,
+        prefill: None,
     };
     Box::new(move |_| {
         Box::new(SalsAttention::new(shape, sc.clone(), proj.clone())) as Box<dyn AttentionBackend + Send>

@@ -1,20 +1,39 @@
-//! Prefill throughput: tokens/sec at 1K/4K/16K prompts, full vs SALS,
-//! batched (chunked `Model::forward_batch`) vs token-at-a-time (`step()`
-//! loop — the pre-batched-prefill engine path).
+//! Prefill throughput, two experiments:
+//!
+//! 1. Batched (chunked `Model::forward_batch`) vs token-at-a-time
+//!    (`step()` loop — the pre-batched-prefill engine path) at 1K/4K/16K,
+//!    full vs SALS. The PR-2 trajectory table.
+//! 2. Dense vs **block-sparse** SALS prefill (PR 7): the chunked causal
+//!    kernel vs latent-space block selection (`PrefillSparsity`) at
+//!    4K/16K (128K behind non-quick mode), batched path only.
 //!
 //! Emits `BENCH_prefill.json` in the working directory so the prefill perf
 //! trajectory accumulates across PRs. Set `SALS_BENCH_QUICK=1` to skip the
-//! 16K row (the sequential 16K pass is O(seq²) attention on one core).
+//! 16K batched-vs-sequential row (the sequential 16K pass is O(seq²)
+//! attention on one core) and the 128K sparse row.
+//!
+//! Acceptance (`accepted` in the JSON, non-zero exit on failure):
+//! block-sparse prefill ≥2× dense SALS prefill tokens/sec at 16K with
+//! τ=0.95, and kernel parity ≤1e-4 against the dense fallback at τ=1.0.
 
-use sals::attention::{AttentionBackend, FullAttention, SalsAttention, SalsConfig};
+use sals::attention::{
+    AttentionBackend, FullAttention, PrefillSparsity, SalsAttention, SalsConfig,
+};
 use sals::harness::Table;
-use sals::lowrank::Calibrator;
-use sals::model::{BackendFactory, Model, ModelConfig, Scratch, SequenceState, SparsityParams, Weights};
+use sals::lowrank::{Calibrator, Projector};
+use sals::model::{
+    BackendFactory, Model, ModelConfig, Scratch, SequenceState, SparsityParams, Weights,
+};
 use sals::quant::Bits;
 use sals::util::json::Json;
 use sals::util::rng::Rng;
 use sals::util::timer::time_once;
 use std::sync::Arc;
+
+/// Block size and score-mass threshold of the sparse rows (stamped into
+/// the JSON next to `simd_tier`).
+const SPARSE_BLOCK: usize = 128;
+const SPARSE_TAU: f32 = 0.95;
 
 /// Small decoder shaped for seq² CPU attention at 16K: the point is the
 /// batched-vs-sequential ratio, not absolute model scale.
@@ -39,11 +58,10 @@ fn full_factory(c: &ModelConfig) -> Box<BackendFactory> {
     Box::new(move |_| Box::new(FullAttention::new(shape)) as Box<dyn AttentionBackend + Send>)
 }
 
-fn sals_factory(c: &ModelConfig, seq: usize) -> Box<BackendFactory> {
-    let shape = c.attn_shape();
+/// Projector calibrated on a low-rank key family (real keys are low-rank;
+/// exactness is irrelevant to throughput).
+fn make_projector(c: &ModelConfig) -> Projector {
     let kvd = c.kv_dim();
-    // Projector calibrated on a low-rank key family (real keys are
-    // low-rank; exactness is irrelevant to throughput).
     let mut rng = Rng::new(11);
     let basis: Vec<Vec<f32>> = (0..kvd / 8).map(|_| rng.normal_vec(kvd, 1.0)).collect();
     let mut cal = Calibrator::new(kvd);
@@ -55,9 +73,13 @@ fn sals_factory(c: &ModelConfig, seq: usize) -> Box<BackendFactory> {
         }
         cal.add_key(&row);
     }
-    let proj = cal.fit((kvd / 4).max(2)).unwrap();
+    cal.fit((kvd / 4).max(2)).unwrap()
+}
+
+fn sals_config(c: &ModelConfig, seq: usize, prefill: Option<PrefillSparsity>) -> SalsConfig {
+    let kvd = c.kv_dim();
     let sp = SparsityParams::scaled(seq);
-    let sc = SalsConfig {
+    SalsConfig {
         rank: (kvd / 4).max(2),
         r_star: (kvd / 8).max(1),
         sink: sp.sink,
@@ -65,10 +87,35 @@ fn sals_factory(c: &ModelConfig, seq: usize) -> Box<BackendFactory> {
         critical: sp.critical,
         v_bits: Bits::B4,
         group: 32,
-    };
+        prefill,
+    }
+}
+
+fn sals_factory(
+    c: &ModelConfig,
+    seq: usize,
+    prefill: Option<PrefillSparsity>,
+) -> Box<BackendFactory> {
+    let shape = c.attn_shape();
+    let proj = make_projector(c);
+    let sc = sals_config(c, seq, prefill);
     Box::new(move |_| {
         Box::new(SalsAttention::new(shape, sc.clone(), proj.clone())) as Box<dyn AttentionBackend + Send>
     })
+}
+
+/// The sparse configuration measured in experiment 2: τ-mass selection
+/// with a top-blocks budget cap (the `PrefillSparsity` fallback) so the
+/// measured block set is bounded even on this bench's random tokens,
+/// whose latent scores are much flatter than real prompts'.
+fn sparse_params(seq: usize) -> PrefillSparsity {
+    let nb = seq.div_ceil(SPARSE_BLOCK);
+    PrefillSparsity {
+        block: SPARSE_BLOCK,
+        tau: SPARSE_TAU,
+        top_blocks: (nb / 8).max(4),
+        ..PrefillSparsity::default()
+    }
 }
 
 /// Time one full prefill of `tokens`; returns tokens/sec.
@@ -88,23 +135,55 @@ fn run_prefill(model: &Model, factory: &BackendFactory, tokens: &[usize], batche
     tokens.len() as f64 / secs
 }
 
+/// τ=1.0 kernel parity at the attention-backend level: every block
+/// selected must reproduce the dense `causal_attend_chunk` fallback.
+/// Returns the max elementwise |Δ| over a chunked prefill.
+fn sparse_parity_max_diff(c: &ModelConfig, seq: usize) -> f64 {
+    let shape = c.attn_shape();
+    let kvd = c.kv_dim();
+    let qd = shape.q_dim();
+    let proj = make_projector(c);
+    let all = PrefillSparsity { tau: 1.0, top_blocks: 0, min_len: 0, block: SPARSE_BLOCK };
+    let fallback = PrefillSparsity { min_len: usize::MAX, ..all };
+    let mut sparse = SalsAttention::new(shape, sals_config(c, seq, Some(all)), proj.clone());
+    let mut dense = SalsAttention::new(shape, sals_config(c, seq, Some(fallback)), proj);
+    let mut rng = Rng::new(4242);
+    let mut worst = 0.0f64;
+    let mut i = 0;
+    while i < seq {
+        let n = Model::PREFILL_CHUNK.min(seq - i);
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        let qs = rng.normal_vec(n * qd, 1.0);
+        let mut o_sparse = vec![0.0f32; n * qd];
+        let mut o_dense = vec![0.0f32; n * qd];
+        sparse.forward_batch(&ks, &vs, &qs, n, &mut o_sparse);
+        dense.forward_batch(&ks, &vs, &qs, n, &mut o_dense);
+        for (a, b) in o_sparse.iter().zip(&o_dense) {
+            worst = worst.max((a - b).abs() as f64);
+        }
+        i += n;
+    }
+    worst
+}
+
 fn main() {
     let quick = std::env::var("SALS_BENCH_QUICK").is_ok();
-    let seqs: Vec<usize> = if quick { vec![1024, 4096] } else { vec![1024, 4096, 16384] };
 
+    // ---- experiment 1: batched vs token-at-a-time ----
+    let seqs: Vec<usize> = if quick { vec![1024, 4096] } else { vec![1024, 4096, 16384] };
     let mut table = Table::new(
         "Prefill throughput (tokens/s) — batched chunked forward vs token-at-a-time",
         &["Seq", "Method", "Sequential tok/s", "Batched tok/s", "Speedup"],
     );
     let mut rows: Vec<Json> = Vec::new();
-
     for &seq in &seqs {
         let c = cfg(seq + 8);
         let model = Model::new(c.clone(), Arc::new(Weights::random(&c, 99)));
         let mut rng = Rng::new(2024);
         let tokens: Vec<usize> = (0..seq).map(|_| rng.below(c.vocab)).collect();
         for (name, factory) in
-            [("full", full_factory(&c)), ("sals-25%", sals_factory(&c, seq))]
+            [("full", full_factory(&c)), ("sals-25%", sals_factory(&c, seq, None))]
         {
             let seq_tps = run_prefill(&model, &factory, &tokens, false);
             let bat_tps = run_prefill(&model, &factory, &tokens, true);
@@ -129,11 +208,76 @@ fn main() {
     table.print();
     println!("\nacceptance: batched ≥3x sequential for full attention at 4K prefill");
 
+    // ---- experiment 2: dense vs block-sparse SALS prefill ----
+    let sparse_seqs: Vec<usize> = if quick { vec![4096, 16384] } else { vec![4096, 16384, 131072] };
+    let mut table2 = Table::new(
+        "Block-sparse prefill (tokens/s) — dense causal kernel vs latent block selection",
+        &["Seq", "Dense tok/s", "Sparse tok/s", "Speedup", "Blocks cap"],
+    );
+    let mut sparse_rows: Vec<Json> = Vec::new();
+    let mut speedup_16k = 0.0f64;
+    for &seq in &sparse_seqs {
+        let c = cfg(seq + 8);
+        let model = Model::new(c.clone(), Arc::new(Weights::random(&c, 99)));
+        let mut rng = Rng::new(2024);
+        let tokens: Vec<usize> = (0..seq).map(|_| rng.below(c.vocab)).collect();
+        let ps = sparse_params(seq);
+        let dense_f = sals_factory(&c, seq, None);
+        let sparse_f = sals_factory(&c, seq, Some(ps));
+        let dense_tps = run_prefill(&model, &dense_f, &tokens, true);
+        let sparse_tps = run_prefill(&model, &sparse_f, &tokens, true);
+        let speedup = sparse_tps / dense_tps;
+        if seq == 16384 {
+            speedup_16k = speedup;
+        }
+        table2.row(vec![
+            seq.to_string(),
+            format!("{dense_tps:.0}"),
+            format!("{sparse_tps:.0}"),
+            format!("{speedup:.2}x"),
+            ps.top_blocks.to_string(),
+        ]);
+        sparse_rows.push(
+            Json::obj()
+                .field("seq", seq)
+                .field("dense_tok_s", dense_tps)
+                .field("sparse_tok_s", sparse_tps)
+                .field("speedup", speedup)
+                .field("block", ps.block)
+                .field("tau", ps.tau as f64)
+                .field("top_blocks", ps.top_blocks),
+        );
+    }
+    table2.print();
+
+    // τ=1.0 parity against the dense fallback (kernel contract).
+    let parity_seq = 4096usize;
+    let parity = sparse_parity_max_diff(&cfg(parity_seq + 8), parity_seq);
+    let parity_ok = parity <= 1e-4;
+    let speed_ok = speedup_16k >= 2.0;
+    let accepted = parity_ok && speed_ok;
+    println!(
+        "\nacceptance: sparse {speedup_16k:.2}x {} 2x dense at 16K (tau={SPARSE_TAU}); \
+         tau=1.0 parity max|Δ| {parity:.2e} {} 1e-4",
+        if speed_ok { ">=" } else { "<" },
+        if parity_ok { "<=" } else { ">" },
+    );
+
     let doc = sals::harness::bench_doc("prefill_throughput")
         .field("config", "d_model=64 n_layers=4 n_heads=4 head_dim=16")
         .field("chunk", Model::PREFILL_CHUNK)
-        .field("rows", Json::Arr(rows));
+        .field("quick", quick)
+        .field("block", SPARSE_BLOCK)
+        .field("tau", SPARSE_TAU as f64)
+        .field("sparse_speedup_16k", speedup_16k)
+        .field("tau1_parity_max_diff", parity)
+        .field("accepted", accepted)
+        .field("rows", Json::Arr(rows))
+        .field("sparse_rows", Json::Arr(sparse_rows));
     let path = sals::harness::bench_artifact_path("BENCH_prefill.json");
     std::fs::write(&path, doc.to_string()).expect("write BENCH_prefill.json");
     println!("wrote {}", path.display());
+    if !accepted {
+        std::process::exit(1);
+    }
 }

@@ -277,6 +277,7 @@ fn run_context(
         critical,
         v_bits: V_BITS,
         group: QGROUP,
+        prefill: None,
     };
     let mut packed = SalsAttention::new(shape, cfg, proj.clone());
     let mut legacy = Legacy::new(proj, max_seq, critical);

@@ -13,7 +13,7 @@
 
 use crate::attention::{AttnShape, Traffic};
 use crate::rope::RopeTable;
-use crate::tensor::ops::SparseAttendScratch;
+use crate::tensor::ops::{causal_attend_chunk, ChunkAttendScratch, SparseAttendScratch};
 
 /// Per-backend decode scratch shared by the DenseCache baselines. Every
 /// per-(layer, token) buffer the selection→gather→attend pipeline needs
@@ -49,6 +49,31 @@ pub struct BaselineScratch {
     /// Set by the engine through
     /// [`crate::attention::AttentionBackend::set_threads`].
     pub threads: usize,
+    /// Chunk of batch-rotated queries for the blocked dense-window
+    /// prefill path ([`DenseCache::prefill_attend_dense_rows`]).
+    pub qrows: Vec<f32>,
+    /// Panel/tile buffers for the blocked prefill kernel.
+    pub chunk: ChunkAttendScratch,
+}
+
+impl BaselineScratch {
+    /// Prefill finished: the blocked-prefill buffers are chunk/cache-sized
+    /// and decode never touches them — release them (the decode-side
+    /// buffers stay, per the no-alloc hot-path contract).
+    pub fn end_prefill(&mut self) {
+        self.qrows = Vec::new();
+        self.chunk = ChunkAttendScratch::default();
+    }
+}
+
+/// How many leading rows of a prefill chunk see their *entire* causal
+/// prefix under a sink+recent selection pattern: row `t` (absolute
+/// position `start + t`) has `vis = start + t + 1` visible tokens, and
+/// sink ∪ recent covers all of them iff `vis <= window`. Those rows are
+/// exactly dense causal attention, so they can take the blocked kernel
+/// instead of the per-position selection loop.
+pub fn dense_prefix_rows(start: usize, n: usize, window: usize) -> usize {
+    window.saturating_sub(start).min(n)
 }
 
 /// Mean-pool a rotated query's heads per KV group into (kv_dim) — the
@@ -141,6 +166,50 @@ impl DenseCache {
         for t in 0..n {
             attend_at(&qs[t * qd..(t + 1) * qd], start + t, &mut out[t * qd..(t + 1) * qd]);
         }
+    }
+
+    /// Blocked attend for the first `n_dense` rows of an `n_chunk`-row
+    /// prefill chunk — rows whose selection is the full causal prefix
+    /// (see [`dense_prefix_rows`]). Batch-rotates their queries and runs
+    /// [`causal_attend_chunk`] against the cache prefix they can see,
+    /// metering the canonical per-row cost `2·(visible rows)·kv_dim` —
+    /// exactly what the per-position gather path reads for a full-prefix
+    /// selection, so traffic accounting is path-independent.
+    #[allow(clippy::too_many_arguments)]
+    pub fn prefill_attend_dense_rows(
+        &self,
+        qs: &[f32],
+        n_chunk: usize,
+        n_dense: usize,
+        qrows: &mut Vec<f32>,
+        scratch: &mut ChunkAttendScratch,
+        out: &mut [f32],
+        traffic: &mut Traffic,
+    ) {
+        let shape = self.shape;
+        let kvd = shape.kv_dim();
+        let qd = shape.q_dim();
+        assert!(n_dense > 0 && n_dense <= n_chunk && n_chunk <= self.len);
+        assert_eq!(out.len(), n_dense * qd);
+        let start = self.len - n_chunk;
+        let prefix = start + n_dense;
+        qrows.clear();
+        qrows.extend_from_slice(&qs[..n_dense * qd]);
+        self.rope.apply_rows_offset(qrows, qd, start);
+        causal_attend_chunk(
+            qrows,
+            &self.keys[..prefix * kvd],
+            &self.values[..prefix * kvd],
+            n_dense,
+            prefix,
+            shape.n_heads,
+            shape.n_kv_heads,
+            shape.head_dim,
+            scratch,
+            out,
+        );
+        let visible_rows: usize = (0..n_dense).map(|t| start + t + 1).sum();
+        traffic.read_f32(2 * visible_rows * kvd);
     }
 
     /// Rotate a query for an explicit absolute position into a reused

@@ -5,7 +5,9 @@
 //! upper-bound score Σ_c max(q_c·min_c, q_c·max_c); the top pages within the
 //! token budget are selected and *all* their tokens attend exactly.
 
-use crate::attention::baselines::common::{pool_query, BaselineScratch, DenseCache};
+use crate::attention::baselines::common::{
+    dense_prefix_rows, pool_query, BaselineScratch, DenseCache,
+};
 use crate::attention::{
     merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
 };
@@ -151,12 +153,42 @@ impl AttentionBackend for QuestAttention {
     fn prefill_attend(&mut self, qs: &[f32], n: usize, out: &mut [f32]) {
         let qd = self.cache.shape.q_dim();
         let len = self.cache.len;
-        DenseCache::prefill_attend_rows(len, qd, qs, n, out, |q, pos, o| self.attend_at(q, pos, o));
+        // Rows whose prefix fits in sink+recent select everything no
+        // matter how the pages score — skip the per-row page scan and run
+        // them through the blocked kernel in one call. Later rows keep the
+        // per-position loop: page top-k genuinely differs per query.
+        let start = len - n;
+        let n_dense = dense_prefix_rows(start, n, self.sink + self.recent);
+        if n_dense > 0 {
+            self.cache.prefill_attend_dense_rows(
+                qs,
+                n,
+                n_dense,
+                &mut self.scratch.qrows,
+                &mut self.scratch.chunk,
+                &mut out[..n_dense * qd],
+                &mut self.traffic,
+            );
+        }
+        if n_dense < n {
+            DenseCache::prefill_attend_rows(
+                len,
+                qd,
+                &qs[n_dense * qd..],
+                n - n_dense,
+                &mut out[n_dense * qd..],
+                |q, pos, o| self.attend_at(q, pos, o),
+            );
+        }
     }
 
     fn forward_batch(&mut self, ks: &[f32], vs: &[f32], qs: &[f32], n: usize, out: &mut [f32]) {
         self.append_batch(ks, vs, n);
         self.prefill_attend(qs, n, out);
+    }
+
+    fn end_prefill(&mut self) {
+        self.scratch.end_prefill();
     }
 
     fn set_threads(&mut self, threads: usize) {
@@ -279,6 +311,35 @@ mod tests {
                 assert!(x.abs() < 100.0, "future value leaked into position {t}: {x}");
             }
         }
+    }
+
+    #[test]
+    fn dense_window_rows_match_per_position_path() {
+        // A chunk entirely inside sink+recent selects the full prefix on
+        // every row: the blocked fast path must agree with the sequential
+        // per-position selection/gather/attend loop (≤1e-4: the blocked
+        // kernel reassociates the softmax arithmetic).
+        let shape = AttnShape::gqa(4, 2, 8, 128);
+        let kvd = shape.kv_dim();
+        let qd = shape.q_dim();
+        let mut rng = Rng::new(111);
+        let n = 14; // < sink + recent = 20
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        let qs = rng.normal_vec(n * qd, 1.0);
+        let mut seq = QuestAttention::new(shape, 4, 4, 16, 8);
+        let mut bat = QuestAttention::new(shape, 4, 4, 16, 8);
+        let mut o_seq = vec![0.0f32; n * qd];
+        for t in 0..n {
+            seq.append(&ks[t * kvd..(t + 1) * kvd], &vs[t * kvd..(t + 1) * kvd]);
+            seq.attend(&qs[t * qd..(t + 1) * qd], &mut o_seq[t * qd..(t + 1) * qd]);
+        }
+        let mut o_bat = vec![0.0f32; n * qd];
+        bat.forward_batch(&ks, &vs, &qs, n, &mut o_bat);
+        for (a, b) in o_seq.iter().zip(&o_bat) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+        bat.end_prefill();
     }
 
     #[test]

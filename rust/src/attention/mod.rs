@@ -141,7 +141,7 @@ pub mod baselines {
 }
 
 pub use full::FullAttention;
-pub use sals::{SalsAttention, SalsConfig, SalsStageTimes};
+pub use sals::{PrefillSparsity, SalsAttention, SalsConfig, SalsStageTimes, PREFILL_SPARSE_MIN_LEN};
 pub use traffic::Traffic;
 
 /// Shape parameters of one attention layer.

@@ -64,6 +64,20 @@
 //! default: with a whole chunk pre-appended, tokens that a mid-chunk query
 //! should see at full precision may already have been evicted from the
 //! ring by later chunk rows.)
+//!
+//! Block-sparse prefill ([`SalsConfig::prefill`], opt-in): while prefill
+//! is live the backend also keeps exact post-RoPE key/value panels
+//! (dropped at `end_prefill`, never counted in `kv_bytes`). Each chunk
+//! mean-pools its pre-RoPE queries, projects them, scores every cached
+//! token RoPE-free over the (len, r*) scoring panel (one `matmul_tn`,
+//! same streamed bytes as decode Stage-1), reduces to per-block maxima,
+//! and attends only the smallest τ-covering block set (sink + diagonal
+//! window always retained) via
+//! [`crate::tensor::ops::block_sparse_attend_chunk`]; below
+//! [`PREFILL_SPARSE_MIN_LEN`] the dense blocked kernel runs instead. The
+//! decode-facing stores evolve through the same push sequence either
+//! way, so decode state is identical to the dense prefill path. See
+//! DESIGN.md §Prefill-Sparsity for the retention + metering contracts.
 
 use super::baselines::common::pool_query;
 use super::{merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic};
@@ -96,6 +110,44 @@ const SCORE_PAR_BLOCK: usize = 2048;
 /// cannot change results.
 const FUSED_PAR_MIN_WORK: usize = 1 << 16;
 
+/// Below this cache length a sparse-prefill chunk attends densely (the
+/// blocked [`crate::tensor::ops::causal_attend_chunk`] path): short
+/// contexts fit the dense kernel's bandwidth comfortably and block
+/// selection would only add a scan. Default for
+/// [`PrefillSparsity::min_len`].
+pub const PREFILL_SPARSE_MIN_LEN: usize = 2048;
+
+/// Block-sparse prefill configuration ([`SalsConfig::prefill`]) — the
+/// latent-space FlexPrefill/MInference analogue: each prefill chunk's
+/// queries are mean-pooled, projected to the r*-dim scoring space, and
+/// scored RoPE-free against the split latent scoring panel; per-block
+/// score maxima then pick the smallest block set whose softmax mass
+/// covers `tau`, always retaining sink blocks and the diagonal window.
+/// `None` keeps the dense interleaved prefill (the default everywhere —
+/// accuracy tables are unaffected unless a caller opts in).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrefillSparsity {
+    /// Key-block granularity in tokens (64/128 per the block-sparse
+    /// prefill convention; any positive value works).
+    pub block: usize,
+    /// Score-mass coverage threshold τ ∈ (0, 1]: blocks are taken in
+    /// descending softmax-mass order until their cumulative mass reaches
+    /// τ. `tau >= 1.0` selects every block (the parity setting).
+    pub tau: f32,
+    /// Hard cap on the τ-driven block count (0 = uncapped) — the
+    /// fallback bound when flat score distributions would make τ select
+    /// nearly everything. Sink + diagonal blocks are retained on top.
+    pub top_blocks: usize,
+    /// Cache lengths below this attend densely ([`PREFILL_SPARSE_MIN_LEN`]).
+    pub min_len: usize,
+}
+
+impl Default for PrefillSparsity {
+    fn default() -> PrefillSparsity {
+        PrefillSparsity { block: 64, tau: 0.95, top_blocks: 0, min_len: PREFILL_SPARSE_MIN_LEN }
+    }
+}
+
 /// SALS hyper-parameters (§5.1/§5.2 defaults).
 #[derive(Clone, Debug)]
 pub struct SalsConfig {
@@ -113,6 +165,8 @@ pub struct SalsConfig {
     pub v_bits: Bits,
     /// Quantization group size along the token axis.
     pub group: usize,
+    /// Optional block-sparse prefill (None = dense interleaved prefill).
+    pub prefill: Option<PrefillSparsity>,
 }
 
 impl SalsConfig {
@@ -127,6 +181,7 @@ impl SalsConfig {
             critical,
             v_bits: Bits::B4,
             group: 32,
+            prefill: None,
         }
     }
 
@@ -140,6 +195,7 @@ impl SalsConfig {
             critical,
             v_bits: Bits::B2,
             group: 32,
+            prefill: None,
         }
     }
 }
@@ -224,6 +280,30 @@ pub struct SalsAttention {
     /// Chunk-latent staging buffer for the batched prefill path (kept
     /// separate from `scratch_lat`, which `attend` overwrites per token).
     scratch_chunk_lat: Vec<f32>,
+    // ---- block-sparse prefill state (cfg.prefill = Some only) ----
+    /// True until `end_prefill`: while live (and `cfg.prefill` is set),
+    /// every pushed token also lands in the exact prefill panels below.
+    prefill_live: bool,
+    /// (len, kv_dim) **post-RoPE** exact keys — the sparse-prefill attend
+    /// target. Prefill-only scratch: grows during prefill, dropped by
+    /// `end_prefill`, never counted in `kv_bytes` (decode reads the
+    /// latent/quant stores, not these panels).
+    prefill_keys: Vec<f32>,
+    /// (len, kv_dim) exact fp32 values, same lifecycle as `prefill_keys`.
+    prefill_vals: Vec<f32>,
+    /// Chunk-mean query staging for the RoPE-free block scoring.
+    scratch_chunk_qpool: Vec<f32>,
+    /// Per-block score maxima / softmax-mass staging / descending-mass
+    /// order / selected-block flags for the τ selection.
+    scratch_block_scores: Vec<f32>,
+    scratch_block_probs: Vec<f32>,
+    scratch_block_idx: Vec<usize>,
+    scratch_block_mask: Vec<u8>,
+    /// Sorted disjoint selected block ranges handed to the kernel.
+    scratch_blocks: Vec<(usize, usize)>,
+    scratch_bs: crate::tensor::ops::BlockSparseScratch,
+    /// Dense-fallback kernel scratch for chunks below `min_len`.
+    scratch_chunk_dense: crate::tensor::ops::ChunkAttendScratch,
 }
 
 impl SalsAttention {
@@ -283,6 +363,17 @@ impl SalsAttention {
             scratch_attend: SparseAttendScratch::default(),
             scratch_fused: FusedAttendScratch::default(),
             scratch_chunk_lat: Vec::new(),
+            prefill_live: true,
+            prefill_keys: Vec::new(),
+            prefill_vals: Vec::new(),
+            scratch_chunk_qpool: Vec::new(),
+            scratch_block_scores: Vec::new(),
+            scratch_block_probs: Vec::new(),
+            scratch_block_idx: Vec::new(),
+            scratch_block_mask: Vec::new(),
+            scratch_blocks: Vec::new(),
+            scratch_bs: crate::tensor::ops::BlockSparseScratch::default(),
+            scratch_chunk_dense: crate::tensor::ops::ChunkAttendScratch::default(),
             cfg,
         }
     }
@@ -311,6 +402,13 @@ impl SalsAttention {
     /// bytes the scan streams.
     fn stage_score(&mut self, q: &[f32]) {
         self.project_query(q);
+        self.score_panel();
+    }
+
+    /// The panel scan of Stage 1, with the projected query already in
+    /// `scratch_qlat` — shared by decode scoring and the sparse-prefill
+    /// block selection (which projects a chunk-pooled query instead).
+    fn score_panel(&mut self) {
         let rs = self.cfg.r_star;
         self.scratch_scores.resize(self.len, 0.0);
         if self.threads > 1 && self.len >= SCORE_PAR_MIN_LEN {
@@ -686,7 +784,187 @@ impl SalsAttention {
         self.recent_keys[slot * kvd..(slot + 1) * kvd].copy_from_slice(k);
         self.values.append(v);
         self.traffic.write_bytes(self.values.row_read_bytes(pos));
+        // Sparse prefill keeps exact post-RoPE panels alongside the
+        // compressed stores until `end_prefill` drops them. The coverage
+        // check makes the panels self-freezing: if any push ever lands
+        // without panel coverage (e.g. decode pushes after a prefill that
+        // never ended), the panels stop growing and the next
+        // `forward_batch` falls back to the dense interleaved path.
+        if self.prefill_live
+            && self.cfg.prefill.is_some()
+            && self.prefill_keys.len() == pos * kvd
+        {
+            self.prefill_keys.extend_from_slice(k);
+            self.rope.apply_multihead(&mut self.prefill_keys[pos * kvd..], pos);
+            self.prefill_vals.extend_from_slice(v);
+        }
         self.len += 1;
+    }
+
+    /// Mean-pool the whole chunk's queries (over rows, then per KV group)
+    /// and project to latent space — the chunk-level analogue of
+    /// `project_query` for RoPE-free block selection. Both maps are
+    /// linear, so pooling before projecting is exact and the scoring
+    /// panel streams once per chunk instead of once per row.
+    fn project_chunk_query(&mut self, qs: &[f32], n: usize) {
+        let qd = self.shape.q_dim();
+        self.scratch_chunk_qpool.resize(qd, 0.0);
+        self.scratch_chunk_qpool.fill(0.0);
+        let inv = 1.0 / n as f32;
+        for t in 0..n {
+            crate::tensor::ops::axpy(
+                inv,
+                &qs[t * qd..(t + 1) * qd],
+                &mut self.scratch_chunk_qpool,
+            );
+        }
+        let mean_q = std::mem::take(&mut self.scratch_chunk_qpool);
+        pool_query(&self.shape, &mean_q, &mut self.scratch_pool);
+        self.scratch_chunk_qpool = mean_q;
+        let pool = std::mem::take(&mut self.scratch_pool);
+        self.projector.project(&pool, &mut self.scratch_qlat);
+        self.scratch_pool = pool;
+    }
+
+    /// Block selection for one sparse-prefill chunk, with the token
+    /// scores already in `scratch_scores`: reduce to per-block maxima,
+    /// softmax the maxima into a block-mass distribution, and take blocks
+    /// in descending mass order until the cumulative mass covers τ
+    /// (capped at `top_blocks` when set). Sink blocks and the diagonal
+    /// window — every block overlapping `[start − recent, len)`, so each
+    /// query row's own position and its high-precision recent context are
+    /// always attendable — are retained unconditionally (the StreamingLLM
+    /// sink + window contract). Writes the sorted disjoint ranges into
+    /// `scratch_blocks` and returns the selected cache-row count.
+    fn select_prefill_blocks(&mut self, n: usize, ps: PrefillSparsity) -> usize {
+        let len = self.len;
+        let start = len - n;
+        let block = ps.block.max(1);
+        let nb = len.div_ceil(block);
+        self.scratch_block_scores.resize(nb, 0.0);
+        for b in 0..nb {
+            let lo = b * block;
+            let hi = (lo + block).min(len);
+            self.scratch_block_scores[b] =
+                self.scratch_scores[lo..hi].iter().fold(f32::NEG_INFINITY, |m, &x| m.max(x));
+        }
+        self.scratch_block_mask.resize(nb, 0);
+        self.scratch_block_mask.fill(0);
+        if ps.tau >= 1.0 && ps.top_blocks == 0 {
+            // Parity setting: everything selected, no float-undershoot
+            // risk from summing masses to 0.999999…
+            self.scratch_block_mask.fill(1);
+        } else {
+            self.scratch_block_probs.clear();
+            self.scratch_block_probs.extend_from_slice(&self.scratch_block_scores);
+            crate::tensor::ops::softmax(&mut self.scratch_block_probs);
+            self.scratch_block_idx.clear();
+            self.scratch_block_idx.extend(0..nb);
+            let probs = &self.scratch_block_probs;
+            self.scratch_block_idx.sort_unstable_by(|&a, &b| {
+                probs[b].partial_cmp(&probs[a]).unwrap_or(std::cmp::Ordering::Equal)
+            });
+            let cap = if ps.top_blocks > 0 { ps.top_blocks } else { nb };
+            let mut mass = 0.0f32;
+            let mut taken = 0usize;
+            for &b in &self.scratch_block_idx {
+                if mass >= ps.tau || taken >= cap {
+                    break;
+                }
+                self.scratch_block_mask[b] = 1;
+                mass += self.scratch_block_probs[b];
+                taken += 1;
+            }
+        }
+        // Mandatory retention: sink blocks + diagonal/recent window.
+        let sink_blocks = self.cfg.sink.div_ceil(block).min(nb);
+        for m in self.scratch_block_mask[..sink_blocks].iter_mut() {
+            *m = 1;
+        }
+        let diag_lo = start.saturating_sub(self.cfg.recent) / block;
+        for m in self.scratch_block_mask[diag_lo..].iter_mut() {
+            *m = 1;
+        }
+        // Coalesce adjacent selected blocks into sorted disjoint ranges.
+        self.scratch_blocks.clear();
+        let mut rows = 0usize;
+        let mut b = 0usize;
+        while b < nb {
+            if self.scratch_block_mask[b] == 0 {
+                b += 1;
+                continue;
+            }
+            let lo = b * block;
+            while b < nb && self.scratch_block_mask[b] == 1 {
+                b += 1;
+            }
+            let hi = (b * block).min(len);
+            rows += hi - lo;
+            self.scratch_blocks.push((lo, hi));
+        }
+        rows
+    }
+
+    /// Batched-prefill attend for one chunk against the exact prefill
+    /// panels: the dense blocked kernel below `min_len`, latent-space
+    /// block selection + [`crate::tensor::ops::block_sparse_attend_chunk`]
+    /// beyond it. Metering (the prefill bandwidth contract, DESIGN.md
+    /// §Prefill-Sparsity): the dense fallback charges the canonical
+    /// `2·Σ visible·kv_dim`; the sparse path charges the streamed scoring
+    /// panel (`len·r*` f32, in `score_panel`) plus the gathered block
+    /// rows (`2·selected·kv_dim` f32) — the bytes this path actually
+    /// touches, not the dense equivalent.
+    fn prefill_attend_chunk(
+        &mut self,
+        qs: &[f32],
+        n: usize,
+        ps: PrefillSparsity,
+        out: &mut [f32],
+    ) {
+        let kvd = self.shape.kv_dim();
+        let qd = self.shape.q_dim();
+        let d = self.shape.head_dim;
+        let len = self.len;
+        let start = len - n;
+        debug_assert_eq!(self.prefill_keys.len(), len * kvd);
+        self.scratch_qr.clear();
+        self.scratch_qr.extend_from_slice(qs);
+        self.rope.apply_rows_offset(&mut self.scratch_qr, qd, start);
+        if len < ps.min_len {
+            crate::tensor::ops::causal_attend_chunk(
+                &self.scratch_qr,
+                &self.prefill_keys,
+                &self.prefill_vals,
+                n,
+                len,
+                self.shape.n_heads,
+                self.shape.n_kv_heads,
+                d,
+                &mut self.scratch_chunk_dense,
+                out,
+            );
+            let visible: usize = (0..n).map(|t| start + t + 1).sum();
+            self.traffic.read_f32(2 * visible * kvd);
+            return;
+        }
+        self.project_chunk_query(qs, n);
+        self.score_panel(); // meters the len·r* panel stream
+        let rows = self.select_prefill_blocks(n, ps);
+        crate::tensor::ops::block_sparse_attend_chunk(
+            &self.scratch_qr,
+            &self.prefill_keys,
+            &self.prefill_vals,
+            n,
+            len,
+            self.shape.n_heads,
+            self.shape.n_kv_heads,
+            d,
+            &self.scratch_blocks,
+            self.threads,
+            &mut self.scratch_bs,
+            out,
+        );
+        self.traffic.read_f32(2 * rows * kvd);
     }
 
     /// Latent-project a chunk of pre-RoPE keys ((n, kv_dim)) into the
@@ -754,25 +1032,62 @@ impl AttentionBackend for SalsAttention {
         assert_eq!(qs.len(), n * qd);
         assert_eq!(out.len(), n * qd);
         let r = self.cfg.rank;
-        // Chunk-level batched projection; per-token state pushes + attends
-        // (see module docs: the recent ring / high-precision window are
-        // position-relative, so interleaving is what preserves exactness).
+        // Block-sparse prefill engages only while the exact panels cover
+        // the whole cache (push_token keeps them covering as long as
+        // `prefill_live`); any gap falls back to the dense path.
+        let sparse = match self.cfg.prefill {
+            Some(ps) if self.prefill_live && self.prefill_keys.len() == self.len * kvd => {
+                Some(ps)
+            }
+            _ => None,
+        };
         let lat = self.project_chunk(ks, n);
-        for t in 0..n {
-            self.push_token(
-                &lat[t * r..(t + 1) * r],
-                &ks[t * kvd..(t + 1) * kvd],
-                &vs[t * kvd..(t + 1) * kvd],
-            );
-            self.attend(&qs[t * qd..(t + 1) * qd], &mut out[t * qd..(t + 1) * qd]);
+        if let Some(ps) = sparse {
+            // Push the whole chunk's state first: the chunk attends
+            // against the exact prefill panels (not the position-relative
+            // ring/quant window), so no interleaving is needed, and the
+            // decode-facing stores evolve through the same push sequence
+            // as the dense path — decode state is path-independent.
+            for t in 0..n {
+                self.push_token(
+                    &lat[t * r..(t + 1) * r],
+                    &ks[t * kvd..(t + 1) * kvd],
+                    &vs[t * kvd..(t + 1) * kvd],
+                );
+            }
+            self.scratch_chunk_lat = lat;
+            self.prefill_attend_chunk(qs, n, ps, out);
+        } else {
+            // Chunk-level batched projection; per-token state pushes +
+            // attends (see module docs: the recent ring / high-precision
+            // window are position-relative, so interleaving is what
+            // preserves exactness).
+            for t in 0..n {
+                self.push_token(
+                    &lat[t * r..(t + 1) * r],
+                    &ks[t * kvd..(t + 1) * kvd],
+                    &vs[t * kvd..(t + 1) * kvd],
+                );
+                self.attend(&qs[t * qd..(t + 1) * qd], &mut out[t * qd..(t + 1) * qd]);
+            }
+            self.scratch_chunk_lat = lat;
         }
-        self.scratch_chunk_lat = lat;
     }
 
     fn end_prefill(&mut self) {
         // Chunk-latent staging is (chunk, r) — small, but decode never
         // touches it; release for symmetry with FullAttention.
         self.scratch_chunk_lat = Vec::new();
+        // The sparse-prefill panels scale with the full cache (2·len·kvd
+        // floats — exactly the dense cache SALS exists to avoid); decode
+        // reads the latent/quant stores, so drop them and the chunk-sized
+        // kernel scratch, and stop maintaining the panels on future
+        // pushes.
+        self.prefill_live = false;
+        self.prefill_keys = Vec::new();
+        self.prefill_vals = Vec::new();
+        self.scratch_bs = crate::tensor::ops::BlockSparseScratch::default();
+        self.scratch_chunk_dense = crate::tensor::ops::ChunkAttendScratch::default();
     }
 
     fn len(&self) -> usize {
@@ -856,6 +1171,7 @@ mod tests {
             critical: 16,
             v_bits: Bits::B4,
             group: 8,
+            prefill: None,
         }
     }
 
@@ -879,6 +1195,7 @@ mod tests {
             critical: 64,
             v_bits: Bits::B8,
             group: 8,
+            prefill: None,
         };
         let mut sals = SalsAttention::new(shape, cfg, proj);
         let mut full = FullAttention::new(shape);
@@ -1033,6 +1350,7 @@ mod tests {
             critical: 2,
             v_bits: Bits::B4,
             group: 4,
+            prefill: None,
         };
         let mut sals = SalsAttention::new(shape, cfg, proj);
         for _ in 0..50 {
@@ -1231,6 +1549,7 @@ mod tests {
             critical: 900,
             v_bits: Bits::B4,
             group: 8,
+            prefill: None,
         };
         let mut sals = SalsAttention::new(shape, cfg, proj);
         let n = 4160;
@@ -1247,6 +1566,125 @@ mod tests {
             sals.attend(&q, &mut out);
             assert_eq!(out, reference, "threads={threads} must be bit-identical");
         }
+    }
+
+    #[test]
+    fn sparse_prefill_tau_one_matches_dense_fallback() {
+        // τ = 1.0 selects every block, so the block-sparse kernel and the
+        // dense fallback attend the same set — outputs must agree ≤1e-4
+        // (only the online-softmax fold's fp order differs). Chunk sizes
+        // that don't divide the length and a block that doesn't divide
+        // the cache are both exercised.
+        let shape = AttnShape::gqa(4, 2, 8, 256);
+        let kvd = shape.kv_dim();
+        let qd = shape.q_dim();
+        let mut rng = Rng::new(111);
+        let proj = make_projector(kvd, 8, 4, &mut rng);
+        let sparse_cfg = SalsConfig {
+            prefill: Some(PrefillSparsity { block: 16, tau: 1.0, top_blocks: 0, min_len: 0 }),
+            ..cfg_small(8)
+        };
+        let dense_cfg = SalsConfig {
+            prefill: Some(PrefillSparsity {
+                block: 16,
+                tau: 1.0,
+                top_blocks: 0,
+                min_len: usize::MAX,
+            }),
+            ..cfg_small(8)
+        };
+        let mut sparse = SalsAttention::new(shape, sparse_cfg, proj.clone());
+        let mut dense = SalsAttention::new(shape, dense_cfg, proj);
+        for n in [48usize, 29, 17] {
+            let ks = rng.normal_vec(n * kvd, 1.0);
+            let vs = rng.normal_vec(n * kvd, 1.0);
+            let qs = rng.normal_vec(n * qd, 1.0);
+            let mut o_sparse = vec![0.0f32; n * qd];
+            let mut o_dense = vec![0.0f32; n * qd];
+            sparse.forward_batch(&ks, &vs, &qs, n, &mut o_sparse);
+            dense.forward_batch(&ks, &vs, &qs, n, &mut o_dense);
+            for (a, b) in o_sparse.iter().zip(&o_dense) {
+                assert!((a - b).abs() < 1e-4, "chunk n={n}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_prefill_keeps_sink_and_diagonal_blocks() {
+        // Even at a τ that would select almost nothing, the sink blocks
+        // and every block overlapping [start − recent, len) must survive.
+        let shape = AttnShape::gqa(4, 2, 8, 256);
+        let kvd = shape.kv_dim();
+        let qd = shape.q_dim();
+        let mut rng = Rng::new(113);
+        let proj = make_projector(kvd, 8, 4, &mut rng);
+        let cfg = SalsConfig {
+            prefill: Some(PrefillSparsity { block: 8, tau: 0.01, top_blocks: 1, min_len: 0 }),
+            ..cfg_small(8)
+        };
+        let mut sals = SalsAttention::new(shape, cfg, proj);
+        for n in [64usize, 16] {
+            let ks = rng.normal_vec(n * kvd, 1.0);
+            let vs = rng.normal_vec(n * kvd, 1.0);
+            let qs = rng.normal_vec(n * qd, 1.0);
+            let mut out = vec![0.0f32; n * qd];
+            sals.forward_batch(&ks, &vs, &qs, n, &mut out);
+        }
+        // After the second chunk: len 80, start 64, sink 2, recent 8.
+        let covered = |p: usize| sals.scratch_blocks.iter().any(|&(lo, hi)| lo <= p && p < hi);
+        for p in 0..2 {
+            assert!(covered(p), "sink token {p} not covered: {:?}", sals.scratch_blocks);
+        }
+        for p in 56..80 {
+            assert!(covered(p), "diagonal/recent token {p} not covered: {:?}", sals.scratch_blocks);
+        }
+        // Ranges are sorted and disjoint (the kernel's precondition).
+        for w in sals.scratch_blocks.windows(2) {
+            assert!(w[0].1 <= w[1].0, "ranges overlap: {:?}", sals.scratch_blocks);
+        }
+    }
+
+    #[test]
+    fn sparse_prefill_leaves_decode_state_identical_to_dense_prefill() {
+        // The sparse path pushes the same token sequence through the same
+        // stores (only the chunk attends differ), so after end_prefill the
+        // decode-facing state — latent panels, ring, quant store — must be
+        // BIT-identical to the dense prefill path, and decode attends must
+        // agree exactly.
+        let shape = AttnShape::gqa(4, 2, 8, 256);
+        let kvd = shape.kv_dim();
+        let qd = shape.q_dim();
+        let mut rng = Rng::new(115);
+        let proj = make_projector(kvd, 8, 4, &mut rng);
+        let sparse_cfg = SalsConfig {
+            prefill: Some(PrefillSparsity { block: 16, tau: 0.9, top_blocks: 0, min_len: 0 }),
+            ..cfg_small(8)
+        };
+        let dense_cfg = cfg_small(8);
+        let mut sparse = SalsAttention::new(shape, sparse_cfg, proj.clone());
+        let mut dense = SalsAttention::new(shape, dense_cfg, proj);
+        for n in [40usize, 23] {
+            let ks = rng.normal_vec(n * kvd, 1.0);
+            let vs = rng.normal_vec(n * kvd, 1.0);
+            let qs = rng.normal_vec(n * qd, 1.0);
+            let mut o1 = vec![0.0f32; n * qd];
+            let mut o2 = vec![0.0f32; n * qd];
+            sparse.forward_batch(&ks, &vs, &qs, n, &mut o1);
+            dense.forward_batch(&ks, &vs, &qs, n, &mut o2);
+        }
+        sparse.end_prefill();
+        dense.end_prefill();
+        assert!(sparse.prefill_keys.is_empty(), "end_prefill must drop the panels");
+        assert_eq!(sparse.latent_score, dense.latent_score);
+        assert_eq!(sparse.latent_rem, dense.latent_rem);
+        assert_eq!(sparse.recent_keys, dense.recent_keys);
+        assert_eq!(sparse.kv_bytes(), dense.kv_bytes());
+        let q = rng.normal_vec(qd, 1.0);
+        let mut d1 = vec![0.0f32; qd];
+        let mut d2 = vec![0.0f32; qd];
+        sparse.attend(&q, &mut d1);
+        dense.attend(&q, &mut d2);
+        assert_eq!(d1, d2, "decode after prefill must be path-independent");
     }
 
     #[test]

@@ -290,8 +290,13 @@ impl Engine {
 
             // ---- prefill phase: one batched chunk per sequence, fanned
             // out across worker threads (per-sequence caches + scratch are
-            // independent; the model is shared read-only) ----
+            // independent; the model is shared read-only). Leftover workers
+            // parallelize *inside* each chunk attend (per-KV-head lanes,
+            // block score scans) — same share rule as decode. ----
+            let prefill_share =
+                if prefilling.is_empty() { 1 } else { (threads / prefilling.len()).max(1) };
             threadpool::parallel_for_each_mut(&mut prefilling, threads, |_, r| {
+                r.state.set_attend_threads(prefill_share);
                 let hi = (r.prefilled + prefill_chunk).min(r.prefill_tokens.len());
                 let last = hi == r.prefill_tokens.len();
                 let l = model.forward_batch(
@@ -604,6 +609,7 @@ mod tests {
             critical: 64,
             v_bits: Bits::B4,
             group: 8,
+            prefill: None,
         };
         assert_engine_matches_direct(
             &move || {
@@ -938,6 +944,7 @@ mod tests {
             critical: 8,
             v_bits: Bits::B4,
             group: 8,
+            prefill: None,
         };
         let sals_factory: Box<BackendFactory> = Box::new(move |_| {
             Box::new(SalsAttention::new(shape, sc.clone(), proj.clone()))

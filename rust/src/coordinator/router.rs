@@ -8,6 +8,7 @@
 
 use super::request::Request;
 use crate::kvcache::SeqId;
+use crate::model::SequenceFootprint;
 use std::collections::HashMap;
 
 /// Routing decisions are replica indices.
@@ -25,17 +26,39 @@ pub enum Policy {
 /// The router: tracks load, routes requests, supports session affinity.
 pub struct Router {
     policy: Policy,
-    /// Outstanding token estimate per replica.
+    /// Outstanding load estimate per replica — projected KV bytes when a
+    /// footprint is installed, tokens otherwise.
     load: Vec<usize>,
     rr_next: usize,
     /// Session -> replica affinity map.
     affinity: HashMap<SeqId, ReplicaId>,
+    /// Projected per-sequence cache growth of the backend the replicas
+    /// run. When set, [`Router::dispatch_cost`] prices requests in
+    /// projected bytes at the decode horizon — what the replicas actually
+    /// reserve at admit — instead of assuming token-proportional cost.
+    footprint: Option<SequenceFootprint>,
 }
 
 impl Router {
     pub fn new(replicas: usize, policy: Policy) -> Router {
         assert!(replicas > 0);
-        Router { policy, load: vec![0; replicas], rr_next: 0, affinity: HashMap::new() }
+        Router {
+            policy,
+            load: vec![0; replicas],
+            rr_next: 0,
+            affinity: HashMap::new(),
+            footprint: None,
+        }
+    }
+
+    /// A router that prices load by the replicas' projected
+    /// [`SequenceFootprint`] bytes instead of token counts. Compressed
+    /// backends (SALS, quantized) legitimately hold more concurrent
+    /// sequences per replica; byte pricing lets LeastLoaded see that.
+    pub fn with_footprint(replicas: usize, policy: Policy, fp: SequenceFootprint) -> Router {
+        let mut r = Router::new(replicas, policy);
+        r.footprint = Some(fp);
+        r
     }
 
     pub fn replicas(&self) -> usize {
@@ -71,15 +94,22 @@ impl Router {
         r
     }
 
-    /// Cost estimate of one request: prompt + expected output tokens —
-    /// what [`Router::route`] adds to the chosen replica and what
-    /// [`Router::complete`]/[`Router::note_preemption`] must drain.
-    pub fn dispatch_cost(req: &Request) -> usize {
-        req.prompt.len() + req.params.max_new_tokens
+    /// Cost estimate of one request — what [`Router::route`] adds to the
+    /// chosen replica and what [`Router::complete`]/
+    /// [`Router::note_preemption`] must drain. With a footprint installed
+    /// this is the projected cache bytes at the decode horizon
+    /// (`prompt + max_new` tokens, the same horizon the engine prices
+    /// admission at); without one it falls back to the token count.
+    pub fn dispatch_cost(&self, req: &Request) -> usize {
+        let horizon = req.prompt.len() + req.params.max_new_tokens;
+        match &self.footprint {
+            Some(fp) => fp.bytes_at(horizon),
+            None => horizon,
+        }
     }
 
     fn note_dispatch(&mut self, r: ReplicaId, req: &Request) {
-        self.load[r] += Self::dispatch_cost(req);
+        self.load[r] += self.dispatch_cost(req);
     }
 
     /// Report completion so load drains.
@@ -95,7 +125,8 @@ impl Router {
     /// decision toward the other replicas. The caller re-`route`s the
     /// request (session affinity, if any, still pins it).
     pub fn note_preemption(&mut self, r: ReplicaId, req: &Request) {
-        self.complete(r, Self::dispatch_cost(req));
+        let cost = self.dispatch_cost(req);
+        self.complete(r, cost);
     }
 
     /// Drop a session's affinity (conversation ended).
@@ -169,10 +200,68 @@ mod tests {
         // a preempt+re-route cycle drains to exactly zero (no double
         // counting, saturating on over-drain).
         let b = r.route(&heavy, None);
-        r.complete(b, Router::dispatch_cost(&heavy));
+        let cost = r.dispatch_cost(&heavy);
+        r.complete(b, cost);
         assert_eq!(r.load_of(b), 0);
         r.note_preemption(b, &heavy); // over-drain saturates
         assert_eq!(r.load_of(b), 0);
+    }
+
+    #[test]
+    fn footprint_pricing_routes_sals_cheaper_than_dense() {
+        use crate::attention::{
+            AttentionBackend, AttnShape, FullAttention, SalsAttention, SalsConfig,
+        };
+        use crate::lowrank::Calibrator;
+        use crate::quant::Bits;
+
+        let shape = AttnShape::mha(4, 16, 512);
+        let kvd = shape.kv_dim();
+        let mut rng = Rng::new(5);
+        let mut cal = Calibrator::new(kvd);
+        for _ in 0..4 * kvd {
+            cal.add_key(&rng.normal_vec(kvd, 1.0));
+        }
+        let proj = cal.fit(kvd / 4).unwrap();
+        let cfg = SalsConfig {
+            rank: kvd / 4,
+            r_star: kvd / 8,
+            sink: 2,
+            recent: 8,
+            critical: 16,
+            v_bits: Bits::B4,
+            group: 8,
+            prefill: None,
+        };
+        let n_layers = 4;
+        let dense_fp = SequenceFootprint::from_layers(vec![
+            FullAttention::new(shape).footprint();
+            n_layers
+        ]);
+        let sals_fp = SequenceFootprint::from_layers(vec![
+            SalsAttention::new(shape, cfg, proj).footprint();
+            n_layers
+        ]);
+
+        let request = req(0, 256);
+        let mut dense_router = Router::with_footprint(2, Policy::LeastLoaded, dense_fp);
+        let mut sals_router = Router::with_footprint(2, Policy::LeastLoaded, sals_fp);
+        let dense_cost = dense_router.dispatch_cost(&request);
+        let sals_cost = sals_router.dispatch_cost(&request);
+        assert!(
+            sals_cost < dense_cost,
+            "a SALS request must price cheaper than the dense equal-length \
+             request: {sals_cost} vs {dense_cost} bytes"
+        );
+        // The byte cost is what actually lands on the chosen replica.
+        let a = dense_router.route(&request, None);
+        assert_eq!(dense_router.load_of(a), dense_cost);
+        let b = sals_router.route(&request, None);
+        assert_eq!(sals_router.load_of(b), sals_cost);
+        // Without a footprint the router still prices in tokens (the
+        // serve example's `complete(prompt+max_new)` contract).
+        let bare = Router::new(1, Policy::LeastLoaded);
+        assert_eq!(bare.dispatch_cost(&request), 256 + 4);
     }
 
     #[test]

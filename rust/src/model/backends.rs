@@ -305,6 +305,7 @@ pub fn make_factory(
                     critical: sp.critical,
                     v_bits: Bits::B4,
                     group: 32,
+                    prefill: None,
                 };
                 Box::new(SalsAttention::new(shape, c, proj))
             }
@@ -319,6 +320,7 @@ pub fn make_factory(
                     critical: sp.critical,
                     v_bits: Bits::B2,
                     group: 32,
+                    prefill: None,
                 };
                 Box::new(SalsAttention::new(shape, c, proj))
             }

@@ -54,6 +54,12 @@ impl SequenceFootprint {
         SequenceFootprint { layers: (0..cfg.n_layers).map(|l| factory(l).footprint()).collect() }
     }
 
+    /// Assemble a footprint from explicit per-layer models (router setup
+    /// without constructing backends, tests).
+    pub fn from_layers(layers: Vec<FootprintModel>) -> SequenceFootprint {
+        SequenceFootprint { layers }
+    }
+
     /// Projected resident KV bytes of one sequence at `tokens` total
     /// length (prompt + generated).
     pub fn bytes_at(&self, tokens: usize) -> usize {

@@ -5,7 +5,10 @@
 //!
 //! The attention workhorses live here with caller-owned scratch:
 //! [`causal_attend_chunk`] + [`ChunkAttendScratch`] for batched prefill
-//! (many queries over a dense causal cache), [`sparse_attend`] +
+//! (many queries over a dense causal cache), [`block_sparse_attend_chunk`]
+//! + [`BlockSparseScratch`] for its block-sparse sibling (the same chunk
+//! of queries visiting only selected key block ranges, folded through the
+//! online-softmax accumulator), [`sparse_attend`] +
 //! [`SparseAttendScratch`] for sparse decode over a *materialized*
 //! gathered subset (with [`sparse_attend_threaded`] partitioning the
 //! independent KV-head panels across workers), and [`fused_sparse_attend`]
@@ -270,6 +273,248 @@ pub fn causal_attend_chunk(
                     out[dst..dst + d].copy_from_slice(&otile[t * d..(t + 1) * d]);
                 }
                 t0 += tb;
+            }
+        }
+    }
+}
+
+/// One KV head's working set for [`block_sparse_attend_chunk`]: packed
+/// key/value panels over the selected blocks, the pre-scaled query tile,
+/// the per-key-tile score block, the online-softmax state (running max /
+/// denominator / PV partial per query row of the tile), and the head's
+/// private output panel. One lane **per KV head** (not per worker):
+/// chunk output rows interleave heads, so each lane accumulates into its
+/// own (n, group·d) panel and a serial epilogue scatters — the fan-out
+/// shares no buffers and stays bit-invariant in the thread count.
+#[derive(Default)]
+struct BlockSparseLane {
+    khead: Vec<f32>,
+    vhead: Vec<f32>,
+    qtile: Vec<f32>,
+    scores: Vec<f32>,
+    m: Vec<f32>,
+    l: Vec<f32>,
+    acc: Vec<f32>,
+    ohead: Vec<f32>,
+}
+
+/// Reusable buffers for [`block_sparse_attend_chunk`]: the shared
+/// visible-prefix table plus one [`BlockSparseLane`] per KV head. This is
+/// prefill-sized scratch (panels scale with the selected rows of the full
+/// cache) — backends drop it in `end_prefill`, exactly like
+/// [`ChunkAttendScratch`]; within a prefill it grows to high-water marks
+/// and is retained so repeated chunk calls do not heap-allocate.
+#[derive(Default)]
+pub struct BlockSparseScratch {
+    vis: Vec<usize>,
+    lanes: Vec<BlockSparseLane>,
+}
+
+/// Block-sparse causal multi-head attention for a chunk of queries — the
+/// prefill sibling of [`causal_attend_chunk`] that visits only a selected
+/// set of key *block ranges* instead of the whole cache.
+///
+/// * `qs`: (n, n_heads·d) **post-RoPE** queries; row `t` is absolute
+///   position `len - n + t`.
+/// * `keys` / `values`: (len, n_kv_heads·d) post-RoPE cache (the chunk's
+///   own rows already appended).
+/// * `blocks`: sorted, disjoint, half-open `[lo, hi)` cache-row ranges
+///   with `hi <= len`. Query row `t` attends to the intersection of
+///   `∪ blocks` with its causal prefix `0..=len-n+t`. The caller is
+///   responsible for including each query's own diagonal block (the SALS
+///   selector always retains sink + diagonal-window blocks); a row whose
+///   visible selection is empty gets a zero output row, mirroring
+///   [`fused_sparse_attend`]'s empty-selection contract.
+/// * `threads`: per-KV-head fan-out cap (1 = serial). Per-head
+///   arithmetic is fixed and the output scatter is serial, so results are
+///   **bit-invariant in the thread count**.
+/// * `out`: (n, n_heads·d), overwritten.
+///
+/// Because `blocks` is sorted, the packed panel's rows are in ascending
+/// cache order and each query's visible selection is a *prefix* of the
+/// packed panel — so causal masking stays a per-row prefix bound (the
+/// `vis` table), exactly as in the dense kernel. The packed prefix is
+/// folded in [`FUSED_TILE`]-column tiles through the flash-style online
+/// softmax (running max `m`, rescaled denominator `l`, rescaled PV
+/// partial `acc` per query row), so a (tile, n_sel) score row never
+/// materializes and partial block sets are numerically stable no matter
+/// how score magnitudes are distributed across blocks.
+#[allow(clippy::too_many_arguments)]
+pub fn block_sparse_attend_chunk(
+    qs: &[f32],
+    keys: &[f32],
+    values: &[f32],
+    n: usize,
+    len: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    d: usize,
+    blocks: &[(usize, usize)],
+    threads: usize,
+    scratch: &mut BlockSparseScratch,
+    out: &mut [f32],
+) {
+    assert!(n > 0 && n <= len, "chunk {n} vs cache {len}");
+    assert_eq!(n_heads % n_kv_heads, 0);
+    let kvd = n_kv_heads * d;
+    let qd = n_heads * d;
+    assert_eq!(qs.len(), n * qd);
+    assert_eq!(keys.len(), len * kvd);
+    assert_eq!(values.len(), len * kvd);
+    assert_eq!(out.len(), n * qd);
+    let group = n_heads / n_kv_heads;
+    let scale = 1.0 / (d as f32).sqrt();
+    let start = len - n;
+    let mut n_sel = 0usize;
+    {
+        let mut prev_hi = 0usize;
+        for (i, &(lo, hi)) in blocks.iter().enumerate() {
+            assert!(lo < hi && hi <= len, "block {i} [{lo},{hi}) vs cache {len}");
+            assert!(i == 0 || lo >= prev_hi, "block {i} [{lo},{hi}) overlaps/unsorted");
+            prev_hi = hi;
+            n_sel += hi - lo;
+        }
+    }
+
+    const Q_TILE: usize = 16;
+    let BlockSparseScratch { vis, lanes } = scratch;
+
+    // Per-query visible-prefix lengths over the packed panel: row t (abs
+    // pos start+t) sees the packed rows whose cache index is ≤ start+t —
+    // a prefix, since blocks are sorted. Monotone two-pointer sweep.
+    vis.clear();
+    vis.reserve(n);
+    {
+        let mut cum = 0usize;
+        let mut b = 0usize;
+        for t in 0..n {
+            let p = start + t; // inclusive causal limit
+            while b < blocks.len() && blocks[b].1 <= p + 1 {
+                cum += blocks[b].1 - blocks[b].0;
+                b += 1;
+            }
+            let partial = match blocks.get(b) {
+                Some(&(lo, _)) if lo <= p => p + 1 - lo,
+                _ => 0,
+            };
+            vis.push(cum + partial);
+        }
+    }
+    let vis: &[usize] = vis;
+
+    let run = |kvh: usize, lane: &mut BlockSparseLane| {
+        // Pack this head's selected key/value rows once; block ranges are
+        // contiguous cache rows, so each copies as a strided row run.
+        lane.khead.resize(n_sel * d, 0.0);
+        lane.vhead.resize(n_sel * d, 0.0);
+        let mut p = 0usize;
+        for &(lo, hi) in blocks {
+            for j in lo..hi {
+                let src = j * kvd + kvh * d;
+                lane.khead[p * d..(p + 1) * d].copy_from_slice(&keys[src..src + d]);
+                lane.vhead[p * d..(p + 1) * d].copy_from_slice(&values[src..src + d]);
+                p += 1;
+            }
+        }
+        lane.qtile.resize(Q_TILE * d, 0.0);
+        lane.scores.resize(Q_TILE * FUSED_TILE, 0.0);
+        lane.m.resize(Q_TILE, 0.0);
+        lane.l.resize(Q_TILE, 0.0);
+        lane.acc.resize(Q_TILE * d, 0.0);
+        lane.ohead.resize(n * group * d, 0.0);
+        for g in 0..group {
+            let h = kvh * group + g;
+            let mut t0 = 0;
+            while t0 < n {
+                let tb = Q_TILE.min(n - t0);
+                // Pre-scaled query tile: folds 1/sqrt(d) into QKᵀ.
+                for t in 0..tb {
+                    let src = (t0 + t) * qd + h * d;
+                    let dst = &mut lane.qtile[t * d..(t + 1) * d];
+                    dst.copy_from_slice(&qs[src..src + d]);
+                    simd::scale(dst, scale);
+                }
+                lane.m[..tb].fill(f32::NEG_INFINITY);
+                lane.l[..tb].fill(0.0);
+                lane.acc[..tb * d].fill(0.0);
+                // Packed columns visible to the tile's last row bound the
+                // key-tile sweep; earlier rows mask within each tile.
+                let vis_hi = vis[t0 + tb - 1];
+                let mut klo = 0;
+                while klo < vis_hi {
+                    let khi = (klo + FUSED_TILE).min(vis_hi);
+                    let kt = khi - klo;
+                    matmul_tn(
+                        &lane.qtile[..tb * d],
+                        &lane.khead[klo * d..khi * d],
+                        &mut lane.scores[..tb * kt],
+                        tb,
+                        d,
+                        kt,
+                    );
+                    for t in 0..tb {
+                        let c = vis[t0 + t].saturating_sub(klo).min(kt);
+                        let row = &mut lane.scores[t * kt..(t + 1) * kt];
+                        if c == 0 {
+                            // Entire tile is future keys for this row —
+                            // zero so the PV matmul adds nothing.
+                            row.fill(0.0);
+                            continue;
+                        }
+                        let tile_max = simd::max(&row[..c]);
+                        if tile_max > lane.m[t] {
+                            // Rescale history to the new max (first tile:
+                            // m = -inf so corr = 0 on all-zero l/acc).
+                            let corr = (lane.m[t] - tile_max).exp();
+                            lane.l[t] *= corr;
+                            simd::scale(&mut lane.acc[t * d..(t + 1) * d], corr);
+                            lane.m[t] = tile_max;
+                        }
+                        lane.l[t] += simd::exp_sum(&mut row[..c], lane.m[t]);
+                        row[c..].fill(0.0); // mask this row's future columns
+                    }
+                    matmul_acc(
+                        &lane.scores[..tb * kt],
+                        &lane.vhead[klo * d..khi * d],
+                        &mut lane.acc[..tb * d],
+                        tb,
+                        kt,
+                        d,
+                    );
+                    klo = khi;
+                }
+                for t in 0..tb {
+                    let inv = if lane.l[t] > 0.0 { 1.0 / lane.l[t] } else { 0.0 };
+                    let dst = ((t0 + t) * group + g) * d;
+                    for (o, &a) in lane.ohead[dst..dst + d]
+                        .iter_mut()
+                        .zip(&lane.acc[t * d..(t + 1) * d])
+                    {
+                        *o = a * inv;
+                    }
+                }
+                t0 += tb;
+            }
+        }
+    };
+
+    // One lane per HEAD (grow-only): lanes carry private output panels
+    // because chunk output rows interleave heads, so disjoint `out`
+    // slices per worker don't exist. Prefill-sized scratch; dropped by
+    // backends in end_prefill.
+    if lanes.len() < n_kv_heads {
+        lanes.resize_with(n_kv_heads, BlockSparseLane::default);
+    }
+    let workers = if threads <= 1 || n_kv_heads <= 1 { 1 } else { threads.min(n_kv_heads) };
+    crate::util::threadpool::parallel_for_each_mut(&mut lanes[..n_kv_heads], workers, run);
+    // Serial scatter of each head's private panel into the interleaved
+    // output — fixed order, so the parallel section can't affect results.
+    for (kvh, lane) in lanes[..n_kv_heads].iter().enumerate() {
+        for t in 0..n {
+            for g in 0..group {
+                let src = (t * group + g) * d;
+                let dst = t * qd + (kvh * group + g) * d;
+                out[dst..dst + d].copy_from_slice(&lane.ohead[src..src + d]);
             }
         }
     }
@@ -883,6 +1128,192 @@ mod tests {
         for (o, v) in out.iter().zip(&values) {
             assert!((o - v).abs() < 1e-6);
         }
+    }
+
+    /// Naive per-query reference for block_sparse_attend_chunk: exact
+    /// softmax attention over each row's (selected ∩ causal-prefix) set.
+    #[allow(clippy::too_many_arguments)]
+    fn block_sparse_reference(
+        qs: &[f32],
+        keys: &[f32],
+        values: &[f32],
+        n: usize,
+        len: usize,
+        n_heads: usize,
+        n_kv_heads: usize,
+        d: usize,
+        blocks: &[(usize, usize)],
+    ) -> Vec<f32> {
+        let qd = n_heads * d;
+        let kvd = n_kv_heads * d;
+        let group = n_heads / n_kv_heads;
+        let scale = 1.0 / (d as f32).sqrt();
+        let start = len - n;
+        let mut out = vec![0.0f32; n * qd];
+        for t in 0..n {
+            let sel: Vec<usize> = blocks
+                .iter()
+                .flat_map(|&(lo, hi)| lo..hi)
+                .filter(|&j| j <= start + t)
+                .collect();
+            for h in 0..n_heads {
+                let kvh = h / group;
+                let qh = &qs[t * qd + h * d..t * qd + (h + 1) * d];
+                let oh = &mut out[t * qd + h * d..t * qd + (h + 1) * d];
+                if sel.is_empty() {
+                    oh.fill(0.0);
+                    continue;
+                }
+                let mut s: Vec<f32> = sel
+                    .iter()
+                    .map(|&j| dot(qh, &keys[j * kvd + kvh * d..j * kvd + (kvh + 1) * d]) * scale)
+                    .collect();
+                softmax(&mut s);
+                for (&j, &p) in sel.iter().zip(&s) {
+                    axpy(p, &values[j * kvd + kvh * d..j * kvd + (kvh + 1) * d], oh);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn block_sparse_all_blocks_matches_causal_chunk() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(61);
+        // Full coverage (τ=1.0 selection) must reproduce the dense causal
+        // kernel ≤1e-4, whether the cover is one range or split into
+        // several — the online-softmax fold only reorders fp summation.
+        for (n_heads, n_kv_heads, d, len, n) in
+            [(4usize, 2usize, 8usize, 41usize, 23usize), (2, 2, 8, 90, 90), (8, 2, 4, 70, 17)]
+        {
+            let (qd, kvd) = (n_heads * d, n_kv_heads * d);
+            let qs = rng.normal_vec(n * qd, 1.0);
+            let keys = rng.normal_vec(len * kvd, 1.0);
+            let values = rng.normal_vec(len * kvd, 1.0);
+            let mut dense = vec![0.0f32; n * qd];
+            let mut cs = ChunkAttendScratch::default();
+            causal_attend_chunk(
+                &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &mut cs, &mut dense,
+            );
+            let covers: [Vec<(usize, usize)>; 2] =
+                [vec![(0, len)], vec![(0, 7), (7, 20), (20, len)]];
+            for blocks in &covers {
+                let mut out = vec![0.0f32; n * qd];
+                let mut scratch = BlockSparseScratch::default();
+                block_sparse_attend_chunk(
+                    &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, blocks, 1, &mut scratch,
+                    &mut out,
+                );
+                for (a, b) in out.iter().zip(&dense) {
+                    assert!((a - b).abs() < 1e-4, "{n_heads}h/{n_kv_heads}kv: {a} vs {b}");
+                }
+                // Warm-scratch rerun must be identical (buffer reuse safety).
+                let mut out2 = vec![0.0f32; n * qd];
+                block_sparse_attend_chunk(
+                    &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, blocks, 1, &mut scratch,
+                    &mut out2,
+                );
+                assert_eq!(out, out2);
+            }
+        }
+    }
+
+    #[test]
+    fn block_sparse_partial_blocks_match_reference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(63);
+        // Genuinely sparse selection: sink block + a middle block + the
+        // diagonal window. Rows whose prefix ends mid-block and key tiles
+        // crossing block boundaries are both exercised (len > 2·FUSED_TILE).
+        let (n_heads, n_kv_heads, d) = (4usize, 2usize, 8usize);
+        let (len, n) = (3 * FUSED_TILE + 11, 29);
+        let (qd, kvd) = (n_heads * d, n_kv_heads * d);
+        let qs = rng.normal_vec(n * qd, 1.0);
+        let keys = rng.normal_vec(len * kvd, 1.0);
+        let values = rng.normal_vec(len * kvd, 1.0);
+        let blocks = vec![(0usize, 8usize), (40, 56), (len - n - 3, len)];
+        let mut out = vec![0.0f32; n * qd];
+        let mut scratch = BlockSparseScratch::default();
+        block_sparse_attend_chunk(
+            &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &blocks, 1, &mut scratch, &mut out,
+        );
+        let reference =
+            block_sparse_reference(&qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &blocks);
+        for (a, b) in out.iter().zip(&reference) {
+            assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn block_sparse_thread_count_is_bit_invariant() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(67);
+        let (n_heads, n_kv_heads, d) = (8usize, 4usize, 8usize);
+        let (len, n) = (120usize, 37usize);
+        let (qd, kvd) = (n_heads * d, n_kv_heads * d);
+        let qs = rng.normal_vec(n * qd, 1.0);
+        let keys = rng.normal_vec(len * kvd, 1.0);
+        let values = rng.normal_vec(len * kvd, 1.0);
+        let blocks = vec![(0usize, 16usize), (48, 64), (80, len)];
+        let mut serial = vec![0.0f32; n * qd];
+        let mut scratch = BlockSparseScratch::default();
+        block_sparse_attend_chunk(
+            &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &blocks, 1, &mut scratch,
+            &mut serial,
+        );
+        for threads in [2usize, 3, 8] {
+            let mut out = vec![0.0f32; n * qd];
+            let mut s = BlockSparseScratch::default();
+            block_sparse_attend_chunk(
+                &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &blocks, threads, &mut s,
+                &mut out,
+            );
+            assert_eq!(out, serial, "threads={threads} must be bit-identical");
+        }
+    }
+
+    #[test]
+    fn block_sparse_empty_selection_zeroes_out() {
+        let d = 4;
+        let qs = vec![1.0f32; 2 * d];
+        let keys = vec![0.5f32; 8 * d];
+        let values = vec![0.5f32; 8 * d];
+        let mut out = vec![7.0f32; 2 * d];
+        let mut scratch = BlockSparseScratch::default();
+        block_sparse_attend_chunk(
+            &qs, &keys, &values, 2, 8, 1, 1, d, &[], 1, &mut scratch, &mut out,
+        );
+        assert!(out.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn block_sparse_online_softmax_is_stable_across_blocks() {
+        // Later blocks carry much larger scores than earlier ones: the
+        // running-max rescale must keep everything finite and concentrate
+        // weight on the large-score block (mirrors the fused decode test).
+        let d = 4;
+        let len = 3 * FUSED_TILE;
+        let n = 1; // single query at the end sees all three blocks
+        let qs = vec![10.0f32; d];
+        let mut keys = vec![0.0f32; len * d];
+        let mut values = vec![0.0f32; len * d];
+        for j in 0..len {
+            let mag = (j / FUSED_TILE) as f32 * 30.0; // 0, 30, 60 per block
+            for c in 0..d {
+                keys[j * d + c] = mag;
+                values[j * d + c] = j as f32;
+            }
+        }
+        let blocks =
+            vec![(0usize, FUSED_TILE), (FUSED_TILE, 2 * FUSED_TILE), (2 * FUSED_TILE, len)];
+        let mut out = vec![0.0f32; d];
+        let mut scratch = BlockSparseScratch::default();
+        block_sparse_attend_chunk(
+            &qs, &keys, &values, n, len, 1, 1, d, &blocks, 1, &mut scratch, &mut out,
+        );
+        assert!(out.iter().all(|x| x.is_finite()));
+        assert!(out[0] >= 2.0 * FUSED_TILE as f32 - 1.0, "out {out:?}");
     }
 
     /// Naive per-head reference for sparse_attend (the pre-packing decode

@@ -1,7 +1,10 @@
 //! Cross-module property tests: invariants that must hold for every random
 //! shape/data draw, with shrinking on failure (util::prop harness).
 
-use sals::attention::{merge_selection, AttentionBackend, AttnShape, FullAttention, SalsAttention, SalsConfig};
+use sals::attention::{
+    merge_selection, AttentionBackend, AttnShape, FullAttention, PrefillSparsity, SalsAttention,
+    SalsConfig,
+};
 use sals::lowrank::Calibrator;
 use sals::model::{BackendFactory, BatchScratch, Model, ModelConfig, Scratch, SequenceState, Weights};
 use sals::quant::{dequantize_group, quantize_group, Bits, TokenQuantStore};
@@ -314,6 +317,7 @@ fn prop_sals_pipeline_matches_per_row_reference() {
                 critical: seq + 4, // cover everything
                 v_bits: Bits::B4,
                 group: 4, // several quant pages per sequence
+                prefill: None,
             };
             let mut sals = SalsAttention::new(shape, cfg.clone(), proj.clone());
             let mut store = TokenQuantStore::new(kvd, cfg.v_bits, cfg.group, cfg.recent.max(cfg.group));
@@ -350,6 +354,155 @@ fn prop_sals_pipeline_matches_per_row_reference() {
             rope.apply_multihead(&mut qr, seq - 1);
             let reference = naive_sparse_attention(&qr, &rk, &rv, seq, n_heads, n_kv_heads, d);
             out.iter().zip(&reference).all(|(a, b)| (a - b).abs() < 1e-4)
+        },
+    );
+}
+
+/// Block-sparse prefill parity: with τ=1.0 every block is selected, so
+/// the sparse prefill path (latent block scoring + packed
+/// `block_sparse_attend_chunk`) must match the dense `causal_attend_chunk`
+/// fallback within 1e-4 — across MHA/GQA shapes, chunk sizes that don't
+/// divide the sequence, block sizes that don't divide the cache, and
+/// recent-ring/quant-group boundaries (the decode stores evolve through
+/// the same push sequence on both paths).
+#[test]
+fn prop_block_sparse_prefill_matches_dense() {
+    check(
+        "block-sparse-prefill-parity",
+        10,
+        |r| {
+            let n_kv_heads = 1 + r.below(2); // 1 or 2
+            let group = 1 + r.below(2); // MHA and GQA
+            let d = 2 * r.range(2, 5); // 4..8
+            let seq = r.range(40, 160);
+            let chunk = r.range(9, 40); // rarely divides seq
+            let block = if r.below(2) == 0 { 8 } else { 16 };
+            vec![n_kv_heads, group, d, seq, chunk, block, r.below(1 << 30)]
+        },
+        |v| {
+            let (n_kv_heads, group, d, seq, chunk, block) = (v[0], v[1], v[2], v[3], v[4], v[5]);
+            let seed = v[6] as u64;
+            if n_kv_heads == 0
+                || group == 0
+                || d < 2
+                || d % 2 != 0
+                || seq == 0
+                || chunk == 0
+                || block == 0
+            {
+                return true; // shrunk into an invalid shape — vacuous
+            }
+            let n_heads = n_kv_heads * group;
+            let shape = AttnShape::gqa(n_heads, n_kv_heads, d, seq + 4);
+            let kvd = shape.kv_dim();
+            let qd = shape.q_dim();
+            let mut rng = Rng::new(seed);
+            let mut cal = Calibrator::new(kvd);
+            for _ in 0..kvd * 4 {
+                cal.add_key(&rng.normal_vec(kvd, 1.0));
+            }
+            let rank = (kvd / 2).max(2);
+            let proj = cal.fit(rank).unwrap();
+            let mk = |min_len: usize| SalsConfig {
+                rank,
+                r_star: (rank / 2).max(1),
+                sink: 2,
+                recent: 8,
+                critical: 16,
+                v_bits: Bits::B4,
+                group: 4, // several quant pages per sequence
+                prefill: Some(PrefillSparsity { block, tau: 1.0, top_blocks: 0, min_len }),
+            };
+            let mut sparse = SalsAttention::new(shape, mk(0), proj.clone());
+            let mut dense = SalsAttention::new(shape, mk(usize::MAX), proj);
+            let mut i = 0;
+            while i < seq {
+                let n = chunk.min(seq - i);
+                let ks = rng.normal_vec(n * kvd, 1.0);
+                let vs = rng.normal_vec(n * kvd, 1.0);
+                let qs = rng.normal_vec(n * qd, 1.0);
+                let mut o_sparse = vec![0.0f32; n * qd];
+                let mut o_dense = vec![0.0f32; n * qd];
+                sparse.forward_batch(&ks, &vs, &qs, n, &mut o_sparse);
+                dense.forward_batch(&ks, &vs, &qs, n, &mut o_dense);
+                if !o_sparse.iter().zip(&o_dense).all(|(a, b)| (a - b).abs() < 1e-4) {
+                    return false;
+                }
+                i += n;
+            }
+            true
+        },
+    );
+}
+
+/// Block-sparse prefill thread invariance (mirror of
+/// `fused_attend_output_is_thread_invariant` for the prefill path): the
+/// per-KV-head lane fan-out and the block score scan use fixed
+/// decompositions, so any worker count must produce BIT-identical chunk
+/// outputs — including at a τ that selects a strict subset of blocks.
+#[test]
+fn prop_block_sparse_prefill_is_thread_invariant() {
+    check(
+        "block-sparse-prefill-threads",
+        6,
+        |r| {
+            let n_kv_heads = 1 + r.below(3); // 1..3
+            let d = 2 * r.range(2, 5);
+            let seq = r.range(48, 140);
+            vec![n_kv_heads, d, seq, r.below(1 << 30)]
+        },
+        |v| {
+            let (n_kv_heads, d, seq, seed) = (v[0], v[1], v[2], v[3] as u64);
+            if n_kv_heads == 0 || d < 2 || d % 2 != 0 || seq == 0 {
+                return true;
+            }
+            let n_heads = n_kv_heads * 2;
+            let shape = AttnShape::gqa(n_heads, n_kv_heads, d, seq + 4);
+            let kvd = shape.kv_dim();
+            let qd = shape.q_dim();
+            let mut rng = Rng::new(seed);
+            let mut cal = Calibrator::new(kvd);
+            for _ in 0..kvd * 4 {
+                cal.add_key(&rng.normal_vec(kvd, 1.0));
+            }
+            let rank = (kvd / 2).max(2);
+            let proj = cal.fit(rank).unwrap();
+            let cfg = SalsConfig {
+                rank,
+                r_star: (rank / 2).max(1),
+                sink: 2,
+                recent: 8,
+                critical: 16,
+                v_bits: Bits::B4,
+                group: 4,
+                prefill: Some(PrefillSparsity { block: 8, tau: 0.6, top_blocks: 0, min_len: 0 }),
+            };
+            let chunk = 31; // doesn't divide seq
+            let mut chunks: Vec<(Vec<f32>, Vec<f32>, Vec<f32>)> = Vec::new();
+            let mut i = 0;
+            while i < seq {
+                let n = chunk.min(seq - i);
+                chunks.push((
+                    rng.normal_vec(n * kvd, 1.0),
+                    rng.normal_vec(n * kvd, 1.0),
+                    rng.normal_vec(n * qd, 1.0),
+                ));
+                i += n;
+            }
+            let run = |threads: usize| {
+                let mut b = SalsAttention::new(shape, cfg.clone(), proj.clone());
+                b.set_threads(threads);
+                let mut outs = Vec::new();
+                for (ks, vs, qs) in &chunks {
+                    let n = ks.len() / kvd;
+                    let mut o = vec![0.0f32; n * qd];
+                    b.forward_batch(ks, vs, qs, n, &mut o);
+                    outs.extend_from_slice(&o);
+                }
+                outs
+            };
+            let base = run(1);
+            [3usize, 8].iter().all(|&t| run(t) == base)
         },
     );
 }
@@ -396,6 +549,7 @@ fn prop_fused_attend_matches_staged_pipeline() {
                 critical,
                 v_bits: Bits::B4,
                 group: 4, // several quant pages per sequence
+                prefill: None,
             };
             let proj = cal.fit(rank).unwrap();
             let mut fused = SalsAttention::new(shape, cfg.clone(), proj.clone());
@@ -447,6 +601,7 @@ fn prop_sals_attend_finite_and_deterministic() {
                 critical: 4,
                 v_bits: Bits::B4,
                 group: 4,
+                prefill: None,
             };
             let run = |seed2: u64| {
                 let mut rng = Rng::new(seed2);
@@ -573,6 +728,7 @@ fn prop_decode_batch_matches_step_loop() {
         critical: 64,
         v_bits: Bits::B4,
         group: 8,
+        prefill: None,
     };
 
     let full: Box<BackendFactory> =
@@ -667,6 +823,7 @@ fn prop_batched_prefill_matches_step_loop() {
         critical: 64,
         v_bits: Bits::B4,
         group: 8,
+        prefill: None,
     };
 
     let full: Box<BackendFactory> =
