@@ -58,7 +58,7 @@ fn serve(variant: XlaVariant, label: &str) -> anyhow::Result<()> {
         latencies.push(t_req.elapsed().as_secs_f64());
         total_new += out.len();
         kv_bytes_peak = kv_bytes_peak.max(m.kv_bytes_at_len());
-        router.complete(r, tr.request.prompt.len() + tr.request.params.max_new_tokens);
+        router.complete(r, &tr.request);
     }
     let wall = t0.elapsed().as_secs_f64();
     let lat = Summary::of(&latencies);

@@ -70,6 +70,7 @@ fn main() {
                 page_bytes: 4096,
                 pool_budget,
                 threads: 0,
+                prefix_reuse: false,
             },
         );
         let mut rng = Rng::new(777);

@@ -18,7 +18,14 @@ fn build_engine(cfg: &ModelConfig, method: Method, fitted: &Arc<sals::model::Fit
     Engine::new(
         model,
         factory,
-        EngineConfig { max_batch: 8, prefill_chunk: 256, page_bytes: 64 * 1024, pool_budget: 1 << 32, threads: 0 },
+        EngineConfig {
+            max_batch: 8,
+            prefill_chunk: 256,
+            page_bytes: 64 * 1024,
+            pool_budget: 1 << 32,
+            threads: 0,
+            prefix_reuse: false,
+        },
     )
 }
 

@@ -11,9 +11,11 @@
 //! [`crate::quant::TokenQuantStore::dequant_matmul_acc_all`], never
 //! staging an fp32 value panel (see DESIGN.md §Perf).
 
-use crate::attention::{AttnShape, Traffic};
+use crate::attention::full::DensePrefixData;
+use crate::attention::{AttnShape, SharedVec, Traffic};
 use crate::rope::RopeTable;
-use crate::tensor::ops::{causal_attend_chunk, ChunkAttendScratch, SparseAttendScratch};
+use crate::tensor::ops::{causal_attend_chunk_seg, ChunkAttendScratch, SparseAttendScratch};
+use std::sync::Arc;
 
 /// Per-backend decode scratch shared by the DenseCache baselines. Every
 /// per-(layer, token) buffer the selection→gather→attend pipeline needs
@@ -106,17 +108,18 @@ pub fn pool_query(shape: &AttnShape, qr: &[f32], pooled: &mut Vec<f32>) {
 pub struct DenseCache {
     pub shape: AttnShape,
     pub rope: RopeTable,
-    /// (len, kv_dim) post-RoPE keys.
-    pub keys: Vec<f32>,
+    /// (len, kv_dim) post-RoPE keys; leading rows may be held by
+    /// reference to an adopted shared prefix.
+    pub keys: SharedVec,
     /// (len, kv_dim) values.
-    pub values: Vec<f32>,
+    pub values: SharedVec,
     pub len: usize,
 }
 
 impl DenseCache {
     pub fn new(shape: AttnShape) -> DenseCache {
         let rope = RopeTable::new(shape.head_dim, shape.max_seq, shape.rope_base);
-        DenseCache { shape, rope, keys: Vec::new(), values: Vec::new(), len: 0 }
+        DenseCache { shape, rope, keys: SharedVec::new(), values: SharedVec::new(), len: 0 }
     }
 
     /// Append pre-RoPE key (rotated in place after the copy — no temporary
@@ -125,9 +128,8 @@ impl DenseCache {
         let kvd = self.shape.kv_dim();
         assert_eq!(k.len(), kvd);
         assert_eq!(v.len(), kvd);
-        let base = self.keys.len();
         self.keys.extend_from_slice(k);
-        self.rope.apply_multihead(&mut self.keys[base..], self.len);
+        self.rope.apply_multihead(self.keys.tail_mut(kvd), self.len);
         self.values.extend_from_slice(v);
         self.len += 1;
         traffic.write_f32(2 * kvd);
@@ -140,12 +142,35 @@ impl DenseCache {
         assert!(n > 0);
         assert_eq!(ks.len(), n * kvd);
         assert_eq!(vs.len(), n * kvd);
-        let base = self.keys.len();
         self.keys.extend_from_slice(ks);
-        self.rope.apply_rows_offset(&mut self.keys[base..], kvd, self.len);
+        self.rope.apply_rows_offset(self.keys.tail_mut(n * kvd), kvd, self.len);
         self.values.extend_from_slice(vs);
         self.len += n;
         traffic.write_f32(2 * n * kvd);
+    }
+
+    /// Freeze the cache's full contents for prefix publication. `traffic`
+    /// is the owning backend's meter at fork time, which bit-equals a cold
+    /// prefill's, so adopters' meters continue identically.
+    pub fn snapshot(&self, traffic: Traffic) -> DensePrefixData {
+        DensePrefixData { keys: self.keys.fork_arc(), values: self.values.fork_arc(), traffic }
+    }
+
+    /// Adopt a dense snapshot's rows by reference into an empty cache.
+    /// Returns false on a non-empty cache or a shape mismatch.
+    pub fn adopt(&mut self, n_tokens: usize, d: &DensePrefixData) -> bool {
+        if self.len != 0 || d.keys.len() != n_tokens * self.shape.kv_dim() {
+            return false;
+        }
+        self.keys = SharedVec::from_shared(Arc::clone(&d.keys));
+        self.values = SharedVec::from_shared(Arc::clone(&d.values));
+        self.len = n_tokens;
+        true
+    }
+
+    /// Bytes held by reference to an adopted shared prefix.
+    pub fn shared_bytes(&self) -> usize {
+        self.keys.shared_bytes() + self.values.shared_bytes()
     }
 
     /// The shared `prefill_attend` loop for DenseCache-backed baselines:
@@ -196,10 +221,10 @@ impl DenseCache {
         qrows.clear();
         qrows.extend_from_slice(&qs[..n_dense * qd]);
         self.rope.apply_rows_offset(qrows, qd, start);
-        causal_attend_chunk(
+        causal_attend_chunk_seg(
             qrows,
-            &self.keys[..prefix * kvd],
-            &self.values[..prefix * kvd],
+            &self.keys.segs_to(prefix * kvd),
+            &self.values.segs_to(prefix * kvd),
             n_dense,
             prefix,
             shape.n_heads,
@@ -243,8 +268,8 @@ impl DenseCache {
         ks.reserve(sel.len() * kvd);
         vs.reserve(sel.len() * kvd);
         for &j in sel {
-            ks.extend_from_slice(&self.keys[j * kvd..(j + 1) * kvd]);
-            vs.extend_from_slice(&self.values[j * kvd..(j + 1) * kvd]);
+            ks.extend_from_slice(self.keys.row(j * kvd, kvd));
+            vs.extend_from_slice(self.values.row(j * kvd, kvd));
         }
         traffic.read_f32(2 * sel.len() * kvd);
     }
@@ -315,8 +340,8 @@ mod tests {
         let k = vec![1.0f32, 0.0, 0.0, 0.0];
         c.append(&k, &k, &mut t); // pos 0: identity
         c.append(&k, &k, &mut t); // pos 1: rotated
-        assert_eq!(&c.keys[..4], k.as_slice());
-        assert_ne!(&c.keys[4..8], k.as_slice());
+        assert_eq!(c.keys.row(0, 4), k.as_slice());
+        assert_ne!(c.keys.row(4, 4), k.as_slice());
     }
 
     #[test]

@@ -73,7 +73,7 @@ impl AttentionBackend for DoubleSparseAttention {
     fn append(&mut self, k: &[f32], v: &[f32]) {
         self.cache.append(k, v, &mut self.traffic);
         let kvd = self.cache.shape.kv_dim();
-        let rot = &self.cache.keys[(self.cache.len - 1) * kvd..self.cache.len * kvd];
+        let rot = self.cache.keys.row((self.cache.len - 1) * kvd, kvd);
         for &c in &self.channels {
             self.labels.push(rot[c]);
         }

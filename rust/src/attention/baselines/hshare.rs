@@ -75,14 +75,24 @@ impl AttentionBackend for HShareAttention {
             // dense key rows are contiguous, so this is one matmul_tn.
             pool_query(&shape, &self.scratch.qr, &mut self.scratch.pooled);
             self.scratch.scores.resize(len, 0.0);
-            crate::tensor::ops::matmul_tn(
-                &self.scratch.pooled,
-                &self.cache.keys,
-                &mut self.scratch.scores,
-                1,
-                kvd,
-                len,
-            );
+            // Per-token dots are independent, so scoring the shared and
+            // private key segments separately is bit-identical to one
+            // contiguous matmul_tn.
+            let mut j0 = 0usize;
+            for seg in self.cache.keys.segs() {
+                let rows = seg.len() / kvd;
+                if rows > 0 {
+                    crate::tensor::ops::matmul_tn(
+                        &self.scratch.pooled,
+                        seg,
+                        &mut self.scratch.scores[j0..j0 + rows],
+                        1,
+                        kvd,
+                        rows,
+                    );
+                }
+                j0 += rows;
+            }
             self.traffic.read_f32(len * kvd);
             top_k_indices_into(&self.scratch.scores, self.critical, &mut self.shared_indices);
         }

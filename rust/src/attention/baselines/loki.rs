@@ -63,7 +63,7 @@ impl AttentionBackend for LokiAttention {
         // Latent copy of the *rotated* key (post-RoPE PCA).
         let kvd = self.cache.shape.kv_dim();
         self.scratch.lat.resize(self.projector.rank, 0.0);
-        let rot = &self.cache.keys[(self.cache.len - 1) * kvd..self.cache.len * kvd];
+        let rot = self.cache.keys.row((self.cache.len - 1) * kvd, kvd);
         self.projector.project(rot, &mut self.scratch.lat);
         self.latents.extend_from_slice(&self.scratch.lat[..self.r]);
         self.traffic.write_f32(self.r);

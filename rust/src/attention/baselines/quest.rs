@@ -8,11 +8,22 @@
 use crate::attention::baselines::common::{
     dense_prefix_rows, pool_query, BaselineScratch, DenseCache,
 };
+use crate::attention::full::DensePrefixData;
 use crate::attention::{
-    merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
+    merge_selection_into, AttentionBackend, AttnShape, FootprintModel, PrefixSnapshot, Traffic,
 };
 use crate::tensor::ops::sparse_attend_threaded;
 use crate::tensor::top_k_indices_into;
+use std::sync::Arc;
+
+/// Quest's [`PrefixSnapshot`] payload: the dense rows plus the per-page
+/// min/max metadata at fork time. The metadata is copied per adopter (the
+/// final partial page's bounds keep folding as private tokens append).
+struct QuestPrefixData {
+    dense: DensePrefixData,
+    page_min: Vec<f32>,
+    page_max: Vec<f32>,
+}
 
 pub struct QuestAttention {
     cache: DenseCache,
@@ -48,7 +59,7 @@ impl QuestAttention {
     /// `pos`) into its page's min/max metadata.
     fn update_page_meta(&mut self, pos: usize) {
         let kvd = self.cache.shape.kv_dim();
-        let rot = &self.cache.keys[pos * kvd..(pos + 1) * kvd];
+        let rot = self.cache.keys.row(pos * kvd, kvd);
         if pos % self.page == 0 {
             // New page.
             self.page_min.extend_from_slice(rot);
@@ -191,6 +202,43 @@ impl AttentionBackend for QuestAttention {
         self.scratch.end_prefill();
     }
 
+    fn fork_prefix(&self, n_tokens: usize) -> Option<PrefixSnapshot> {
+        if n_tokens == 0 || n_tokens != self.cache.len {
+            return None;
+        }
+        let dense = self.cache.snapshot(self.traffic);
+        let shared_bytes = (dense.keys.len() + dense.values.len()) * 4;
+        Some(PrefixSnapshot {
+            n_tokens,
+            shared_bytes,
+            data: Arc::new(QuestPrefixData {
+                dense,
+                page_min: self.page_min.clone(),
+                page_max: self.page_max.clone(),
+            }),
+        })
+    }
+
+    fn adopt_prefix(&mut self, snap: &PrefixSnapshot) -> bool {
+        if self.cache.len != 0 {
+            return false;
+        }
+        let Some(d) = snap.data.downcast_ref::<QuestPrefixData>() else {
+            return false;
+        };
+        if !self.cache.adopt(snap.n_tokens, &d.dense) {
+            return false;
+        }
+        self.page_min = d.page_min.clone();
+        self.page_max = d.page_max.clone();
+        self.traffic = d.dense.traffic;
+        true
+    }
+
+    fn shared_prefix_bytes(&self) -> usize {
+        self.cache.shared_bytes()
+    }
+
     fn set_threads(&mut self, threads: usize) {
         self.scratch.threads = threads.max(1);
     }
@@ -235,7 +283,8 @@ mod tests {
             b.append(&k, &k.clone());
         }
         let kvd = 8;
-        for (pos, row) in b.cache.keys.chunks_exact(kvd).enumerate() {
+        let keys = b.cache.keys.to_vec();
+        for (pos, row) in keys.chunks_exact(kvd).enumerate() {
             let p = pos / 4;
             for c in 0..kvd {
                 assert!(b.page_min[p * kvd + c] <= row[c] + 1e-6);
@@ -286,6 +335,44 @@ mod tests {
         assert_eq!(a.page_min, b.page_min);
         assert_eq!(a.page_max, b.page_max);
         assert_eq!(a.traffic().written, b.traffic().written);
+    }
+
+    #[test]
+    fn fork_adopt_decode_bit_identical_to_cold() {
+        let shape = AttnShape::gqa(4, 2, 8, 128);
+        let (kvd, qd) = (shape.kv_dim(), shape.q_dim());
+        let mut rng = Rng::new(113);
+        let mut donor = QuestAttention::new(shape, 4, 2, 4, 8);
+        let mut cold = QuestAttention::new(shape, 4, 2, 4, 8);
+        // 26 tokens: the last page is partial, so its min/max metadata
+        // keeps folding as private appends land after adoption.
+        for _ in 0..26 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            donor.append(&k, &v);
+            cold.append(&k, &v);
+        }
+        let snap = donor.fork_prefix(donor.len()).expect("quest fork");
+        let mut adopted = QuestAttention::new(shape, 4, 2, 4, 8);
+        assert!(adopted.adopt_prefix(&snap));
+        assert_eq!(adopted.kv_bytes(), cold.kv_bytes());
+        assert_eq!(adopted.traffic(), cold.traffic());
+        assert!(adopted.shared_prefix_bytes() > 0);
+        for _ in 0..7 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            let q = rng.normal_vec(qd, 1.0);
+            let (mut oa, mut oc) = (vec![0.0f32; qd], vec![0.0f32; qd]);
+            adopted.append(&k, &v);
+            cold.append(&k, &v);
+            adopted.attend(&q, &mut oa);
+            cold.attend(&q, &mut oc);
+            assert_eq!(oa, oc);
+        }
+        assert_eq!(adopted.page_min, cold.page_min);
+        assert_eq!(adopted.page_max, cold.page_max);
+        // Donor metadata is untouched by adopter appends.
+        assert_eq!(donor.len(), 26);
     }
 
     #[test]

@@ -3,10 +3,12 @@
 //! Table 1 classifies it "Fixed pattern / low data movement / low accuracy".
 
 use crate::attention::baselines::common::{dense_prefix_rows, BaselineScratch, DenseCache};
+use crate::attention::full::DensePrefixData;
 use crate::attention::{
-    merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic,
+    merge_selection_into, AttentionBackend, AttnShape, FootprintModel, PrefixSnapshot, Traffic,
 };
 use crate::tensor::ops::sparse_attend_threaded;
+use std::sync::Arc;
 
 pub struct StreamingLlmAttention {
     cache: DenseCache,
@@ -123,6 +125,33 @@ impl AttentionBackend for StreamingLlmAttention {
 
     fn end_prefill(&mut self) {
         self.scratch.end_prefill();
+    }
+
+    fn fork_prefix(&self, n_tokens: usize) -> Option<PrefixSnapshot> {
+        if n_tokens == 0 || n_tokens != self.cache.len {
+            return None;
+        }
+        let dense = self.cache.snapshot(self.traffic);
+        let shared_bytes = (dense.keys.len() + dense.values.len()) * 4;
+        Some(PrefixSnapshot { n_tokens, shared_bytes, data: Arc::new(dense) })
+    }
+
+    fn adopt_prefix(&mut self, snap: &PrefixSnapshot) -> bool {
+        if self.cache.len != 0 {
+            return false;
+        }
+        let Some(d) = snap.data.downcast_ref::<DensePrefixData>() else {
+            return false;
+        };
+        if !self.cache.adopt(snap.n_tokens, d) {
+            return false;
+        }
+        self.traffic = d.traffic;
+        true
+    }
+
+    fn shared_prefix_bytes(&self) -> usize {
+        self.cache.shared_bytes()
     }
 
     fn set_threads(&mut self, threads: usize) {

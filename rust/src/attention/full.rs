@@ -11,17 +11,30 @@
 //! kernel [`crate::tensor::ops::causal_attend_chunk`] — tiled QKᵀ,
 //! row-softmax, PV — instead of n streaming decode passes.
 
-use super::{AttentionBackend, AttnShape, FootprintModel, Traffic};
+use super::{AttentionBackend, AttnShape, FootprintModel, PrefixSnapshot, SharedVec, Traffic};
 use crate::rope::RopeTable;
+use std::sync::Arc;
+
+/// Payload behind the dense fp32 backends' [`PrefixSnapshot`]s
+/// (FullAttention and the `DenseCache`-based baselines): post-RoPE key and
+/// value rows frozen behind `Arc`s, plus the donor's traffic meter at fork
+/// time (which bit-equals a cold prefill's, so adopters' meters continue
+/// identically).
+pub(crate) struct DensePrefixData {
+    pub keys: Arc<[f32]>,
+    pub values: Arc<[f32]>,
+    pub traffic: Traffic,
+}
 
 /// Dense KV cache + streaming-softmax attention.
 pub struct FullAttention {
     shape: AttnShape,
     rope: RopeTable,
-    /// (len, kv_dim) post-RoPE keys, row-major, grown by append.
-    keys: Vec<f32>,
+    /// (len, kv_dim) post-RoPE keys, row-major, grown by append; the
+    /// leading rows may be held by reference to an adopted shared prefix.
+    keys: SharedVec,
     /// (len, kv_dim) values.
-    values: Vec<f32>,
+    values: SharedVec,
     len: usize,
     traffic: Traffic,
     /// Scratch: per-head accumulator + rotated query (hot path must not
@@ -38,8 +51,8 @@ impl FullAttention {
         FullAttention {
             shape,
             rope,
-            keys: Vec::new(),
-            values: Vec::new(),
+            keys: SharedVec::new(),
+            values: SharedVec::new(),
             len: 0,
             traffic: Traffic::default(),
             scratch_acc: vec![0.0; shape.head_dim],
@@ -49,7 +62,7 @@ impl FullAttention {
     }
 
     /// Read-only view of the cached post-RoPE keys (used by analyses).
-    pub fn keys(&self) -> &[f32] {
+    pub fn keys(&self) -> &SharedVec {
         &self.keys
     }
 }
@@ -93,13 +106,13 @@ impl AttentionBackend for FullAttention {
             let acc = &mut self.scratch_acc;
             acc.fill(0.0);
             for j in 0..self.len {
-                let krow = &self.keys[j * kvd + kvh * d..j * kvd + (kvh + 1) * d];
+                let krow = self.keys.row(j * kvd + kvh * d, d);
                 let s = crate::tensor::ops::dot(qh, krow) * scale;
                 let m_new = m.max(s);
                 let corr = (m - m_new).exp();
                 let p = (s - m_new).exp();
                 l = l * corr + p;
-                let vrow = &self.values[j * kvd + kvh * d..j * kvd + (kvh + 1) * d];
+                let vrow = self.values.row(j * kvd + kvh * d, d);
                 for (a, &vv) in acc.iter_mut().zip(vrow) {
                     *a = *a * corr + p * vv;
                 }
@@ -123,10 +136,10 @@ impl AttentionBackend for FullAttention {
         assert_eq!(ks.len(), n * kvd);
         assert_eq!(vs.len(), n * kvd);
         let start = self.len;
-        let base = self.keys.len();
         self.keys.extend_from_slice(ks);
-        // Batched RoPE: one sweep over the chunk's rows at their positions.
-        self.rope.apply_rows_offset(&mut self.keys[base..], kvd, start);
+        // Batched RoPE: one sweep over the chunk's rows at their positions
+        // (the just-appended private tail — never the shared prefix).
+        self.rope.apply_rows_offset(self.keys.tail_mut(n * kvd), kvd, start);
         self.values.extend_from_slice(vs);
         self.len += n;
         self.traffic.write_f32(2 * n * kvd);
@@ -144,10 +157,10 @@ impl AttentionBackend for FullAttention {
         self.scratch_qr.clear();
         self.scratch_qr.extend_from_slice(qs);
         self.rope.apply_rows_offset(&mut self.scratch_qr, qd, start);
-        crate::tensor::ops::causal_attend_chunk(
+        crate::tensor::ops::causal_attend_chunk_seg(
             &self.scratch_qr,
-            &self.keys,
-            &self.values,
+            &self.keys.segs(),
+            &self.values.segs(),
             n,
             self.len,
             self.shape.n_heads,
@@ -165,6 +178,41 @@ impl AttentionBackend for FullAttention {
     fn forward_batch(&mut self, ks: &[f32], vs: &[f32], qs: &[f32], n: usize, out: &mut [f32]) {
         self.append_batch(ks, vs, n);
         self.prefill_attend(qs, n, out);
+    }
+
+    fn fork_prefix(&self, n_tokens: usize) -> Option<PrefixSnapshot> {
+        if n_tokens == 0 || n_tokens != self.len {
+            return None;
+        }
+        let keys = self.keys.fork_arc();
+        let values = self.values.fork_arc();
+        let shared_bytes = (keys.len() + values.len()) * 4;
+        Some(PrefixSnapshot {
+            n_tokens,
+            shared_bytes,
+            data: Arc::new(DensePrefixData { keys, values, traffic: self.traffic }),
+        })
+    }
+
+    fn adopt_prefix(&mut self, snap: &PrefixSnapshot) -> bool {
+        if !self.is_empty() {
+            return false;
+        }
+        let Some(d) = snap.data.downcast_ref::<DensePrefixData>() else {
+            return false;
+        };
+        if d.keys.len() != snap.n_tokens * self.shape.kv_dim() {
+            return false;
+        }
+        self.keys = SharedVec::from_shared(Arc::clone(&d.keys));
+        self.values = SharedVec::from_shared(Arc::clone(&d.values));
+        self.len = snap.n_tokens;
+        self.traffic = d.traffic;
+        true
+    }
+
+    fn shared_prefix_bytes(&self) -> usize {
+        self.keys.shared_bytes() + self.values.shared_bytes()
     }
 
     fn end_prefill(&mut self) {
@@ -243,7 +291,8 @@ mod tests {
         let mut qr = q.clone();
         b.rope.apply_multihead(&mut qr, b.len - 1);
         let mut exact = vec![0.0f32; shape.q_dim()];
-        super::super::exact_attention(&shape, &qr, &b.keys, &b.values, b.len, &mut exact);
+        let (keys, values) = (b.keys.to_vec(), b.values.to_vec());
+        super::super::exact_attention(&shape, &qr, &keys, &values, b.len, &mut exact);
         for (a, e) in out.iter().zip(&exact) {
             assert!((a - e).abs() < 1e-4, "{a} vs {e}");
         }
@@ -293,11 +342,56 @@ mod tests {
         }
         // Cache contents and canonical traffic metering agree exactly.
         assert_eq!(seq.len, bat.len);
-        for (a, b) in seq.keys.iter().zip(&bat.keys) {
+        for (a, b) in seq.keys.iter().zip(bat.keys.iter()) {
             assert!((a - b).abs() < 1e-6);
         }
         assert_eq!(seq.traffic().read, bat.traffic().read);
         assert_eq!(seq.traffic().written, bat.traffic().written);
+    }
+
+    #[test]
+    fn fork_adopt_decode_bit_identical_to_cold() {
+        use crate::attention::AttentionBackend as _;
+        let shape = AttnShape::gqa(4, 2, 8, 128);
+        let (kvd, qd) = (shape.kv_dim(), shape.q_dim());
+        let mut rng = Rng::new(59);
+        // Donor prefills 24 tokens and forks; cold gets the same tokens
+        // appended directly.
+        let mut donor = FullAttention::new(shape);
+        let mut cold = FullAttention::new(shape);
+        let rows: Vec<(Vec<f32>, Vec<f32>)> =
+            (0..24).map(|_| (rng.normal_vec(kvd, 1.0), rng.normal_vec(kvd, 1.0))).collect();
+        for (k, v) in &rows {
+            donor.append(k, v);
+            cold.append(k, v);
+        }
+        let snap = donor.fork_prefix(donor.len()).expect("full fork");
+        let mut adopted = FullAttention::new(shape);
+        assert!(adopted.adopt_prefix(&snap));
+        assert_eq!(adopted.len(), cold.len());
+        assert_eq!(adopted.kv_bytes(), cold.kv_bytes());
+        assert_eq!(adopted.traffic(), cold.traffic());
+        assert!(adopted.shared_prefix_bytes() > 0);
+        assert_eq!(cold.shared_prefix_bytes(), 0);
+        // Divergent suffix + decode must be bit-identical to cold.
+        for _ in 0..9 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            let q = rng.normal_vec(qd, 1.0);
+            let (mut oa, mut oc) = (vec![0.0f32; qd], vec![0.0f32; qd]);
+            adopted.append(&k, &v);
+            cold.append(&k, &v);
+            adopted.attend(&q, &mut oa);
+            cold.attend(&q, &mut oc);
+            assert_eq!(oa, oc, "adopted decode must bit-match cold");
+        }
+        assert_eq!(adopted.kv_bytes(), cold.kv_bytes());
+        assert_eq!(adopted.traffic(), cold.traffic());
+        // The donor is unaffected by its adopters' appends.
+        assert_eq!(donor.len(), 24);
+        // Fork requires a full capture.
+        assert!(donor.fork_prefix(23).is_none());
+        assert!(FullAttention::new(shape).fork_prefix(0).is_none());
     }
 
     #[test]

@@ -58,6 +58,34 @@
 //!   backend — concurrent decode of many sequences reads it from many
 //!   threads at once.
 //!
+//! # Prefix fork/adopt contract
+//!
+//! Shared-prefix KV reuse ([`crate::kvcache::PrefixCache`]) needs the
+//! cache *contents* of a prefill to be adoptable by later sequences. The
+//! trait carries a snapshot pair for that:
+//!
+//! * [`AttentionBackend::fork_prefix`]`(n_tokens)` — freeze the current
+//!   cache (exactly `n_tokens == len()` tokens, at a prefill-chunk
+//!   boundary) into an immutable, refcounted [`PrefixSnapshot`]. Backends
+//!   that cannot capture their state exactly return `None` and the caller
+//!   simply skips publication.
+//! * [`AttentionBackend::adopt_prefix`]`(snap)` — on an **empty** backend
+//!   of the same configuration, take the snapshot's tokens by reference.
+//!   The binding guarantee: an adopter is **bit-identical** to a backend
+//!   cold-prefilled over the same tokens — every later `attend`/
+//!   `forward_batch` output, every traffic meter, and `kv_bytes()` agree
+//!   exactly. Appends past the boundary go to private storage
+//!   (copy-on-write at the snapshot boundary); the shared spans are never
+//!   mutated.
+//!
+//! [`AttentionBackend::kv_bytes`] deliberately *includes* adopted shared
+//! bytes (so footprint models and compression ratios need no
+//! reuse-awareness); [`AttentionBackend::shared_prefix_bytes`] reports the
+//! by-reference portion so pool accounting can charge shared pages once
+//! across all adopters. [`SharedVec`] is the storage primitive backends
+//! use to hold an immutable shared span plus a private tail in one
+//! logical buffer.
+//!
 //! # Footprint contract: estimation vs metering
 //!
 //! Two trait surfaces describe cache memory and they must not be confused:
@@ -143,6 +171,179 @@ pub mod baselines {
 pub use full::FullAttention;
 pub use sals::{PrefillSparsity, SalsAttention, SalsConfig, SalsStageTimes, PREFILL_SPARSE_MIN_LEN};
 pub use traffic::Traffic;
+
+use std::any::Any;
+use std::ops::Index;
+use std::sync::Arc;
+
+/// An f32 buffer whose leading span may be held **by reference** to an
+/// immutable shared prefix (an `Arc<[f32]>` published by another
+/// sequence's [`AttentionBackend::fork_prefix`]) while appends land in a
+/// private tail — the storage primitive behind prefix reuse's
+/// copy-on-write boundary. Logical indexing is over the concatenation
+/// `shared ++ own`; the shared span is never mutated.
+///
+/// Backends align the boundary to a whole number of rows (tokens ×
+/// row-width), so per-row reads ([`SharedVec::row`]) never straddle it
+/// and segmented kernels ([`crate::tensor::ops::causal_attend_chunk_seg`])
+/// consume [`SharedVec::segs`] directly.
+#[derive(Clone, Debug, Default)]
+pub struct SharedVec {
+    shared: Option<Arc<[f32]>>,
+    own: Vec<f32>,
+}
+
+impl SharedVec {
+    pub fn new() -> SharedVec {
+        SharedVec::default()
+    }
+
+    /// A vector whose entire current content is the shared span.
+    pub fn from_shared(shared: Arc<[f32]>) -> SharedVec {
+        SharedVec { shared: Some(shared), own: Vec::new() }
+    }
+
+    /// Logical element count (shared + own).
+    pub fn len(&self) -> usize {
+        self.shared_len() + self.own.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Elements held by reference to the shared prefix.
+    pub fn shared_len(&self) -> usize {
+        self.shared.as_ref().map_or(0, |s| s.len())
+    }
+
+    /// Resident bytes of the by-reference span.
+    pub fn shared_bytes(&self) -> usize {
+        self.shared_len() * 4
+    }
+
+    /// Append to the private tail.
+    pub fn extend_from_slice(&mut self, xs: &[f32]) {
+        self.own.extend_from_slice(xs);
+    }
+
+    /// Mutable view of the last `n` elements — which must all be private
+    /// (in-place RoPE after an append never reaches the shared span).
+    pub fn tail_mut(&mut self, n: usize) -> &mut [f32] {
+        let m = self.own.len();
+        assert!(n <= m, "tail_mut({n}) reaches into the shared prefix ({m} private)");
+        &mut self.own[m - n..]
+    }
+
+    /// Contiguous view of logical elements `lo..hi`; panics if the range
+    /// straddles the shared/own boundary (row-aligned boundaries make
+    /// per-row reads safe by construction).
+    pub fn slice(&self, lo: usize, hi: usize) -> &[f32] {
+        assert!(lo <= hi && hi <= self.len(), "slice {lo}..{hi} of {}", self.len());
+        let ns = self.shared_len();
+        if lo >= ns {
+            &self.own[lo - ns..hi - ns]
+        } else if hi <= ns {
+            &self.shared.as_ref().unwrap()[lo..hi]
+        } else {
+            panic!("slice {lo}..{hi} straddles the shared boundary at {ns}")
+        }
+    }
+
+    /// Row view: logical elements `start..start + w`.
+    pub fn row(&self, start: usize, w: usize) -> &[f32] {
+        self.slice(start, start + w)
+    }
+
+    /// The two storage segments, shared first (either may be empty) —
+    /// feed directly to segment-aware kernels.
+    pub fn segs(&self) -> [&[f32]; 2] {
+        [self.shared.as_deref().unwrap_or(&[]), &self.own]
+    }
+
+    /// [`SharedVec::segs`] truncated to the first `end` logical elements.
+    pub fn segs_to(&self, end: usize) -> [&[f32]; 2] {
+        assert!(end <= self.len());
+        let ns = self.shared_len();
+        let a = self.shared.as_deref().unwrap_or(&[]);
+        if end <= ns {
+            [&a[..end], &[]]
+        } else {
+            [a, &self.own[..end - ns]]
+        }
+    }
+
+    /// Freeze the full current contents as an `Arc` for publication. A
+    /// pure adopter (no private tail) reuses its existing `Arc`, so
+    /// re-forking an adopted prefix copies nothing.
+    pub fn fork_arc(&self) -> Arc<[f32]> {
+        match (&self.shared, self.own.is_empty()) {
+            (Some(s), true) => Arc::clone(s),
+            _ => {
+                let mut v = Vec::with_capacity(self.len());
+                v.extend_from_slice(self.shared.as_deref().unwrap_or(&[]));
+                v.extend_from_slice(&self.own);
+                Arc::from(v)
+            }
+        }
+    }
+
+    /// Iterate logical elements in order.
+    pub fn iter(&self) -> impl Iterator<Item = &f32> {
+        self.shared.as_deref().unwrap_or(&[]).iter().chain(self.own.iter())
+    }
+
+    /// Copy out the logical contents.
+    pub fn to_vec(&self) -> Vec<f32> {
+        self.iter().copied().collect()
+    }
+}
+
+impl Index<usize> for SharedVec {
+    type Output = f32;
+    fn index(&self, i: usize) -> &f32 {
+        let ns = self.shared_len();
+        if i < ns {
+            &self.shared.as_ref().unwrap()[i]
+        } else {
+            &self.own[i - ns]
+        }
+    }
+}
+
+impl PartialEq for SharedVec {
+    /// Logical-content equality — where the shared boundary sits is a
+    /// storage detail, not part of the value.
+    fn eq(&self, other: &SharedVec) -> bool {
+        self.len() == other.len() && self.iter().zip(other.iter()).all(|(a, b)| a == b)
+    }
+}
+
+/// Type-erased immutable capture of one backend layer's cache at a
+/// chunk-aligned token boundary, produced by
+/// [`AttentionBackend::fork_prefix`] and consumed by
+/// [`AttentionBackend::adopt_prefix`]. Cloning is cheap (refcount bumps);
+/// the payload is backend-specific and adopters downcast it.
+#[derive(Clone)]
+pub struct PrefixSnapshot {
+    /// Tokens the snapshot freezes (== the donor's `len()` at fork time).
+    pub n_tokens: usize,
+    /// Resident bytes adopters will hold *by reference* (the refcounted
+    /// panels/pages — per-adopter private copies like fp32 rings are
+    /// excluded). Pool accounting charges these once across adopters.
+    pub shared_bytes: usize,
+    /// Backend-specific payload.
+    pub data: Arc<dyn Any + Send + Sync>,
+}
+
+impl std::fmt::Debug for PrefixSnapshot {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PrefixSnapshot")
+            .field("n_tokens", &self.n_tokens)
+            .field("shared_bytes", &self.shared_bytes)
+            .finish_non_exhaustive()
+    }
+}
 
 /// Shape parameters of one attention layer.
 #[derive(Clone, Copy, Debug)]
@@ -293,6 +494,37 @@ pub trait AttentionBackend {
     /// pin prefill-sized buffers through their whole decode phase.
     /// Default no-op.
     fn end_prefill(&mut self) {}
+
+    /// Freeze the current cache into an immutable, refcounted
+    /// [`PrefixSnapshot`] another sequence can adopt (see the module-level
+    /// *Prefix fork/adopt contract*). Only a full capture is supported:
+    /// callers pass `n_tokens == len()` at a prefill-chunk boundary.
+    /// Backends return `None` when they cannot freeze their state exactly
+    /// (no fork support, or transient prefill-only state that an adopter
+    /// could not reproduce) — callers then skip publication. Default: no
+    /// fork support.
+    fn fork_prefix(&self, _n_tokens: usize) -> Option<PrefixSnapshot> {
+        None
+    }
+
+    /// Adopt a snapshot produced by [`AttentionBackend::fork_prefix`] on a
+    /// backend of the same configuration. Must be called on an **empty**
+    /// backend. Returns `false` when the payload is foreign or adoption is
+    /// unsupported (callers fall back to cold prefill). On success the
+    /// backend is bit-identical — outputs, traffic meters, `kv_bytes()` —
+    /// to one cold-prefilled over the snapshot's tokens, with the
+    /// refcounted spans held by reference. Default: unsupported.
+    fn adopt_prefix(&mut self, _snap: &PrefixSnapshot) -> bool {
+        false
+    }
+
+    /// Resident bytes currently held *by reference* to an adopted shared
+    /// prefix. Included in [`AttentionBackend::kv_bytes`] (adopters meter
+    /// like cold sequences); the engine subtracts this when charging the
+    /// pool so shared pages are paid for once. Default 0.
+    fn shared_prefix_bytes(&self) -> usize {
+        0
+    }
 
     /// Worker-thread share for *intra-attend* parallelism (per-KV-head
     /// panel fan-out, token-block score scans). The engine plumbs its
@@ -499,6 +731,74 @@ mod tests {
         for (x, y) in o1.iter().zip(&o2) {
             assert!((x - y).abs() < 1e-5);
         }
+    }
+
+    #[test]
+    fn shared_vec_segments_and_indexing() {
+        let mut v = SharedVec::new();
+        v.extend_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        let arc = v.fork_arc();
+        let mut w = SharedVec::from_shared(arc);
+        w.extend_from_slice(&[5.0, 6.0]);
+        assert_eq!(w.len(), 6);
+        assert_eq!(w.shared_len(), 4);
+        assert_eq!(w.shared_bytes(), 16);
+        assert_eq!(w[0], 1.0);
+        assert_eq!(w[4], 5.0);
+        assert_eq!(w.row(2, 2), &[3.0, 4.0]);
+        assert_eq!(w.row(4, 2), &[5.0, 6.0]);
+        let [a, b] = w.segs();
+        assert_eq!(a, &[1.0, 2.0, 3.0, 4.0]);
+        assert_eq!(b, &[5.0, 6.0]);
+        let [a, b] = w.segs_to(3);
+        assert_eq!(a, &[1.0, 2.0, 3.0]);
+        assert!(b.is_empty());
+        let [a, b] = w.segs_to(5);
+        assert_eq!(a.len(), 4);
+        assert_eq!(b, &[5.0]);
+        // Logical equality ignores where the boundary sits.
+        let mut flat = SharedVec::new();
+        flat.extend_from_slice(&[1.0, 2.0, 3.0, 4.0, 5.0, 6.0]);
+        assert_eq!(w, flat);
+        assert_eq!(w.to_vec(), flat.to_vec());
+        // tail_mut stays inside the private tail.
+        w.tail_mut(2)[0] = 50.0;
+        assert_eq!(w[4], 50.0);
+        assert_ne!(w, flat);
+    }
+
+    #[test]
+    #[should_panic(expected = "straddles")]
+    fn shared_vec_slice_across_boundary_panics() {
+        let mut v = SharedVec::new();
+        v.extend_from_slice(&[1.0, 2.0]);
+        let mut w = SharedVec::from_shared(v.fork_arc());
+        w.extend_from_slice(&[3.0]);
+        w.slice(1, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "shared prefix")]
+    fn shared_vec_tail_mut_into_shared_panics() {
+        let mut v = SharedVec::new();
+        v.extend_from_slice(&[1.0, 2.0]);
+        let mut w = SharedVec::from_shared(v.fork_arc());
+        w.extend_from_slice(&[3.0]);
+        w.tail_mut(2);
+    }
+
+    #[test]
+    fn shared_vec_refork_reuses_arc() {
+        let mut v = SharedVec::new();
+        v.extend_from_slice(&[1.0, 2.0, 3.0]);
+        let arc = v.fork_arc();
+        let w = SharedVec::from_shared(Arc::clone(&arc));
+        // Pure adopter: refork is the same allocation, no copy.
+        assert!(Arc::ptr_eq(&arc, &w.fork_arc()));
+        // A private tail forces materialization.
+        let mut x = SharedVec::from_shared(arc);
+        x.extend_from_slice(&[4.0]);
+        assert_eq!(x.fork_arc()[..], [1.0, 2.0, 3.0, 4.0]);
     }
 
     #[test]

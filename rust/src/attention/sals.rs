@@ -80,13 +80,17 @@
 //! DESIGN.md §Prefill-Sparsity for the retention + metering contracts.
 
 use super::baselines::common::pool_query;
-use super::{merge_selection_into, AttentionBackend, AttnShape, FootprintModel, Traffic};
+use super::{
+    merge_selection_into, AttentionBackend, AttnShape, FootprintModel, PrefixSnapshot, SharedVec,
+    Traffic,
+};
 use crate::lowrank::Projector;
-use crate::quant::{Bits, TokenQuantStore};
+use crate::quant::{Bits, QuantSnapshot, TokenQuantStore};
 use crate::rope::RopeTable;
 use crate::tensor::ops::{FusedAttendScratch, FusedLane, SparseAttendScratch};
 use crate::tensor::top_k_indices_into;
 use crate::util::threadpool;
+use std::sync::Arc;
 
 /// Below this cache length the Stage-1 score scan runs serial: the scan is
 /// one `len·r*` unit-stride pass, and under ~4K tokens the scoped-thread
@@ -227,6 +231,22 @@ impl SalsStageTimes {
     }
 }
 
+/// [`PrefixSnapshot`] payload for SALS: the split latent panels behind
+/// `Arc`s (adopters index them through [`SharedVec`] by reference — the
+/// bulk of the state), the fp32 recent-key ring by copy (appends overwrite
+/// slots in place, so it must be private per adopter; it is
+/// `recent_cap·kv_dim` floats, length-independent), and the quantized
+/// value store as a [`QuantSnapshot`] (frozen pages shared, fp32 tail
+/// copied). Carries the donor's traffic meters so an adopter's counters
+/// continue exactly as a cold-prefilled sequence's would.
+struct SalsPrefixData {
+    latent_score: Arc<[f32]>,
+    latent_rem: Arc<[f32]>,
+    recent_keys: Vec<f32>,
+    values: QuantSnapshot,
+    traffic: Traffic,
+}
+
 /// SALS attention backend for one layer.
 pub struct SalsAttention {
     shape: AttnShape,
@@ -249,11 +269,14 @@ pub struct SalsAttention {
     /// [`AttentionBackend::set_threads`]).
     threads: usize,
     /// (len, r*) scoring panel: each latent row's leading r* dims,
-    /// contiguous — the only latent bytes Stage-1 scoring streams.
-    latent_score: Vec<f32>,
+    /// contiguous — the only latent bytes Stage-1 scoring streams. A
+    /// [`SharedVec`]: an adopted prefix's rows live in a refcounted shared
+    /// segment, private appends follow (the boundary is row-aligned, so
+    /// scans split into at most two unit-stride passes).
+    latent_score: SharedVec,
     /// (len, r − r*) remainder panel: the trailing dims, touched only when
-    /// a selected row is reconstructed.
-    latent_rem: Vec<f32>,
+    /// a selected row is reconstructed. Shares the [`SharedVec`] layout.
+    latent_rem: SharedVec,
     /// fp32 pre-RoPE keys for the recent window (ring buffer of
     /// `recent + 1` rows, indexed by absolute position % capacity).
     recent_keys: Vec<f32>,
@@ -341,8 +364,8 @@ impl SalsAttention {
             u_t_heads,
             rope,
             threads: 1,
-            latent_score: Vec::new(),
-            latent_rem: Vec::new(),
+            latent_score: SharedVec::new(),
+            latent_rem: SharedVec::new(),
             recent_keys: vec![0.0; recent_cap * shape.kv_dim()],
             recent_cap,
             values,
@@ -411,34 +434,59 @@ impl SalsAttention {
     fn score_panel(&mut self) {
         let rs = self.cfg.r_star;
         self.scratch_scores.resize(self.len, 0.0);
+        // Each score is an independent dot, so scanning an adopted shared
+        // segment and the private tail as separate matmul_tn passes is
+        // bit-identical to one contiguous scan.
         if self.threads > 1 && self.len >= SCORE_PAR_MIN_LEN {
             let qlat = &self.scratch_qlat[..rs];
             let panel = &self.latent_score;
+            let n0 = panel.shared_len() / rs;
             threadpool::parallel_chunks_mut(
                 &mut self.scratch_scores,
                 SCORE_PAR_BLOCK,
                 self.threads,
                 |bi, chunk| {
                     let lo = bi * SCORE_PAR_BLOCK;
-                    crate::tensor::ops::matmul_tn(
-                        qlat,
-                        &panel[lo * rs..(lo + chunk.len()) * rs],
-                        chunk,
-                        1,
-                        rs,
-                        chunk.len(),
-                    );
+                    let hi = lo + chunk.len();
+                    let mid = n0.clamp(lo, hi);
+                    if mid > lo {
+                        crate::tensor::ops::matmul_tn(
+                            qlat,
+                            panel.slice(lo * rs, mid * rs),
+                            &mut chunk[..mid - lo],
+                            1,
+                            rs,
+                            mid - lo,
+                        );
+                    }
+                    if hi > mid {
+                        crate::tensor::ops::matmul_tn(
+                            qlat,
+                            panel.slice(mid * rs, hi * rs),
+                            &mut chunk[mid - lo..],
+                            1,
+                            rs,
+                            hi - mid,
+                        );
+                    }
                 },
             );
         } else {
-            crate::tensor::ops::matmul_tn(
-                &self.scratch_qlat[..rs],
-                &self.latent_score,
-                &mut self.scratch_scores,
-                1,
-                rs,
-                self.len,
-            );
+            let mut j0 = 0usize;
+            for seg in self.latent_score.segs() {
+                let rows = seg.len() / rs;
+                if rows > 0 {
+                    crate::tensor::ops::matmul_tn(
+                        &self.scratch_qlat[..rs],
+                        seg,
+                        &mut self.scratch_scores[j0..j0 + rows],
+                        1,
+                        rs,
+                        rows,
+                    );
+                }
+                j0 += rows;
+            }
         }
         self.traffic.read_f32(self.len * rs);
     }
@@ -482,8 +530,8 @@ impl SalsAttention {
         let mut m = 0;
         for &j in &self.scratch_sel {
             if j < recent_lo {
-                self.scratch_lat.extend_from_slice(&self.latent_score[j * rs..(j + 1) * rs]);
-                self.scratch_lat.extend_from_slice(&self.latent_rem[j * rem..(j + 1) * rem]);
+                self.scratch_lat.extend_from_slice(self.latent_score.row(j * rs, rs));
+                self.scratch_lat.extend_from_slice(self.latent_rem.row(j * rem, rem));
                 m += 1;
             }
         }
@@ -610,8 +658,8 @@ impl SalsAttention {
         self.scratch_lat.clear();
         self.scratch_lat.reserve(n_recon * r);
         for &j in &self.scratch_sel[..n_recon] {
-            self.scratch_lat.extend_from_slice(&self.latent_score[j * rs..(j + 1) * rs]);
-            self.scratch_lat.extend_from_slice(&self.latent_rem[j * rem..(j + 1) * rem]);
+            self.scratch_lat.extend_from_slice(self.latent_score.row(j * rs, rs));
+            self.scratch_lat.extend_from_slice(self.latent_rem.row(j * rem, rem));
         }
 
         let sel = &self.scratch_sel;
@@ -1002,6 +1050,64 @@ impl AttentionBackend for SalsAttention {
         self.stage_attend_fused(q, out);
     }
 
+    fn fork_prefix(&self, n_tokens: usize) -> Option<PrefixSnapshot> {
+        if n_tokens == 0 || n_tokens != self.len {
+            return None;
+        }
+        // While block-sparse prefill is live the exact prefill panels are
+        // part of the attend-facing state, and an adopter cannot rebuild
+        // them from the compressed stores — forks are only offered once
+        // `end_prefill` has dropped the panels (decode state is identical
+        // either way, so post-prefill forks stay exact).
+        if self.cfg.prefill.is_some() && self.prefill_live {
+            return None;
+        }
+        let data = SalsPrefixData {
+            latent_score: self.latent_score.fork_arc(),
+            latent_rem: self.latent_rem.fork_arc(),
+            recent_keys: self.recent_keys.clone(),
+            values: self.values.snapshot(),
+            traffic: self.traffic,
+        };
+        let shared_bytes =
+            (data.latent_score.len() + data.latent_rem.len()) * 4 + data.values.shared_bytes();
+        Some(PrefixSnapshot { n_tokens, shared_bytes, data: Arc::new(data) })
+    }
+
+    fn adopt_prefix(&mut self, snap: &PrefixSnapshot) -> bool {
+        if self.len != 0 {
+            return false;
+        }
+        let Some(d) = snap.data.downcast_ref::<SalsPrefixData>() else {
+            return false;
+        };
+        let rs = self.cfg.r_star;
+        let rem = self.cfg.rank - rs;
+        if d.latent_score.len() != snap.n_tokens * rs
+            || d.latent_rem.len() != snap.n_tokens * rem
+            || d.recent_keys.len() != self.recent_keys.len()
+            || d.values.len() != snap.n_tokens
+        {
+            return false;
+        }
+        self.latent_score = SharedVec::from_shared(Arc::clone(&d.latent_score));
+        self.latent_rem = SharedVec::from_shared(Arc::clone(&d.latent_rem));
+        self.recent_keys.copy_from_slice(&d.recent_keys);
+        self.values.adopt(&d.values);
+        self.len = snap.n_tokens;
+        self.traffic = d.traffic;
+        // Forks are gated on the donor having ended (or never run) sparse
+        // prefill, so the adopter starts in plain decode state.
+        self.prefill_live = false;
+        true
+    }
+
+    fn shared_prefix_bytes(&self) -> usize {
+        self.latent_score.shared_bytes()
+            + self.latent_rem.shared_bytes()
+            + self.values.shared_bytes()
+    }
+
     fn set_threads(&mut self, threads: usize) {
         self.threads = threads.max(1);
     }
@@ -1274,8 +1380,7 @@ mod tests {
         let scores = sals.latent_scores(&q);
         proj.project(&q, &mut lat);
         for (j, &s) in scores.iter().enumerate() {
-            let expect =
-                crate::tensor::ops::dot(&lat[..4], &sals.latent_score[j * 4..(j + 1) * 4]);
+            let expect = crate::tensor::ops::dot(&lat[..4], sals.latent_score.row(j * 4, 4));
             assert!((s - expect).abs() < 1e-5, "score {j}: {s} vs {expect}");
         }
     }
@@ -1413,10 +1518,10 @@ mod tests {
             assert!((a - b).abs() < 1e-3, "{a} vs {b}");
         }
         // Both split panels must agree between the two paths.
-        for (a, b) in seq.latent_score.iter().zip(&bat.latent_score) {
+        for (a, b) in seq.latent_score.iter().zip(bat.latent_score.iter()) {
             assert!((a - b).abs() < 1e-4, "score panel {a} vs {b}");
         }
-        for (a, b) in seq.latent_rem.iter().zip(&bat.latent_rem) {
+        for (a, b) in seq.latent_rem.iter().zip(bat.latent_rem.iter()) {
             assert!((a - b).abs() < 1e-4, "rem panel {a} vs {b}");
         }
     }
@@ -1440,10 +1545,10 @@ mod tests {
         assert_eq!(a.len, b.len);
         assert_eq!(a.kv_bytes(), b.kv_bytes());
         assert_eq!(a.traffic().written, b.traffic().written);
-        for (x, y) in a.latent_score.iter().zip(&b.latent_score) {
+        for (x, y) in a.latent_score.iter().zip(b.latent_score.iter()) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
         }
-        for (x, y) in a.latent_rem.iter().zip(&b.latent_rem) {
+        for (x, y) in a.latent_rem.iter().zip(b.latent_rem.iter()) {
             assert!((x - y).abs() < 1e-4, "{x} vs {y}");
         }
         assert_eq!(a.recent_keys, b.recent_keys);
@@ -1685,6 +1790,84 @@ mod tests {
         sparse.attend(&q, &mut d1);
         dense.attend(&q, &mut d2);
         assert_eq!(d1, d2, "decode after prefill must be path-independent");
+    }
+
+    #[test]
+    fn fork_adopt_decode_bit_identical_to_cold() {
+        // Donor and a cold control ingest the same 29 tokens: wraps the
+        // 8-row recent ring 3×, and 29 % group(8) = 5 leaves a partial
+        // quant group in the fp32 tail — both boundaries cross the fork.
+        // The adopter must then decode BIT-identically to the control,
+        // with equal kv_bytes and traffic meters (the engine's accounting
+        // and the bench's parity check both rely on this exactness).
+        let shape = AttnShape::gqa(4, 2, 8, 128);
+        let kvd = shape.kv_dim();
+        let qd = shape.q_dim();
+        let mut rng = Rng::new(117);
+        let proj = make_projector(kvd, 8, 4, &mut rng);
+        let cfg = cfg_small(8);
+        let mut donor = SalsAttention::new(shape, cfg.clone(), proj.clone());
+        let mut cold = SalsAttention::new(shape, cfg.clone(), proj.clone());
+        let n = 29;
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        donor.append_batch(&ks, &vs, n);
+        cold.append_batch(&ks, &vs, n);
+        assert!(donor.fork_prefix(n - 1).is_none(), "interior forks unsupported");
+        let snap = donor.fork_prefix(n).expect("fork at full length");
+        let mut adopter = SalsAttention::new(shape, cfg, proj);
+        assert!(adopter.adopt_prefix(&snap));
+        assert_eq!(adopter.len(), n);
+        assert_eq!(adopter.kv_bytes(), cold.kv_bytes());
+        assert_eq!(adopter.traffic(), cold.traffic());
+        assert!(adopter.shared_prefix_bytes() > 0, "panels must be held by reference");
+        // 10 decode steps span a quant-group freeze and more ring wraps.
+        for step in 0..10 {
+            let k = rng.normal_vec(kvd, 1.0);
+            let v = rng.normal_vec(kvd, 1.0);
+            let q = rng.normal_vec(qd, 1.0);
+            adopter.append(&k, &v);
+            cold.append(&k, &v);
+            let mut oa = vec![0.0f32; qd];
+            let mut oc = vec![0.0f32; qd];
+            adopter.attend(&q, &mut oa);
+            cold.attend(&q, &mut oc);
+            assert_eq!(oa, oc, "decode step {step} diverged from cold prefill");
+        }
+        assert_eq!(adopter.kv_bytes(), cold.kv_bytes());
+        assert_eq!(adopter.traffic(), cold.traffic());
+        // Donor is untouched by its adopters.
+        assert_eq!(donor.len(), n);
+        // An adopter that has appended past the boundary can itself be
+        // forked at its new full length (shared prefix + private tail are
+        // materialized into a fresh publication).
+        let snap2 = adopter.fork_prefix(n + 10).expect("refork after appends");
+        assert_eq!(snap2.n_tokens, n + 10);
+    }
+
+    #[test]
+    fn fork_gated_while_sparse_prefill_live() {
+        // Live block-sparse prefill keeps exact panels an adopter cannot
+        // rebuild — fork_prefix must refuse until end_prefill drops them.
+        let shape = AttnShape::mha(2, 8, 128);
+        let kvd = shape.kv_dim();
+        let qd = shape.q_dim();
+        let mut rng = Rng::new(119);
+        let proj = make_projector(kvd, 8, 4, &mut rng);
+        let cfg = SalsConfig {
+            prefill: Some(PrefillSparsity { block: 8, tau: 1.0, top_blocks: 0, min_len: 0 }),
+            ..cfg_small(8)
+        };
+        let mut b = SalsAttention::new(shape, cfg, proj);
+        let n = 16;
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        let qs = rng.normal_vec(n * qd, 1.0);
+        let mut out = vec![0.0f32; n * qd];
+        b.forward_batch(&ks, &vs, &qs, n, &mut out);
+        assert!(b.fork_prefix(n).is_none(), "live prefill panels must gate forks");
+        b.end_prefill();
+        assert!(b.fork_prefix(n).is_some(), "post-prefill forks are exact");
     }
 
     #[test]

@@ -55,8 +55,11 @@
 
 use super::metrics::Metrics;
 use super::request::{Request, Response};
-use crate::kvcache::PagePool;
-use crate::model::{BackendFactory, BatchScratch, Model, Scratch, SequenceFootprint, SequenceState};
+use crate::kvcache::{PagePool, PrefixCache, SharedId};
+use crate::model::{
+    BackendFactory, BatchScratch, Model, Scratch, SequenceFootprint, SequenceSnapshot,
+    SequenceState,
+};
 use crate::util::threadpool;
 use std::collections::VecDeque;
 use std::time::Instant;
@@ -71,6 +74,12 @@ pub struct EngineConfig {
     pub pool_budget: usize,
     /// Worker threads for stepping sequences (0 = auto).
     pub threads: usize,
+    /// Shared-prefix KV reuse: publish chunk-aligned prompt prefixes into
+    /// a content-addressed cache and let later requests adopt them,
+    /// skipping the shared prefill work and charging the shared pages
+    /// once. Off by default — publications consume pool pages, which
+    /// changes capacity accounting for workloads that never re-adopt.
+    pub prefix_reuse: bool,
 }
 
 impl Default for EngineConfig {
@@ -81,6 +90,7 @@ impl Default for EngineConfig {
             page_bytes: 64 * 1024,
             pool_budget: 1 << 30,
             threads: 0,
+            prefix_reuse: false,
         }
     }
 }
@@ -108,8 +118,15 @@ struct Running {
     first_step: Option<Instant>,
     first_token: Option<Instant>,
     /// Bytes reserved at admission (footprint at the decode horizon) —
-    /// the accounting floor while this sequence runs.
+    /// the accounting floor while this sequence runs. Already discounted
+    /// by the adopted prefix's shared bytes when `adopted` is set.
     reserved_bytes: usize,
+    /// Shared-prefix holding this sequence adopted at admission (a
+    /// refcount it must release when it finishes or is preempted).
+    adopted: Option<SharedId>,
+    /// Whether this sequence already attempted its one prefix
+    /// publication (at its largest complete-chunk prefill boundary).
+    published: bool,
 }
 
 /// The serving engine.
@@ -121,6 +138,10 @@ pub struct Engine {
     footprint: SequenceFootprint,
     pub cfg: EngineConfig,
     pool: PagePool,
+    /// Content-addressed index of published prompt prefixes (payload: the
+    /// per-layer snapshot an adopter re-hydrates from). Only populated
+    /// when `cfg.prefix_reuse` is on.
+    prefix_cache: PrefixCache<SequenceSnapshot>,
     waiting: VecDeque<Request>,
     running: Vec<Running>,
     /// Engine-owned scratch for the cross-sequence batched decode phase,
@@ -135,12 +156,14 @@ impl Engine {
         let pool = PagePool::with_budget(cfg.page_bytes, cfg.pool_budget);
         let batch_scratch = BatchScratch::sized(&model.cfg, cfg.max_batch, cfg.threads);
         let footprint = SequenceFootprint::of(&model.cfg, &factory);
+        let prefix_cache = PrefixCache::new(cfg.prefill_chunk.max(1));
         Engine {
             model,
             factory,
             footprint,
             cfg,
             pool,
+            prefix_cache,
             waiting: VecDeque::new(),
             running: Vec::new(),
             batch_scratch,
@@ -184,11 +207,39 @@ impl Engine {
     fn admit(&mut self) {
         while self.running.len() < self.cfg.max_batch {
             let Some(front) = self.waiting.front() else { break };
+            // Prefix reuse: the longest published prefix of what this
+            // request would prefill (prompt ++ carried generated tokens).
+            // Adoption must leave at least one token to prefill — the
+            // suffix pass is what produces the first logits.
+            let mut adoption: Option<(usize, SharedId, SequenceSnapshot)> =
+                if self.cfg.prefix_reuse {
+                    let mut toks =
+                        Vec::with_capacity(front.prompt.len() + front.generated.len());
+                    toks.extend_from_slice(&front.prompt);
+                    toks.extend_from_slice(&front.generated);
+                    self.prefix_cache
+                        .lookup_longest(&toks)
+                        .filter(|&(n, _, _)| n < toks.len())
+                        .map(|(n, id, snap)| (n, id, snap.clone()))
+                } else {
+                    None
+                };
             // Reserve the full-horizon footprint NOW: later iterations of
             // this loop see the reduced free-page count, so a burst of
             // requests can no longer all be admitted against the same
             // memory (the pre-PR-3 over-commit→preemption-churn bug).
             let mut est = self.admission_bytes(front);
+            if let Some((_, id, snap)) = &adoption {
+                // Retain BEFORE reserving so our own reservation's
+                // eviction pass cannot reclaim the holding we are about
+                // to adopt; the private price excludes the shared bytes,
+                // which the shared ledger already charges once.
+                if self.pool.retain_shared(*id) {
+                    est = est.saturating_sub(snap.shared_bytes());
+                } else {
+                    adoption = None; // index/pool desync — cold admit
+                }
+            }
             let pool_bytes = self.pool.page_bytes * self.pool.total_pages;
             if est > pool_bytes && self.running.is_empty() {
                 // The horizon exceeds even an EMPTY pool (e.g. a huge
@@ -200,10 +251,14 @@ impl Engine {
                 est = pool_bytes;
             }
             if self.pool.reserve(front.id, est).is_err() {
+                if let Some((_, id, _)) = adoption {
+                    self.pool.release_shared(id);
+                }
                 break; // backpressure
             }
+            self.drain_evictions();
             let mut req = self.waiting.pop_front().unwrap();
-            let state = SequenceState::new(&self.model.cfg, &self.factory);
+            let mut state = SequenceState::new(&self.model.cfg, &self.factory);
             let scratch = Scratch::new(&self.model.cfg);
             // Resume support: a preempted request carries its emitted
             // tokens — recompute prefills prompt ++ generated and decode
@@ -213,6 +268,23 @@ impl Engine {
             let mut prefill_tokens = Vec::with_capacity(req.prompt.len() + out.len());
             prefill_tokens.extend_from_slice(&req.prompt);
             prefill_tokens.extend_from_slice(&out);
+            // Re-hydrate the adopted prefix: the backends take the frozen
+            // panels by reference and prefill resumes at the boundary.
+            let mut prefilled = 0usize;
+            let mut adopted = None;
+            if let Some((n, id, snap)) = adoption {
+                if state.adopt_prefix(&snap) {
+                    prefilled = n;
+                    adopted = Some(id);
+                    self.metrics.prefix_adoptions += 1;
+                    self.metrics.prefill_tokens_avoided += n;
+                } else {
+                    // A refused adopt may leave layers partially adopted;
+                    // the state must be rebuilt cold, never patched.
+                    state = SequenceState::new(&self.model.cfg, &self.factory);
+                    self.pool.release_shared(id);
+                }
+            }
             // Resumed requests keep their ORIGINAL scheduling/first-token
             // timestamps: the first token is never re-emitted, so TTFT
             // and queue delay must describe the first run.
@@ -223,16 +295,27 @@ impl Engine {
                 state,
                 scratch,
                 prefill_tokens,
-                prefilled: 0,
+                prefilled,
                 out,
                 logits: None,
                 finished: false,
                 first_step,
                 first_token,
                 reserved_bytes: est,
+                adopted,
+                published: false,
             });
         }
         self.metrics.peak_running = self.metrics.peak_running.max(self.running.len());
+    }
+
+    /// Sync the prefix index with holdings the pool evicted under
+    /// pressure (any reserve/publish may evict unreferenced entries).
+    fn drain_evictions(&mut self) {
+        for id in self.pool.take_evicted() {
+            self.prefix_cache.remove_shared(id);
+            self.metrics.shared_prefix_evictions += 1;
+        }
     }
 
     /// One engine step. Returns the number of sequences that actually did
@@ -259,7 +342,8 @@ impl Engine {
         let stepped;
         let mut decoded = 0usize;
         {
-            let Engine { model, running, batch_scratch, .. } = self;
+            let Engine { model, running, batch_scratch, pool, prefix_cache, metrics, cfg, .. } =
+                self;
             let model: &Model = model;
 
             // ---- partition: prefilling vs decode-ready ----
@@ -318,6 +402,40 @@ impl Engine {
                 r.prefilled = hi;
             });
 
+            // ---- prefix publication: when a sequence's prefill crosses
+            // its largest complete-chunk boundary (which it does exactly
+            // once — prefill advances in whole chunks), freeze those
+            // tokens into the shared ledger + index so later requests
+            // with the same prompt prefix can adopt instead of
+            // recomputing. One attempt per sequence; an existing entry
+            // for the same tokens wins; a backend that refuses to fork
+            // (e.g. SALS mid-sparse-prefill) just skips publication. ----
+            if cfg.prefix_reuse {
+                for r in prefilling.iter_mut() {
+                    let len = r.prefill_tokens.len();
+                    if r.published
+                        || r.prefilled == 0
+                        || r.prefilled % prefill_chunk != 0
+                        || len - r.prefilled >= prefill_chunk
+                    {
+                        continue;
+                    }
+                    r.published = true;
+                    let key = &r.prefill_tokens[..r.prefilled];
+                    if prefix_cache.contains(key) {
+                        continue;
+                    }
+                    let Some(snap) = r.state.fork_prefix(r.prefilled) else { continue };
+                    let Ok(id) = pool.publish_shared(snap.shared_bytes()) else { continue };
+                    for ev in pool.take_evicted() {
+                        prefix_cache.remove_shared(ev);
+                        metrics.shared_prefix_evictions += 1;
+                    }
+                    prefix_cache.insert(key, id, snap);
+                    metrics.prefix_publications += 1;
+                }
+            }
+
             // ---- decode phase: sample pending logits, then ONE stacked
             // forward for every sequence still generating ----
             let mut batch: Vec<(&mut Running, usize)> = Vec::with_capacity(decoding.len());
@@ -369,6 +487,11 @@ impl Engine {
             if self.running[i].finished {
                 let r = self.running.remove(i);
                 self.pool.release(r.req.id);
+                if let Some(id) = r.adopted {
+                    // Drop the adoption refcount; the holding stays
+                    // resident as reusable cache until pressure evicts it.
+                    self.pool.release_shared(id);
+                }
                 let arrival = r.req.arrival.unwrap_or(now);
                 let end = Instant::now();
                 self.metrics.requests_completed += 1;
@@ -402,7 +525,15 @@ impl Engine {
         loop {
             let mut exhausted = false;
             for r in self.running.iter() {
-                let target = r.state.kv_bytes().max(r.reserved_bytes);
+                // Bytes held by reference to an adopted shared prefix are
+                // subtracted — the shared ledger charges them once.
+                // Saturating: a window-capped backend (StreamingLLM) can
+                // report kv_bytes below the un-evicted shared panel size.
+                let target = r
+                    .state
+                    .kv_bytes()
+                    .saturating_sub(r.state.shared_prefix_bytes())
+                    .max(r.reserved_bytes);
                 if self.pool.reserve(r.req.id, target).is_err() {
                     exhausted = true;
                     break;
@@ -415,6 +546,9 @@ impl Engine {
             // collection preserves it, re-admissions append).
             let r = self.running.pop().expect("pool exhausted with nothing running");
             self.pool.release(r.req.id);
+            if let Some(id) = r.adopted {
+                self.pool.release_shared(id);
+            }
             // A victim that was running ALONE failed against an otherwise
             // empty pool: its live cache exceeds the entire budget, so
             // re-queueing would preempt/recompute-loop forever (and the
@@ -443,6 +577,7 @@ impl Engine {
             req.arrival = req.arrival.or(Some(now));
             self.waiting.push_front(req);
         }
+        self.drain_evictions();
         // The pool tracks its own high-water mark inside every reserve(),
         // so this is exact even when the peak happened mid-step (e.g. just
         // before a finishing sequence released its pages).
@@ -502,6 +637,7 @@ mod tests {
                 page_bytes: 4096,
                 pool_budget: budget,
                 threads: 2,
+                prefix_reuse: false,
             },
         )
     }
@@ -565,6 +701,7 @@ mod tests {
                 page_bytes: 4096,
                 pool_budget: 1 << 24,
                 threads: 2,
+                prefix_reuse: false,
             },
         );
         for (i, p) in prompts.iter().enumerate() {
@@ -683,6 +820,7 @@ mod tests {
                     page_bytes: 4096,
                     pool_budget: 1 << 24,
                     threads: 1,
+                    prefix_reuse: false,
                 },
             );
             for (i, p) in prompts.iter().enumerate() {
@@ -846,6 +984,15 @@ mod tests {
         fn kv_bytes(&self) -> usize {
             self.0.kv_bytes()
         }
+        fn fork_prefix(&self, n_tokens: usize) -> Option<crate::attention::PrefixSnapshot> {
+            self.0.fork_prefix(n_tokens)
+        }
+        fn adopt_prefix(&mut self, snap: &crate::attention::PrefixSnapshot) -> bool {
+            self.0.adopt_prefix(snap)
+        }
+        fn shared_prefix_bytes(&self) -> usize {
+            self.0.shared_prefix_bytes()
+        }
         fn footprint(&self) -> crate::attention::FootprintModel {
             crate::attention::FootprintModel::linear(0, 0)
         }
@@ -877,6 +1024,7 @@ mod tests {
                 page_bytes: 4096,
                 pool_budget: 32 * 4096,
                 threads: 2,
+                prefix_reuse: false,
             },
         );
         for i in 0..2 {
@@ -911,6 +1059,128 @@ mod tests {
             "resumed request must not re-decode already-emitted tokens"
         );
         assert_eq!(e.metrics.tokens_generated, delivered);
+    }
+
+    fn engine_with_reuse(max_batch: usize, budget: usize, reuse: bool) -> Engine {
+        let cfg = ModelConfig::tiny_mha(128);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 37)));
+        let shape = cfg.attn_shape();
+        let factory: Box<BackendFactory> =
+            Box::new(move |_| Box::new(FullAttention::new(shape)) as _);
+        Engine::new(
+            model,
+            factory,
+            EngineConfig {
+                max_batch,
+                prefill_chunk: 8,
+                page_bytes: 4096,
+                pool_budget: budget,
+                threads: 2,
+                prefix_reuse: reuse,
+            },
+        )
+    }
+
+    #[test]
+    fn prefix_reuse_avoids_prefill_and_matches_cold_outputs() {
+        // Three sequential requests with the same 12-token prompt
+        // (prefill chunk 8): with reuse on, the first publishes its
+        // 8-token chunk boundary and the next two adopt it, prefilling
+        // only the 4-token suffix — and because adopt restores the exact
+        // panels, every generated token matches the cold run exactly.
+        let prompt: Vec<usize> = (1..=12).collect();
+        let run = |reuse: bool| {
+            let mut e = engine_with_reuse(2, 1 << 24, reuse);
+            let mut all = Vec::new();
+            for i in 0..3u64 {
+                e.submit(Request::new(
+                    i,
+                    prompt.clone(),
+                    GenParams { max_new_tokens: 5, stop_token: None },
+                ));
+                all.append(&mut e.run_to_completion());
+            }
+            (all, e.metrics.clone())
+        };
+        let (cold, mc) = run(false);
+        let (warm, mw) = run(true);
+        assert_eq!(mc.prefix_adoptions, 0);
+        assert_eq!(mc.prefill_tokens_avoided, 0);
+        assert_eq!(mw.prefix_publications, 1, "later identical prefixes must not re-publish");
+        assert_eq!(mw.prefix_adoptions, 2);
+        assert_eq!(mw.prefill_tokens_avoided, 16);
+        for (c, w) in cold.iter().zip(&warm) {
+            assert_eq!(c.tokens, w.tokens, "request {}: adopted decode diverged from cold", c.id);
+        }
+    }
+
+    #[test]
+    fn unreferenced_prefix_evicted_under_pool_pressure() {
+        // 32-page pool; each request reserves 18 pages (12-token horizon)
+        // and publishes a 12-page prefix. The second (different-prompt)
+        // publication does not fit next to the first — the pool must
+        // reclaim the finished, unreferenced holding rather than skip
+        // publishing or deadlock.
+        let mut e = engine_with_reuse(2, 32 * 4096, true);
+        e.submit(Request::new(0, (1..=8).collect(), GenParams { max_new_tokens: 4, stop_token: None }));
+        assert_eq!(e.run_to_completion().len(), 1);
+        assert_eq!(e.metrics.prefix_publications, 1);
+        assert_eq!(e.metrics.shared_prefix_evictions, 0);
+        e.submit(Request::new(1, (21..=28).collect(), GenParams { max_new_tokens: 4, stop_token: None }));
+        assert_eq!(e.run_to_completion().len(), 1);
+        assert_eq!(e.metrics.prefix_publications, 2, "second prefix must publish after eviction");
+        assert_eq!(e.metrics.shared_prefix_evictions, 1, "first holding must be LRU-evicted");
+        assert_eq!(e.metrics.prefix_adoptions, 0);
+    }
+
+    #[test]
+    fn preempted_adopter_resumes_correctly() {
+        // Zero-claiming footprints over-admit two same-prompt sequences
+        // whose real growth exceeds the pool; the second adopts the
+        // first's published prefix, gets preempted by growth, re-queues,
+        // and must still deliver its full output without re-decoding any
+        // token — preemption-resume and adopted panels composing.
+        let cfg = ModelConfig::tiny_mha(128);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 37)));
+        let shape = cfg.attn_shape();
+        let factory: Box<BackendFactory> =
+            Box::new(move |_| Box::new(LyingFootprint(FullAttention::new(shape))) as _);
+        let mut e = Engine::new(
+            model,
+            factory,
+            EngineConfig {
+                max_batch: 2,
+                prefill_chunk: 8,
+                page_bytes: 4096,
+                pool_budget: 48 * 4096,
+                threads: 2,
+                prefix_reuse: true,
+            },
+        );
+        let prompt: Vec<usize> = (1..=12).collect();
+        e.submit(Request::new(0, prompt.clone(), GenParams { max_new_tokens: 8, stop_token: None }));
+        // Step until the prefix is published, THEN submit the twin so its
+        // admission sees the cache.
+        let mut guard = 0;
+        while e.metrics.prefix_publications == 0 {
+            e.step();
+            guard += 1;
+            assert!(guard < 50, "prefix never published");
+        }
+        e.submit(Request::new(1, prompt, GenParams { max_new_tokens: 8, stop_token: None }));
+        let mut responses = e.run_to_completion();
+        responses.sort_by_key(|r| r.id);
+        assert_eq!(responses.len(), 2);
+        assert!(responses.iter().all(|r| r.tokens.len() == 8));
+        assert!(e.metrics.prefix_adoptions >= 1, "twin request must adopt the published prefix");
+        assert!(e.metrics.preemptions >= 1, "growth must force preemption in this scenario");
+        assert_eq!(responses[0].preemptions, 0, "oldest sequence must not be preempted");
+        assert!(responses[1].preemptions >= 1);
+        let delivered: usize = responses.iter().map(|r| r.tokens.len()).sum();
+        assert_eq!(
+            e.metrics.tokens_decoded, delivered,
+            "resumed adopter must not re-decode already-emitted tokens"
+        );
     }
 
     #[test]
@@ -964,6 +1234,7 @@ mod tests {
                     page_bytes: 1024,
                     pool_budget: 88 * 1024,
                     threads: 2,
+                    prefix_reuse: false,
                 },
             );
             let mut rng = Rng::new(73);

@@ -18,6 +18,15 @@ pub struct Metrics {
     pub tokens_decoded: usize,
     pub preemptions: usize,
     pub steps: usize,
+    /// Prompt tokens never prefilled because a published shared prefix
+    /// was adopted instead (the prefix-reuse win, in tokens).
+    pub prefill_tokens_avoided: usize,
+    /// Prefix snapshots published into the shared ledger + index.
+    pub prefix_publications: usize,
+    /// Admissions that adopted a published prefix.
+    pub prefix_adoptions: usize,
+    /// Unreferenced shared-prefix holdings evicted under pool pressure.
+    pub shared_prefix_evictions: usize,
     /// Per-request time-to-first-token (s).
     pub ttft: Vec<f64>,
     /// Per-request end-to-end latency (s).
@@ -59,6 +68,10 @@ impl Metrics {
             .field("tokens_decoded", self.tokens_decoded)
             .field("preemptions", self.preemptions)
             .field("steps", self.steps)
+            .field("prefill_tokens_avoided", self.prefill_tokens_avoided)
+            .field("prefix_publications", self.prefix_publications)
+            .field("prefix_adoptions", self.prefix_adoptions)
+            .field("shared_prefix_evictions", self.shared_prefix_evictions)
             .field("wall_s", self.wall_s)
             .field("tokens_per_second", self.tokens_per_second())
             .field("ttft_p50_s", t.p50)

@@ -112,9 +112,14 @@ impl Router {
         self.load[r] += self.dispatch_cost(req);
     }
 
-    /// Report completion so load drains.
-    pub fn complete(&mut self, r: ReplicaId, req_cost: usize) {
-        self.load[r] = self.load[r].saturating_sub(req_cost);
+    /// Report completion so load drains. Takes the request itself — the
+    /// router owns the cost model ([`Router::dispatch_cost`]), so callers
+    /// can no longer drain a number that disagrees with what `route`
+    /// charged (the old `complete(replica, cost)` contract silently
+    /// leaked load whenever the two cost formulas drifted).
+    pub fn complete(&mut self, r: ReplicaId, req: &Request) {
+        let cost = self.dispatch_cost(req);
+        self.load[r] = self.load[r].saturating_sub(cost);
     }
 
     /// A replica preempted (re-queued) this request: drain the dispatch
@@ -125,8 +130,7 @@ impl Router {
     /// decision toward the other replicas. The caller re-`route`s the
     /// request (session affinity, if any, still pins it).
     pub fn note_preemption(&mut self, r: ReplicaId, req: &Request) {
-        let cost = self.dispatch_cost(req);
-        self.complete(r, cost);
+        self.complete(r, req);
     }
 
     /// Drop a session's affinity (conversation ended).
@@ -178,11 +182,12 @@ mod tests {
     #[test]
     fn complete_drains_load() {
         let mut r = Router::new(1, Policy::LeastLoaded);
-        r.route(&req(0, 10), None);
+        let request = req(0, 10);
+        r.route(&request, None);
         assert_eq!(r.load_of(0), 14);
-        r.complete(0, 14);
+        r.complete(0, &request);
         assert_eq!(r.load_of(0), 0);
-        r.complete(0, 5); // saturating
+        r.complete(0, &request); // over-drain saturates
         assert_eq!(r.load_of(0), 0);
     }
 
@@ -200,8 +205,7 @@ mod tests {
         // a preempt+re-route cycle drains to exactly zero (no double
         // counting, saturating on over-drain).
         let b = r.route(&heavy, None);
-        let cost = r.dispatch_cost(&heavy);
-        r.complete(b, cost);
+        r.complete(b, &heavy);
         assert_eq!(r.load_of(b), 0);
         r.note_preemption(b, &heavy); // over-drain saturates
         assert_eq!(r.load_of(b), 0);
@@ -258,8 +262,7 @@ mod tests {
         assert_eq!(dense_router.load_of(a), dense_cost);
         let b = sals_router.route(&request, None);
         assert_eq!(sals_router.load_of(b), sals_cost);
-        // Without a footprint the router still prices in tokens (the
-        // serve example's `complete(prompt+max_new)` contract).
+        // Without a footprint the router still prices in tokens.
         let bare = Router::new(1, Policy::LeastLoaded);
         assert_eq!(bare.dispatch_cost(&request), 256 + 4);
     }

@@ -1,5 +1,6 @@
-//! Paged KV-cache pool — the vLLM-style block manager that gives the
-//! coordinator admission control and backpressure over latent-cache memory.
+//! Paged KV-cache pool + shared-prefix index — the vLLM-style block
+//! manager that gives the coordinator admission control, backpressure,
+//! and prefix-reuse accounting over latent-cache memory.
 //!
 //! Backends own their storage; the pool is the *allocator of record*: every
 //! sequence must reserve pages (fixed-size byte blocks) before its caches
@@ -11,15 +12,38 @@
 //!
 //! The pool is a *ledger*, deliberately ignorant of what the bytes mean.
 //! Who reserves how much is the engine's policy, and it uses the pool in
-//! two modes (see the footprint contract in `crate::attention`):
+//! three modes (see the footprint contract in `crate::attention`):
 //!
 //! * **Admission reservation** — at admit time the engine reserves the
 //!   factory's predicted footprint ([`crate::model::SequenceFootprint`])
 //!   for the request's whole decode horizon, so one admission pass cannot
 //!   promise the same free pages to several requests.
 //! * **Growth accounting** — each step every running sequence re-reserves
-//!   `max(measured kv_bytes(), admission reservation)`; the estimate is
-//!   the floor, the live meter only ever raises it.
+//!   `max(measured kv_bytes() − shared_prefix_bytes(), admission
+//!   reservation)`; the estimate is the floor, the live meter only ever
+//!   raises it. Bytes held *by reference* to a shared prefix are
+//!   subtracted because the shared ledger already charges them once.
+//! * **Shared-pages mode** — pages backing a published prefix
+//!   ([`PagePool::publish_shared`]) are carved out of the free set once
+//!   and tracked per [`SharedId`] with a refcount: adopters
+//!   [`PagePool::retain_shared`] / [`PagePool::release_shared`] instead
+//!   of reserving private copies, so N sequences sharing one prompt
+//!   prefix charge it once. Unreferenced holdings stay resident as cache
+//!   and are LRU-evicted whenever a reservation or publication runs out
+//!   of free pages ([`PagePool::take_evicted`] reports which, so the
+//!   prefix index stays in sync). A sequence that must privatize its
+//!   share (divergence that copies the data) runs
+//!   [`PagePool::cow_split`], which atomically swaps its reference for an
+//!   equal private holding.
+//!
+//! The ledger invariant across all three modes is
+//! `free + Σprivate + Σshared == total` ([`PagePool::check_invariants`]).
+//!
+//! [`PrefixCache`] is the content-addressed index over the shared mode:
+//! prompt prefixes are keyed by a rolling FNV-1a hash of their token
+//! chunks at a fixed granularity (the engine uses
+//! [`crate::model::Model::PREFILL_CHUNK`]), with stored-token
+//! verification so a hash collision can never adopt the wrong prefix.
 
 use crate::util::{Error, Result};
 use std::collections::HashMap;
@@ -27,7 +51,22 @@ use std::collections::HashMap;
 /// Sequence identifier used by the pool and coordinator.
 pub type SeqId = u64;
 
-/// Fixed-size-page memory pool with per-sequence accounting.
+/// Identity of one published shared-prefix holding in the pool's ledger.
+pub type SharedId = u64;
+
+/// One refcounted shared holding: pages charged once, shared by every
+/// sequence holding a reference.
+#[derive(Debug)]
+struct SharedEntry {
+    pages: usize,
+    refs: usize,
+    /// LRU clock stamp of the last publish/retain/release touch —
+    /// unreferenced entries are evicted oldest-stamp-first.
+    stamp: u64,
+}
+
+/// Fixed-size-page memory pool with per-sequence and shared-prefix
+/// accounting.
 #[derive(Debug)]
 pub struct PagePool {
     /// Bytes per page.
@@ -35,8 +74,15 @@ pub struct PagePool {
     /// Total pages in the pool.
     pub total_pages: usize,
     free_pages: usize,
-    /// Pages held per sequence.
+    /// Private pages held per sequence.
     held: HashMap<SeqId, usize>,
+    /// Shared-prefix holdings (pages charged once across all referents).
+    shared: HashMap<SharedId, SharedEntry>,
+    next_shared: SharedId,
+    clock: u64,
+    /// Shared ids evicted since the last [`PagePool::take_evicted`] —
+    /// the prefix index drains this to drop stale entries.
+    evicted: Vec<SharedId>,
     /// Peak utilization (pages), for reports.
     peak_used: usize,
 }
@@ -44,7 +90,17 @@ pub struct PagePool {
 impl PagePool {
     pub fn new(page_bytes: usize, total_pages: usize) -> PagePool {
         assert!(page_bytes > 0 && total_pages > 0);
-        PagePool { page_bytes, total_pages, free_pages: total_pages, held: HashMap::new(), peak_used: 0 }
+        PagePool {
+            page_bytes,
+            total_pages,
+            free_pages: total_pages,
+            held: HashMap::new(),
+            shared: HashMap::new(),
+            next_shared: 0,
+            clock: 0,
+            evicted: Vec::new(),
+            peak_used: 0,
+        }
     }
 
     /// Pool sized for a byte budget.
@@ -69,26 +125,71 @@ impl PagePool {
         bytes.div_ceil(self.page_bytes)
     }
 
-    /// Pages currently held by a sequence.
+    /// Private pages currently held by a sequence.
     pub fn held_by(&self, seq: SeqId) -> usize {
         self.held.get(&seq).copied().unwrap_or(0)
     }
 
+    /// Pages currently charged to shared-prefix holdings (referenced or
+    /// cached-unreferenced).
+    pub fn shared_pages(&self) -> usize {
+        self.shared.values().map(|e| e.pages).sum()
+    }
+
+    /// Reference count of a shared holding (None once evicted/dropped).
+    pub fn shared_refs(&self, id: SharedId) -> Option<usize> {
+        self.shared.get(&id).map(|e| e.refs)
+    }
+
+    /// Pages reclaimable by evicting unreferenced shared holdings.
+    fn evictable_pages(&self) -> usize {
+        self.shared.values().filter(|e| e.refs == 0).map(|e| e.pages).sum()
+    }
+
+    /// Evict unreferenced shared holdings (LRU stamp order) until
+    /// `need` pages are free or nothing evictable remains. Evicted ids
+    /// accumulate for [`PagePool::take_evicted`].
+    fn evict_for(&mut self, need: usize) {
+        while self.free_pages < need {
+            let victim = self
+                .shared
+                .iter()
+                .filter(|(_, e)| e.refs == 0)
+                .min_by_key(|(_, e)| e.stamp)
+                .map(|(&id, _)| id);
+            let Some(id) = victim else { break };
+            let e = self.shared.remove(&id).unwrap();
+            self.free_pages += e.pages;
+            self.evicted.push(id);
+        }
+    }
+
+    /// Drain the list of shared ids evicted since the last call — the
+    /// prefix index uses this to invalidate its entries.
+    pub fn take_evicted(&mut self) -> Vec<SharedId> {
+        std::mem::take(&mut self.evicted)
+    }
+
     /// Can `seq` grow to `target_bytes` without exceeding the pool?
+    /// Counts unreferenced shared holdings as free — [`PagePool::reserve`]
+    /// evicts them on demand, and the two must agree exactly (the
+    /// admission path is check-then-act).
     pub fn can_grow_to(&self, seq: SeqId, target_bytes: usize) -> bool {
         let need = self.pages_for(target_bytes);
         let have = self.held_by(seq);
-        need <= have || need - have <= self.free_pages
+        need <= have || need - have <= self.free_pages + self.evictable_pages()
     }
 
-    /// Grow (or shrink) a sequence's reservation to cover `target_bytes`.
-    /// Fails with `Error::Coordinator` when the pool is exhausted — callers
-    /// translate that into scheduling backpressure.
+    /// Grow (or shrink) a sequence's private reservation to cover
+    /// `target_bytes`, evicting unreferenced shared holdings under
+    /// pressure. Fails with `Error::Coordinator` when the pool is
+    /// exhausted — callers translate that into scheduling backpressure.
     pub fn reserve(&mut self, seq: SeqId, target_bytes: usize) -> Result<()> {
         let need = self.pages_for(target_bytes);
         let have = self.held_by(seq);
         if need > have {
             let grow = need - have;
+            self.evict_for(grow);
             if grow > self.free_pages {
                 return Err(Error::Coordinator(format!(
                     "pool exhausted: seq {seq} needs {grow} pages, {} free",
@@ -108,23 +209,224 @@ impl PagePool {
         Ok(())
     }
 
-    /// Release everything a finished sequence holds.
+    /// Release every private page a finished sequence holds. Shared
+    /// references are released separately ([`PagePool::release_shared`])
+    /// by whoever tracked the adoption.
     pub fn release(&mut self, seq: SeqId) {
         if let Some(pages) = self.held.remove(&seq) {
             self.free_pages += pages;
         }
     }
 
-    /// Invariant check: free + Σheld == total. Used by property tests.
+    /// Publish `bytes` as a new shared holding: pages leave the free set
+    /// once and stay charged until the holding is evicted. Starts with
+    /// zero references (the publisher keeps its own private reservation;
+    /// only *adopters* retain), so an unadopted publication is immediately
+    /// reclaimable under pressure. Evicts older unreferenced holdings if
+    /// the free set is short.
+    pub fn publish_shared(&mut self, bytes: usize) -> Result<SharedId> {
+        let pages = self.pages_for(bytes);
+        self.evict_for(pages);
+        if pages > self.free_pages {
+            return Err(Error::Coordinator(format!(
+                "pool exhausted: shared publication needs {pages} pages, {} free",
+                self.free_pages
+            )));
+        }
+        self.free_pages -= pages;
+        let id = self.next_shared;
+        self.next_shared += 1;
+        self.clock += 1;
+        self.shared.insert(id, SharedEntry { pages, refs: 0, stamp: self.clock });
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Ok(id)
+    }
+
+    /// Take a reference on a shared holding (an adoption). False if the
+    /// holding was already evicted — the caller must fall back to a cold
+    /// prefill with private pages.
+    pub fn retain_shared(&mut self, id: SharedId) -> bool {
+        self.clock += 1;
+        let clock = self.clock;
+        match self.shared.get_mut(&id) {
+            Some(e) => {
+                e.refs += 1;
+                e.stamp = clock;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop one reference (adopter finished or diverged). The holding
+    /// stays resident as reusable cache until pressure evicts it.
+    pub fn release_shared(&mut self, id: SharedId) {
+        self.clock += 1;
+        let clock = self.clock;
+        if let Some(e) = self.shared.get_mut(&id) {
+            debug_assert!(e.refs > 0, "release_shared on unreferenced holding {id}");
+            e.refs = e.refs.saturating_sub(1);
+            e.stamp = clock;
+        }
+    }
+
+    /// Copy-on-write split: `seq` stops referencing holding `id` and
+    /// instead holds the same number of pages privately (the caller
+    /// performs the matching data copy). Atomic on the ledger: on error
+    /// (not enough pages for the private copy even after eviction, or the
+    /// holding is gone/unreferenced) nothing changes.
+    pub fn cow_split(&mut self, seq: SeqId, id: SharedId) -> Result<()> {
+        let pages = match self.shared.get(&id) {
+            Some(e) if e.refs > 0 => e.pages,
+            _ => {
+                return Err(Error::Coordinator(format!(
+                    "cow_split: shared holding {id} missing or unreferenced"
+                )))
+            }
+        };
+        self.evict_for(pages);
+        if pages > self.free_pages {
+            return Err(Error::Coordinator(format!(
+                "pool exhausted: cow_split needs {pages} pages, {} free",
+                self.free_pages
+            )));
+        }
+        self.free_pages -= pages;
+        *self.held.entry(seq).or_insert(0) += pages;
+        self.release_shared(id);
+        self.peak_used = self.peak_used.max(self.used_pages());
+        Ok(())
+    }
+
+    /// Invariant check: free + Σprivate + Σshared == total. Used by
+    /// property tests.
     pub fn check_invariants(&self) -> Result<()> {
         let held: usize = self.held.values().sum();
-        if held + self.free_pages != self.total_pages {
+        let shared = self.shared_pages();
+        if held + shared + self.free_pages != self.total_pages {
             return Err(Error::Coordinator(format!(
-                "pool accounting broken: held {held} + free {} != total {}",
+                "pool accounting broken: held {held} + shared {shared} + free {} != total {}",
                 self.free_pages, self.total_pages
             )));
         }
         Ok(())
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// Extend an FNV-1a state over a token slice (each token as 8 LE bytes).
+/// Sequential over bytes, so hashing a prefix chunk-by-chunk equals
+/// hashing it in one pass — the rolling property `lookup_longest` uses.
+fn fnv_extend(mut h: u64, tokens: &[usize]) -> u64 {
+    for &t in tokens {
+        for b in (t as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+struct PrefixEntry<T> {
+    /// The exact prefix tokens — verified on lookup so a hash collision
+    /// can never adopt the wrong prefix.
+    tokens: Vec<usize>,
+    shared_id: SharedId,
+    value: T,
+}
+
+/// Content-addressed index of published prompt prefixes: chunk-aligned
+/// prefixes keyed by rolling FNV hash, each carrying the pool's
+/// [`SharedId`] for its pages and an arbitrary payload `T` (the engine
+/// stores a `SequenceSnapshot`). The cache itself holds no pages — the
+/// pool's shared ledger does; when the pool evicts a holding, the engine
+/// drains [`PagePool::take_evicted`] and calls
+/// [`PrefixCache::remove_shared`] to keep the index honest.
+pub struct PrefixCache<T> {
+    chunk: usize,
+    entries: HashMap<u64, PrefixEntry<T>>,
+}
+
+impl<T> PrefixCache<T> {
+    /// `chunk` is the prefix granularity in tokens (the engine passes its
+    /// prefill chunk size so published boundaries match prefill steps).
+    pub fn new(chunk: usize) -> PrefixCache<T> {
+        assert!(chunk > 0);
+        PrefixCache { chunk, entries: HashMap::new() }
+    }
+
+    pub fn chunk(&self) -> usize {
+        self.chunk
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Longest chunk-aligned prefix of `tokens` with a published entry:
+    /// `(prefix_len, shared_id, &payload)`. One rolling-hash pass over
+    /// the complete chunks; every hit is verified against the stored
+    /// tokens before it can win.
+    pub fn lookup_longest(&self, tokens: &[usize]) -> Option<(usize, SharedId, &T)> {
+        let mut h = FNV_OFFSET;
+        let mut best = None;
+        let m = tokens.len() / self.chunk;
+        for k in 1..=m {
+            let hi = k * self.chunk;
+            h = fnv_extend(h, &tokens[(k - 1) * self.chunk..hi]);
+            if let Some(e) = self.entries.get(&h) {
+                if e.tokens.len() == hi && e.tokens == tokens[..hi] {
+                    best = Some((hi, e.shared_id, &e.value));
+                }
+            }
+        }
+        best
+    }
+
+    /// Is this exact chunk-aligned prefix already published?
+    pub fn contains(&self, prefix: &[usize]) -> bool {
+        if prefix.is_empty() || prefix.len() % self.chunk != 0 {
+            return false;
+        }
+        let h = fnv_extend(FNV_OFFSET, prefix);
+        self.entries.get(&h).is_some_and(|e| e.tokens == prefix)
+    }
+
+    /// Publish a chunk-aligned prefix. False (and no change) if an entry
+    /// already occupies this hash slot — the existing publication wins;
+    /// the caller should drop its redundant pool holding.
+    pub fn insert(&mut self, prefix: &[usize], shared_id: SharedId, value: T) -> bool {
+        assert!(
+            !prefix.is_empty() && prefix.len() % self.chunk == 0,
+            "prefix cache entries must be whole chunks ({} tokens given, chunk {})",
+            prefix.len(),
+            self.chunk
+        );
+        let h = fnv_extend(FNV_OFFSET, prefix);
+        if self.entries.contains_key(&h) {
+            return false;
+        }
+        self.entries.insert(h, PrefixEntry { tokens: prefix.to_vec(), shared_id, value });
+        true
+    }
+
+    /// Drop every entry backed by an evicted shared holding; returns how
+    /// many were removed.
+    pub fn remove_shared(&mut self, id: SharedId) -> usize {
+        let before = self.entries.len();
+        self.entries.retain(|_, e| e.shared_id != id);
+        before - self.entries.len()
+    }
+
+    /// Shared ids of all live entries (engine shutdown / tests).
+    pub fn shared_ids(&self) -> Vec<SharedId> {
+        self.entries.values().map(|e| e.shared_id).collect()
     }
 }
 
@@ -180,11 +482,99 @@ mod tests {
     }
 
     #[test]
+    fn shared_publish_retain_release_accounting() {
+        let mut p = PagePool::new(10, 10);
+        let id = p.publish_shared(35).unwrap(); // 4 pages
+        assert_eq!(p.shared_pages(), 4);
+        assert_eq!(p.free_pages(), 6);
+        assert_eq!(p.shared_refs(id), Some(0));
+        assert!(p.retain_shared(id));
+        assert!(p.retain_shared(id));
+        assert_eq!(p.shared_refs(id), Some(2));
+        p.release_shared(id);
+        assert_eq!(p.shared_refs(id), Some(1));
+        p.check_invariants().unwrap();
+        // Referenced holdings are NOT evictable: a reservation larger
+        // than free-but-smaller-than-free+shared must fail.
+        assert!(!p.can_grow_to(7, 10 * 10));
+        assert!(p.reserve(7, 10 * 10).is_err());
+        assert_eq!(p.shared_refs(id), Some(1), "referenced holding survived pressure");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn unreferenced_holdings_evict_lru_under_pressure() {
+        let mut p = PagePool::new(10, 10);
+        let a = p.publish_shared(30).unwrap(); // 3 pages, oldest
+        let b = p.publish_shared(30).unwrap(); // 3 pages
+        assert_eq!(p.free_pages(), 4);
+        // Touch `a` so `b` becomes LRU.
+        assert!(p.retain_shared(a));
+        p.release_shared(a);
+        // 6 pages needed: free 4 + evicting LRU `b` covers it.
+        assert!(p.can_grow_to(1, 60));
+        p.reserve(1, 60).unwrap();
+        assert_eq!(p.take_evicted(), vec![b]);
+        assert_eq!(p.shared_refs(b), None);
+        assert_eq!(p.shared_refs(a), Some(0), "recently-touched holding survives");
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn cow_split_swaps_reference_for_private_pages() {
+        let mut p = PagePool::new(10, 10);
+        let id = p.publish_shared(30).unwrap(); // 3 pages
+        assert!(p.retain_shared(id));
+        p.reserve(1, 20).unwrap(); // 2 private pages
+        p.cow_split(1, id).unwrap();
+        assert_eq!(p.held_by(1), 5, "private holding absorbed the copied pages");
+        assert_eq!(p.shared_refs(id), Some(0));
+        p.check_invariants().unwrap();
+        // Unreferenced after the split: reclaimable under pressure.
+        p.reserve(2, 50).unwrap();
+        assert_eq!(p.take_evicted(), vec![id]);
+        p.check_invariants().unwrap();
+        // cow_split on a gone/unreferenced holding is an error, no change.
+        assert!(p.cow_split(1, id).is_err());
+        p.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn prefix_cache_longest_match_and_collision_verification() {
+        let mut c: PrefixCache<&'static str> = PrefixCache::new(4);
+        let toks: Vec<usize> = (0..12).collect();
+        let mut pool = PagePool::new(10, 20);
+        let id4 = pool.publish_shared(40).unwrap();
+        let id8 = pool.publish_shared(40).unwrap();
+        assert!(c.insert(&toks[..4], id4, "four"));
+        assert!(c.insert(&toks[..8], id8, "eight"));
+        assert!(!c.insert(&toks[..4], id4, "dup"), "re-publication is refused");
+        // Longest complete-chunk prefix wins; trailing partial chunk ignored.
+        let (n, id, v) = c.lookup_longest(&toks[..11]).unwrap();
+        assert_eq!((n, id, *v), (8, id8, "eight"));
+        // A prompt diverging in the second chunk falls back to the first.
+        let mut div = toks.clone();
+        div[5] = 99;
+        let (n, id, v) = c.lookup_longest(&div).unwrap();
+        assert_eq!((n, id, *v), (4, id4, "four"));
+        // Unrelated prompt: no hit (hash might alias, tokens never do).
+        assert!(c.lookup_longest(&[7usize; 12]).is_none());
+        assert!(c.contains(&toks[..8]));
+        assert!(!c.contains(&toks[..7]), "non-chunk-aligned prefixes are never published");
+        // Eviction sync: dropping id8's entry leaves only the short prefix.
+        assert_eq!(c.remove_shared(id8), 1);
+        let (n, _, _) = c.lookup_longest(&toks).unwrap();
+        assert_eq!(n, 4);
+    }
+
+    #[test]
     fn property_random_ops_preserve_accounting() {
-        // Random interleavings of the engine's three usage patterns —
-        // admission-time reservation (check-then-act must agree), floored
-        // growth re-reservation, and release — never break accounting and
-        // never exceed capacity.
+        // Random interleavings of the engine's usage patterns — admission
+        // reservation (check-then-act must agree), floored growth
+        // re-reservation, release, and the shared-prefix ops
+        // (publish/retain/release-ref/cow-split with LRU eviction) — never
+        // break accounting, never exceed capacity, never leak or
+        // double-free a refcount.
         prop::check(
             "pagepool-accounting",
             200,
@@ -195,8 +585,11 @@ mod tests {
             },
             |ops| {
                 let mut p = PagePool::new(16, 32);
+                // Live shared ids and the references the "engine" holds on
+                // them ((id, refs) mirrors what the pool should report).
+                let mut ids: Vec<(SharedId, usize)> = Vec::new();
                 for chunk in ops.chunks_exact(3) {
-                    let (seq, kind, amt) = (chunk[0] % 6, chunk[1] % 4, chunk[2]);
+                    let (seq, kind, amt) = (chunk[0] % 6, chunk[1] % 8, chunk[2]);
                     let seq = seq as SeqId;
                     match kind {
                         0 => {
@@ -222,7 +615,55 @@ mod tests {
                                 return false;
                             }
                         }
+                        3 => {
+                            if let Ok(id) = p.publish_shared(amt) {
+                                ids.push((id, 0));
+                            }
+                        }
+                        4 => {
+                            // Retain a random live holding; the pool must
+                            // agree it exists exactly when we think it does
+                            // (evictions are drained below each op).
+                            if !ids.is_empty() {
+                                let e = &mut ids[amt % ids.len()];
+                                if !p.retain_shared(e.0) {
+                                    return false;
+                                }
+                                e.1 += 1;
+                            }
+                        }
+                        5 => {
+                            if let Some(e) =
+                                ids.iter_mut().filter(|e| e.1 > 0).nth(amt % 3)
+                            {
+                                p.release_shared(e.0);
+                                e.1 -= 1;
+                            }
+                        }
+                        6 => {
+                            if let Some(e) = ids.iter_mut().find(|e| e.1 > 0) {
+                                if p.cow_split(seq, e.0).is_ok() {
+                                    e.1 -= 1;
+                                }
+                            }
+                        }
                         _ => p.release(seq),
+                    }
+                    // Referenced holdings must never have been evicted;
+                    // drop evicted unreferenced ids from the mirror.
+                    for id in p.take_evicted() {
+                        match ids.iter().position(|e| e.0 == id) {
+                            Some(i) if ids[i].1 == 0 => {
+                                ids.remove(i);
+                            }
+                            _ => return false,
+                        }
+                    }
+                    // Pool refcounts must mirror ours exactly.
+                    for &(id, refs) in &ids {
+                        if p.shared_refs(id) != Some(refs) {
+                            return false;
+                        }
                     }
                     if p.check_invariants().is_err() || p.used_pages() > p.total_pages {
                         return false;

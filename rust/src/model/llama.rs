@@ -29,7 +29,7 @@
 
 use super::config::ModelConfig;
 use super::weights::Weights;
-use crate::attention::{AttentionBackend, FootprintModel};
+use crate::attention::{AttentionBackend, FootprintModel, PrefixSnapshot};
 use crate::tensor::ops::{gather_rows, lm_head_batch, matmul, rmsnorm, silu};
 use crate::util::threadpool;
 use std::sync::Arc;
@@ -72,6 +72,25 @@ impl SequenceFootprint {
     }
 }
 
+/// Immutable multi-layer prefix capture of a [`SequenceState`] — one
+/// [`PrefixSnapshot`] per layer, all frozen at the same token count.
+/// Cloning is cheap (per-layer `Arc` bumps); the engine's prefix cache
+/// holds these and hands clones to adopting sequences.
+#[derive(Clone)]
+pub struct SequenceSnapshot {
+    /// Prompt tokens the snapshot covers (every layer agrees).
+    pub n_tokens: usize,
+    layers: Vec<PrefixSnapshot>,
+}
+
+impl SequenceSnapshot {
+    /// Refcount-shared resident bytes across all layers — what adopters
+    /// hold by reference instead of re-materializing.
+    pub fn shared_bytes(&self) -> usize {
+        self.layers.iter().map(|l| l.shared_bytes).sum()
+    }
+}
+
 /// Per-sequence decode state: one KV backend per layer + position counter.
 pub struct SequenceState {
     pub backends: Vec<Box<dyn AttentionBackend + Send>>,
@@ -107,6 +126,45 @@ impl SequenceState {
         for b in &mut self.backends {
             b.set_threads(threads);
         }
+    }
+
+    /// Freeze the first `n_tokens` of every layer backend as an immutable
+    /// refcounted snapshot ([`AttentionBackend::fork_prefix`]). All-or-
+    /// nothing: `None` if any layer declines (e.g. `n_tokens` is not the
+    /// backend's full current length, or live sparse-prefill state).
+    pub fn fork_prefix(&self, n_tokens: usize) -> Option<SequenceSnapshot> {
+        let mut layers = Vec::with_capacity(self.backends.len());
+        for b in &self.backends {
+            layers.push(b.fork_prefix(n_tokens)?);
+        }
+        Some(SequenceSnapshot { n_tokens, layers })
+    }
+
+    /// Adopt a snapshot into a fresh state (pos 0, empty backends): every
+    /// layer takes its panel by reference, and `pos` jumps to the
+    /// snapshot's length. Returns false if the state has already run
+    /// tokens, the layer counts disagree, or any backend refuses — on
+    /// false the state may be partially adopted and must be discarded,
+    /// not cold-prefilled in place.
+    pub fn adopt_prefix(&mut self, snap: &SequenceSnapshot) -> bool {
+        if self.pos != 0 || snap.layers.len() != self.backends.len() {
+            return false;
+        }
+        for (b, l) in self.backends.iter_mut().zip(&snap.layers) {
+            if !b.adopt_prefix(l) {
+                return false;
+            }
+        }
+        self.pos = snap.n_tokens;
+        true
+    }
+
+    /// Resident bytes held by reference to adopted shared prefixes,
+    /// summed over layers — [`SequenceState::kv_bytes`] includes them
+    /// (footprint models stay reuse-unaware), so pool accounting subtracts
+    /// this to charge shared pages once across all adopters.
+    pub fn shared_prefix_bytes(&self) -> usize {
+        self.backends.iter().map(|b| b.shared_prefix_bytes()).sum()
     }
 
     /// Total cache traffic across layers.
@@ -871,6 +929,43 @@ mod tests {
         let mut s = SequenceState::new(&cfg, &factory);
         let mut refs: Vec<&mut SequenceState> = vec![&mut s];
         model.decode_batch(&mut refs, &[1, 2], &mut BatchScratch::new(1));
+    }
+
+    #[test]
+    fn fork_adopt_resumes_decode_identically() {
+        // A state adopting a forked prefix must decode bit-identically to
+        // a cold-prefilled control, with kv_bytes parity and a nonzero
+        // by-reference share.
+        let cfg = ModelConfig::tiny_mha(64);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 53)));
+        let factory = full_factory(&cfg);
+        let prompt = [3usize, 1, 4, 1, 5, 9];
+        let mut donor = SequenceState::new(&cfg, &factory);
+        let mut sc = Scratch::new(&cfg);
+        model.prefill(&mut donor, &mut sc, &prompt);
+        let snap = donor.fork_prefix(donor.pos).expect("fork full prefix");
+        assert_eq!(snap.n_tokens, prompt.len());
+        assert!(snap.shared_bytes() > 0);
+        assert!(donor.fork_prefix(donor.pos - 1).is_none(), "interior fork unsupported");
+
+        let mut cold = SequenceState::new(&cfg, &factory);
+        let mut scc = Scratch::new(&cfg);
+        model.prefill(&mut cold, &mut scc, &prompt);
+
+        let mut adopted = SequenceState::new(&cfg, &factory);
+        assert!(adopted.adopt_prefix(&snap));
+        assert_eq!(adopted.pos, prompt.len());
+        assert_eq!(adopted.kv_bytes(), cold.kv_bytes());
+        assert_eq!(adopted.shared_prefix_bytes(), snap.shared_bytes());
+
+        let mut sa = Scratch::new(&cfg);
+        for tok in [11usize, 12, 13] {
+            let la = model.step(&mut adopted, &mut sa, tok, true).unwrap();
+            let lc = model.step(&mut cold, &mut scc, tok, true).unwrap();
+            assert_eq!(la, lc, "adopted decode must be bit-identical to cold");
+        }
+        // A state that has already run tokens refuses adoption.
+        assert!(!cold.adopt_prefix(&snap));
     }
 
     #[test]

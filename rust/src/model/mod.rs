@@ -10,5 +10,8 @@ pub mod weights;
 
 pub use backends::{calibrate, fit_calibration, make_factory, Calibration, FittedCalibration, Method, SparsityParams};
 pub use config::ModelConfig;
-pub use llama::{BackendFactory, BatchScratch, Model, Scratch, SequenceFootprint, SequenceState};
+pub use llama::{
+    BackendFactory, BatchScratch, Model, Scratch, SequenceFootprint, SequenceSnapshot,
+    SequenceState,
+};
 pub use weights::Weights;

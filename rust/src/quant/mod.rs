@@ -8,7 +8,7 @@
 
 pub mod store;
 
-pub use store::TokenQuantStore;
+pub use store::{QuantSnapshot, TokenQuantStore};
 
 use crate::util::{Error, Result};
 

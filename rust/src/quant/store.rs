@@ -23,6 +23,7 @@
 
 use super::Bits;
 use crate::tensor::simd;
+use std::sync::Arc;
 
 /// One frozen page: `group` tokens × `dim` channels.
 #[derive(Clone, Debug)]
@@ -34,6 +35,40 @@ struct Page {
     zero: Vec<f32>,
 }
 
+fn page_bytes(p: &Page) -> usize {
+    p.codes.len() + 4 * (p.scale.len() + p.zero.len())
+}
+
+/// An immutable, refcounted frozen-prefix capture of a
+/// [`TokenQuantStore`]: the frozen pages behind an `Arc` (adopters share
+/// them by reference — prefix-reuse's copy-on-write boundary for the
+/// value cache) plus a copy of the fp32 tail, which stays private per
+/// adopter because appends mutate it in place.
+#[derive(Clone, Debug)]
+pub struct QuantSnapshot {
+    pages: Arc<Vec<Page>>,
+    frozen: usize,
+    tail: Vec<f32>,
+    len: usize,
+}
+
+impl QuantSnapshot {
+    /// Tokens captured (frozen + fp32 tail).
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Resident bytes of the refcount-shared portion (the frozen pages).
+    /// The fp32 tail is copied per adopter and is *not* shared.
+    pub fn shared_bytes(&self) -> usize {
+        self.pages.iter().map(page_bytes).sum()
+    }
+}
+
 /// Appendable quantized token store with an fp32 recent window.
 #[derive(Clone, Debug)]
 pub struct TokenQuantStore {
@@ -41,8 +76,13 @@ pub struct TokenQuantStore {
     pub bits: Bits,
     pub group: usize,
     pub window: usize,
+    /// Adopted frozen-prefix pages, shared by reference with the
+    /// sequence(s) this store forked from. Never mutated; private pages
+    /// in `pages` logically follow them.
+    shared: Option<Arc<Vec<Page>>>,
+    /// Private frozen pages appended past the shared prefix.
     pages: Vec<Page>,
-    /// Tokens in the quantized region (== pages.len() * group).
+    /// Tokens in the quantized region (== (shared + private pages) * group).
     frozen: usize,
     /// fp32 tail: tokens [frozen, len) row-major (len-frozen, dim).
     tail: Vec<f32>,
@@ -52,7 +92,74 @@ pub struct TokenQuantStore {
 impl TokenQuantStore {
     pub fn new(dim: usize, bits: Bits, group: usize, window: usize) -> TokenQuantStore {
         assert!(group > 0);
-        TokenQuantStore { dim, bits, group, window, pages: Vec::new(), frozen: 0, tail: Vec::new(), len: 0 }
+        TokenQuantStore {
+            dim,
+            bits,
+            group,
+            window,
+            shared: None,
+            pages: Vec::new(),
+            frozen: 0,
+            tail: Vec::new(),
+            len: 0,
+        }
+    }
+
+    /// Frozen page `p` (0-based over shared-then-private order).
+    fn page(&self, p: usize) -> &Page {
+        let ns = self.shared.as_ref().map_or(0, |s| s.len());
+        if p < ns {
+            &self.shared.as_ref().unwrap()[p]
+        } else {
+            &self.pages[p - ns]
+        }
+    }
+
+    /// All frozen pages in token order: adopted shared prefix first,
+    /// then private pages.
+    fn pages_iter(&self) -> impl Iterator<Item = &Page> {
+        self.shared.iter().flat_map(|s| s.iter()).chain(self.pages.iter())
+    }
+
+    /// Capture the current store as an immutable snapshot a fresh store
+    /// can [`TokenQuantStore::adopt`]. When the store is itself a pure
+    /// adopter (no private pages yet) the existing `Arc` is reused, so
+    /// re-forking an adopted prefix costs no page copies.
+    pub fn snapshot(&self) -> QuantSnapshot {
+        let pages = match (&self.shared, self.pages.is_empty()) {
+            (Some(s), true) => Arc::clone(s),
+            _ => Arc::new(self.pages_iter().cloned().collect()),
+        };
+        QuantSnapshot { pages, frozen: self.frozen, tail: self.tail.clone(), len: self.len }
+    }
+
+    /// Adopt a snapshot into an empty store: frozen pages by reference,
+    /// fp32 tail by copy. Subsequent appends are private — freezes past
+    /// the boundary push onto `pages`, never touching the shared `Arc`
+    /// (copy-on-write at page granularity). Reads, `nbytes()`, and
+    /// traffic meters are bit-identical to a cold store fed the same
+    /// rows.
+    pub fn adopt(&mut self, snap: &QuantSnapshot) {
+        assert!(self.is_empty(), "adopt requires an empty store");
+        assert_eq!(
+            snap.frozen,
+            snap.pages.len() * self.group,
+            "snapshot frozen count disagrees with page granularity"
+        );
+        if let Some(p) = snap.pages.first() {
+            assert_eq!(p.scale.len(), self.dim, "snapshot dim mismatch");
+        }
+        self.shared = Some(Arc::clone(&snap.pages));
+        self.frozen = snap.frozen;
+        self.tail = snap.tail.clone();
+        self.len = snap.len;
+    }
+
+    /// Resident bytes held by reference to an adopted shared prefix
+    /// (0 for cold stores). Included in [`TokenQuantStore::nbytes`];
+    /// pool accounting charges these once across all adopters.
+    pub fn shared_bytes(&self) -> usize {
+        self.shared.as_ref().map_or(0, |s| s.iter().map(page_bytes).sum())
     }
 
     pub fn len(&self) -> usize {
@@ -125,7 +232,7 @@ impl TokenQuantStore {
             out.copy_from_slice(&self.tail[t * self.dim..(t + 1) * self.dim]);
             return;
         }
-        self.unpack_page_rows(&self.pages[i / self.group], std::iter::once(i), out);
+        self.unpack_page_rows(self.page(i / self.group), std::iter::once(i), out);
     }
 
     /// Dequantize the selected rows of one frozen page: `idx` yields
@@ -233,7 +340,7 @@ impl TokenQuantStore {
                 e += 1;
             }
             self.unpack_page_rows_cols(
-                &self.pages[p],
+                self.page(p),
                 sorted_idx[i..e].iter().copied(),
                 c0,
                 c1,
@@ -304,7 +411,7 @@ impl TokenQuantStore {
                 e += 1;
             }
             let rows = sorted_idx[i..e].iter().copied().enumerate().map(|(r, j)| (i + r, j));
-            self.dequant_page_rows_acc(&self.pages[p], rows, c0, c1, probs, m, n, row_buf, acc);
+            self.dequant_page_rows_acc(self.page(p), rows, c0, c1, probs, m, n, row_buf, acc);
             i = e;
         }
     }
@@ -333,7 +440,7 @@ impl TokenQuantStore {
         assert_eq!(probs.len(), m * n);
         assert_eq!(acc.len(), m * w);
         let g = self.group;
-        for (p, page) in self.pages.iter().enumerate() {
+        for (p, page) in self.pages_iter().enumerate() {
             let lo = p * g;
             let rows = (lo..lo + g).map(|j| (j, j));
             self.dequant_page_rows_acc(page, rows, c0, c1, probs, m, n, row_buf, acc);
@@ -404,7 +511,7 @@ impl TokenQuantStore {
         let d = self.dim;
         assert_eq!(out.len(), self.len * d);
         let g = self.group;
-        for (p, page) in self.pages.iter().enumerate() {
+        for (p, page) in self.pages_iter().enumerate() {
             // All `group` rows of the page, in token order: codes are
             // row-major (token, channel), so this is one linear scan.
             let lo = p * g;
@@ -453,8 +560,7 @@ impl TokenQuantStore {
     /// Traffic cost of [`TokenQuantStore::read_all`]: every page's packed
     /// codes and params once, plus the fp32 tail.
     pub fn read_all_bytes(&self) -> usize {
-        let pages: usize =
-            self.pages.iter().map(|p| p.codes.len() + 4 * (p.scale.len() + p.zero.len())).sum();
+        let pages: usize = self.pages_iter().map(page_bytes).sum();
         pages + self.tail.len() * 4
     }
 
@@ -477,10 +583,12 @@ impl TokenQuantStore {
         (self.window + self.group / 2) * (self.dim * 4).saturating_sub(self.frozen_row_bytes())
     }
 
-    /// Resident bytes of the whole store.
+    /// Resident bytes of the whole store, adopted shared pages included
+    /// — an adopter's `nbytes()` is bit-identical to a cold store's, so
+    /// footprint models need no reuse-awareness; the engine subtracts
+    /// [`TokenQuantStore::shared_bytes`] when charging the pool.
     pub fn nbytes(&self) -> usize {
-        let packed: usize =
-            self.pages.iter().map(|p| p.codes.len() + 4 * (p.scale.len() + p.zero.len())).sum();
+        let packed: usize = self.pages_iter().map(page_bytes).sum();
         packed + self.tail.len() * 4
     }
 }
@@ -744,6 +852,52 @@ mod tests {
         assert_eq!(st.gather_read_bytes(&[127]), 32 * 4);
         // read_all cost equals the resident store size.
         assert_eq!(st.read_all_bytes(), st.nbytes());
+    }
+
+    #[test]
+    fn snapshot_adopt_matches_cold_store() {
+        let mut rng = Rng::new(91);
+        let rows: Vec<Vec<f32>> = (0..53).map(|_| rng.normal_vec(6, 1.0)).collect();
+        let split = 29;
+        let mut donor = TokenQuantStore::new(6, Bits::B4, 4, 6);
+        for r in &rows[..split] {
+            donor.append(r);
+        }
+        let snap = donor.snapshot();
+        let mut forked = TokenQuantStore::new(6, Bits::B4, 4, 6);
+        forked.adopt(&snap);
+        assert!(forked.shared_bytes() > 0);
+        let mut cold = TokenQuantStore::new(6, Bits::B4, 4, 6);
+        for r in &rows {
+            cold.append(r);
+        }
+        for r in &rows[split..] {
+            forked.append(r);
+        }
+        assert_eq!(forked.len(), cold.len());
+        assert_eq!(forked.frozen, cold.frozen);
+        assert_eq!(forked.nbytes(), cold.nbytes());
+        assert_eq!(forked.read_all_bytes(), cold.read_all_bytes());
+        let (mut a, mut b) = (vec![0.0f32; 53 * 6], vec![0.0f32; 53 * 6]);
+        cold.read_all(&mut a);
+        forked.read_all(&mut b);
+        assert_eq!(a, b, "adopted store must read bit-identically to cold");
+        // The donor keeps appending privately past the fork; its shared
+        // pages are untouched and it stays bit-identical too.
+        for r in &rows[split..] {
+            donor.append(r);
+        }
+        let mut c = vec![0.0f32; 53 * 6];
+        donor.read_all(&mut c);
+        assert_eq!(c, a);
+        // Re-forking a pure adopter reuses the Arc (no page copies).
+        let refork = {
+            let mut early = TokenQuantStore::new(6, Bits::B4, 4, 6);
+            early.adopt(&snap);
+            early.snapshot()
+        };
+        assert_eq!(refork.shared_bytes(), snap.shared_bytes());
+        assert_eq!(refork.len(), snap.len());
     }
 
     #[test]

@@ -202,13 +202,43 @@ pub fn causal_attend_chunk(
     scratch: &mut ChunkAttendScratch,
     out: &mut [f32],
 ) {
+    causal_attend_chunk_seg(qs, &[keys], &[values], n, len, n_heads, n_kv_heads, d, scratch, out);
+}
+
+/// [`causal_attend_chunk`] over a cache stored as consecutive row
+/// **segments** (each `(rows_i, n_kv_heads·d)` row-major; segments
+/// concatenate to the `(len, kv_dim)` cache). The kernel packs strided
+/// key/value columns into contiguous per-head panels before any
+/// arithmetic, so feeding the pack loop from several contiguous pieces is
+/// bit-identical to one flat buffer — this is what lets a shared-prefix
+/// cache (immutable `Arc` panel + private tail, see
+/// `attention::SharedVec`) run blocked prefill without re-materializing a
+/// flat copy of the prefix.
+#[allow(clippy::too_many_arguments)]
+pub fn causal_attend_chunk_seg(
+    qs: &[f32],
+    key_segs: &[&[f32]],
+    val_segs: &[&[f32]],
+    n: usize,
+    len: usize,
+    n_heads: usize,
+    n_kv_heads: usize,
+    d: usize,
+    scratch: &mut ChunkAttendScratch,
+    out: &mut [f32],
+) {
     assert!(n > 0 && n <= len, "chunk {n} vs cache {len}");
     assert_eq!(n_heads % n_kv_heads, 0);
     let kvd = n_kv_heads * d;
     let qd = n_heads * d;
     assert_eq!(qs.len(), n * qd);
-    assert_eq!(keys.len(), len * kvd);
-    assert_eq!(values.len(), len * kvd);
+    assert_eq!(key_segs.len(), val_segs.len());
+    let seg_rows: usize = key_segs.iter().map(|s| s.len() / kvd).sum();
+    assert_eq!(seg_rows, len, "segments must cover the cache");
+    for (ks, vs) in key_segs.iter().zip(val_segs) {
+        assert_eq!(ks.len() % kvd, 0);
+        assert_eq!(ks.len(), vs.len());
+    }
     assert_eq!(out.len(), n * qd);
     let group = n_heads / n_kv_heads;
     let scale = 1.0 / (d as f32).sqrt();
@@ -224,11 +254,18 @@ pub fn causal_attend_chunk(
 
     for kvh in 0..n_kv_heads {
         // Pack this KV head's strided columns into contiguous panels once;
-        // every query head of the group and every tile reuses them.
-        for j in 0..len {
-            let src = j * kvd + kvh * d;
-            khead[j * d..(j + 1) * d].copy_from_slice(&keys[src..src + d]);
-            vhead[j * d..(j + 1) * d].copy_from_slice(&values[src..src + d]);
+        // every query head of the group and every tile reuses them. Rows
+        // stream segment by segment — same row order as a flat cache.
+        let mut j0 = 0usize;
+        for (ks, vs) in key_segs.iter().zip(val_segs) {
+            let rows = ks.len() / kvd;
+            for j in 0..rows {
+                let src = j * kvd + kvh * d;
+                let dst = (j0 + j) * d;
+                khead[dst..dst + d].copy_from_slice(&ks[src..src + d]);
+                vhead[dst..dst + d].copy_from_slice(&vs[src..src + d]);
+            }
+            j0 += rows;
         }
         for h in kvh * group..(kvh + 1) * group {
             let mut t0 = 0;
@@ -1112,6 +1149,44 @@ mod tests {
         let reference = causal_reference(&qs, &keys, &values, n, len, n_heads, n_kv_heads, d);
         for (a, b) in out.iter().zip(&reference) {
             assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+        }
+    }
+
+    #[test]
+    fn causal_attend_chunk_seg_bit_matches_flat() {
+        // Splitting the cache into segments only changes where the pack
+        // loop copies FROM — every downstream tile computation sees the
+        // same packed panels, so any segmentation must be BIT-identical
+        // to the flat call (the shared-prefix adopt contract relies on
+        // this).
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(23);
+        let (n_heads, n_kv_heads, d) = (4, 2, 8);
+        let (len, n) = (37, 19);
+        let qd = n_heads * d;
+        let kvd = n_kv_heads * d;
+        let qs = rng.normal_vec(n * qd, 1.0);
+        let keys = rng.normal_vec(len * kvd, 1.0);
+        let values = rng.normal_vec(len * kvd, 1.0);
+        let mut flat = vec![0.0f32; n * qd];
+        let mut scratch = ChunkAttendScratch::default();
+        causal_attend_chunk(&qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &mut scratch, &mut flat);
+        for split in [0usize, 1, 16, 18, 36, 37] {
+            let b = split * kvd;
+            let mut seg = vec![0.0f32; n * qd];
+            causal_attend_chunk_seg(
+                &qs,
+                &[&keys[..b], &keys[b..]],
+                &[&values[..b], &values[b..]],
+                n,
+                len,
+                n_heads,
+                n_kv_heads,
+                d,
+                &mut scratch,
+                &mut seg,
+            );
+            assert_eq!(seg, flat, "split at row {split} must be bit-identical");
         }
     }
 

@@ -1,0 +1,186 @@
+//! Multi-turn chat workload: conversations whose every turn re-sends the
+//! whole transcript so far plus a new user message — the canonical
+//! shared-prefix traffic pattern prefix reuse exists for (each turn's
+//! prompt is a strict extension of the previous turn's prompt ++ answer).
+//!
+//! The driver threads the turns through a [`Router`] with session
+//! affinity (a conversation's warm prefix cache lives on one replica, so
+//! bouncing turns across replicas would forfeit every adoption) and calls
+//! [`Router::end_session`] when a conversation closes, so affinity
+//! entries do not accumulate forever.
+
+use crate::coordinator::{Engine, GenParams, Request, Router};
+use crate::util::rng::Rng;
+
+/// Shape of a synthetic chat workload.
+#[derive(Clone, Debug)]
+pub struct ChatSpec {
+    pub n_sessions: usize,
+    pub turns_per_session: usize,
+    /// Tokens in the opening user message (the eventual shared prefix —
+    /// chunk-aligned openings publish cleanly).
+    pub first_turn_tokens: usize,
+    /// Tokens each later user message appends.
+    pub turn_tokens: usize,
+    pub max_new_tokens: usize,
+    pub vocab: usize,
+    pub seed: u64,
+}
+
+/// Aggregate outcome of a chat run.
+#[derive(Clone, Debug, Default)]
+pub struct ChatStats {
+    pub turns_completed: usize,
+    /// Prompt tokens submitted across all turns (the transcript re-send
+    /// traffic reuse is supposed to absorb).
+    pub prompt_tokens: usize,
+    /// Summed over replicas after the run.
+    pub prefill_tokens_avoided: usize,
+    pub prefix_adoptions: usize,
+    /// Replica each session was pinned to (index = session).
+    pub session_replica: Vec<usize>,
+    /// Per-session final transcripts (prompt ++ every answer), for
+    /// cross-run comparisons.
+    pub transcripts: Vec<Vec<usize>>,
+}
+
+/// Drive a chat workload over engine replicas through the router, one
+/// turn round at a time (every live session advances a turn, then its
+/// replica runs to completion). Returns per-session transcripts and the
+/// summed reuse metrics.
+pub fn run_chat(spec: &ChatSpec, replicas: &mut [Engine], router: &mut Router) -> ChatStats {
+    assert!(!replicas.is_empty() && router.replicas() == replicas.len());
+    let mut rng = Rng::new(spec.seed);
+    // A session's transcript: everything the model has seen + said; the
+    // next turn's prompt is transcript ++ fresh user tokens.
+    let mut transcripts: Vec<Vec<usize>> = (0..spec.n_sessions).map(|_| Vec::new()).collect();
+    let mut stats = ChatStats {
+        session_replica: vec![usize::MAX; spec.n_sessions],
+        ..ChatStats::default()
+    };
+    let mut next_id = 0u64;
+    for turn in 0..spec.turns_per_session {
+        // (session, replica, dispatched request) in flight this round.
+        let mut in_flight: Vec<(usize, usize, Request)> = Vec::new();
+        for s in 0..spec.n_sessions {
+            let user_tokens =
+                if turn == 0 { spec.first_turn_tokens } else { spec.turn_tokens };
+            for _ in 0..user_tokens {
+                transcripts[s].push(rng.below(spec.vocab));
+            }
+            let req = Request::new(
+                next_id,
+                transcripts[s].clone(),
+                GenParams { max_new_tokens: spec.max_new_tokens, stop_token: None },
+            );
+            next_id += 1;
+            let r = router.route(&req, Some(s as u64));
+            if stats.session_replica[s] == usize::MAX {
+                stats.session_replica[s] = r;
+            } else {
+                assert_eq!(stats.session_replica[s], r, "affinity moved session {s}");
+            }
+            stats.prompt_tokens += req.prompt.len();
+            replicas[r].submit(req.clone());
+            in_flight.push((s, r, req));
+        }
+        for replica in replicas.iter_mut() {
+            for resp in replica.run_to_completion() {
+                let (s, r, req) =
+                    in_flight.iter().find(|(_, _, rq)| rq.id == resp.id).expect("unknown id");
+                transcripts[*s].extend_from_slice(&resp.tokens);
+                router.complete(*r, req);
+                stats.turns_completed += 1;
+            }
+        }
+    }
+    for s in 0..spec.n_sessions {
+        router.end_session(s as u64);
+    }
+    for replica in replicas.iter() {
+        stats.prefill_tokens_avoided += replica.metrics.prefill_tokens_avoided;
+        stats.prefix_adoptions += replica.metrics.prefix_adoptions;
+    }
+    stats.transcripts = transcripts;
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attention::FullAttention;
+    use crate::coordinator::{EngineConfig, Policy};
+    use crate::model::{BackendFactory, Model, ModelConfig, Weights};
+    use std::sync::Arc;
+
+    fn replicas(n: usize, reuse: bool) -> Vec<Engine> {
+        (0..n)
+            .map(|_| {
+                let cfg = ModelConfig::tiny_mha(256);
+                let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 37)));
+                let shape = cfg.attn_shape();
+                let factory: Box<BackendFactory> =
+                    Box::new(move |_| Box::new(FullAttention::new(shape)) as _);
+                Engine::new(
+                    model,
+                    factory,
+                    EngineConfig {
+                        max_batch: 4,
+                        prefill_chunk: 8,
+                        page_bytes: 4096,
+                        pool_budget: 1 << 26,
+                        threads: 2,
+                        prefix_reuse: reuse,
+                    },
+                )
+            })
+            .collect()
+    }
+
+    fn spec() -> ChatSpec {
+        ChatSpec {
+            n_sessions: 3,
+            turns_per_session: 3,
+            first_turn_tokens: 16,
+            turn_tokens: 6,
+            max_new_tokens: 4,
+            vocab: 50,
+            seed: 11,
+        }
+    }
+
+    #[test]
+    fn multi_turn_sessions_stay_pinned_and_complete() {
+        let spec = spec();
+        let mut engines = replicas(2, false);
+        let mut router = Router::new(2, Policy::LeastLoaded);
+        let stats = run_chat(&spec, &mut engines, &mut router);
+        assert_eq!(stats.turns_completed, 9);
+        assert!(stats.session_replica.iter().all(|&r| r < 2));
+        // Every transcript holds all user tokens + all answers.
+        let expect = 16 + 2 * 6 + 3 * 4;
+        assert!(stats.transcripts.iter().all(|t| t.len() == expect));
+        // end_session dropped the affinity: load fully drained means
+        // complete() was called once per turn with the charged cost.
+        assert_eq!(router.load_of(0) + router.load_of(1), 0);
+    }
+
+    #[test]
+    fn prefix_reuse_absorbs_transcript_resends() {
+        // Same trace with reuse on: turn k's prompt extends turn k-1's
+        // published prefix, so later turns adopt instead of re-prefilling
+        // the transcript — and the conversation itself is unchanged.
+        let spec = spec();
+        let mut cold_engines = replicas(2, false);
+        let mut cold_router = Router::new(2, Policy::LeastLoaded);
+        let cold = run_chat(&spec, &mut cold_engines, &mut cold_router);
+        let mut warm_engines = replicas(2, true);
+        let mut warm_router = Router::new(2, Policy::LeastLoaded);
+        let warm = run_chat(&spec, &mut warm_engines, &mut warm_router);
+        assert_eq!(cold.prefix_adoptions, 0);
+        assert!(warm.prefix_adoptions > 0, "turn 2+ must adopt the published transcript");
+        assert!(warm.prefill_tokens_avoided >= 8 * warm.prefix_adoptions);
+        // Reuse must be semantically invisible: identical transcripts.
+        assert_eq!(cold.transcripts, warm.transcripts);
+    }
+}

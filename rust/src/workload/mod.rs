@@ -8,10 +8,12 @@
 //! paper's retrieval benchmarks measure — does compressed attention still
 //! find and read the right tokens?
 
+pub mod chat;
 pub mod longbench;
 pub mod ruler;
 pub mod runner;
 
+pub use chat::{run_chat, ChatSpec, ChatStats};
 pub use runner::{evaluate, TaskSuite, TaskTrial};
 
 use crate::model::retrieval::RetrievalModel;

@@ -789,6 +789,97 @@ fn prop_decode_batch_matches_step_loop() {
     }
 }
 
+/// Fork/adopt bit-identity: adopting a forked prefix and prefilling only
+/// the suffix must reproduce the cold run EXACTLY — bit-equal logits at
+/// every step and equal `kv_bytes()` — for both the FullAttention and
+/// SalsAttention backends. Draws cover recent-ring wraps and quant-page
+/// boundaries (prefix lengths both aligned and misaligned to the quant
+/// group), always forking at a chunk multiple (the engine's publication
+/// contract), and keep SALS top-k selection ACTIVE: adopted state is
+/// bit-equal, so scores — and therefore the selected set — are identical
+/// by construction, not by tolerance.
+#[test]
+fn prop_fork_adopt_decode_bit_identical_to_cold() {
+    let cfg = ModelConfig::tiny_gqa(96);
+    let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 91)));
+    let shape = cfg.attn_shape();
+    let kvd = cfg.kv_dim();
+
+    let mut crng = Rng::new(93);
+    let mut cal = Calibrator::new(kvd);
+    for _ in 0..200 {
+        cal.add_key(&crng.normal_vec(kvd, 1.0));
+    }
+    let proj = cal.fit(kvd / 2).unwrap();
+    let sals_cfg = SalsConfig {
+        rank: kvd / 2,
+        r_star: kvd / 4,
+        sink: 2,
+        recent: 8,   // prefixes below wrap the ring
+        critical: 12, // strict subset of the sequence — selection stays live
+        v_bits: Bits::B4,
+        group: 8, // quant-page boundary every 8 tokens
+        prefill: None,
+    };
+
+    let full: Box<BackendFactory> =
+        Box::new(move |_| Box::new(FullAttention::new(shape)) as Box<dyn AttentionBackend + Send>);
+    let sals: Box<BackendFactory> = {
+        let (p, c) = (proj, sals_cfg);
+        Box::new(move |_| {
+            Box::new(SalsAttention::new(shape, c.clone(), p.clone())) as Box<dyn AttentionBackend + Send>
+        })
+    };
+
+    let mut rng = Rng::new(95);
+    for (name, factory) in [("full", &full), ("sals", &sals)] {
+        for case in 0..6 {
+            let chunk = 3 + rng.below(8); // 3..=10
+            let prefix_len = chunk * (2 + rng.below(4)); // 6..=50, chunk-aligned
+            let suffix_len = 1 + rng.below(2 * chunk);
+            let prompt: Vec<usize> =
+                (0..prefix_len + suffix_len).map(|_| rng.below(cfg.vocab)).collect();
+            let dec: Vec<usize> = (0..3).map(|_| rng.below(cfg.vocab)).collect();
+            let ctx = format!("{name} case {case} chunk {chunk} prefix {prefix_len} suffix {suffix_len}");
+
+            // Cold run: whole prompt prefilled in one schedule.
+            let mut s_cold = SequenceState::new(&cfg, factory);
+            let mut sc_cold = Scratch::new(&cfg);
+            let mut cold = vec![model.prefill_chunked(&mut s_cold, &mut sc_cold, &prompt, chunk)];
+            for &t in &dec {
+                cold.push(model.step(&mut s_cold, &mut sc_cold, t, true).unwrap());
+            }
+
+            // Donor: prefill only the prefix (same chunk schedule as the
+            // cold run's first `prefix_len` tokens), then freeze it.
+            let mut donor = SequenceState::new(&cfg, factory);
+            let mut sc = Scratch::new(&cfg);
+            model.prefill_chunked(&mut donor, &mut sc, &prompt[..prefix_len], chunk);
+            let snap = donor.fork_prefix(prefix_len).unwrap_or_else(|| panic!("{ctx}: fork refused"));
+            assert!(snap.shared_bytes() > 0, "{ctx}: empty snapshot");
+
+            // Warm run: adopt the snapshot, prefill only the suffix. The
+            // boundary is a chunk multiple, so the suffix chunks land on
+            // the cold run's boundaries — identical arithmetic throughout.
+            let mut s_warm = SequenceState::new(&cfg, factory);
+            let mut sc_warm = Scratch::new(&cfg);
+            assert!(s_warm.adopt_prefix(&snap), "{ctx}: adoption refused");
+            assert!(s_warm.shared_prefix_bytes() > 0, "{ctx}: adopter holds no shared bytes");
+            let mut warm =
+                vec![model.prefill_chunked(&mut s_warm, &mut sc_warm, &prompt[prefix_len..], chunk)];
+            for &t in &dec {
+                warm.push(model.step(&mut s_warm, &mut sc_warm, t, true).unwrap());
+            }
+
+            assert_eq!(s_warm.pos, s_cold.pos, "{ctx}: position drift");
+            assert_eq!(s_warm.kv_bytes(), s_cold.kv_bytes(), "{ctx}: kv_bytes drift");
+            for (step, (w, c)) in warm.iter().zip(&cold).enumerate() {
+                assert!(w == c, "{ctx}: logits differ at step {step}");
+            }
+        }
+    }
+}
+
 /// Batched prefill ≡ sequential decode: for random prompts and every
 /// chunking (including 1 and the whole prompt), `Model::prefill_chunked`
 /// must reproduce the `step()` loop's logits within 1e-4, for both the
