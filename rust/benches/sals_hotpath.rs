@@ -15,25 +15,41 @@
 //!   selection, recon matmul that skips recent-ring rows into a
 //!   materialized (n_sel, kvd) key panel, page-coherent value gather,
 //!   packed `sparse_attend` epilogue.
-//! * **fused** — the production path (`attend_instrumented`, threads=1):
-//!   same score/select, then the §4.4 fused reconstruct·RoPE·QKᵀ kernel —
-//!   L1-resident per-KV-head tiles + online softmax; the key panel and
-//!   full score row never materialize.
-//! * **fused ×N** — the fused path with the worker share set to
-//!   min(num_cpus, 8): token-block-parallel score scan + per-KV-head
-//!   parallel tile loops (bit-identical output, faster wall clock).
+//! * **fused** — the production path (`attend_instrumented`, serial
+//!   handle): same score/select, then the §4.4 fused
+//!   reconstruct·RoPE·QKᵀ kernel — L1-resident per-KV-head tiles +
+//!   online softmax; the key panel and full score row never materialize.
+//! * **fused ×N** — the fused path on a persistent [`WorkerPool`] handle
+//!   of min(num_cpus, 8) workers (`SALS_THREADS` overrides):
+//!   token-block-parallel score scan + per-KV-head / split-KV parallel
+//!   tile loops (bit-identical output, faster wall clock). The pool is
+//!   created ONCE per bench run; per-attend fan-out is a mailbox
+//!   handoff, not a thread spawn.
+//!
+//! Two pool-specific measurements ride along:
+//!
+//! * **dispatch microbench** — per-call latency of an empty full-width
+//!   fan-out on the pool handle vs fresh `std::thread::scope` spawns.
+//!   Gate (multicore): pool handoff ≥ 5× cheaper — the margin that lets
+//!   the re-derived work guards admit 4K contexts to the parallel
+//!   regime.
+//! * **split-KV row** — an MQA shape (4 query heads, ONE KV head) at
+//!   32K, where the per-KV-head partition has nothing to split and the
+//!   flash-decoding-style selection-segment partition is the only
+//!   parallelism. Gate (multicore): pooled attend ≥ 1.3× serial, and
+//!   the outputs must be bit-identical (fixed segment decomposition +
+//!   fixed merge order).
 //!
 //! The workload is the paper's memory-bound decode regime (long context,
 //! small critical budget, SALS-12.5% ranks — r* rows are sub-cache-line,
 //! where the strided scan's waste is maximal). Acceptance at 32K:
 //! staged ≥ 1.5× legacy on total; fused kernel ≥ 1.2× the staged
 //! reconstruct+attend stages (the stages the fusion replaces),
-//! single-threaded; the threads=N total not regressing below threads=1
-//! (the gate guards against a parallelization that *hurts* — parity on
-//! tolerance in quick mode, with the measured speedup reported in the
-//! column and JSON; real multicore hardware is expected to show > 1×);
-//! and the score stage's metered traffic ≈ r*·4 bytes per context token
-//! (not r·4).
+//! single-threaded; the pool=N total not regressing below serial
+//! (parity on tolerance in quick mode). At 4K — the mid-context regime
+//! the old ~10µs spawn cost forfeited — the pooled total must be
+//! strictly faster than serial on multicore. And the score stage's
+//! metered traffic ≈ r*·4 bytes per context token (not r·4).
 //!
 //! A second table times the §Perf L6 SIMD tile kernels against the scalar
 //! reference (`tensor::simd::scalar`) at the fused kernel's own shapes: the
@@ -56,6 +72,7 @@ use sals::tensor::simd::{self, SimdTier};
 use sals::tensor::top_k_indices_into;
 use sals::util::json::Json;
 use sals::util::rng::Rng;
+use sals::util::threadpool::{resolve_threads, Workers};
 use std::time::Instant;
 
 const N_HEADS: usize = 4;
@@ -78,9 +95,8 @@ fn critical_for(ctx: usize) -> usize {
 
 /// Low-rank key-family projector (real LLM keys are low-rank; exactness is
 /// irrelevant to the timing).
-fn make_projector(rng: &mut Rng) -> Projector {
-    let kvd = kvd();
-    let basis: Vec<Vec<f32>> = (0..RANK).map(|_| rng.normal_vec(kvd, 1.0)).collect();
+fn make_projector_dims(kvd: usize, rank: usize, rng: &mut Rng) -> Projector {
+    let basis: Vec<Vec<f32>> = (0..rank).map(|_| rng.normal_vec(kvd, 1.0)).collect();
     let mut cal = Calibrator::new(kvd);
     let mut row = vec![0.0f32; kvd];
     for _ in 0..512 {
@@ -90,7 +106,11 @@ fn make_projector(rng: &mut Rng) -> Projector {
         }
         cal.add_key(&row);
     }
-    cal.fit(RANK).unwrap()
+    cal.fit(rank).unwrap()
+}
+
+fn make_projector(rng: &mut Rng) -> Projector {
+    make_projector_dims(kvd(), RANK, rng)
 }
 
 /// The pre-PR decode state + scratch: (len, r) row-major latents, fp32
@@ -260,7 +280,7 @@ fn run_context(
     ctx: usize,
     reps: usize,
     decode_tokens: usize,
-    threads_n: usize,
+    pool: &Workers,
     rng: &mut Rng,
 ) -> CtxResult {
     let kvd = kvd();
@@ -332,13 +352,13 @@ fn run_context(
             packed.attend_staged_instrumented(&q, &mut out, &mut ts);
         }
         keep(1, ts, &mut best, &mut best_total);
-        packed.set_threads(1);
+        packed.set_workers(&Workers::serial());
         let mut tf = SalsStageTimes::default();
         for _ in 0..decode_tokens {
             packed.attend_instrumented(&q, &mut out, &mut tf);
         }
         keep(2, tf, &mut best, &mut best_total);
-        packed.set_threads(threads_n);
+        packed.set_workers(pool);
         let mut tm = SalsStageTimes::default();
         for _ in 0..decode_tokens {
             packed.attend_instrumented(&q, &mut out, &mut tm);
@@ -364,6 +384,86 @@ fn run_context(
         fused_kernel_speedup: (staged_t.reconstruct + staged_t.attend) / fused_t.attend,
         mt_speedup: fused_t.total() / fused_mt_t.total(),
         score_bytes_per_ctx_token,
+    }
+}
+
+struct SplitKvResult {
+    serial_us: f64,
+    pooled_us: f64,
+    /// serial total / pooled total per decode attend.
+    speedup: f64,
+    /// Pooled output must equal the serial output bit-for-bit.
+    bit_identical: bool,
+}
+
+/// Split-KV decode attend at an MQA shape: 4 query heads over ONE KV head
+/// (kv_dim = 32), where the per-KV-head partition has nothing to split —
+/// before the selection-segment decomposition, this shape was pinned
+/// serial no matter how many workers the engine offered. At 32K the
+/// selection (sink 4 + recent 64 + critical ctx/256) is ~196 rows ≥
+/// `SPLIT_KV_MIN_SEL`, so the fused kernel folds fixed 64-row segments on
+/// separate workers and merges the online-softmax partials in segment
+/// order.
+fn run_split_kv(
+    ctx: usize,
+    reps: usize,
+    decode_tokens: usize,
+    pool: &Workers,
+    rng: &mut Rng,
+) -> SplitKvResult {
+    let max_seq = ctx + 8;
+    let shape = sals::attention::AttnShape::gqa(N_HEADS, 1, HEAD_DIM, max_seq);
+    let kvd = shape.kv_dim();
+    let qd = shape.q_dim();
+    let (rank, r_star) = (8, 4); // SALS-25% of kv_dim=32; r* rows stay sub-cache-line
+    let proj = make_projector_dims(kvd, rank, rng);
+    let cfg = SalsConfig {
+        rank,
+        r_star,
+        sink: SINK,
+        recent: RECENT,
+        critical: critical_for(ctx),
+        v_bits: V_BITS,
+        group: kvd,
+        prefill: None,
+    };
+    let mut packed = SalsAttention::new(shape, cfg, proj);
+
+    const CHUNK: usize = 1024;
+    let mut done = 0;
+    while done < ctx {
+        let n = CHUNK.min(ctx - done);
+        let ks = rng.normal_vec(n * kvd, 1.0);
+        let vs = rng.normal_vec(n * kvd, 1.0);
+        packed.append_batch(&ks, &vs, n);
+        done += n;
+    }
+    packed.end_prefill();
+
+    let q = rng.normal_vec(qd, 1.0);
+    let mut out_serial = vec![0.0f32; qd];
+    let mut out_pooled = vec![0.0f32; qd];
+    let mut best = [f64::INFINITY; 2];
+    for _ in 0..reps {
+        packed.set_workers(&Workers::serial());
+        let t0 = Instant::now();
+        for _ in 0..decode_tokens {
+            packed.attend(&q, &mut out_serial);
+        }
+        best[0] = best[0].min(t0.elapsed().as_secs_f64());
+        packed.set_workers(pool);
+        let t1 = Instant::now();
+        for _ in 0..decode_tokens {
+            packed.attend(&q, &mut out_pooled);
+        }
+        best[1] = best[1].min(t1.elapsed().as_secs_f64());
+    }
+    let per = |secs: f64| secs / decode_tokens as f64 * 1e6;
+    SplitKvResult {
+        serial_us: per(best[0]),
+        pooled_us: per(best[1]),
+        speedup: best[0] / best[1],
+        bit_identical: out_serial == out_pooled,
     }
 }
 
@@ -534,8 +634,21 @@ fn run_simd_microbench(quick: bool, rng: &mut Rng) -> Vec<MicroRow> {
 fn main() {
     let quick = std::env::var("SALS_BENCH_QUICK").is_ok();
     let (reps, decode_tokens) = if quick { (3, 5) } else { (3, 10) };
-    let threads_n = sals::util::threadpool::num_cpus().min(8);
+    let threads_n = resolve_threads(0).min(8);
+    let pool = if threads_n > 1 { Workers::pooled(threads_n) } else { Workers::serial() };
     let mut rng = Rng::new(2026);
+
+    // Dispatch microbench: per-call latency of an empty full-width
+    // fan-out. The pool's mailbox handoff must beat fresh scoped spawns
+    // by the margin the re-derived work guards assume.
+    let pool_dispatch_ns = pool.dispatch_ns();
+    let scoped_dispatch_ns = Workers::scoped(threads_n).dispatch_ns();
+    let dispatch_speedup = scoped_dispatch_ns / pool_dispatch_ns;
+    let dispatch_ok = threads_n <= 1 || dispatch_speedup >= 5.0;
+    println!(
+        "pool dispatch (width {threads_n}): {pool_dispatch_ns:.0} ns vs scoped spawn \
+         {scoped_dispatch_ns:.0} ns — {dispatch_speedup:.1}x"
+    );
 
     let mut table = Table::new(
         "SALS decode hot path — per-token stage times (µs): legacy vs staged vs fused",
@@ -545,11 +658,12 @@ fn main() {
     let mut staged_speedup_32k = 0.0;
     let mut fused_kernel_speedup_32k = 0.0;
     let mut mt_speedup_32k = 0.0;
+    let mut mid_mt_speedup_4k = 0.0;
     let mut score_bytes_ok = true;
     let rstar_bytes = (R_STAR * 4) as f64;
 
     for &ctx in &CONTEXTS {
-        let res = run_context(ctx, reps, decode_tokens, threads_n, &mut rng);
+        let res = run_context(ctx, reps, decode_tokens, &pool, &mut rng);
         let us = 1e6;
         let fused_mt_label = format!("fused x{threads_n}");
         for (path, t, speed) in [
@@ -586,12 +700,29 @@ fn main() {
         );
         // The meter must reflect the panel scan: r*·4, not r·4.
         score_bytes_ok &= res.score_bytes_per_ctx_token <= rstar_bytes * 1.01;
+        if ctx == 4096 {
+            mid_mt_speedup_4k = res.mt_speedup;
+        }
         if ctx == 32768 {
             staged_speedup_32k = res.staged_speedup;
             fused_kernel_speedup_32k = res.fused_kernel_speedup;
             mt_speedup_32k = res.mt_speedup;
         }
     }
+
+    // Split-KV row: MQA shape where the segment partition is the only
+    // available parallelism (see `run_split_kv`).
+    let split = run_split_kv(32768, reps, decode_tokens, &pool, &mut rng);
+    table.row(vec![
+        "32768".to_string(),
+        "split-kv mqa".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        "-".to_string(),
+        format!("{:.1} -> {:.1}", split.serial_us, split.pooled_us),
+        format!("{:.1}", split.pooled_us),
+        format!("{:.2}x vs serial", split.speedup),
+    ]);
     table.print();
 
     // §Perf L6: scalar-vs-SIMD tile-kernel microbenches. Gates are enforced
@@ -647,25 +778,46 @@ fn main() {
     );
 
     // Gates: the PR-4 staged-vs-legacy floor; the fused kernel vs the two
-    // staged stages it replaces (reconstruct+attend), single-threaded; and
-    // — on multicore only — the threads=N total must not regress below
-    // threads=1 (a no-worse floor, NOT a strict-speedup gate: gating
-    // strictly above 1.0 on a microsecond-scale measurement would flake;
-    // the measured mt speedup is reported in the column/JSON for the
-    // trajectory). Quick mode (CI's 2-vCPU runners, 5-token timing loops)
-    // tolerates 5% scheduler noise around that floor.
+    // staged stages it replaces (reconstruct+attend), single-threaded; on
+    // multicore only — the pooled 32K total must not regress below serial
+    // (a no-worse floor, NOT a strict-speedup gate: gating strictly above
+    // 1.0 on a microsecond-scale measurement would flake; the measured mt
+    // speedup is reported in the column/JSON for the trajectory), the
+    // pooled 4K total must be STRICTLY faster than serial (the
+    // mid-context win the ~10µs spawn cost used to forfeit — at 4K the
+    // whole attend is tens of µs, so the sub-µs pool handoff must pay for
+    // itself), the pool handoff must be ≥5x cheaper than scoped spawn,
+    // and the MQA split-KV attend must be ≥1.3x serial at 32K and
+    // bit-identical. Quick mode (CI's 2-vCPU runners, 5-token timing
+    // loops) tolerates 5% scheduler noise around the 32K floor.
     let staged_ok = staged_speedup_32k >= 1.5;
     let fused_ok = fused_kernel_speedup_32k >= 1.2;
     let mt_floor = if quick { 0.95 } else { 1.0 };
     let mt_ok = threads_n <= 1 || mt_speedup_32k >= mt_floor;
-    let accepted = staged_ok && fused_ok && mt_ok && score_bytes_ok && simd_gates_ok;
+    let mt4k_ok = threads_n <= 1 || mid_mt_speedup_4k > 1.0;
+    let split_ok = split.bit_identical && (threads_n <= 1 || split.speedup >= 1.3);
+    let accepted = staged_ok
+        && fused_ok
+        && mt_ok
+        && mt4k_ok
+        && dispatch_ok
+        && split_ok
+        && score_bytes_ok
+        && simd_gates_ok;
     println!(
         "acceptance: 32K staged {staged_speedup_32k:.2}x {} 1.5x legacy; fused kernel \
-         {fused_kernel_speedup_32k:.2}x {} 1.2x staged recon+attend; fused x{threads_n} \
-         {mt_speedup_32k:.2}x {} {mt_floor}x fused x1; score bytes/ctx-token {} r*·4",
+         {fused_kernel_speedup_32k:.2}x {} 1.2x staged recon+attend; pool x{threads_n} \
+         {mt_speedup_32k:.2}x {} {mt_floor}x serial at 32K, {mid_mt_speedup_4k:.2}x {} 1x at 4K; \
+         dispatch {dispatch_speedup:.1}x {} 5x scoped; split-KV {:.2}x {} 1.3x serial \
+         (bit-identical: {}); score bytes/ctx-token {} r*·4",
         if staged_ok { ">=" } else { "<" },
         if fused_ok { ">=" } else { "<" },
         if mt_ok { ">=" } else { "<" },
+        if mt4k_ok { ">" } else { "<=" },
+        if dispatch_ok { ">=" } else { "<" },
+        split.speedup,
+        if split.speedup >= 1.3 { ">=" } else { "<" },
+        split.bit_identical,
         if score_bytes_ok { "==" } else { "!=" },
     );
 
@@ -681,6 +833,18 @@ fn main() {
         .field("speedup_32k", staged_speedup_32k)
         .field("fused_kernel_speedup_32k", fused_kernel_speedup_32k)
         .field("fused_mt_speedup_32k", mt_speedup_32k)
+        .field("mid_mt_speedup_4k", mid_mt_speedup_4k)
+        .field("bench_pool_dispatch_ns", pool_dispatch_ns)
+        .field("scoped_dispatch_ns", scoped_dispatch_ns)
+        .field("dispatch_speedup", dispatch_speedup)
+        .field(
+            "split_kv",
+            Json::obj()
+                .field("serial_us", split.serial_us)
+                .field("pooled_us", split.pooled_us)
+                .field("speedup_32k", split.speedup)
+                .field("bit_identical", split.bit_identical),
+        )
         .field("score_bytes_per_ctx_token_ok", score_bytes_ok)
         .field("simd_gates_enforced", gates_enforced)
         .field("simd_gates_ok", simd_gates_ok)

@@ -15,6 +15,7 @@ use crate::attention::full::DensePrefixData;
 use crate::attention::{AttnShape, SharedVec, Traffic};
 use crate::rope::RopeTable;
 use crate::tensor::ops::{causal_attend_chunk_seg, ChunkAttendScratch, SparseAttendScratch};
+use crate::util::threadpool::Workers;
 use std::sync::Arc;
 
 /// Per-backend decode scratch shared by the DenseCache baselines. Every
@@ -46,11 +47,12 @@ pub struct BaselineScratch {
     /// Projection/label staging (Loki query latent, DoubleSparse channel
     /// gather, Loki append-row latent).
     pub lat: Vec<f32>,
-    /// Worker share for the per-KV-head attend fan-out
-    /// ([`crate::tensor::ops::sparse_attend_threaded`]); 0/1 = serial.
+    /// Worker handle for the per-KV-head attend fan-out
+    /// ([`crate::tensor::ops::sparse_attend_threaded`]); default serial.
     /// Set by the engine through
-    /// [`crate::attention::AttentionBackend::set_threads`].
-    pub threads: usize,
+    /// [`crate::attention::AttentionBackend::set_workers`] — a pooled
+    /// handle lends a lane range of the engine's persistent pool.
+    pub workers: Workers,
     /// Chunk of batch-rotated queries for the blocked dense-window
     /// prefill path ([`DenseCache::prefill_attend_dense_rows`]).
     pub qrows: Vec<f32>,

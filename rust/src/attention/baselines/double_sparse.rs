@@ -13,6 +13,7 @@ use crate::attention::{
 };
 use crate::tensor::ops::sparse_attend_threaded;
 use crate::tensor::{top_k_indices, top_k_indices_into};
+use crate::util::threadpool::Workers;
 
 pub struct DoubleSparseAttention {
     cache: DenseCache,
@@ -127,14 +128,14 @@ impl AttentionBackend for DoubleSparseAttention {
             shape.n_heads,
             shape.n_kv_heads,
             shape.head_dim,
-            self.scratch.threads.max(1),
+            &self.scratch.workers,
             &mut self.scratch.attend,
             out,
         );
     }
 
-    fn set_threads(&mut self, threads: usize) {
-        self.scratch.threads = threads.max(1);
+    fn set_workers(&mut self, workers: &Workers) {
+        self.scratch.workers = workers.clone();
     }
 
     fn len(&self) -> usize {

@@ -7,6 +7,7 @@ use crate::attention::{AttentionBackend, AttnShape, FootprintModel, Traffic};
 use crate::quant::{Bits, TokenQuantStore};
 use crate::rope::RopeTable;
 use crate::tensor::ops::{sparse_attend_pv, SparseAttendScratch};
+use crate::util::threadpool::Workers;
 
 pub struct KiviAttention {
     shape: AttnShape,
@@ -23,8 +24,8 @@ pub struct KiviAttention {
     scratch_kr: Vec<f32>,
     scratch_qr: Vec<f32>,
     scratch_attend: SparseAttendScratch,
-    /// Worker share for the per-KV-head attend fan-out; 1 = serial.
-    threads: usize,
+    /// Worker handle for the per-KV-head attend fan-out; default serial.
+    workers: Workers,
 }
 
 impl KiviAttention {
@@ -41,7 +42,7 @@ impl KiviAttention {
             scratch_kr: Vec::new(),
             scratch_qr: Vec::new(),
             scratch_attend: SparseAttendScratch::default(),
-            threads: 1,
+            workers: Workers::serial(),
         }
     }
 }
@@ -88,15 +89,15 @@ impl AttentionBackend for KiviAttention {
             self.shape.n_heads,
             self.shape.n_kv_heads,
             d,
-            self.threads,
+            &self.workers,
             pv,
             &mut self.scratch_attend,
             out,
         );
     }
 
-    fn set_threads(&mut self, threads: usize) {
-        self.threads = threads.max(1);
+    fn set_workers(&mut self, workers: &Workers) {
+        self.workers = workers.clone();
     }
 
     fn len(&self) -> usize {

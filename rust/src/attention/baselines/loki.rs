@@ -14,6 +14,7 @@ use crate::attention::{
 use crate::lowrank::Projector;
 use crate::tensor::ops::sparse_attend_threaded;
 use crate::tensor::top_k_indices_into;
+use crate::util::threadpool::Workers;
 
 pub struct LokiAttention {
     cache: DenseCache,
@@ -116,14 +117,14 @@ impl AttentionBackend for LokiAttention {
             shape.n_heads,
             shape.n_kv_heads,
             shape.head_dim,
-            self.scratch.threads.max(1),
+            &self.scratch.workers,
             &mut self.scratch.attend,
             out,
         );
     }
 
-    fn set_threads(&mut self, threads: usize) {
-        self.scratch.threads = threads.max(1);
+    fn set_workers(&mut self, workers: &Workers) {
+        self.scratch.workers = workers.clone();
     }
 
     fn len(&self) -> usize {

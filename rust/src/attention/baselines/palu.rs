@@ -12,6 +12,7 @@ use crate::lowrank::Projector;
 use crate::quant::{dequantize_group, quantize_group, Bits, QuantGroup};
 use crate::rope::RopeTable;
 use crate::tensor::ops::{sparse_attend_threaded, SparseAttendScratch};
+use crate::util::threadpool::Workers;
 
 pub struct PaluAttention {
     shape: AttnShape,
@@ -32,8 +33,8 @@ pub struct PaluAttention {
     scratch_qr: Vec<f32>,
     scratch_lat: Vec<f32>,
     scratch_attend: SparseAttendScratch,
-    /// Worker share for the per-KV-head attend fan-out; 1 = serial.
-    threads: usize,
+    /// Worker handle for the per-KV-head attend fan-out; default serial.
+    workers: Workers,
 }
 
 impl PaluAttention {
@@ -67,7 +68,7 @@ impl PaluAttention {
             scratch_qr: Vec::new(),
             scratch_lat: Vec::new(),
             scratch_attend: SparseAttendScratch::default(),
-            threads: 1,
+            workers: Workers::serial(),
         }
     }
 
@@ -138,14 +139,14 @@ impl AttentionBackend for PaluAttention {
             self.shape.n_heads,
             self.shape.n_kv_heads,
             self.shape.head_dim,
-            self.threads,
+            &self.workers,
             &mut self.scratch_attend,
             out,
         );
     }
 
-    fn set_threads(&mut self, threads: usize) {
-        self.threads = threads.max(1);
+    fn set_workers(&mut self, workers: &Workers) {
+        self.workers = workers.clone();
     }
 
     fn len(&self) -> usize {

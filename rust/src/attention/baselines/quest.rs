@@ -14,6 +14,7 @@ use crate::attention::{
 };
 use crate::tensor::ops::sparse_attend_threaded;
 use crate::tensor::top_k_indices_into;
+use crate::util::threadpool::Workers;
 use std::sync::Arc;
 
 /// Quest's [`PrefixSnapshot`] payload: the dense rows plus the per-page
@@ -134,7 +135,7 @@ impl QuestAttention {
             shape.n_heads,
             shape.n_kv_heads,
             shape.head_dim,
-            self.scratch.threads.max(1),
+            &self.scratch.workers,
             &mut self.scratch.attend,
             out,
         );
@@ -239,8 +240,8 @@ impl AttentionBackend for QuestAttention {
         self.cache.shared_bytes()
     }
 
-    fn set_threads(&mut self, threads: usize) {
-        self.scratch.threads = threads.max(1);
+    fn set_workers(&mut self, workers: &Workers) {
+        self.scratch.workers = workers.clone();
     }
 
     fn len(&self) -> usize {

@@ -8,6 +8,7 @@ use crate::attention::{
     merge_selection_into, AttentionBackend, AttnShape, FootprintModel, PrefixSnapshot, Traffic,
 };
 use crate::tensor::ops::sparse_attend_threaded;
+use crate::util::threadpool::Workers;
 use std::sync::Arc;
 
 pub struct StreamingLlmAttention {
@@ -59,7 +60,7 @@ impl StreamingLlmAttention {
             shape.n_heads,
             shape.n_kv_heads,
             shape.head_dim,
-            self.scratch.threads.max(1),
+            &self.scratch.workers,
             &mut self.scratch.attend,
             out,
         );
@@ -154,8 +155,8 @@ impl AttentionBackend for StreamingLlmAttention {
         self.cache.shared_bytes()
     }
 
-    fn set_threads(&mut self, threads: usize) {
-        self.scratch.threads = threads.max(1);
+    fn set_workers(&mut self, workers: &Workers) {
+        self.scratch.workers = workers.clone();
     }
 
     fn len(&self) -> usize {

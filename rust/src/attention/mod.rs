@@ -136,15 +136,16 @@
 //!   query, pooled query, scores, top-k indices, merged selection,
 //!   gathered K/V panels, kernel scratch) are backend-owned and grow to a
 //!   high-water mark; steady-state decode never allocates. Baselines share
-//!   `baselines::common::BaselineScratch` for this. (The parallel attend
-//!   paths spawn scoped worker threads, whose OS-level stacks are outside
-//!   this rule — the kernels themselves build no per-call collections; a
-//!   persistent worker pool is the filed follow-on.)
+//!   `baselines::common::BaselineScratch` for this. (Parallel attend fans
+//!   out through the engine's persistent
+//!   [`crate::util::threadpool::WorkerPool`] — per-call dispatch is a
+//!   slot write + epoch bump, no thread spawn and no allocation.)
 //! * **Thread-invariant parallelism.** Intra-attend fan-out (the
-//!   [`AttentionBackend::set_threads`] worker share) partitions by KV
-//!   head and by fixed token blocks — units whose arithmetic does not
-//!   depend on which worker (or how many) runs them — so decode output is
-//!   bit-identical at every thread count.
+//!   [`AttentionBackend::set_workers`] handle) partitions by KV head, by
+//!   fixed token blocks, and by fixed-length split-KV selection segments
+//!   — units whose arithmetic does not depend on which worker (or how
+//!   many) runs them, merged in fixed order — so decode output is
+//!   bit-identical at every worker-handle width and pool size.
 //!
 //! Traffic metering stays canonical under the shared kernels: scoring
 //! meters exactly the panel bytes it scans (`len·r*` f32 for SALS — not
@@ -172,6 +173,7 @@ pub use full::FullAttention;
 pub use sals::{PrefillSparsity, SalsAttention, SalsConfig, SalsStageTimes, PREFILL_SPARSE_MIN_LEN};
 pub use traffic::Traffic;
 
+use crate::util::threadpool::Workers;
 use std::any::Any;
 use std::ops::Index;
 use std::sync::Arc;
@@ -526,17 +528,18 @@ pub trait AttentionBackend {
         0
     }
 
-    /// Worker-thread share for *intra-attend* parallelism (per-KV-head
-    /// panel fan-out, token-block score scans). The engine plumbs its
-    /// leftover worker count here when the decode batch is smaller than
-    /// the pool — batch-1 long-context decode is exactly where a single
-    /// sequence should own the whole fan-out. Contract: the thread count
-    /// is a *scheduling* knob only — outputs, traffic meters, and
-    /// `kv_bytes()` must be bit-identical for every value (the shared
-    /// kernels partition by KV head / fixed token blocks, whose per-unit
-    /// arithmetic is thread-invariant). Backends may clamp or ignore it;
-    /// default no-op (serial).
-    fn set_threads(&mut self, _threads: usize) {}
+    /// Worker handle for *intra-attend* parallelism (per-KV-head panel
+    /// fan-out, token-block score scans, split-KV segments). The engine
+    /// lends each sequence a [`Workers`] share of its persistent pool —
+    /// batch-1 long-context decode is exactly where a single sequence
+    /// should own the whole fan-out. Contract: the handle is a
+    /// *scheduling* knob only — outputs, traffic meters, and `kv_bytes()`
+    /// must be bit-identical for every width and backing pool size (the
+    /// shared kernels partition by KV head / fixed token blocks /
+    /// fixed-length selection segments, whose per-unit arithmetic and
+    /// merge order are worker-invariant). Backends may clamp or ignore
+    /// it; default no-op (serial).
+    fn set_workers(&mut self, _workers: &Workers) {}
 
     /// Number of cached tokens.
     fn len(&self) -> usize;

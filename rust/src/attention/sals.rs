@@ -89,16 +89,19 @@ use crate::quant::{Bits, QuantSnapshot, TokenQuantStore};
 use crate::rope::RopeTable;
 use crate::tensor::ops::{FusedAttendScratch, FusedLane, SparseAttendScratch};
 use crate::tensor::top_k_indices_into;
-use crate::util::threadpool;
+use crate::util::threadpool::Workers;
 use std::sync::Arc;
 
 /// Below this cache length the Stage-1 score scan runs serial: the scan is
-/// one `len·r*` unit-stride pass, and under ~4K tokens the scoped-thread
-/// spawn overhead exceeds the scan itself. Each score is an independent
-/// dot product, so the token-block partition (fixed-size blocks via
-/// [`threadpool::parallel_chunks_mut`]) is bit-invariant in the thread
-/// count.
-const SCORE_PAR_MIN_LEN: usize = 4096;
+/// one `len·r*` unit-stride pass, and shorter scans finish before even a
+/// pool dispatch pays for itself. Re-derived for the persistent
+/// [`crate::util::threadpool::WorkerPool`]: dispatch is a slot write + epoch bump
+/// (sub-µs, vs ~10µs per scoped spawn), so the guard drops 4096 → 512 —
+/// a 512·r* scan (~8K MACs at r*=16) comfortably covers a handful of
+/// sub-µs handoffs. Each score is an independent dot product, so the
+/// token-block partition (fixed-size blocks via [`Workers::chunks_mut`])
+/// is bit-invariant in the worker count.
+const SCORE_PAR_MIN_LEN: usize = 512;
 
 /// Fixed token-block size of the parallel score scan. Constant (not
 /// derived from the thread count) so the decomposition — and therefore
@@ -107,12 +110,14 @@ const SCORE_PAR_BLOCK: usize = 2048;
 
 /// Below this much total attend work — `n_sel · (r + group) · d` MACs,
 /// the reconstruction matmuls plus the QKᵀ/PV tile passes — the fused
-/// attend runs serial: scoped thread spawns cost tens of microseconds
-/// per round (no persistent pool yet), so the per-head share of the work
-/// must clearly outweigh them. 64K MACs ≈ the 32K-context bench shape;
-/// its 4K rows stay serial. Per-head arithmetic is fixed, so the guard
-/// cannot change results.
-const FUSED_PAR_MIN_WORK: usize = 1 << 16;
+/// attend runs serial. Re-derived for the persistent
+/// [`crate::util::threadpool::WorkerPool`] (sub-µs dispatch vs ~10µs scoped spawns):
+/// 64K → 8K MACs (a few µs of arithmetic — an order of magnitude over
+/// the handoff), which brings the 4K-context bench shape *into* the
+/// parallel regime instead of forfeiting the fan-out until 32K. Per-unit
+/// arithmetic and merge order are fixed, so the guard cannot change
+/// results.
+const FUSED_PAR_MIN_WORK: usize = 1 << 13;
 
 /// Below this cache length a sparse-prefill chunk attends densely (the
 /// blocked [`crate::tensor::ops::causal_attend_chunk`] path): short
@@ -264,10 +269,10 @@ pub struct SalsAttention {
     /// full-width reconstruction (the partition is free).
     u_t_heads: Vec<f32>,
     rope: RopeTable,
-    /// Decode worker threads for the score scan + fused attend (1 =
-    /// serial; the engine plumbs its per-sequence worker share through
-    /// [`AttentionBackend::set_threads`]).
-    threads: usize,
+    /// Decode worker handle for the score scan + fused attend (default
+    /// serial; the engine lends a share of its persistent pool through
+    /// [`AttentionBackend::set_workers`]).
+    workers: Workers,
     /// (len, r*) scoring panel: each latent row's leading r* dims,
     /// contiguous — the only latent bytes Stage-1 scoring streams. A
     /// [`SharedVec`]: an adopted prefix's rows live in a refcounted shared
@@ -363,7 +368,7 @@ impl SalsAttention {
             u_t,
             u_t_heads,
             rope,
-            threads: 1,
+            workers: Workers::serial(),
             latent_score: SharedVec::new(),
             latent_rem: SharedVec::new(),
             recent_keys: vec![0.0; recent_cap * shape.kv_dim()],
@@ -437,14 +442,13 @@ impl SalsAttention {
         // Each score is an independent dot, so scanning an adopted shared
         // segment and the private tail as separate matmul_tn passes is
         // bit-identical to one contiguous scan.
-        if self.threads > 1 && self.len >= SCORE_PAR_MIN_LEN {
+        if self.workers.width() > 1 && self.len >= SCORE_PAR_MIN_LEN {
             let qlat = &self.scratch_qlat[..rs];
             let panel = &self.latent_score;
             let n0 = panel.shared_len() / rs;
-            threadpool::parallel_chunks_mut(
+            self.workers.chunks_mut(
                 &mut self.scratch_scores,
                 SCORE_PAR_BLOCK,
-                self.threads,
                 |bi, chunk| {
                     let lo = bi * SCORE_PAR_BLOCK;
                     let hi = lo + chunk.len();
@@ -608,9 +612,12 @@ impl SalsAttention {
     /// gather-then-matmul_acc by that kernel's contract) — the
     /// (n_sel, kvd) key panel, the full score row, and the fp32 value
     /// tile never exist; the kernel's online softmax folds each tile in.
-    /// KV-head panels are independent, so the worker share partitions
-    /// them ([`FUSED_PAR_MIN_WORK`]-guarded); per-lane arithmetic is
-    /// fixed, making the output bit-invariant in the thread count.
+    /// KV-head panels are independent, so the worker handle partitions
+    /// them ([`FUSED_PAR_MIN_WORK`]-guarded); MQA/narrow-GQA shapes with
+    /// long selections instead split fixed selection segments across
+    /// workers ([`crate::tensor::ops::split_kv_engages`], shape-only).
+    /// Per-unit arithmetic and merge order are fixed, making the output
+    /// bit-invariant in the worker-handle width and pool size.
     ///
     /// The sorted selection makes recent-ring rows a contiguous *suffix*
     /// (everything ≥ recent_lo), so each tile splits into a reconstruction
@@ -646,8 +653,11 @@ impl SalsAttention {
         self.rope.apply_multihead(&mut self.scratch_qr, pos);
 
         let fused_work = n_sel * (r + self.shape.group_size()) * d;
-        let threads =
-            if self.threads > 1 && fused_work >= FUSED_PAR_MIN_WORK { self.threads } else { 1 };
+        let workers = if self.workers.width() > 1 && fused_work >= FUSED_PAR_MIN_WORK {
+            self.workers.clone()
+        } else {
+            Workers::serial()
+        };
 
         // Gather the reconstruction rows' split latent panels ONCE into
         // contiguous (n_recon, r) staging shared read-only by every
@@ -721,7 +731,7 @@ impl SalsAttention {
             self.shape.n_heads,
             self.shape.n_kv_heads,
             d,
-            threads,
+            &workers,
             fill,
             pv,
             &mut self.scratch_fused,
@@ -776,12 +786,12 @@ impl SalsAttention {
     pub fn attend_staged(&mut self, q: &[f32], out: &mut [f32]) {
         assert_eq!(q.len(), self.shape.q_dim());
         assert!(self.len > 0, "attend on empty cache");
-        let saved = std::mem::replace(&mut self.threads, 1);
+        let saved = std::mem::replace(&mut self.workers, Workers::serial());
         self.stage_score(q);
         self.stage_select();
         self.stage_reconstruct();
         self.stage_attend(q, out);
-        self.threads = saved;
+        self.workers = saved;
     }
 
     /// [`SalsAttention::attend_staged`] with per-stage wall times — the
@@ -796,7 +806,7 @@ impl SalsAttention {
     ) {
         assert_eq!(q.len(), self.shape.q_dim());
         assert!(self.len > 0, "attend on empty cache");
-        let saved = std::mem::replace(&mut self.threads, 1);
+        let saved = std::mem::replace(&mut self.workers, Workers::serial());
         let t0 = std::time::Instant::now();
         self.stage_score(q);
         let t1 = std::time::Instant::now();
@@ -806,7 +816,7 @@ impl SalsAttention {
         let t3 = std::time::Instant::now();
         self.stage_attend(q, out);
         let t4 = std::time::Instant::now();
-        self.threads = saved;
+        self.workers = saved;
         times.score += (t1 - t0).as_secs_f64();
         times.select += (t2 - t1).as_secs_f64();
         times.reconstruct += (t3 - t2).as_secs_f64();
@@ -1008,7 +1018,7 @@ impl SalsAttention {
             self.shape.n_kv_heads,
             d,
             &self.scratch_blocks,
-            self.threads,
+            &self.workers,
             &mut self.scratch_bs,
             out,
         );
@@ -1108,8 +1118,8 @@ impl AttentionBackend for SalsAttention {
             + self.values.shared_bytes()
     }
 
-    fn set_threads(&mut self, threads: usize) {
-        self.threads = threads.max(1);
+    fn set_workers(&mut self, workers: &Workers) {
+        self.workers = workers.clone();
     }
 
     fn append_batch(&mut self, ks: &[f32], vs: &[f32], n: usize) {
@@ -1636,12 +1646,15 @@ mod tests {
 
     #[test]
     fn fused_attend_output_is_thread_invariant() {
-        // Per-KV-head passes compute fixed arithmetic no matter which
-        // worker runs them, and the score-scan blocks are fixed-size, so
-        // the fused output must be BIT-identical for any thread count.
+        // Per-unit passes (KV-head panels, split-KV segments, score-scan
+        // blocks) compute fixed arithmetic no matter which worker runs
+        // them and merge in fixed order, so the fused output must be
+        // BIT-identical for any worker-handle width and pool size.
         // Sized past both parallel guards: len 4160 ≥ SCORE_PAR_MIN_LEN,
         // and n_sel·(r+group)·d = (4 + 900 + 16)·(8+2)·8 ≈ 74K ≥
-        // FUSED_PAR_MIN_WORK (64K).
+        // FUSED_PAR_MIN_WORK. The shape (n_kv_heads=2, n_sel ≈ 920 ≥ 128)
+        // also engages the split-KV segment decomposition, so this pins
+        // the split path through the full SALS stack.
         let shape = AttnShape::gqa(4, 2, 8, 4200);
         let kvd = shape.kv_dim();
         let mut rng = Rng::new(101);
@@ -1663,13 +1676,20 @@ mod tests {
         sals.append_batch(&ks, &vs, n);
         let q = rng.normal_vec(shape.q_dim(), 1.0);
         let mut reference = vec![0.0; shape.q_dim()];
-        sals.set_threads(1);
+        sals.set_workers(&Workers::serial());
         sals.attend(&q, &mut reference);
-        for threads in [2usize, 8] {
-            sals.set_threads(threads);
+        let handles = [
+            Workers::scoped(2),
+            Workers::scoped(8),
+            Workers::pooled(1),
+            Workers::pooled(2),
+            Workers::pooled(8),
+        ];
+        for workers in &handles {
+            sals.set_workers(workers);
             let mut out = vec![0.0; shape.q_dim()];
             sals.attend(&q, &mut out);
-            assert_eq!(out, reference, "threads={threads} must be bit-identical");
+            assert_eq!(out, reference, "{workers:?} must be bit-identical");
         }
     }
 

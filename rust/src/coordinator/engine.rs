@@ -23,13 +23,16 @@
 //! 3. **Prefill phase**: each prefilling sequence consumes one
 //!    `prefill_chunk`-token chunk through [`Model::forward_batch`] — ONE
 //!    multi-token pass whose activations are (chunk, d) matrices — with
-//!    sequences fanned out across worker threads. Chunked prefill keeps
-//!    decode latency bounded for running sequences; page accounting and
-//!    preemption stay per engine step, i.e. per chunk.
+//!    sequences fanned out across the engine's persistent worker pool
+//!    (created once at [`Engine::new`]; per-step dispatch is a mailbox
+//!    handoff, not a thread spawn), leftover lanes granted to each
+//!    sequence's intra-attend fan-out from the same budget. Chunked
+//!    prefill keeps decode latency bounded for running sequences; page
+//!    accounting and preemption stay per engine step, i.e. per chunk.
 //! 4. **Decode phase**: the whole decode-ready set advances one token
 //!    through a single [`Model::decode_batch`] call — per-sequence
 //!    activations stacked into (batch, d) matrices, with the batch's rows
-//!    partitioned across scoped workers so each weight matrix streams
+//!    partitioned across the same pool so each weight matrix streams
 //!    once per *worker block* of sequences per step (not once per
 //!    sequence; serial decode streams it exactly once for the whole
 //!    batch). The engine owns one [`BatchScratch`] sized to `max_batch`;
@@ -60,7 +63,7 @@ use crate::model::{
     BackendFactory, BatchScratch, Model, Scratch, SequenceFootprint, SequenceSnapshot,
     SequenceState,
 };
-use crate::util::threadpool;
+use crate::util::threadpool::Workers;
 use std::collections::VecDeque;
 use std::time::Instant;
 
@@ -72,7 +75,10 @@ pub struct EngineConfig {
     pub page_bytes: usize,
     /// Total KV memory budget (bytes).
     pub pool_budget: usize,
-    /// Worker threads for stepping sequences (0 = auto).
+    /// Size of the engine's persistent worker pool (0 = one per CPU;
+    /// the `SALS_THREADS` env var overrides either way). Workers are
+    /// created once at [`Engine::new`] and shared by prefill fan-out,
+    /// decode batch partitioning, and intra-attend parallelism.
     pub threads: usize,
     /// Shared-prefix KV reuse: publish chunk-aligned prompt prefixes into
     /// a content-addressed cache and let later requests adopt them,
@@ -147,6 +153,10 @@ pub struct Engine {
     /// Engine-owned scratch for the cross-sequence batched decode phase,
     /// sized to `max_batch` — decode needs no per-sequence scratch.
     batch_scratch: BatchScratch,
+    /// Persistent worker-pool handle (created once, from `cfg.threads`):
+    /// every per-step fan-out — prefill sequences, decode rows, nested
+    /// intra-attend shares — dispatches on these parked workers.
+    workers: Workers,
     pub metrics: Metrics,
     done: Vec<Response>,
 }
@@ -154,7 +164,8 @@ pub struct Engine {
 impl Engine {
     pub fn new(model: Model, factory: Box<BackendFactory>, cfg: EngineConfig) -> Engine {
         let pool = PagePool::with_budget(cfg.page_bytes, cfg.pool_budget);
-        let batch_scratch = BatchScratch::sized(&model.cfg, cfg.max_batch, cfg.threads);
+        let workers = Workers::auto(cfg.threads);
+        let batch_scratch = BatchScratch::sized_with(&model.cfg, cfg.max_batch, workers.clone());
         let footprint = SequenceFootprint::of(&model.cfg, &factory);
         let prefix_cache = PrefixCache::new(cfg.prefill_chunk.max(1));
         Engine {
@@ -167,6 +178,7 @@ impl Engine {
             waiting: VecDeque::new(),
             running: Vec::new(),
             batch_scratch,
+            workers,
             metrics: Metrics::default(),
             done: Vec::new(),
         }
@@ -331,19 +343,21 @@ impl Engine {
         self.metrics.steps += 1;
         let now = Instant::now();
         let prefill_chunk = self.cfg.prefill_chunk.max(1);
-        // Full worker pool, NOT capped at running.len(): the per-sequence
-        // fan-outs clamp themselves to their item counts, and whatever the
-        // batch dimension can't use flows to intra-attend parallelism —
-        // capping here would pin batch-1 decode (the case the attend-level
-        // fan-out exists for) to a single worker.
-        let threads =
-            if self.cfg.threads == 0 { threadpool::num_cpus() } else { self.cfg.threads };
 
         let stepped;
         let mut decoded = 0usize;
         {
-            let Engine { model, running, batch_scratch, pool, prefix_cache, metrics, cfg, .. } =
-                self;
+            let Engine {
+                model,
+                running,
+                batch_scratch,
+                workers,
+                pool,
+                prefix_cache,
+                metrics,
+                cfg,
+                ..
+            } = self;
             let model: &Model = model;
 
             // ---- partition: prefilling vs decode-ready ----
@@ -373,14 +387,14 @@ impl Engine {
             stepped = prefilling.len() + decoding.len() + degenerate;
 
             // ---- prefill phase: one batched chunk per sequence, fanned
-            // out across worker threads (per-sequence caches + scratch are
-            // independent; the model is shared read-only). Leftover workers
-            // parallelize *inside* each chunk attend (per-KV-head lanes,
-            // block score scans) — same share rule as decode. ----
-            let prefill_share =
-                if prefilling.is_empty() { 1 } else { (threads / prefilling.len()).max(1) };
-            threadpool::parallel_for_each_mut(&mut prefilling, threads, |_, r| {
-                r.state.set_attend_threads(prefill_share);
+            // out across the persistent pool (per-sequence caches +
+            // scratch are independent; the model is shared read-only).
+            // Leftover lanes are granted to each chunk's intra-attend
+            // fan-out (per-KV-head lanes, block score scans) as disjoint
+            // sub-handles carved from the same budget — live workers
+            // never exceed the pool size. ----
+            workers.nested_for_each_mut(&mut prefilling, |_, r, sub| {
+                r.state.set_attend_workers(sub);
                 let hi = (r.prefilled + prefill_chunk).min(r.prefill_tokens.len());
                 let last = hi == r.prefill_tokens.len();
                 let l = model.forward_batch(
@@ -456,20 +470,15 @@ impl Engine {
             }
             if !batch.is_empty() {
                 let tokens: Vec<usize> = batch.iter().map(|(_, t)| *t).collect();
-                // Divide the worker pool between cross-sequence batch rows
-                // (decode_batch's fan-out) and intra-attend parallelism:
-                // whatever the batch dimension can't use goes to each
-                // sequence's per-KV-head / score-scan fan-out, so batch-1
-                // long-context decode still saturates the workers.
-                // Re-plumbed every step — the share changes as the batch
-                // grows and shrinks. Thread counts never change outputs
-                // (the set_threads contract), only scheduling.
-                let attend_share = (threads / batch.len()).max(1);
+                // decode_batch divides the pool between cross-sequence
+                // batch rows and intra-attend parallelism itself: rows
+                // are partitioned over the scratch's pool handle and the
+                // leftover lanes are granted to each block's sequences
+                // as nested sub-shares, re-derived every step as the
+                // batch grows and shrinks. Worker handles never change
+                // outputs (the set_workers contract), only scheduling.
                 let mut states: Vec<&mut SequenceState> =
                     batch.iter_mut().map(|(r, _)| &mut r.state).collect();
-                for s in states.iter_mut() {
-                    s.set_attend_threads(attend_share);
-                }
                 let all_logits = model.decode_batch(&mut states, &tokens, batch_scratch);
                 drop(states);
                 for ((r, _), l) in batch.iter_mut().zip(all_logits) {

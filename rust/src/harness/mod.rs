@@ -132,15 +132,21 @@ pub fn bench_artifact_path(file: &str) -> std::path::PathBuf {
 }
 
 /// Machine-provenance header every `BENCH_*.json` artifact embeds: bench
-/// name, the dispatched SIMD kernel tier (avx2+fma / neon / scalar), and
-/// the host's available thread count — so perf trajectories recorded on
-/// different machines are comparable (a scalar-tier number regressing
-/// against an avx2+fma number is a hardware delta, not a code delta).
+/// name, the dispatched SIMD kernel tier (avx2+fma / neon / scalar), the
+/// host's available thread count, and the worker-pool provenance (the
+/// size `SALS_THREADS`/auto resolves to plus its measured per-dispatch
+/// handoff latency in ns) — so perf trajectories recorded on different
+/// machines are comparable (a scalar-tier number regressing against an
+/// avx2+fma number is a hardware delta, not a code delta; likewise a
+/// fan-out number measured against a 10µs spawn vs a sub-µs pool).
 pub fn bench_doc(bench: &str) -> crate::util::json::Json {
+    let (pool_size, pool_dispatch_ns) = crate::util::threadpool::pool_provenance();
     crate::util::json::Json::obj()
         .field("bench", bench)
         .field("simd_tier", crate::tensor::simd::tier_name())
         .field("threads_available", crate::util::threadpool::num_cpus())
+        .field("pool_size", pool_size as i64)
+        .field("pool_dispatch_ns", pool_dispatch_ns)
 }
 
 /// Format a fraction as "0.123".
@@ -184,11 +190,13 @@ mod tests {
     }
 
     #[test]
-    fn bench_doc_stamps_tier_and_threads() {
+    fn bench_doc_stamps_tier_threads_and_pool() {
         let tier = crate::tensor::simd::tier_name();
         let s = bench_doc("demo").to_string();
         assert!(s.contains("\"bench\":\"demo\""), "{s}");
         assert!(s.contains(&format!("\"simd_tier\":\"{tier}\"")), "{s}");
         assert!(s.contains("\"threads_available\":"), "{s}");
+        assert!(s.contains("\"pool_size\":"), "{s}");
+        assert!(s.contains("\"pool_dispatch_ns\":"), "{s}");
     }
 }

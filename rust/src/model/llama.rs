@@ -21,17 +21,20 @@
 //!   matrix so every projection streams the shared weights per engine
 //!   step (not once per sequence). Every decode operation is
 //!   row-independent, so the rows are partitioned into contiguous blocks
-//!   across scoped worker threads (one spawn set per step); each worker
-//!   drives stacked matmuls, its sequences' private per-layer
-//!   `append`/`attend`, and the batched tied-embedding LM head for its
-//!   block. Per-row arithmetic is ordered identically to [`Model::step`],
-//!   so the batch dimension is numerically invisible.
+//!   across the scratch's [`Workers`] handle (persistent-pool dispatch —
+//!   no thread spawn per step); each worker drives stacked matmuls, its
+//!   sequences' private per-layer `append`/`attend`, and the batched
+//!   tied-embedding LM head for its block, with the leftover worker
+//!   budget granted to its sequences' intra-attend fan-out as nested
+//!   sub-shares (total live workers never exceed the handle width).
+//!   Per-row arithmetic is ordered identically to [`Model::step`], so
+//!   the batch dimension is numerically invisible.
 
 use super::config::ModelConfig;
 use super::weights::Weights;
 use crate::attention::{AttentionBackend, FootprintModel, PrefixSnapshot};
 use crate::tensor::ops::{gather_rows, lm_head_batch, matmul, rmsnorm, silu};
-use crate::util::threadpool;
+use crate::util::threadpool::Workers;
 use std::sync::Arc;
 
 /// Factory producing one attention backend per layer.
@@ -115,16 +118,17 @@ impl SequenceState {
         }
     }
 
-    /// Propagate the engine's per-sequence worker share to every layer
-    /// backend ([`AttentionBackend::set_threads`]): when the decode batch
-    /// is smaller than the worker pool, the leftover workers parallelize
-    /// *inside* each sequence's attend (per-KV-head panels, token-block
-    /// score scans) instead of idling — batch-1 long-context decode
-    /// finally uses the fan-out. Purely a scheduling knob: backends
-    /// guarantee bit-identical output at any thread count.
-    pub fn set_attend_threads(&mut self, threads: usize) {
+    /// Propagate a worker-pool sub-handle to every layer backend
+    /// ([`AttentionBackend::set_workers`]): when the decode batch is
+    /// smaller than the worker pool, the leftover lanes parallelize
+    /// *inside* each sequence's attend (per-KV-head panels, split-KV
+    /// segments, token-block score scans) instead of idling — batch-1
+    /// long-context decode finally uses the fan-out. Purely a
+    /// scheduling knob: backends guarantee bit-identical output for
+    /// every handle width and pool size.
+    pub fn set_attend_workers(&mut self, workers: &Workers) {
         for b in &mut self.backends {
-            b.set_threads(threads);
+            b.set_workers(workers);
         }
     }
 
@@ -288,8 +292,10 @@ impl Scratch {
 /// largest batch seen and are retained across steps, so the steady-state
 /// decode loop is allocation-free except for the returned logits.
 pub struct BatchScratch {
-    /// Worker threads for the per-sequence attention fan-out (0 = auto).
-    threads: usize,
+    /// Worker handle the per-step decode fan-out dispatches on. Usually a
+    /// clone of the engine's persistent-pool handle so steps reuse the
+    /// same parked workers instead of spawning; width caps the fan-out.
+    workers: Workers,
     bx: Vec<f32>,
     bnormed: Vec<f32>,
     bq: Vec<f32>,
@@ -305,11 +311,19 @@ pub struct BatchScratch {
 
 impl BatchScratch {
     /// Empty scratch; buffers grow on first [`Model::decode_batch`] call.
-    /// `threads` caps the per-step worker fan-out (0 = one per CPU; always
-    /// further capped by the batch size).
+    /// `threads` caps the per-step worker fan-out (0 = one per CPU,
+    /// `SALS_THREADS` overrides; always further capped by the batch
+    /// size); widths above 1 mint a private persistent pool — callers
+    /// that already own one should use [`BatchScratch::with_workers`].
     pub fn new(threads: usize) -> BatchScratch {
+        BatchScratch::with_workers(Workers::auto(threads))
+    }
+
+    /// Empty scratch dispatching on an existing worker handle (e.g. the
+    /// engine's pool) instead of minting its own.
+    pub fn with_workers(workers: Workers) -> BatchScratch {
         BatchScratch {
-            threads,
+            workers,
             bx: Vec::new(),
             bnormed: Vec::new(),
             bq: Vec::new(),
@@ -329,7 +343,12 @@ impl BatchScratch {
     /// calls never reallocate (Vec capacity is retained across the exact
     /// resizes as the engine's decode set grows and shrinks).
     pub fn sized(cfg: &ModelConfig, max_batch: usize, threads: usize) -> BatchScratch {
-        let mut s = BatchScratch::new(threads);
+        BatchScratch::sized_with(cfg, max_batch, Workers::auto(threads))
+    }
+
+    /// [`BatchScratch::sized`] on an existing worker handle.
+    pub fn sized_with(cfg: &ModelConfig, max_batch: usize, workers: Workers) -> BatchScratch {
+        let mut s = BatchScratch::with_workers(workers);
         s.ensure(cfg, max_batch.max(1));
         s
     }
@@ -408,6 +427,16 @@ impl<'a> DecodeRows<'a> {
             },
         )
     }
+}
+
+/// One decode worker's slice of the batch: its sequences, their tokens,
+/// and its block of the scratch matrices. `rows` is an `Option` only so
+/// the fan-out closure can move the views into [`Model::decode_rows`]
+/// (which consumes them) through a `&mut` borrow.
+struct DecodeUnit<'s, 'q, 'v> {
+    states: &'s mut [&'q mut SequenceState],
+    tokens: &'s [usize],
+    rows: Option<DecodeRows<'v>>,
 }
 
 /// y = x @ W  for a (d_in, d_out) weight; `out` is overwritten.
@@ -582,11 +611,15 @@ impl Model {
     /// Parallelism: every decode operation is row-independent (matmul
     /// rows, rmsnorm rows, residual rows, and attention, which is
     /// per-sequence private cache state), so the batch's rows are
-    /// partitioned into contiguous blocks across `scratch.threads` scoped
-    /// workers — ONE spawn set per step, the same economics as the
-    /// engine's per-sequence prefill fan-out — and each worker drives the
-    /// full forward for its block, stacked matmuls included. Workers read
-    /// the shared weights concurrently and advance in lockstep-ish layer
+    /// partitioned into contiguous blocks across `scratch.workers` —
+    /// persistent-pool dispatch, no thread spawned per step — and each
+    /// worker drives the full forward for its block, stacked matmuls
+    /// included. When the batch is smaller than the handle width, the
+    /// spare lanes are granted to the blocks as nested sub-handles so
+    /// each sequence's intra-attend fan-out (score scans, split-KV
+    /// segments) soaks them up; the shares are carved from one budget,
+    /// so live workers never exceed the handle width. Workers read the
+    /// shared weights concurrently and advance in lockstep-ish layer
     /// order, so the weight stream is still amortized across the batch.
     ///
     /// Row `i` of every batched operation accumulates in exactly the
@@ -609,8 +642,8 @@ impl Model {
             assert!(s.pos < cfg.max_seq, "sequence {i} exceeds max_seq");
         }
         scratch.ensure(cfg, b);
-        let threads =
-            (if scratch.threads == 0 { threadpool::num_cpus() } else { scratch.threads }).min(b);
+        let workers = scratch.workers.clone();
+        let width = workers.width().min(b);
 
         let all = DecodeRows {
             bx: &mut scratch.bx,
@@ -625,24 +658,38 @@ impl Model {
             bffn: &mut scratch.bffn,
             blogits: &mut scratch.blogits,
         };
-        if threads <= 1 {
+        if width <= 1 {
+            // A solo block still inherits the whole handle: its
+            // sequences' intra-attend fan-out is the only consumer, so
+            // batch-1 long-context decode uses the full pool.
+            for s in states.iter_mut() {
+                s.set_attend_workers(&workers);
+            }
             self.decode_rows(states, tokens, all);
         } else {
-            let chunk = b.div_ceil(threads);
+            // Carve (states, tokens, rows) into per-worker contiguous
+            // blocks, then let the handle both run the blocks and grant
+            // each one its disjoint share of the leftover lanes.
+            let chunk = b.div_ceil(width);
             let mut rem_states: &mut [&mut SequenceState] = states;
             let mut rem_tokens: &[usize] = tokens;
             let mut rem = all;
-            std::thread::scope(|sc| {
-                while !rem_states.is_empty() {
-                    let nb = chunk.min(rem_states.len());
-                    let (st, rs) = std::mem::take(&mut rem_states).split_at_mut(nb);
-                    rem_states = rs;
-                    let (tk, rt) = rem_tokens.split_at(nb);
-                    rem_tokens = rt;
-                    let (views, rest) = rem.split_rows(nb, cfg);
-                    rem = rest;
-                    sc.spawn(move || self.decode_rows(st, tk, views));
+            let mut units = Vec::with_capacity(width);
+            while !rem_states.is_empty() {
+                let nb = chunk.min(rem_states.len());
+                let (st, rs) = std::mem::take(&mut rem_states).split_at_mut(nb);
+                rem_states = rs;
+                let (tk, rt) = rem_tokens.split_at(nb);
+                rem_tokens = rt;
+                let (views, rest) = rem.split_rows(nb, cfg);
+                rem = rest;
+                units.push(DecodeUnit { states: st, tokens: tk, rows: Some(views) });
+            }
+            workers.nested_for_each_mut(&mut units, |_, unit, sub| {
+                for s in unit.states.iter_mut() {
+                    s.set_attend_workers(sub);
                 }
+                self.decode_rows(unit.states, unit.tokens, unit.rows.take().unwrap());
             });
         }
         scratch.blogits.chunks(cfg.vocab).map(|r| r.to_vec()).collect()
@@ -917,6 +964,38 @@ mod tests {
         let ref_l = model.step(&mut r, &mut sc, 23, true).unwrap();
         for (x, y) in l2[0].iter().zip(&ref_l) {
             assert!((x - y).abs() < 1e-5, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn decode_batch_is_bit_invariant_across_pool_sizes() {
+        // The row partition and the nested attend sub-shares are
+        // scheduling only: the same batch through serial, narrow-pooled,
+        // and wider-than-batch pooled scratches must produce BIT-equal
+        // logits (not tolerance — the per-row arithmetic is identical).
+        let cfg = ModelConfig::tiny_mha(64);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 59)));
+        let factory = full_factory(&cfg);
+        let prompts: Vec<Vec<usize>> = vec![vec![1, 2, 3], vec![4, 5], vec![6, 7]];
+        let tokens = [11usize, 12, 13];
+        let run = |workers: Workers| {
+            let mut states: Vec<SequenceState> = prompts
+                .iter()
+                .map(|p| {
+                    let mut s = SequenceState::new(&cfg, &factory);
+                    let mut sc = Scratch::new(&cfg);
+                    model.prefill(&mut s, &mut sc, p);
+                    s
+                })
+                .collect();
+            let mut scratch = BatchScratch::with_workers(workers);
+            let mut refs: Vec<&mut SequenceState> = states.iter_mut().collect();
+            model.decode_batch(&mut refs, &tokens, &mut scratch)
+        };
+        let reference = run(Workers::serial());
+        for workers in [Workers::scoped(2), Workers::pooled(2), Workers::pooled(8)] {
+            let label = format!("{workers:?}");
+            assert_eq!(run(workers), reference, "{label} must be bit-identical");
         }
     }
 

@@ -27,6 +27,7 @@
 //! reference (see that module's exact-vs-reassociated contract).
 
 use crate::tensor::simd;
+use crate::util::threadpool::Workers;
 
 /// out[m,n] = a[m,k] @ b[k,n]   (row-major, out is overwritten)
 ///
@@ -362,9 +363,9 @@ pub struct BlockSparseScratch {
 ///   selector always retains sink + diagonal-window blocks); a row whose
 ///   visible selection is empty gets a zero output row, mirroring
 ///   [`fused_sparse_attend`]'s empty-selection contract.
-/// * `threads`: per-KV-head fan-out cap (1 = serial). Per-head
-///   arithmetic is fixed and the output scatter is serial, so results are
-///   **bit-invariant in the thread count**.
+/// * `workers`: per-KV-head fan-out handle (serial handle = inline).
+///   Per-head arithmetic is fixed and the output scatter is serial, so
+///   results are **bit-invariant in the handle width and backing pool**.
 /// * `out`: (n, n_heads·d), overwritten.
 ///
 /// Because `blocks` is sorted, the packed panel's rows are in ascending
@@ -387,7 +388,7 @@ pub fn block_sparse_attend_chunk(
     n_kv_heads: usize,
     d: usize,
     blocks: &[(usize, usize)],
-    threads: usize,
+    workers: &Workers,
     scratch: &mut BlockSparseScratch,
     out: &mut [f32],
 ) {
@@ -542,8 +543,7 @@ pub fn block_sparse_attend_chunk(
     if lanes.len() < n_kv_heads {
         lanes.resize_with(n_kv_heads, BlockSparseLane::default);
     }
-    let workers = if threads <= 1 || n_kv_heads <= 1 { 1 } else { threads.min(n_kv_heads) };
-    crate::util::threadpool::parallel_for_each_mut(&mut lanes[..n_kv_heads], workers, run);
+    workers.for_each_mut(&mut lanes[..n_kv_heads], run);
     // Serial scatter of each head's private panel into the interleaved
     // output — fixed order, so the parallel section can't affect results.
     for (kvh, lane) in lanes[..n_kv_heads].iter().enumerate() {
@@ -584,11 +584,13 @@ pub struct SparseAttendScratch {
 }
 
 /// Below this much per-head work (`n_sel · group · d` MACs per score pass)
-/// the scoped-thread spawn overhead of [`sparse_attend_threaded`] outweighs
-/// the fan-out; the kernel silently runs serial. Partitioning is by KV
-/// head and per-lane arithmetic is fixed, so the guard (like the thread
-/// count itself) cannot change results.
-const SPARSE_ATTEND_PAR_MIN_WORK: usize = 2048;
+/// the fan-out overhead of [`sparse_attend_threaded`] outweighs the win;
+/// the kernel silently runs serial. Partitioning is by KV head and
+/// per-lane arithmetic is fixed, so the guard (like the worker handle
+/// itself) cannot change results. Re-derived for pool dispatch (measured
+/// sub-microsecond handoff vs ~10µs scoped spawn — see the
+/// `sals_hotpath` dispatch microbench): half the old scoped-spawn floor.
+const SPARSE_ATTEND_PAR_MIN_WORK: usize = 1024;
 
 /// Packed exact sparse attention over a gathered token subset — the shared
 /// decode epilogue of every token-sparse backend (SALS Eq. 5, and the
@@ -620,18 +622,30 @@ pub fn sparse_attend(
     scratch: &mut SparseAttendScratch,
     out: &mut [f32],
 ) {
-    sparse_attend_threaded(q, keys, values, n_sel, n_heads, n_kv_heads, d, 1, scratch, out);
+    sparse_attend_threaded(
+        q,
+        keys,
+        values,
+        n_sel,
+        n_heads,
+        n_kv_heads,
+        d,
+        &Workers::serial(),
+        scratch,
+        out,
+    );
 }
 
-/// [`sparse_attend`] with the per-KV-head loop partitioned across up to
-/// `threads` scoped workers. KV-head panels are fully independent — each
-/// worker owns a contiguous head chunk, one lane, and the chunk's
-/// disjoint `out` slice — so the fan-out is lock-free and, because each
-/// head's arithmetic is identical no matter which worker (or how many)
-/// runs it, **bit-invariant in the thread count**. Work below
-/// [`SPARSE_ATTEND_PAR_MIN_WORK`] runs serial regardless (the spawn
-/// overhead would dominate), as does `n_kv_heads == 1` (nothing to
-/// partition; the split-KV variant is a ROADMAP follow-on).
+/// [`sparse_attend`] with the per-KV-head loop partitioned across the
+/// `workers` handle (persistent pool lanes or scoped spawns). KV-head
+/// panels are fully independent — each worker owns a contiguous head
+/// chunk, one lane, and the chunk's disjoint `out` slice — so the
+/// fan-out is lock-free and, because each head's arithmetic is identical
+/// no matter which worker (or how many) runs it, **bit-invariant in the
+/// handle width**. Work below [`SPARSE_ATTEND_PAR_MIN_WORK`] runs serial
+/// regardless (the dispatch overhead would dominate), as does
+/// `n_kv_heads == 1` (nothing to partition here; the fused kernel's
+/// split-KV decomposition covers that shape).
 #[allow(clippy::too_many_arguments)]
 pub fn sparse_attend_threaded(
     q: &[f32],
@@ -641,7 +655,7 @@ pub fn sparse_attend_threaded(
     n_heads: usize,
     n_kv_heads: usize,
     d: usize,
-    threads: usize,
+    workers: &Workers,
     scratch: &mut SparseAttendScratch,
     out: &mut [f32],
 ) {
@@ -665,7 +679,7 @@ pub fn sparse_attend_threaded(
         };
         matmul(scores, vp, ohead, group, n_sel, d);
     };
-    sparse_attend_pv(q, keys, n_sel, n_heads, n_kv_heads, d, threads, pv, scratch, out)
+    sparse_attend_pv(q, keys, n_sel, n_heads, n_kv_heads, d, workers, pv, scratch, out)
 }
 
 /// [`sparse_attend_threaded`] with a caller-supplied PV stage — the
@@ -678,8 +692,8 @@ pub fn sparse_attend_threaded(
 /// scratch (the default PV packs the fp32 value panel into it; KIVI's
 /// fused dequant-GEMV path streams quantized rows directly into `ohead`
 /// and never stages). `pv` runs from worker threads and must be pure
-/// w.r.t. its arguments; per-head arithmetic stays thread-partition
-/// independent, so results remain bit-invariant in the thread count.
+/// w.r.t. its arguments; per-head arithmetic stays partition-independent,
+/// so results remain bit-invariant in the handle width.
 #[allow(clippy::too_many_arguments)]
 pub fn sparse_attend_pv(
     q: &[f32],
@@ -688,7 +702,7 @@ pub fn sparse_attend_pv(
     n_heads: usize,
     n_kv_heads: usize,
     d: usize,
-    threads: usize,
+    workers: &Workers,
     pv: impl Fn(usize, &[f32], &mut Vec<f32>, &mut [f32]) + Sync,
     scratch: &mut SparseAttendScratch,
     out: &mut [f32],
@@ -731,24 +745,19 @@ pub fn sparse_attend_pv(
     // chunks and reuse their lane across them (each head's pass fully
     // overwrites the lane, so reuse is deterministic), keeping serial
     // runs at exactly one (n_sel, d) panel pair as before the partition.
-    let workers = if threads <= 1 || n_kv_heads <= 1 || n_sel * group * d < SPARSE_ATTEND_PAR_MIN_WORK
-    {
-        1
-    } else {
-        threads.min(n_kv_heads)
-    };
+    let width = workers.width();
+    let n_workers =
+        if width <= 1 || n_kv_heads <= 1 || n_sel * group * d < SPARSE_ATTEND_PAR_MIN_WORK {
+            1
+        } else {
+            width.min(n_kv_heads)
+        };
     // Grow-only: shrinking would free panels a later parallel call has to
     // re-grow (the zero-alloc steady-state invariant).
-    if scratch.lanes.len() < workers {
-        scratch.lanes.resize_with(workers, SparseAttendLane::default);
+    if scratch.lanes.len() < n_workers {
+        scratch.lanes.resize_with(n_workers, SparseAttendLane::default);
     }
-    crate::util::threadpool::parallel_units_mut(
-        &mut scratch.lanes[..workers],
-        out,
-        group * d,
-        n_kv_heads,
-        per_head,
-    );
+    workers.units_mut(&mut scratch.lanes[..n_workers], out, group * d, n_kv_heads, per_head);
 }
 
 /// Row count of one [`fused_sparse_attend`] key/value tile. Each tile is
@@ -787,14 +796,47 @@ pub struct FusedLane {
     pub acc: Vec<f32>,
 }
 
+/// Fixed selection-segment length of the split-KV decomposition: a
+/// multiple of [`FUSED_TILE`], so the segmented fold tiles the selection
+/// at exactly the same absolute boundaries as the unsegmented one (the
+/// `fill`/`pv` closures see identical `(kvh, lo, hi)` calls either way).
+/// A **constant**, never derived from the worker count: the
+/// decomposition and its merge order must be identical for every pool
+/// size so outputs stay bit-identical across pool sizes.
+pub const SPLIT_KV_SEG: usize = 2 * FUSED_TILE;
+
+/// Split-KV engages only when the per-KV-head partition can't feed a
+/// pool on its own: at or below this many KV heads (MQA `n_kv_heads==1`
+/// is the motivating shape; 2 still leaves most of a pool idle).
+pub const SPLIT_KV_MAX_HEADS: usize = 2;
+
+/// ... and only when the selection is long enough that the per-segment
+/// partial copies and the serial merge are noise next to the tile folds
+/// (at least two full segments per KV head).
+pub const SPLIT_KV_MIN_SEL: usize = 2 * SPLIT_KV_SEG;
+
+/// True when [`fused_sparse_attend_with`] uses the split-KV (flash-
+/// decoding-style) decomposition: selection segments × KV heads instead
+/// of whole KV heads. A function of the problem *shape only* — never of
+/// the worker handle — so whether the fold is segmented cannot vary with
+/// pool size (the bit-invariance contract).
+pub fn split_kv_engages(n_kv_heads: usize, n_sel: usize) -> bool {
+    n_kv_heads <= SPLIT_KV_MAX_HEADS && n_sel >= SPLIT_KV_MIN_SEL
+}
+
 /// Reusable per-backend scratch for [`fused_sparse_attend`]: one
-/// [`FusedLane`] per worker (serial runs keep exactly one), grown to
-/// high-water marks and retained — steady-state decode performs zero
-/// heap allocations beyond the scoped thread spawns of the parallel
-/// path (persistent-pool follow-on filed on the ROADMAP).
+/// [`FusedLane`] per worker (serial runs keep exactly one) plus the
+/// split-KV partial panel, grown to high-water marks and retained —
+/// steady-state decode performs zero heap allocations (dispatch through
+/// a persistent [`Workers`] pool is allocation-free per call).
 #[derive(Default)]
 pub struct FusedAttendScratch {
     lanes: Vec<FusedLane>,
+    /// Split-KV per-unit online-softmax partials, one
+    /// `group · (d + 2)`-float record per (KV head, segment) unit:
+    /// `[m(group) | l(group) | acc(group·d)]`, merged serially in fixed
+    /// segment order after the parallel fold.
+    partials: Vec<f32>,
 }
 
 /// Fused tile-streaming sparse attention — the paper's §4.4 decode kernel
@@ -812,10 +854,13 @@ pub struct FusedAttendScratch {
 ///   only those two buffers and must be pure w.r.t. `(kvh, lo, hi)` — it
 ///   runs from worker threads (any shared staging it reads must be
 ///   prepared before the kernel call and borrowed immutably).
-/// * `threads`: per-KV-head fan-out cap (callers gate on work size; the
-///   kernel honors the cap as given so tests can force the parallel
-///   path). Per-lane arithmetic is identical regardless of which worker
-///   runs it, so results are **bit-invariant in the thread count**.
+/// * `workers`: fan-out handle (callers gate on work size; the kernel
+///   honors the width as given so tests can force the parallel path).
+///   The decomposition — per KV head, or split-KV selection segments
+///   when [`split_kv_engages`] — depends on the problem shape only, and
+///   per-lane arithmetic is identical regardless of which worker runs
+///   it, so results are **bit-invariant in the handle width and backing
+///   pool size**.
 /// * `out`: (n_heads·d), overwritten; `n_sel == 0` writes zeros.
 ///
 /// The online update per tile and query head g (the standard
@@ -832,7 +877,7 @@ pub fn fused_sparse_attend(
     n_heads: usize,
     n_kv_heads: usize,
     d: usize,
-    threads: usize,
+    workers: &Workers,
     fill: impl Fn(usize, usize, usize, &mut FusedLane) + Sync,
     scratch: &mut FusedAttendScratch,
     out: &mut [f32],
@@ -844,7 +889,7 @@ pub fn fused_sparse_attend(
         n_heads,
         n_kv_heads,
         d,
-        threads,
+        workers,
         fill,
         |_kvh, lo, hi, lane: &mut FusedLane| {
             let t = hi - lo;
@@ -867,6 +912,18 @@ pub fn fused_sparse_attend(
 /// fused dequant-GEMV ([`crate::quant::TokenQuantStore::dequant_matmul_acc`]),
 /// so the fp32 value tile never exists. Like `fill`, `pv` runs from
 /// worker threads and must be pure w.r.t. `(kvh, lo, hi)`.
+///
+/// When [`split_kv_engages`] (few KV heads, long selection — the MQA
+/// shape the per-head partition can't split), the kernel switches to the
+/// flash-decoding-style **split-KV** decomposition: the selection is cut
+/// into fixed [`SPLIT_KV_SEG`]-row segments, each (KV head, segment)
+/// unit folds its rows through a private online-softmax partial
+/// `(m, l, acc)` in parallel, and the partials are merged serially in
+/// ascending segment order. The segmentation is shape-only and the merge
+/// order fixed, so outputs are identical for every worker-handle width —
+/// they differ from the *unsegmented* fold only in fp summation order
+/// (≤1e-4, same class of difference as fused-vs-staged, pinned by
+/// tests).
 #[allow(clippy::too_many_arguments)]
 pub fn fused_sparse_attend_with(
     q: &[f32],
@@ -874,7 +931,7 @@ pub fn fused_sparse_attend_with(
     n_heads: usize,
     n_kv_heads: usize,
     d: usize,
-    threads: usize,
+    workers: &Workers,
     fill: impl Fn(usize, usize, usize, &mut FusedLane) + Sync,
     pv: impl Fn(usize, usize, usize, &mut FusedLane) + Sync,
     scratch: &mut FusedAttendScratch,
@@ -891,7 +948,13 @@ pub fn fused_sparse_attend_with(
     let group = n_heads / n_kv_heads;
     let scale = 1.0 / (d as f32).sqrt();
 
-    let run = |kvh: usize, lane: &mut FusedLane, ohead: &mut [f32]| {
+    // Shared tile fold: (re)initialize the lane's online-softmax state,
+    // then fold selection rows [seg_lo, seg_hi) of KV head `kvh` through
+    // it. Tile boundaries are absolute (multiples of FUSED_TILE from
+    // selection row 0; SPLIT_KV_SEG is such a multiple), so `fill`/`pv`
+    // observe the same (kvh, lo, hi) calls whether or not the fold is
+    // segmented.
+    let fold = |kvh: usize, seg_lo: usize, seg_hi: usize, lane: &mut FusedLane| {
         lane.qtile.resize(group * d, 0.0);
         lane.qtile.copy_from_slice(&q[kvh * group * d..(kvh + 1) * group * d]);
         simd::scale(&mut lane.qtile, scale);
@@ -902,9 +965,9 @@ pub fn fused_sparse_attend_with(
         lane.l.resize(group, 0.0);
         lane.acc.clear();
         lane.acc.resize(group * d, 0.0);
-        let mut lo = 0;
-        while lo < n_sel {
-            let hi = (lo + FUSED_TILE).min(n_sel);
+        let mut lo = seg_lo;
+        while lo < seg_hi {
+            let hi = (lo + FUSED_TILE).min(seg_hi);
             let t = hi - lo;
             lane.ktile.resize(t * d, 0.0);
             lane.vtile.resize(t * d, 0.0);
@@ -933,29 +996,116 @@ pub fn fused_sparse_attend_with(
             pv(kvh, lo, hi, lane);
             lo = hi;
         }
+    };
+
+    let FusedAttendScratch { lanes, partials } = scratch;
+    let width = workers.width();
+
+    if !split_kv_engages(n_kv_heads, n_sel) {
+        // Per-KV-head decomposition: one fold per head, epilogue
+        // normalizes straight into the head's disjoint `out` slice. One
+        // lane per WORKER (grow-only): each worker owns a contiguous
+        // head chunk and reuses its lane across heads — `fold`
+        // reinitializes the accumulator state per head, so reuse is
+        // deterministic and the serial path keeps exactly one lane.
+        let run = |kvh: usize, lane: &mut FusedLane, ohead: &mut [f32]| {
+            fold(kvh, 0, n_sel, lane);
+            for g in 0..group {
+                let inv = if lane.l[g] > 0.0 { 1.0 / lane.l[g] } else { 0.0 };
+                for (o, &a) in
+                    ohead[g * d..(g + 1) * d].iter_mut().zip(&lane.acc[g * d..(g + 1) * d])
+                {
+                    *o = a * inv;
+                }
+            }
+        };
+        let n_workers = if width <= 1 || n_kv_heads <= 1 { 1 } else { width.min(n_kv_heads) };
+        if lanes.len() < n_workers {
+            lanes.resize_with(n_workers, FusedLane::default);
+        }
+        workers.units_mut(&mut lanes[..n_workers], out, group * d, n_kv_heads, run);
+        return;
+    }
+
+    // Split-KV: (KV head, segment) units fold private partials in
+    // parallel; fixed-order serial merge below.
+    let n_segs = n_sel.div_ceil(SPLIT_KV_SEG);
+    let n_units = n_kv_heads * n_segs;
+    let stride = group * (d + 2);
+    // Grow-only, like the lanes (zero-alloc steady state).
+    if partials.len() < n_units * stride {
+        partials.resize(n_units * stride, 0.0);
+    }
+    let run = |unit: usize, lane: &mut FusedLane, pbuf: &mut [f32]| {
+        let kvh = unit / n_segs;
+        let seg = unit % n_segs;
+        let seg_lo = seg * SPLIT_KV_SEG;
+        let seg_hi = (seg_lo + SPLIT_KV_SEG).min(n_sel);
+        fold(kvh, seg_lo, seg_hi, lane);
+        let (mbuf, rest) = pbuf.split_at_mut(group);
+        let (lbuf, abuf) = rest.split_at_mut(group);
+        mbuf.copy_from_slice(&lane.m);
+        lbuf.copy_from_slice(&lane.l);
+        abuf.copy_from_slice(&lane.acc[..group * d]);
+    };
+    let n_workers = width.min(n_units).max(1);
+    if lanes.len() < n_workers {
+        lanes.resize_with(n_workers, FusedLane::default);
+    }
+    workers.units_mut(
+        &mut lanes[..n_workers],
+        &mut partials[..n_units * stride],
+        stride,
+        n_units,
+        run,
+    );
+
+    // Fixed-order merge on the caller: per KV head, fold the segment
+    // partials in ascending segment order — the standard two-accumulator
+    // online-softmax combine. Both the decomposition (shape-only) and
+    // this serial merge are independent of the worker count, so outputs
+    // are bit-identical for every pool size. Reuses lane 0 as the merge
+    // accumulator (it is scratch; the parallel section is over).
+    let mlane = &mut lanes[0];
+    for kvh in 0..n_kv_heads {
+        mlane.m.clear();
+        mlane.m.resize(group, f32::NEG_INFINITY);
+        mlane.l.clear();
+        mlane.l.resize(group, 0.0);
+        mlane.acc.clear();
+        mlane.acc.resize(group * d, 0.0);
+        for seg in 0..n_segs {
+            let p = &partials[(kvh * n_segs + seg) * stride..(kvh * n_segs + seg + 1) * stride];
+            let (pm, rest) = p.split_at(group);
+            let (pl, pacc) = rest.split_at(group);
+            for g in 0..group {
+                if pl[g] <= 0.0 {
+                    // A non-empty segment always has l ≥ 1 (its own max
+                    // contributes exp(0)); defensive skip only.
+                    continue;
+                }
+                if pm[g] > mlane.m[g] {
+                    // Rescale the merged history to the segment's max
+                    // (first segment: m = -inf so corr = 0 on zero state).
+                    let corr = (mlane.m[g] - pm[g]).exp();
+                    mlane.l[g] *= corr;
+                    simd::scale(&mut mlane.acc[g * d..(g + 1) * d], corr);
+                    mlane.m[g] = pm[g];
+                }
+                let c = (pm[g] - mlane.m[g]).exp();
+                mlane.l[g] += pl[g] * c;
+                simd::axpy(c, &pacc[g * d..(g + 1) * d], &mut mlane.acc[g * d..(g + 1) * d]);
+            }
+        }
+        let ohead = &mut out[kvh * group * d..(kvh + 1) * group * d];
         for g in 0..group {
-            let inv = if lane.l[g] > 0.0 { 1.0 / lane.l[g] } else { 0.0 };
-            for (o, &a) in ohead[g * d..(g + 1) * d].iter_mut().zip(&lane.acc[g * d..(g + 1) * d]) {
+            let inv = if mlane.l[g] > 0.0 { 1.0 / mlane.l[g] } else { 0.0 };
+            for (o, &a) in ohead[g * d..(g + 1) * d].iter_mut().zip(&mlane.acc[g * d..(g + 1) * d])
+            {
                 *o = a * inv;
             }
         }
-    };
-
-    // One lane per WORKER (grow-only), mirroring [`sparse_attend_threaded`]:
-    // each worker owns a contiguous head chunk and reuses its lane across
-    // them — `run` reinitializes the full accumulator state per head, so
-    // reuse is deterministic and the serial path keeps exactly one lane.
-    let workers = if threads <= 1 || n_kv_heads <= 1 { 1 } else { threads.min(n_kv_heads) };
-    if scratch.lanes.len() < workers {
-        scratch.lanes.resize_with(workers, FusedLane::default);
     }
-    crate::util::threadpool::parallel_units_mut(
-        &mut scratch.lanes[..workers],
-        out,
-        group * d,
-        n_kv_heads,
-        run,
-    );
 }
 
 /// Pack rows `idx` of a (·, row_len) row-major matrix into `out`
@@ -1277,8 +1427,8 @@ mod tests {
                 let mut out = vec![0.0f32; n * qd];
                 let mut scratch = BlockSparseScratch::default();
                 block_sparse_attend_chunk(
-                    &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, blocks, 1, &mut scratch,
-                    &mut out,
+                    &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, blocks, &Workers::serial(),
+                    &mut scratch, &mut out,
                 );
                 for (a, b) in out.iter().zip(&dense) {
                     assert!((a - b).abs() < 1e-4, "{n_heads}h/{n_kv_heads}kv: {a} vs {b}");
@@ -1286,8 +1436,8 @@ mod tests {
                 // Warm-scratch rerun must be identical (buffer reuse safety).
                 let mut out2 = vec![0.0f32; n * qd];
                 block_sparse_attend_chunk(
-                    &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, blocks, 1, &mut scratch,
-                    &mut out2,
+                    &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, blocks, &Workers::serial(),
+                    &mut scratch, &mut out2,
                 );
                 assert_eq!(out, out2);
             }
@@ -1311,7 +1461,8 @@ mod tests {
         let mut out = vec![0.0f32; n * qd];
         let mut scratch = BlockSparseScratch::default();
         block_sparse_attend_chunk(
-            &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &blocks, 1, &mut scratch, &mut out,
+            &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &blocks, &Workers::serial(),
+            &mut scratch, &mut out,
         );
         let reference =
             block_sparse_reference(&qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &blocks);
@@ -1334,17 +1485,26 @@ mod tests {
         let mut serial = vec![0.0f32; n * qd];
         let mut scratch = BlockSparseScratch::default();
         block_sparse_attend_chunk(
-            &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &blocks, 1, &mut scratch,
-            &mut serial,
+            &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &blocks, &Workers::serial(),
+            &mut scratch, &mut serial,
         );
-        for threads in [2usize, 3, 8] {
+        // Scoped widths and pool sizes {1, 2, 8}: all bit-identical.
+        let handles = [
+            Workers::scoped(2),
+            Workers::scoped(3),
+            Workers::scoped(8),
+            Workers::pooled(1),
+            Workers::pooled(2),
+            Workers::pooled(8),
+        ];
+        for workers in &handles {
             let mut out = vec![0.0f32; n * qd];
             let mut s = BlockSparseScratch::default();
             block_sparse_attend_chunk(
-                &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &blocks, threads, &mut s,
+                &qs, &keys, &values, n, len, n_heads, n_kv_heads, d, &blocks, workers, &mut s,
                 &mut out,
             );
-            assert_eq!(out, serial, "threads={threads} must be bit-identical");
+            assert_eq!(out, serial, "{workers:?} must be bit-identical");
         }
     }
 
@@ -1357,7 +1517,7 @@ mod tests {
         let mut out = vec![7.0f32; 2 * d];
         let mut scratch = BlockSparseScratch::default();
         block_sparse_attend_chunk(
-            &qs, &keys, &values, 2, 8, 1, 1, d, &[], 1, &mut scratch, &mut out,
+            &qs, &keys, &values, 2, 8, 1, 1, d, &[], &Workers::serial(), &mut scratch, &mut out,
         );
         assert!(out.iter().all(|&x| x == 0.0));
     }
@@ -1385,7 +1545,7 @@ mod tests {
         let mut out = vec![0.0f32; d];
         let mut scratch = BlockSparseScratch::default();
         block_sparse_attend_chunk(
-            &qs, &keys, &values, n, len, 1, 1, d, &blocks, 1, &mut scratch, &mut out,
+            &qs, &keys, &values, n, len, 1, 1, d, &blocks, &Workers::serial(), &mut scratch, &mut out,
         );
         assert!(out.iter().all(|x| x.is_finite()));
         assert!(out[0] >= 2.0 * FUSED_TILE as f32 - 1.0, "out {out:?}");
@@ -1470,13 +1630,21 @@ mod tests {
         let mut serial = vec![0.0f32; n_heads * d];
         let mut scratch = SparseAttendScratch::default();
         sparse_attend(&q, &keys, &values, n_sel, n_heads, n_kv_heads, d, &mut scratch, &mut serial);
-        for threads in [2usize, 3, 8] {
+        let handles = [
+            Workers::scoped(2),
+            Workers::scoped(3),
+            Workers::scoped(8),
+            Workers::pooled(1),
+            Workers::pooled(2),
+            Workers::pooled(8),
+        ];
+        for workers in &handles {
             let mut out = vec![0.0f32; n_heads * d];
             let mut s = SparseAttendScratch::default();
             sparse_attend_threaded(
-                &q, &keys, &values, n_sel, n_heads, n_kv_heads, d, threads, &mut s, &mut out,
+                &q, &keys, &values, n_sel, n_heads, n_kv_heads, d, workers, &mut s, &mut out,
             );
-            assert_eq!(out, serial, "threads={threads} must be bit-identical");
+            assert_eq!(out, serial, "{workers:?} must be bit-identical");
         }
     }
 
@@ -1497,7 +1665,16 @@ mod tests {
         let mut reference = vec![0.0f32; n_heads * d];
         let mut scratch = SparseAttendScratch::default();
         sparse_attend_threaded(
-            &q, &keys, &values, n_sel, n_heads, n_kv_heads, d, 1, &mut scratch, &mut reference,
+            &q,
+            &keys,
+            &values,
+            n_sel,
+            n_heads,
+            n_kv_heads,
+            d,
+            &Workers::serial(),
+            &mut scratch,
+            &mut reference,
         );
         let pv = |kvh: usize, scores: &[f32], _staging: &mut Vec<f32>, ohead: &mut [f32]| {
             ohead.fill(0.0);
@@ -1510,19 +1687,21 @@ mod tests {
             }
         };
         let mut first = Vec::new();
-        for threads in [1usize, 2, 8] {
+        let handles =
+            [Workers::serial(), Workers::scoped(2), Workers::pooled(2), Workers::pooled(8)];
+        for (i, workers) in handles.iter().enumerate() {
             let mut out = vec![0.0f32; n_heads * d];
             let mut s = SparseAttendScratch::default();
             sparse_attend_pv(
-                &q, &keys, n_sel, n_heads, n_kv_heads, d, threads, &pv, &mut s, &mut out,
+                &q, &keys, n_sel, n_heads, n_kv_heads, d, workers, &pv, &mut s, &mut out,
             );
             for (a, b) in out.iter().zip(&reference) {
-                assert!((a - b).abs() < 1e-4, "threads={threads}: {a} vs {b}");
+                assert!((a - b).abs() < 1e-4, "{workers:?}: {a} vs {b}");
             }
-            if threads == 1 {
+            if i == 0 {
                 first = out;
             } else {
-                assert_eq!(out, first, "threads={threads} must be bit-identical");
+                assert_eq!(out, first, "{workers:?} must be bit-identical");
             }
         }
     }
@@ -1611,23 +1790,28 @@ mod tests {
             let mut out = vec![0.0f32; n_heads * d];
             let mut scratch = FusedAttendScratch::default();
             let fill = panel_fill(&keys, &values, kvd, d);
-            fused_sparse_attend(&q, n_sel, n_heads, n_kv_heads, d, 1, &fill, &mut scratch, &mut out);
+            let serial = Workers::serial();
+            fused_sparse_attend(
+                &q, n_sel, n_heads, n_kv_heads, d, &serial, &fill, &mut scratch, &mut out,
+            );
             for (a, b) in out.iter().zip(&reference) {
                 assert!((a - b).abs() < 1e-4, "{n_heads}h/{n_kv_heads}kv/{n_sel}sel: {a} vs {b}");
             }
             // Warm-scratch rerun must be identical (buffer reuse safety).
             let mut out2 = vec![0.0f32; n_heads * d];
-            fused_sparse_attend(&q, n_sel, n_heads, n_kv_heads, d, 1, &fill, &mut scratch, &mut out2);
+            fused_sparse_attend(
+                &q, n_sel, n_heads, n_kv_heads, d, &serial, &fill, &mut scratch, &mut out2,
+            );
             assert_eq!(out, out2);
-            // Thread count must be invisible bit-for-bit (per-lane
+            // Worker handle must be invisible bit-for-bit (per-lane
             // arithmetic is fixed; only the lane→worker mapping changes).
-            for threads in [2usize, 8] {
+            for workers in [Workers::scoped(2), Workers::pooled(2), Workers::pooled(8)] {
                 let mut outn = vec![0.0f32; n_heads * d];
                 let mut sn = FusedAttendScratch::default();
                 fused_sparse_attend(
-                    &q, n_sel, n_heads, n_kv_heads, d, threads, &fill, &mut sn, &mut outn,
+                    &q, n_sel, n_heads, n_kv_heads, d, &workers, &fill, &mut sn, &mut outn,
                 );
-                assert_eq!(out, outn, "threads={threads}");
+                assert_eq!(out, outn, "{workers:?}");
             }
         }
     }
@@ -1643,7 +1827,7 @@ mod tests {
             2,
             1,
             4,
-            1,
+            &Workers::serial(),
             |_, _, _, _: &mut FusedLane| panic!("fill must not run on empty selection"),
             &mut scratch,
             &mut out,
@@ -1669,7 +1853,15 @@ mod tests {
         let mut reference = vec![0.0f32; n_heads * d];
         let mut scratch = FusedAttendScratch::default();
         fused_sparse_attend(
-            &q, n_sel, n_heads, n_kv_heads, d, 1, &fill, &mut scratch, &mut reference,
+            &q,
+            n_sel,
+            n_heads,
+            n_kv_heads,
+            d,
+            &Workers::serial(),
+            &fill,
+            &mut scratch,
+            &mut reference,
         );
         let pv = |_kvh: usize, lo: usize, hi: usize, lane: &mut FusedLane| {
             let t = hi - lo;
@@ -1681,13 +1873,13 @@ mod tests {
                 }
             }
         };
-        for threads in [1usize, 4] {
+        for workers in [Workers::serial(), Workers::scoped(4), Workers::pooled(4)] {
             let mut out = vec![0.0f32; n_heads * d];
             let mut s = FusedAttendScratch::default();
             fused_sparse_attend_with(
-                &q, n_sel, n_heads, n_kv_heads, d, threads, &fill, &pv, &mut s, &mut out,
+                &q, n_sel, n_heads, n_kv_heads, d, &workers, &fill, &pv, &mut s, &mut out,
             );
-            assert_eq!(out, reference, "threads={threads}");
+            assert_eq!(out, reference, "{workers:?}");
         }
     }
 
@@ -1710,11 +1902,128 @@ mod tests {
         let mut out = vec![0.0f32; d];
         let mut scratch = FusedAttendScratch::default();
         let fill = panel_fill(&keys, &values, d, d);
-        fused_sparse_attend(&q, n_sel, 1, 1, d, 1, &fill, &mut scratch, &mut out);
+        fused_sparse_attend(&q, n_sel, 1, 1, d, &Workers::serial(), &fill, &mut scratch, &mut out);
         assert!(out.iter().all(|x| x.is_finite()));
         // All weight concentrates on the last (largest-score) tile, whose
         // values are ≥ 2·FUSED_TILE.
         assert!(out[0] >= 2.0 * FUSED_TILE as f32 - 1.0, "out {out:?}");
+    }
+
+    #[test]
+    fn split_kv_engagement_is_shape_only() {
+        // The split decision must depend on (n_kv_heads, n_sel) alone —
+        // never on the worker handle — so outputs are a function of shape.
+        assert!(split_kv_engages(1, SPLIT_KV_MIN_SEL));
+        assert!(split_kv_engages(2, 10_000));
+        assert!(!split_kv_engages(1, SPLIT_KV_MIN_SEL - 1));
+        assert!(!split_kv_engages(3, 10_000));
+        // Segment length is a whole number of fused tiles, so split and
+        // unsplit folds see identical (kvh, lo, hi) tile calls.
+        assert_eq!(SPLIT_KV_SEG % FUSED_TILE, 0);
+    }
+
+    #[test]
+    fn split_kv_matches_materialized_reference() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(43);
+        // MQA (n_kv_heads=1) and narrow-GQA shapes past SPLIT_KV_MIN_SEL,
+        // including a ragged final segment (200 = 3·64 + 8).
+        for (n_heads, n_kv_heads, d, n_sel) in
+            [(4usize, 1usize, 16usize, 200usize), (1, 1, 8, 256), (8, 2, 16, 131)]
+        {
+            assert!(split_kv_engages(n_kv_heads, n_sel), "shape must engage the split path");
+            let kvd = n_kv_heads * d;
+            let q = rng.normal_vec(n_heads * d, 1.0);
+            let keys = rng.normal_vec(n_sel * kvd, 1.0);
+            let values = rng.normal_vec(n_sel * kvd, 1.0);
+            let reference = sparse_reference(&q, &keys, &values, n_sel, n_heads, n_kv_heads, d);
+            let fill = panel_fill(&keys, &values, kvd, d);
+            let serial = Workers::serial();
+            let mut out = vec![0.0f32; n_heads * d];
+            let mut scratch = FusedAttendScratch::default();
+            fused_sparse_attend(
+                &q, n_sel, n_heads, n_kv_heads, d, &serial, &fill, &mut scratch, &mut out,
+            );
+            for (a, b) in out.iter().zip(&reference) {
+                assert!((a - b).abs() < 1e-4, "{n_heads}h/{n_kv_heads}kv/{n_sel}sel: {a} vs {b}");
+            }
+            // Warm-scratch rerun (partials buffer reuse) must be identical.
+            let mut out2 = vec![0.0f32; n_heads * d];
+            fused_sparse_attend(
+                &q, n_sel, n_heads, n_kv_heads, d, &serial, &fill, &mut scratch, &mut out2,
+            );
+            assert_eq!(out, out2);
+        }
+    }
+
+    #[test]
+    fn split_kv_pool_size_bit_invariant() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(47);
+        let (n_heads, n_kv_heads, d, n_sel) = (4usize, 1usize, 16usize, 200usize);
+        let kvd = n_kv_heads * d;
+        let q = rng.normal_vec(n_heads * d, 1.0);
+        let keys = rng.normal_vec(n_sel * kvd, 1.0);
+        let values = rng.normal_vec(n_sel * kvd, 1.0);
+        let fill = panel_fill(&keys, &values, kvd, d);
+        let mut serial = vec![0.0f32; n_heads * d];
+        let mut scratch = FusedAttendScratch::default();
+        fused_sparse_attend(
+            &q, n_sel, n_heads, n_kv_heads, d, &Workers::serial(), &fill, &mut scratch, &mut serial,
+        );
+        let handles = [
+            Workers::scoped(2),
+            Workers::scoped(8),
+            Workers::pooled(1),
+            Workers::pooled(2),
+            Workers::pooled(8),
+        ];
+        for workers in &handles {
+            let mut out = vec![0.0f32; n_heads * d];
+            let mut s = FusedAttendScratch::default();
+            fused_sparse_attend(&q, n_sel, n_heads, n_kv_heads, d, workers, &fill, &mut s, &mut out);
+            assert_eq!(out, serial, "{workers:?} must be bit-identical on the split path");
+        }
+    }
+
+    #[test]
+    fn split_kv_partitions_across_pool_workers() {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(53);
+        let (n_heads, d) = (4usize, 16usize);
+        let workers = Workers::pooled(8);
+        // n_kv_heads=1 below the split threshold: the per-KV-head partition
+        // has nothing to split, so the call must stay serial (no dispatch).
+        {
+            let n_sel = SPLIT_KV_MIN_SEL - 1;
+            let q = rng.normal_vec(n_heads * d, 1.0);
+            let keys = rng.normal_vec(n_sel * d, 1.0);
+            let values = rng.normal_vec(n_sel * d, 1.0);
+            let fill = panel_fill(&keys, &values, d, d);
+            let mut out = vec![0.0f32; n_heads * d];
+            let mut s = FusedAttendScratch::default();
+            let before = workers.pool_dispatch_count().unwrap();
+            fused_sparse_attend(&q, n_sel, n_heads, 1, d, &workers, &fill, &mut s, &mut out);
+            assert_eq!(
+                workers.pool_dispatch_count().unwrap(),
+                before,
+                "below-threshold MQA attend must not fan out"
+            );
+        }
+        // Past the threshold the selection ranges fan out across workers.
+        {
+            let n_sel = 4 * SPLIT_KV_SEG;
+            let q = rng.normal_vec(n_heads * d, 1.0);
+            let keys = rng.normal_vec(n_sel * d, 1.0);
+            let values = rng.normal_vec(n_sel * d, 1.0);
+            let fill = panel_fill(&keys, &values, d, d);
+            let mut out = vec![0.0f32; n_heads * d];
+            let mut s = FusedAttendScratch::default();
+            let before = workers.pool_dispatch_count().unwrap();
+            fused_sparse_attend(&q, n_sel, n_heads, 1, d, &workers, &fill, &mut s, &mut out);
+            let dispatched = workers.pool_dispatch_count().unwrap() - before;
+            assert_eq!(dispatched, 3, "4 segments on width 8 → 3 worker dispatches + caller");
+        }
     }
 
     #[test]

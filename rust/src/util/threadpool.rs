@@ -1,11 +1,30 @@
-//! Fixed-size thread pool with scoped parallel-for (no rayon offline).
+//! Worker-pool substrate (no rayon offline): persistent pinned pool +
+//! scoped spawn fallback.
 //!
-//! Used by the coordinator for worker fan-out and by benches for parallel
-//! workload generation. `parallel_for` splits an index range into contiguous
-//! chunks and runs them on `std::thread::scope` threads;
-//! `parallel_for_each_mut` is the `&mut`-item variant the engine's prefill
-//! phase uses to fan work out over per-sequence state (each item is owned
-//! by exactly one worker thread).
+//! Two tiers live here:
+//!
+//! * **Free functions** (`parallel_for`, `parallel_for_each_mut`,
+//!   `parallel_chunks_mut`, `parallel_units_mut`, `parallel_map`) fan out
+//!   over fresh `std::thread::scope` threads per call (~10µs/spawn). They
+//!   remain the reference decomposition and the right tool for coarse,
+//!   infrequent fan-outs (bench workload generation).
+//! * **`WorkerPool` / `Workers`** is the decode-hot-path tier: N long-lived
+//!   OS threads created once per `Engine` (or once per bench), with
+//!   per-call task handoff through a per-lane closure slot + atomic epoch
+//!   (spin-then-park). Dispatch is allocation-free and sub-microsecond when
+//!   the pool is hot, which is what lets the attention kernels' work-size
+//!   guards sit an order of magnitude lower than the spawn tier allowed.
+//!
+//! The `Workers` handle mirrors the free functions' decompositions
+//! *exactly* (same chunk boundaries, same index order), so outputs are
+//! bit-identical between the pooled, scoped, and serial execution modes —
+//! thread count and execution tier are scheduling knobs only.
+
+use std::any::Any;
+use std::cell::UnsafeCell;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, OnceLock};
 
 /// Run `f(i)` for every i in 0..n across up to `threads` OS threads.
 ///
@@ -200,6 +219,739 @@ pub fn num_cpus() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// `SALS_THREADS` override, parsed once per process (like `SALS_SIMD`).
+///
+/// When set to a positive integer it forces the worker-pool size for the
+/// engine, the benches, and every `resolve_threads` caller — reproducible
+/// perf runs and CI bit-invariance shakeouts (`SALS_THREADS=1` vs `=8`).
+/// Unset, empty, or unparsable means no override.
+pub fn threads_override() -> Option<usize> {
+    static OVERRIDE: OnceLock<Option<usize>> = OnceLock::new();
+    *OVERRIDE.get_or_init(|| {
+        std::env::var("SALS_THREADS")
+            .ok()
+            .and_then(|s| s.trim().parse::<usize>().ok())
+            .filter(|&n| n > 0)
+    })
+}
+
+/// Resolve a requested worker count against the environment: the
+/// `SALS_THREADS` override wins outright; otherwise `requested == 0`
+/// means auto (one worker per CPU) and any positive value is taken as
+/// given.
+pub fn resolve_threads(requested: usize) -> usize {
+    if let Some(n) = threads_override() {
+        return n;
+    }
+    if requested == 0 {
+        num_cpus()
+    } else {
+        requested
+    }
+}
+
+/// Spin iterations a worker burns on an empty mailbox before parking on
+/// its condvar. Back-to-back decode dispatches arrive within microseconds
+/// of each other, so the hot path never parks; an idle engine (or a pool
+/// outliving a burst) falls back to a blocking wait instead of burning a
+/// core.
+const PARK_AFTER_SPINS: u32 = 1 << 14;
+
+/// Spin iterations the dispatcher burns waiting for lane completion
+/// before yielding the CPU between polls. Lane work on the decode hot
+/// path is microseconds, so completion waits almost never yield.
+const WAIT_YIELD_AFTER_SPINS: u32 = 1 << 16;
+
+/// Type-erased job: a pointer to a live `Fn(usize)` closure plus the
+/// monomorphized trampoline that calls it with the lane's worker index.
+#[derive(Clone, Copy)]
+struct JobSlot {
+    data: *const (),
+    call: unsafe fn(*const (), usize),
+    arg: usize,
+}
+
+/// Trampoline instantiated per closure type by `Workers::broadcast`.
+///
+/// # Safety
+/// `data` must point at a live `F` that outlives the call (the
+/// dispatching `broadcast` keeps the closure alive until every lane has
+/// reported completion).
+unsafe fn call_thunk<F: Fn(usize) + Sync>(data: *const (), arg: usize) {
+    // SAFETY: per this function's contract, `data` is a valid `&F` for
+    // the duration of the call.
+    let f = unsafe { &*(data as *const F) };
+    f(arg);
+}
+
+/// No-op used as the initial slot value before the first dispatch.
+///
+/// # Safety
+/// Always safe to call; never actually invoked (workers only read the
+/// slot after observing a job epoch published by a dispatcher, which
+/// overwrites the slot first).
+unsafe fn noop_thunk(_data: *const (), _arg: usize) {}
+
+/// One worker's dispatch mailbox.
+///
+/// Protocol: the dispatcher writes `slot`, then publishes `job = n+1`
+/// (SeqCst); the worker observes the new epoch (Acquire/SeqCst), runs the
+/// job, stores any panic payload, then publishes `done = job` (Release).
+/// `job == done` therefore means "idle, slot free"; the single-dispatcher
+/// rule (a `Workers` handle's lane range is never broadcast from two
+/// threads at once) makes the slot write race-free, and the epoch pair
+/// makes completion detection allocation-free.
+struct Lane {
+    job: AtomicU64,
+    done: AtomicU64,
+    slot: UnsafeCell<JobSlot>,
+    /// Panic payload captured by the worker, taken by the dispatcher
+    /// after it observes `done` (never concurrently).
+    panic: UnsafeCell<Option<Box<dyn Any + Send>>>,
+    /// True while the worker is parked (or about to park) on `condvar`.
+    sleeping: AtomicBool,
+    mutex: Mutex<()>,
+    condvar: Condvar,
+}
+
+// SAFETY: the `UnsafeCell` fields are synchronized by the job/done epoch
+// protocol documented on `Lane`: the dispatcher only writes `slot` when
+// `job == done` (lane idle) and the worker only reads it after observing
+// a newer `job`; `panic` is written by the worker before its `done`
+// release-store and read by the dispatcher after the matching acquire
+// load. Raw pointers inside `JobSlot` are only dereferenced while the
+// dispatching closure is provably alive.
+unsafe impl Sync for Lane {}
+
+impl Lane {
+    fn new() -> Lane {
+        Lane {
+            job: AtomicU64::new(0),
+            done: AtomicU64::new(0),
+            slot: UnsafeCell::new(JobSlot { data: std::ptr::null(), call: noop_thunk, arg: 0 }),
+            panic: UnsafeCell::new(None),
+            sleeping: AtomicBool::new(false),
+            mutex: Mutex::new(()),
+            condvar: Condvar::new(),
+        }
+    }
+}
+
+struct PoolShared {
+    lanes: Vec<Lane>,
+    shutdown: AtomicBool,
+    /// Total jobs handed to lanes over the pool's lifetime — lets tests
+    /// assert that degenerate inputs (empty, single item) stay serial.
+    dispatches: AtomicU64,
+    /// Worker threads of this pool still running (spawned minus exited).
+    live: AtomicUsize,
+}
+
+/// Observable live-worker count of one pool that outlives the pool
+/// itself: `WorkerPool::drop` joins every worker, so after the pool is
+/// gone the probe reads 0 — the no-leaked-threads contract across
+/// engine restarts in one process, pinned by tests.
+pub struct PoolLiveProbe {
+    shared: Arc<PoolShared>,
+}
+
+impl PoolLiveProbe {
+    /// Worker threads of the probed pool still running.
+    pub fn count(&self) -> usize {
+        self.shared.live.load(Ordering::SeqCst)
+    }
+}
+
+/// Persistent pinned worker pool: `size - 1` long-lived OS threads (the
+/// dispatching thread is always implicit worker 0), one dispatch mailbox
+/// per thread. Created once per `Engine` (and once per bench); `Drop`
+/// joins every worker, so pools never leak threads across engine
+/// restarts in one process.
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool sized for `size` total workers (`size - 1` OS
+    /// threads; `size <= 1` spawns none and every handle runs inline).
+    pub fn new(size: usize) -> WorkerPool {
+        let n_lanes = size.max(1) - 1;
+        let shared = Arc::new(PoolShared {
+            lanes: (0..n_lanes).map(|_| Lane::new()).collect(),
+            shutdown: AtomicBool::new(false),
+            dispatches: AtomicU64::new(0),
+            live: AtomicUsize::new(n_lanes),
+        });
+        let mut handles = Vec::with_capacity(n_lanes);
+        for idx in 0..n_lanes {
+            let shared = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("sals-pool-{idx}"))
+                    .spawn(move || worker_loop(shared, idx))
+                    .expect("failed to spawn pool worker"),
+            );
+        }
+        WorkerPool { shared, handles }
+    }
+
+    /// Number of pooled OS threads (total workers minus the caller).
+    pub fn lanes(&self) -> usize {
+        self.shared.lanes.len()
+    }
+
+    /// Lifetime dispatch count (jobs handed to pooled lanes).
+    pub fn dispatch_count(&self) -> u64 {
+        self.shared.dispatches.load(Ordering::Relaxed)
+    }
+
+    /// A live-worker probe that can be read after the pool is dropped.
+    pub fn live_probe(&self) -> PoolLiveProbe {
+        PoolLiveProbe { shared: Arc::clone(&self.shared) }
+    }
+
+    /// Hand `(data, call, arg)` to lane `lane_idx`. The lane must be idle
+    /// (single-dispatcher rule); the caller must keep `data` alive until
+    /// `wait_idle` returns for this lane.
+    fn dispatch(
+        &self,
+        lane_idx: usize,
+        data: *const (),
+        call: unsafe fn(*const (), usize),
+        arg: usize,
+    ) {
+        let lane = &self.shared.lanes[lane_idx];
+        let prev = lane.job.load(Ordering::Relaxed);
+        assert_eq!(
+            lane.done.load(Ordering::Acquire),
+            prev,
+            "worker-pool lane dispatched while busy (overlapping broadcasts on one lane range)"
+        );
+        // SAFETY: the lane is idle (assert above), so the worker is not
+        // reading the slot, and only this thread may dispatch to it
+        // (single-dispatcher rule) — the write cannot race.
+        unsafe {
+            *lane.slot.get() = JobSlot { data, call, arg };
+        }
+        // SeqCst on both the epoch publish and the `sleeping` check so
+        // the classic lost-wakeup interleaving is impossible: either the
+        // worker's final epoch re-check (under the mutex) sees the new
+        // job, or our `sleeping` load sees true and we notify under the
+        // same mutex.
+        lane.job.store(prev + 1, Ordering::SeqCst);
+        if lane.sleeping.load(Ordering::SeqCst) {
+            let _guard = lane.mutex.lock().unwrap();
+            lane.condvar.notify_one();
+        }
+        self.shared.dispatches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Spin until lane `lane_idx` finishes its current job; returns the
+    /// panic payload if the job panicked.
+    fn wait_idle(&self, lane_idx: usize) -> Option<Box<dyn Any + Send>> {
+        let lane = &self.shared.lanes[lane_idx];
+        let target = lane.job.load(Ordering::Relaxed);
+        let mut spins: u32 = 0;
+        while lane.done.load(Ordering::Acquire) != target {
+            spins += 1;
+            if spins < WAIT_YIELD_AFTER_SPINS {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+        // SAFETY: the acquire load above observed the worker's release
+        // store of `done == job`, so the worker has finished writing
+        // `panic` and will not touch it again before the next dispatch,
+        // which only this thread can issue.
+        unsafe { (*lane.panic.get()).take() }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        // No broadcast can be in flight here (`broadcast` blocks until
+        // all lanes are idle before returning, and dropping requires
+        // exclusive ownership), so every lane is idle: bump its epoch
+        // with the shutdown flag set and the worker exits instead of
+        // reading the (stale) slot.
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        for lane in &self.shared.lanes {
+            lane.job.fetch_add(1, Ordering::SeqCst);
+            let _guard = lane.mutex.lock().unwrap();
+            lane.condvar.notify_one();
+        }
+        for handle in self.handles.drain(..) {
+            let _ = handle.join();
+        }
+    }
+}
+
+fn worker_loop(shared: Arc<PoolShared>, idx: usize) {
+    let lane = &shared.lanes[idx];
+    let mut seen: u64 = 0;
+    while let Some(epoch) = wait_for_job(lane, &shared, seen) {
+        seen = epoch;
+        // SAFETY: the dispatcher wrote the slot before publishing
+        // `job == seen` and will not rewrite it until we store
+        // `done == seen` below, so this read cannot race.
+        let slot = unsafe { *lane.slot.get() };
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            // SAFETY: `call` is the trampoline monomorphized for the
+            // closure `data` points at; the dispatching `broadcast`
+            // keeps that closure alive until this lane publishes
+            // completion.
+            unsafe { (slot.call)(slot.data, slot.arg) }
+        }));
+        if let Err(payload) = result {
+            // SAFETY: the dispatcher does not read `panic` until it has
+            // observed the `done` store below.
+            unsafe {
+                *lane.panic.get() = Some(payload);
+            }
+        }
+        lane.done.store(seen, Ordering::Release);
+    }
+    shared.live.fetch_sub(1, Ordering::SeqCst);
+}
+
+/// Block until the lane's job epoch moves past `seen` (spin, then park).
+/// Returns `None` on shutdown.
+fn wait_for_job(lane: &Lane, shared: &PoolShared, seen: u64) -> Option<u64> {
+    let mut spins: u32 = 0;
+    loop {
+        let epoch = lane.job.load(Ordering::SeqCst);
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return None;
+        }
+        if epoch != seen {
+            return Some(epoch);
+        }
+        spins += 1;
+        if spins < PARK_AFTER_SPINS {
+            std::hint::spin_loop();
+            continue;
+        }
+        // Park: set `sleeping`, then re-check the epoch under the mutex
+        // before waiting — paired with the dispatcher's publish-then-
+        // check-sleeping order this cannot lose a wakeup.
+        lane.sleeping.store(true, Ordering::SeqCst);
+        {
+            let mut guard = lane.mutex.lock().unwrap();
+            while lane.job.load(Ordering::SeqCst) == seen && !shared.shutdown.load(Ordering::SeqCst)
+            {
+                guard = lane.condvar.wait(guard).unwrap();
+            }
+        }
+        lane.sleeping.store(false, Ordering::SeqCst);
+        spins = 0;
+    }
+}
+
+/// A worker-fan-out handle: the unit that flows everywhere a raw
+/// `threads: usize` count used to.
+///
+/// Three modes share one decomposition (bit-identical outputs):
+///
+/// * `Workers::serial()` — width 1, everything runs inline.
+/// * `Workers::scoped(n)` — width n over fresh `std::thread::scope`
+///   threads per call (the legacy tier; also the bit-parity reference
+///   for pool tests).
+/// * pooled (`Workers::for_pool` / `Workers::pooled`) — width
+///   `1 + lane range` over a [`WorkerPool`]: the dispatching thread is
+///   worker 0 and each pooled lane in `[lo, hi)` is one additional
+///   worker. Sub-ranges of one pool (from [`Workers::nested_for_each_mut`])
+///   are disjoint, which is what caps nested fan-out at the pool size.
+///
+/// Single-dispatcher rule: a handle (and any clone sharing its lane
+/// range) must not issue overlapping broadcasts from two threads; lane
+/// mailboxes assert on double dispatch. Ownership in this codebase
+/// (scratch structs own their handle) enforces this structurally.
+#[derive(Clone)]
+pub struct Workers {
+    pool: Option<Arc<WorkerPool>>,
+    lo: usize,
+    hi: usize,
+    scoped: usize,
+}
+
+impl Default for Workers {
+    fn default() -> Workers {
+        Workers::serial()
+    }
+}
+
+impl std::fmt::Debug for Workers {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        if self.pool.is_some() {
+            write!(f, "Workers::pooled(width={})", self.width())
+        } else if self.scoped > 1 {
+            write!(f, "Workers::scoped(width={})", self.scoped)
+        } else {
+            write!(f, "Workers::serial")
+        }
+    }
+}
+
+impl Workers {
+    /// Width-1 handle: everything runs inline on the caller.
+    pub fn serial() -> Workers {
+        Workers { pool: None, lo: 0, hi: 0, scoped: 1 }
+    }
+
+    /// Scoped-spawn handle of the given width (legacy tier: fresh
+    /// threads per call, ~10µs dispatch).
+    pub fn scoped(width: usize) -> Workers {
+        Workers { pool: None, lo: 0, hi: 0, scoped: width.max(1) }
+    }
+
+    /// Create a fresh private pool of `width` total workers and return
+    /// its full-width handle (the pool lives as long as some clone of
+    /// the handle does).
+    pub fn pooled(width: usize) -> Workers {
+        Workers::for_pool(&Arc::new(WorkerPool::new(width)))
+    }
+
+    /// Handle for a legacy `threads: usize` request: resolve through
+    /// [`resolve_threads`] (`SALS_THREADS` override wins, 0 = one per
+    /// CPU), then serial for width 1 and a fresh private pool otherwise.
+    /// Callers that already own a pool should use [`Workers::for_pool`]
+    /// instead of minting one per call site.
+    pub fn auto(requested: usize) -> Workers {
+        let n = resolve_threads(requested);
+        if n <= 1 {
+            Workers::serial()
+        } else {
+            Workers::pooled(n)
+        }
+    }
+
+    /// Full-width handle over an existing pool.
+    pub fn for_pool(pool: &Arc<WorkerPool>) -> Workers {
+        Workers { pool: Some(Arc::clone(pool)), lo: 0, hi: pool.lanes(), scoped: 1 }
+    }
+
+    /// Total workers this handle fans out to (caller included).
+    pub fn width(&self) -> usize {
+        if self.pool.is_some() {
+            1 + (self.hi - self.lo)
+        } else {
+            self.scoped
+        }
+    }
+
+    /// True when backed by a persistent pool (vs scoped spawn / serial).
+    pub fn is_pooled(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// Lifetime dispatch count of the backing pool (0 for non-pooled
+    /// handles) — lets tests assert degenerate inputs stay serial.
+    pub fn pool_dispatch_count(&self) -> u64 {
+        self.pool.as_ref().map_or(0, |p| p.dispatch_count())
+    }
+
+    /// Live-worker probe of the backing pool (None for non-pooled
+    /// handles); readable after every handle is dropped.
+    pub fn live_probe(&self) -> Option<PoolLiveProbe> {
+        self.pool.as_ref().map(|p| p.live_probe())
+    }
+
+    /// Run `f(t)` for `t in 0..width.min(self.width())`, caller as
+    /// worker 0, blocking until all workers finish. Worker panics are
+    /// re-raised on the caller after every lane has completed (so the
+    /// scoped borrows stay sound and the pool stays reusable).
+    fn broadcast<F: Fn(usize) + Sync>(&self, width: usize, f: &F) {
+        let w = width.min(self.width()).max(1);
+        if w <= 1 {
+            f(0);
+            return;
+        }
+        match &self.pool {
+            Some(pool) => {
+                let data = f as *const F as *const ();
+                for t in 1..w {
+                    pool.dispatch(self.lo + t - 1, data, call_thunk::<F>, t);
+                }
+                let mut first_panic = catch_unwind(AssertUnwindSafe(|| f(0))).err();
+                for t in 1..w {
+                    let lane_panic = pool.wait_idle(self.lo + t - 1);
+                    if first_panic.is_none() {
+                        first_panic = lane_panic;
+                    }
+                }
+                if let Some(payload) = first_panic {
+                    resume_unwind(payload);
+                }
+            }
+            None => {
+                std::thread::scope(|s| {
+                    for t in 1..w {
+                        s.spawn(move || f(t));
+                    }
+                    f(0);
+                });
+            }
+        }
+    }
+
+    /// Pool-backed drop-in for [`parallel_for`]: same chunking, same
+    /// index order, sub-microsecond dispatch when pooled.
+    pub fn parallel_for(&self, n: usize, f: impl Fn(usize) + Sync) {
+        let w = self.width().min(n.max(1));
+        if w <= 1 || n <= 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let chunk = n.div_ceil(w);
+        self.broadcast(w, &|t: usize| {
+            let lo = t * chunk;
+            let hi = ((t + 1) * chunk).min(n);
+            for i in lo..hi {
+                f(i);
+            }
+        });
+    }
+
+    /// Pool-backed drop-in for [`parallel_for_each_mut`]: each worker
+    /// owns a disjoint contiguous `&mut` range of `items`.
+    pub fn for_each_mut<T: Send>(&self, items: &mut [T], f: impl Fn(usize, &mut T) + Sync) {
+        let n = items.len();
+        let w = self.width().min(n.max(1));
+        if w <= 1 || n <= 1 {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item);
+            }
+            return;
+        }
+        let chunk = n.div_ceil(w);
+        let base = items.as_mut_ptr() as usize;
+        self.broadcast(w, &|t: usize| {
+            let lo = t * chunk;
+            if lo >= n {
+                return;
+            }
+            let hi = ((t + 1) * chunk).min(n);
+            // SAFETY: workers receive disjoint contiguous index ranges
+            // [lo, hi) of `items` (div_ceil chunking over distinct t),
+            // each carved exactly once, and `broadcast` does not return
+            // until every worker finishes — so each element has exactly
+            // one live &mut inside the caller's borrow of `items`.
+            let part = unsafe { std::slice::from_raw_parts_mut((base as *mut T).add(lo), hi - lo) };
+            for (j, item) in part.iter_mut().enumerate() {
+                f(lo + j, item);
+            }
+        });
+    }
+
+    /// Pool-backed drop-in for [`parallel_chunks_mut`]: decomposition
+    /// fixed by `chunk_size` (never the worker count), so per-element
+    /// work that is independent of the chunking is bit-identical for
+    /// every handle width.
+    pub fn chunks_mut<T: Send>(
+        &self,
+        buf: &mut [T],
+        chunk_size: usize,
+        f: impl Fn(usize, &mut [T]) + Sync,
+    ) {
+        assert!(chunk_size > 0, "Workers::chunks_mut needs a positive chunk size");
+        if buf.is_empty() {
+            return;
+        }
+        let n = buf.len();
+        let n_chunks = n.div_ceil(chunk_size);
+        let w = self.width().min(n_chunks);
+        if w <= 1 {
+            for (i, chunk) in buf.chunks_mut(chunk_size).enumerate() {
+                f(i, chunk);
+            }
+            return;
+        }
+        let per_worker = n_chunks.div_ceil(w);
+        let base = buf.as_mut_ptr() as usize;
+        self.broadcast(w, &|t: usize| {
+            let c0 = t * per_worker;
+            if c0 >= n_chunks {
+                return;
+            }
+            let lo = c0 * chunk_size;
+            let hi = ((c0 + per_worker) * chunk_size).min(n);
+            // SAFETY: workers receive disjoint contiguous element ranges
+            // (whole runs of `per_worker` chunks; only the last run may
+            // end short), each carved exactly once, and `broadcast`
+            // blocks until all workers finish — one live &mut per
+            // element inside the caller's borrow of `buf`.
+            let run = unsafe { std::slice::from_raw_parts_mut((base as *mut T).add(lo), hi - lo) };
+            for (k, chunk) in run.chunks_mut(chunk_size).enumerate() {
+                f(c0 + k, chunk);
+            }
+        });
+    }
+
+    /// Pool-backed drop-in for [`parallel_units_mut`]: worker `t` owns
+    /// lane `t`, a contiguous unit range, and the matching `out` slice.
+    /// Worker count is `lanes.len().min(n_units).min(self.width())`.
+    pub fn units_mut<L: Send, T: Send>(
+        &self,
+        lanes: &mut [L],
+        out: &mut [T],
+        unit_width: usize,
+        n_units: usize,
+        f: impl Fn(usize, &mut L, &mut [T]) + Sync,
+    ) {
+        assert!(!lanes.is_empty(), "Workers::units_mut needs at least one lane");
+        assert!(unit_width > 0);
+        assert_eq!(out.len(), n_units * unit_width);
+        let w = lanes.len().min(n_units.max(1)).min(self.width());
+        if w <= 1 {
+            let lane = &mut lanes[0];
+            for (u, unit_out) in out.chunks_mut(unit_width).enumerate() {
+                f(u, lane, unit_out);
+            }
+            return;
+        }
+        let chunk = n_units.div_ceil(w);
+        let lane_base = lanes.as_mut_ptr() as usize;
+        let out_base = out.as_mut_ptr() as usize;
+        self.broadcast(w, &|t: usize| {
+            let lo = t * chunk;
+            if lo >= n_units {
+                return;
+            }
+            let hi = (lo + chunk).min(n_units);
+            // SAFETY: worker t exclusively owns lane index t (distinct
+            // per worker, t < w <= lanes.len()) and the disjoint
+            // contiguous unit range [lo, hi) of `out`; `broadcast`
+            // blocks until all workers finish, so each lane/element has
+            // exactly one live &mut inside the caller's borrows.
+            let lane = unsafe { &mut *(lane_base as *mut L).add(t) };
+            // SAFETY: as above — unit ranges are disjoint across workers
+            // and in-bounds (`hi <= n_units`, `out.len() == n_units *
+            // unit_width`).
+            let seg = unsafe {
+                std::slice::from_raw_parts_mut(
+                    (out_base as *mut T).add(lo * unit_width),
+                    (hi - lo) * unit_width,
+                )
+            };
+            for (i, unit_out) in seg.chunks_mut(unit_width).enumerate() {
+                f(lo + i, lane, unit_out);
+            }
+        });
+    }
+
+    /// Two-level fan-out from one budget: partition `items` over up to
+    /// `width` active workers and grant each a *disjoint* sub-handle for
+    /// its own nested fan-out, such that active + granted == width.
+    ///
+    /// This replaces the old `share = threads / batch` arithmetic, which
+    /// could oversubscribe (`ceil(threads/batch) * batch > threads` when
+    /// the batch doesn't divide the count) and, pooled, would have needed
+    /// overlapping lane ranges. Spare workers are spread round-robin:
+    /// worker `t` gets `1 + spare/active + (t < spare%active)` total
+    /// width. With a single item (or width 1) the item inherits this
+    /// whole handle, so a batch of one keeps the full pool for its
+    /// per-sequence attend fan-out.
+    pub fn nested_for_each_mut<T: Send>(
+        &self,
+        items: &mut [T],
+        f: impl Fn(usize, &mut T, &Workers) + Sync,
+    ) {
+        let n = items.len();
+        if n == 0 {
+            return;
+        }
+        let width = self.width();
+        let active = width.min(n);
+        if active <= 1 {
+            for (i, item) in items.iter_mut().enumerate() {
+                f(i, item, self);
+            }
+            return;
+        }
+        let chunk = n.div_ceil(active);
+        let spare = width - active;
+        let per = spare / active;
+        let rem = spare % active;
+        let sub_for = |t: usize| -> Workers {
+            let extra = per + usize::from(t < rem);
+            match &self.pool {
+                Some(pool) => {
+                    // The broadcast below occupies pool lanes
+                    // [self.lo, self.lo + active - 1) (the caller is
+                    // worker 0); spare lanes follow, carved into
+                    // disjoint per-worker ranges.
+                    let start = self.lo + (active - 1) + t * per + t.min(rem);
+                    Workers {
+                        pool: Some(Arc::clone(pool)),
+                        lo: start,
+                        hi: start + extra,
+                        scoped: 1,
+                    }
+                }
+                None => Workers::scoped(1 + extra),
+            }
+        };
+        let base = items.as_mut_ptr() as usize;
+        self.broadcast(active, &|t: usize| {
+            let lo = t * chunk;
+            if lo >= n {
+                return;
+            }
+            let hi = ((t + 1) * chunk).min(n);
+            let sub = sub_for(t);
+            // SAFETY: workers receive disjoint contiguous index ranges
+            // of `items` (div_ceil chunking over distinct t), each
+            // carved exactly once, and `broadcast` blocks until all
+            // workers finish.
+            let part = unsafe { std::slice::from_raw_parts_mut((base as *mut T).add(lo), hi - lo) };
+            for (j, item) in part.iter_mut().enumerate() {
+                f(lo + j, item, &sub);
+            }
+        });
+    }
+
+    /// Measured per-call fan-out latency of this handle (best-of over
+    /// batches of empty full-width broadcasts), in nanoseconds. For a
+    /// pooled handle this is the mailbox handoff + completion wait; for
+    /// a scoped handle it is the thread spawn + join cost the pool
+    /// replaces.
+    pub fn dispatch_ns(&self) -> f64 {
+        let w = self.width();
+        // Warm: fault in stacks, wake parked workers into the spin loop.
+        for _ in 0..64 {
+            self.broadcast(w, &|_: usize| {});
+        }
+        let iters: u32 = if self.pool.is_some() || w <= 1 { 2048 } else { 256 };
+        let mut best = f64::INFINITY;
+        for _ in 0..4 {
+            let start = std::time::Instant::now();
+            for _ in 0..iters {
+                self.broadcast(w, &|_: usize| {});
+            }
+            best = best.min(start.elapsed().as_secs_f64());
+        }
+        best / f64::from(iters) * 1e9
+    }
+}
+
+/// Pool provenance stamped into every BENCH_*.json by
+/// `harness::bench_doc`: `(pool_size, measured dispatch ns)` for the
+/// size `resolve_threads(0)` resolves to. Probed once per process on a
+/// transient pool (created, warmed, measured, joined) so the stamp
+/// reflects steady-state handoff latency without holding threads alive.
+pub fn pool_provenance() -> (usize, f64) {
+    static PROBE: OnceLock<(usize, f64)> = OnceLock::new();
+    *PROBE.get_or_init(|| {
+        let size = resolve_threads(0);
+        let workers = Workers::pooled(size);
+        (size, workers.dispatch_ns())
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -276,5 +1028,233 @@ mod tests {
         parallel_for(0, 4, |_| panic!("should not run"));
         let out = parallel_map(1, 16, |i| i + 1);
         assert_eq!(out, vec![1]);
+    }
+
+    /// Run all four parallel shapes under one handle and return every
+    /// observable output (index sums for `parallel_for`, full element
+    /// vectors for the `&mut` shapes, unit-visit totals for
+    /// `units_mut`) so modes can be compared for exact equality.
+    type ShapeOutputs = (usize, Vec<usize>, Vec<usize>, usize, Vec<usize>);
+
+    fn run_all_shapes(w: &Workers, n: usize, chunk_size: usize) -> ShapeOutputs {
+        let sum = AtomicUsize::new(0);
+        w.parallel_for(n, |i| {
+            sum.fetch_add(i * 31 + 1, Ordering::Relaxed);
+        });
+        let mut items = vec![0usize; n];
+        w.for_each_mut(&mut items, |i, item| *item = i * 7 + 3);
+        let mut buf = vec![0usize; n];
+        w.chunks_mut(&mut buf, chunk_size, |ci, chunk| {
+            for (j, x) in chunk.iter_mut().enumerate() {
+                *x = ci * chunk_size + j + 1;
+            }
+        });
+        let mut lanes = vec![0usize; 3];
+        let mut out = vec![0usize; n * 2];
+        w.units_mut(&mut lanes, &mut out, 2, n, |u, lane, unit| {
+            *lane += 1;
+            for (k, x) in unit.iter_mut().enumerate() {
+                *x = u * 2 + k + 5;
+            }
+        });
+        (sum.into_inner(), items, buf, lanes.iter().sum(), out)
+    }
+
+    #[test]
+    fn pool_scoped_serial_parity_all_shapes() {
+        // Proptest: for random (n, chunk_size), the pooled handle (two
+        // sizes), the scoped handle (two widths), and the serial handle
+        // produce identical outputs on all four parallel shapes.
+        let pooled2 = Workers::pooled(2);
+        let pooled8 = Workers::pooled(8);
+        crate::util::prop::check(
+            "pool-vs-scoped-bit-parity",
+            60,
+            |r| (r.below(257), 1 + r.below(12)),
+            |&(n, chunk_size)| {
+                let reference = run_all_shapes(&Workers::serial(), n, chunk_size);
+                [&Workers::scoped(3), &Workers::scoped(8), &pooled2, &pooled8]
+                    .into_iter()
+                    .all(|w| run_all_shapes(w, n, chunk_size) == reference)
+            },
+        );
+    }
+
+    #[test]
+    fn pooled_dispatch_reuses_lanes_across_calls() {
+        // Many back-to-back broadcasts (epoch reuse) with occasional
+        // sleeps long enough to park the workers — both the spinning and
+        // the parked wakeup path must deliver every job.
+        let pooled = Workers::pooled(4);
+        for round in 0..40 {
+            let hits = AtomicUsize::new(0);
+            pooled.parallel_for(128, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 128, "round {round}");
+            if round % 10 == 9 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+        }
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let pooled = Workers::pooled(4);
+        let result = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pooled.parallel_for(100, |i| {
+                // Index 73 lands on a pooled lane (chunk 25 → worker 2),
+                // exercising the cross-thread panic path, not just the
+                // caller's own chunk.
+                assert_ne!(i, 73, "deliberate test panic");
+            });
+        }));
+        assert!(result.is_err(), "worker panic must propagate to the dispatching caller");
+        // All lanes were waited on before the rethrow, so the pool is
+        // idle and reusable — a panicked step must not wedge the engine.
+        let hits = AtomicUsize::new(0);
+        pooled.parallel_for(100, |_| {
+            hits.fetch_add(1, Ordering::Relaxed);
+        });
+        assert_eq!(hits.load(Ordering::Relaxed), 100);
+    }
+
+    #[test]
+    fn drop_joins_all_workers_across_restarts() {
+        // Three create/use/drop cycles in one process (engine restarts):
+        // every cycle must end with zero live workers for that pool.
+        for cycle in 0..3 {
+            let pooled = Workers::pooled(5);
+            let probe = pooled.live_probe().expect("pooled handle has a probe");
+            assert_eq!(probe.count(), 4, "cycle {cycle}: 5 workers = caller + 4 threads");
+            let hits = AtomicUsize::new(0);
+            pooled.parallel_for(64, |_| {
+                hits.fetch_add(1, Ordering::Relaxed);
+            });
+            assert_eq!(hits.load(Ordering::Relaxed), 64);
+            drop(pooled);
+            assert_eq!(probe.count(), 0, "cycle {cycle}: Drop must join every worker");
+        }
+    }
+
+    #[test]
+    fn degenerate_inputs_stay_serial_on_pooled_handles() {
+        let pooled = Workers::pooled(8);
+        let before = pooled.pool_dispatch_count();
+        pooled.parallel_for(0, |_| panic!("should not run"));
+        pooled.parallel_for(1, |i| assert_eq!(i, 0));
+        let mut one = vec![9usize];
+        pooled.for_each_mut(&mut one, |_, x| *x += 1);
+        assert_eq!(one, vec![10]);
+        let mut empty: Vec<usize> = Vec::new();
+        pooled.for_each_mut(&mut empty, |_, _| panic!("should not run"));
+        pooled.chunks_mut(&mut empty, 4, |_, _| panic!("should not run"));
+        let mut small = vec![0usize; 3];
+        pooled.chunks_mut(&mut small, 8, |_, c| c.fill(1)); // single chunk
+        assert_eq!(small, vec![1; 3]);
+        let mut lanes = vec![0usize; 4];
+        let mut out = vec![0usize; 6];
+        pooled.units_mut(&mut lanes, &mut out, 6, 1, |_, _, unit| unit.fill(2));
+        assert_eq!(out, vec![2; 6]);
+        assert_eq!(
+            pooled.pool_dispatch_count(),
+            before,
+            "empty/single-item inputs must not touch the pool lanes"
+        );
+    }
+
+    #[test]
+    fn pool_of_one_runs_inline() {
+        let pooled = Workers::pooled(1);
+        assert_eq!(pooled.width(), 1);
+        assert_eq!(pooled.live_probe().unwrap().count(), 0, "no OS threads for width 1");
+        let mut items = vec![0usize; 10];
+        pooled.for_each_mut(&mut items, |i, x| *x = i);
+        assert_eq!(items, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn nested_budget_never_exceeds_pool_width() {
+        // 8-wide pool over 3 items: active = 3, spare = 5 → sub-widths
+        // {3, 3, 2}. Total grants must equal the budget exactly and the
+        // observed worker concurrency (outer + all nested fan-outs) must
+        // never exceed the pool width — the oversubscription fix.
+        for w in [Workers::pooled(8), Workers::scoped(8)] {
+            let widths = Mutex::new(vec![0usize; 3]);
+            let current = AtomicUsize::new(0);
+            let high_water = AtomicUsize::new(0);
+            let mut items = vec![0usize; 3];
+            w.nested_for_each_mut(&mut items, |i, _item, sub| {
+                widths.lock().unwrap()[i] = sub.width();
+                sub.parallel_for(sub.width(), |_| {
+                    let live = current.fetch_add(1, Ordering::SeqCst) + 1;
+                    high_water.fetch_max(live, Ordering::SeqCst);
+                    // Hold the slot long enough for fan-outs to overlap.
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    current.fetch_sub(1, Ordering::SeqCst);
+                });
+            });
+            let mut widths = widths.into_inner().unwrap();
+            assert_eq!(widths.iter().sum::<usize>(), 8, "grants must spend the whole budget");
+            widths.sort_unstable();
+            assert_eq!(widths, vec![2, 3, 3]);
+            assert!(
+                high_water.load(Ordering::SeqCst) <= 8,
+                "nested fan-out exceeded the pool budget: {}",
+                high_water.load(Ordering::SeqCst)
+            );
+        }
+    }
+
+    #[test]
+    fn nested_single_item_inherits_full_handle() {
+        let pooled = Workers::pooled(6);
+        let mut items = vec![0usize; 1];
+        let seen_width = AtomicUsize::new(0);
+        pooled.nested_for_each_mut(&mut items, |_, _, sub| {
+            seen_width.store(sub.width(), Ordering::Relaxed);
+        });
+        assert_eq!(
+            seen_width.load(Ordering::Relaxed),
+            6,
+            "a batch of one keeps the whole pool for its intra-attend fan-out"
+        );
+    }
+
+    #[test]
+    fn nested_matches_flat_decomposition() {
+        // Item partition of the nested fan-out must be identical to
+        // for_each_mut (same div_ceil chunking over active workers).
+        for n in [1usize, 2, 3, 5, 8, 13] {
+            let pooled = Workers::pooled(4);
+            let mut nested_items = vec![0usize; n];
+            pooled.nested_for_each_mut(&mut nested_items, |i, item, _| *item = i * 11 + 2);
+            let mut flat_items = vec![0usize; n];
+            pooled.for_each_mut(&mut flat_items, |i, item| *item = i * 11 + 2);
+            assert_eq!(nested_items, flat_items, "n={n}");
+        }
+    }
+
+    #[test]
+    fn resolve_threads_auto_and_explicit() {
+        // Under SALS_THREADS the override wins for every request;
+        // otherwise 0 means one-per-CPU and positive values pass through.
+        match threads_override() {
+            Some(n) => {
+                assert_eq!(resolve_threads(0), n);
+                assert_eq!(resolve_threads(3), n);
+            }
+            None => {
+                assert_eq!(resolve_threads(0), num_cpus());
+                assert_eq!(resolve_threads(3), 3);
+            }
+        }
+    }
+
+    #[test]
+    fn dispatch_probe_returns_finite_latency() {
+        let (size, ns) = pool_provenance();
+        assert!(size >= 1);
+        assert!(ns.is_finite() && ns >= 0.0);
     }
 }

@@ -13,6 +13,7 @@ use sals::tensor::ops::{softmax, sparse_attend, SparseAttendScratch};
 use sals::tensor::{top_k_indices, Mat};
 use sals::util::prop::check;
 use sals::util::rng::Rng;
+use sals::util::threadpool::Workers;
 use std::sync::Arc;
 
 #[test]
@@ -489,9 +490,9 @@ fn prop_block_sparse_prefill_is_thread_invariant() {
                 ));
                 i += n;
             }
-            let run = |threads: usize| {
+            let run = |workers: &Workers| {
                 let mut b = SalsAttention::new(shape, cfg.clone(), proj.clone());
-                b.set_threads(threads);
+                b.set_workers(workers);
                 let mut outs = Vec::new();
                 for (ks, vs, qs) in &chunks {
                     let n = ks.len() / kvd;
@@ -501,8 +502,10 @@ fn prop_block_sparse_prefill_is_thread_invariant() {
                 }
                 outs
             };
-            let base = run(1);
-            [3usize, 8].iter().all(|&t| run(t) == base)
+            let base = run(&Workers::serial());
+            [Workers::scoped(3), Workers::scoped(8), Workers::pooled(3), Workers::pooled(8)]
+                .iter()
+                .all(|w| run(w) == base)
         },
     );
 }
