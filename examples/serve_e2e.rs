@@ -1,20 +1,135 @@
-//! END-TO-END driver: the full three-layer stack on a real serving workload.
+//! END-TO-END driver: the full serving stack on a real request workload.
 //!
-//! L1 (Pallas kernels, interpret) → lowered inside L2 (JAX decode-step
-//! graphs) → AOT HLO artifacts → loaded here by the L3 Rust coordinator,
-//! which routes a Poisson request trace across engine replicas and serves
-//! batched greedy decoding with both the SALS and the dense (GPT-fast
-//! analog) executables, reporting latency + throughput + KV residency.
+//! Part 1 — the replica cluster (pure Rust, no artifacts needed): a
+//! `Coordinator` owns 4 `Engine` replicas on worker threads, prices every
+//! dispatch in projected `SequenceFootprint` bytes at the decode horizon,
+//! bin-packs admissions, re-routes preemptions, and places warm prompts on
+//! the replica that published their prefix. A Poisson trace is submitted
+//! open-loop at its arrival offsets — the replica workers decode in the
+//! background while the driver is still sleeping between arrivals.
+//!
+//! Part 2 — the artifact path: L1 (Pallas kernels, interpret) → lowered
+//! inside L2 (JAX decode-step graphs) → AOT HLO artifacts → loaded by the
+//! L3 runtime and served per-variant (SALS vs dense), reporting latency,
+//! throughput, and KV residency.
 //!
 //! Run after `make artifacts`:  cargo run --release --example serve_e2e
 //! Results recorded in EXPERIMENTS.md §E2E.
 
-use sals::coordinator::{Policy, Router, TraceGen, TraceSpec};
+use sals::coordinator::{
+    ClusterConfig, Coordinator, EngineConfig, Policy, Router, TraceGen, TraceSpec,
+};
+use sals::model::{
+    calibrate, fit_calibration, make_factory, Method, Model, ModelConfig, SparsityParams, Weights,
+};
 use sals::runtime::{ArtifactRuntime, XlaModel, XlaVariant};
+use sals::util::rng::Rng;
 use sals::util::stats::Summary;
+use std::sync::Arc;
 use std::time::Instant;
 
-fn serve(variant: XlaVariant, label: &str) -> anyhow::Result<()> {
+/// Part 1: serve a Poisson trace through the 4-replica cluster on the CPU
+/// SALS backend. Everything here is the production admission path —
+/// footprint pricing, bin-packing, preemption re-route, drift ledger.
+fn serve_cluster() -> anyhow::Result<()> {
+    let cfg = ModelConfig {
+        vocab: 512,
+        d_model: 256,
+        n_layers: 6,
+        n_heads: 8,
+        n_kv_heads: 8,
+        head_dim: 32,
+        d_ff: 512,
+        max_seq: 256,
+        rope_base: 10_000.0,
+        dense_layers: vec![0],
+        rms_eps: 1e-5,
+    };
+    let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 88)));
+
+    // Calibrate the latent projections once; every replica's backends are
+    // built from the same fitted parameters.
+    let mut rng = Rng::new(4242);
+    let streams: Vec<Vec<usize>> =
+        (0..2).map(|_| (0..128).map(|_| rng.below(cfg.vocab)).collect()).collect();
+    let fitted = Arc::new(fit_calibration(&cfg, &calibrate(&model, &streams)));
+    let sp = SparsityParams::scaled(cfg.max_seq);
+
+    let spec = TraceSpec {
+        n_requests: 24,
+        rate: 8.0,
+        prompt_min: 16,
+        prompt_max: 128,
+        new_tokens_min: 8,
+        new_tokens_max: 32,
+        vocab: cfg.vocab,
+        seed: 99,
+    };
+    let trace = TraceGen::generate(&spec);
+
+    let mut cluster = Coordinator::new(
+        model,
+        make_factory(Method::Sals25, &fitted, sp),
+        ClusterConfig {
+            replicas: 4,
+            engine: EngineConfig {
+                max_batch: 8,
+                prefill_chunk: 32,
+                page_bytes: 4096,
+                pool_budget: 8 << 20,
+                threads: 1,
+                prefix_reuse: true,
+                eject_preempted: false, // forced on by the coordinator
+            },
+            bin_pack_window: 16,
+        },
+    );
+
+    println!("--- cluster: 4 SALS replicas, footprint routing, open-loop trace ---");
+    let t0 = Instant::now();
+    for tr in &trace {
+        // Open-loop: hold each request until its arrival offset; replicas
+        // keep decoding earlier admissions in the background meanwhile.
+        let until = std::time::Duration::from_secs_f64(tr.at_s);
+        if let Some(wait) = until.checked_sub(t0.elapsed()) {
+            std::thread::sleep(wait);
+        }
+        cluster.submit(tr.request.clone())?;
+    }
+    let responses = cluster.run_to_completion();
+    let wall = t0.elapsed().as_secs_f64();
+
+    let cm = cluster.metrics();
+    let agg = cm.aggregate();
+    let ttft = agg.ttft_summary();
+    let total_new: usize = responses.iter().map(|r| r.tokens.len()).sum();
+    let (drift_lo, drift_hi) = cm.drift_bounds();
+    println!("requests: {}   new tokens: {total_new}   wall: {wall:.2}s", responses.len());
+    println!(
+        "throughput: {:.1} tok/s   TTFT p50 {:.0}ms p99 {:.0}ms",
+        total_new as f64 / wall,
+        ttft.p50 * 1e3,
+        ttft.p99 * 1e3
+    );
+    println!(
+        "routing: {} dispatched, {} fcfs bypasses, {} prefix-hint hits, {} preemption re-routes",
+        cm.dispatched, cm.fcfs_bypasses, cm.prefix_hint_hits, cm.preemption_reroutes
+    );
+    println!(
+        "footprint drift (actual/projected): mean {:.3} in [{:.3}, {:.3}] over {} requests",
+        cm.mean_drift(),
+        drift_lo,
+        drift_hi,
+        cm.drift.len()
+    );
+    Ok(())
+}
+
+/// Part 2: the artifact path — compiled HLO executables served
+/// back-to-back per replica slot (each slot = one cache set over the
+/// shared executable; no engine, so routing uses the bare token-count
+/// `Router` that predates footprint pricing).
+fn serve_artifacts(variant: XlaVariant, label: &str) -> anyhow::Result<()> {
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     let mut rt = ArtifactRuntime::new(&dir)?;
     let probe = XlaModel::new(&mut rt, &dir, variant)?;
@@ -22,7 +137,6 @@ fn serve(variant: XlaVariant, label: &str) -> anyhow::Result<()> {
     println!("\n--- {label}: platform={} vocab={} L={} max_seq={} ---",
         rt.platform(), meta.vocab, meta.n_layers, meta.max_seq);
 
-    // Request trace: Poisson arrivals, mixed prompt lengths.
     let spec = TraceSpec {
         n_requests: 12,
         rate: 8.0,
@@ -35,8 +149,6 @@ fn serve(variant: XlaVariant, label: &str) -> anyhow::Result<()> {
     };
     let trace = TraceGen::generate(&spec);
 
-    // Router spreads sequences over 2 replica slots (each slot = one cache
-    // set over the shared compiled executable).
     let mut router = Router::new(2, Policy::LeastLoaded);
     let mut replicas: Vec<XlaModel> = (0..2)
         .map(|_| XlaModel::new(&mut rt, &dir, variant).unwrap())
@@ -49,7 +161,6 @@ fn serve(variant: XlaVariant, label: &str) -> anyhow::Result<()> {
     for tr in &trace {
         let r = router.route(&tr.request, None);
         let m = &mut replicas[r];
-        // A replica slot serves sequences back-to-back (reset between).
         if m.pos + tr.request.prompt.len() + tr.request.params.max_new_tokens >= m.meta.max_seq {
             m.reset();
         }
@@ -72,13 +183,15 @@ fn serve(variant: XlaVariant, label: &str) -> anyhow::Result<()> {
 }
 
 fn main() -> anyhow::Result<()> {
+    serve_cluster()?;
+
     let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
     if !dir.join("meta.txt").exists() {
-        eprintln!("artifacts/ missing — run `make artifacts` first");
-        std::process::exit(2);
+        eprintln!("\nartifacts/ missing — skipping the XLA variants (run `make artifacts`)");
+        return Ok(());
     }
-    serve(XlaVariant::Dense, "dense decode (GPT-fast analog)")?;
-    serve(XlaVariant::Sals, "SALS decode (latent cache + sparse attention)")?;
+    serve_artifacts(XlaVariant::Dense, "dense decode (GPT-fast analog)")?;
+    serve_artifacts(XlaVariant::Sals, "SALS decode (latent cache + sparse attention)")?;
     println!("\nNOTE: PJRT-CPU with interpret-mode Pallas is a correctness platform; the");
     println!("architecture (python never on the request path) is what this example proves.");
     Ok(())

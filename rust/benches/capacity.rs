@@ -71,6 +71,7 @@ fn main() {
                 pool_budget,
                 threads: 0,
                 prefix_reuse: false,
+                eject_preempted: false,
             },
         );
         let mut rng = Rng::new(777);

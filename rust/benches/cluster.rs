@@ -1,0 +1,237 @@
+//! Replica cluster vs one fat engine on the SAME total page budget: the
+//! serving win of routing by projected footprint instead of queueing
+//! strictly FCFS behind one pool.
+//!
+//! The workload is engineered for head-of-line blocking: a stream of
+//! short chats with periodic heavy requests whose decode-horizon
+//! footprint nearly fills one replica's pool. The fat single engine
+//! admits FCFS — when the front of its queue is a heavy that does not
+//! fit, every short behind it waits while the pool drains, collapsing
+//! concurrency. The 4-replica cluster prices each request with
+//! [`SequenceFootprint`] bytes at the horizon, bin-packs admissions
+//! within a window (shorts overtake a heavy that fits nowhere yet), and
+//! spreads load across replicas.
+//!
+//! Acceptance (machine-checked, exit non-zero on failure):
+//!   * the cluster achieves strictly higher decode tok/s than the fat
+//!     engine on the same total pool + thread budget,
+//!   * strictly lower p99 TTFT (the head-of-line tail),
+//!   * per-request token streams bit-identical between the two runs.
+//!
+//! Emits `BENCH_cluster.json` with p50/p99 TTFT, tok/s, preemption
+//! re-routes, and projected-vs-actual drift. `SALS_BENCH_QUICK=1`
+//! shortens the run.
+
+use sals::attention::FullAttention;
+use sals::coordinator::{
+    ClusterConfig, Coordinator, Engine, EngineConfig, GenParams, Request,
+};
+use sals::harness::Table;
+use sals::model::{BackendFactory, Model, ModelConfig, SequenceFootprint, Weights};
+use sals::util::json::Json;
+use sals::util::rng::Rng;
+use sals::util::threadpool::num_cpus;
+use std::sync::Arc;
+use std::time::Instant;
+
+const REPLICAS: usize = 4;
+
+fn factory(cfg: &ModelConfig) -> Box<BackendFactory> {
+    let shape = cfg.attn_shape();
+    Box::new(move |_| Box::new(FullAttention::new(shape)) as _)
+}
+
+fn main() {
+    let quick = std::env::var("SALS_BENCH_QUICK").is_ok();
+    let chunk = if quick { 16 } else { 32 };
+    let (heavy_prompt, heavy_new) = if quick { (96, 24) } else { (192, 48) };
+    let (short_min, short_max, short_new) = if quick { (16, 32, 8) } else { (24, 48, 8) };
+    let n_requests = if quick { 24 } else { 48 };
+    // Every 6th request is heavy — frequent enough that the fat engine's
+    // FCFS queue repeatedly wedges behind one, sparse enough that the
+    // cluster can park heavies on their own replicas while shorts flow.
+    let heavy_every = 6;
+    let max_seq = heavy_prompt + heavy_new + 8;
+
+    let cfg = ModelConfig {
+        vocab: 512,
+        d_model: 256,
+        n_layers: 6,
+        n_heads: 8,
+        n_kv_heads: 8,
+        head_dim: 32,
+        d_ff: 512,
+        max_seq,
+        rope_base: 10_000.0,
+        dense_layers: vec![0],
+        rms_eps: 1e-5,
+    };
+    let weights = Arc::new(Weights::random(&cfg, 88));
+
+    // Per-replica pool: one heavy horizon + ~6% slack, so a heavy consumes
+    // a replica almost whole. The fat engine gets exactly REPLICAS× that
+    // pool, REPLICAS× the batch cap, and the same total thread budget —
+    // identical aggregate resources, different admission structure.
+    let fp = SequenceFootprint::of(&cfg, &factory(&cfg));
+    let heavy_bytes = fp.bytes_at(heavy_prompt + heavy_new);
+    let replica_budget = heavy_bytes + heavy_bytes / 16;
+    let replica_threads = (num_cpus() / REPLICAS).max(1);
+
+    let mut rng = Rng::new(20260808);
+    let trace: Vec<(Vec<usize>, usize)> = (0..n_requests)
+        .map(|i| {
+            let heavy = i % heavy_every == 1;
+            let plen = if heavy { heavy_prompt } else { rng.range(short_min, short_max + 1) };
+            let prompt = (0..plen).map(|_| rng.below(cfg.vocab)).collect();
+            (prompt, if heavy { heavy_new } else { short_new })
+        })
+        .collect();
+
+    fn submit_all(trace: &[(Vec<usize>, usize)], f: &mut dyn FnMut(Request)) {
+        for (i, (prompt, max_new)) in trace.iter().enumerate() {
+            f(Request::new(
+                i as u64,
+                prompt.clone(),
+                GenParams { max_new_tokens: *max_new, stop_token: None },
+            ));
+        }
+    }
+
+    // --- One fat engine: all pages, all threads, strict FCFS admission.
+    let mut single = Engine::new(
+        Model::new(cfg.clone(), Arc::clone(&weights)),
+        factory(&cfg),
+        EngineConfig {
+            max_batch: 8 * REPLICAS,
+            prefill_chunk: chunk,
+            page_bytes: 4096,
+            pool_budget: REPLICAS * replica_budget,
+            threads: 0, // all cores
+            prefix_reuse: false,
+            eject_preempted: false,
+        },
+    );
+    let t0 = Instant::now();
+    submit_all(&trace, &mut |r| single.submit(r));
+    let mut single_resp = single.run_to_completion();
+    let single_wall = t0.elapsed().as_secs_f64();
+    let single_m = single.metrics.clone();
+
+    // --- The cluster: same totals split four ways, footprint routing.
+    let mut cluster = Coordinator::new(
+        Model::new(cfg.clone(), Arc::clone(&weights)),
+        factory(&cfg),
+        ClusterConfig {
+            replicas: REPLICAS,
+            engine: EngineConfig {
+                max_batch: 8,
+                prefill_chunk: chunk,
+                page_bytes: 4096,
+                pool_budget: replica_budget,
+                threads: replica_threads,
+                prefix_reuse: false,
+                eject_preempted: false, // forced on by the coordinator
+            },
+            bin_pack_window: 16,
+        },
+    );
+    let t0 = Instant::now();
+    submit_all(&trace, &mut |r| cluster.submit(r).expect("trace ids are unique"));
+    let mut cluster_resp = cluster.run_to_completion();
+    let cluster_wall = t0.elapsed().as_secs_f64();
+    let cm = cluster.metrics();
+    let agg = cm.aggregate();
+
+    assert_eq!(single_resp.len(), n_requests, "fat engine lost requests");
+    assert_eq!(cluster_resp.len(), n_requests, "cluster lost requests");
+    single_resp.sort_by_key(|r| r.id);
+    cluster_resp.sort_by_key(|r| r.id);
+    let outputs_match = single_resp
+        .iter()
+        .zip(cluster_resp.iter())
+        .all(|(a, b)| a.id == b.id && a.tokens == b.tokens);
+
+    let tokens_total: usize = single_resp.iter().map(|r| r.tokens.len()).sum();
+    let single_tps = tokens_total as f64 / single_wall;
+    let cluster_tps = tokens_total as f64 / cluster_wall;
+    let single_ttft = single_m.ttft_summary();
+    let cluster_ttft = agg.ttft_summary();
+    let (drift_min, drift_max) = cm.drift_bounds();
+
+    let ok = cluster_tps > single_tps && cluster_ttft.p99 < single_ttft.p99 && outputs_match;
+
+    let mut table = Table::new(
+        "Replica cluster vs one fat engine (same total pool, batch cap, threads)",
+        &["Config", "tok/s", "TTFT p50 ms", "TTFT p99 ms", "Preempt", "Re-routes", "Bypasses"],
+    );
+    table.row(vec![
+        "single-fat".to_string(),
+        format!("{single_tps:.1}"),
+        format!("{:.1}", single_ttft.p50 * 1e3),
+        format!("{:.1}", single_ttft.p99 * 1e3),
+        single_m.preemptions.to_string(),
+        "-".to_string(),
+        "-".to_string(),
+    ]);
+    table.row(vec![
+        format!("cluster-{REPLICAS}x"),
+        format!("{cluster_tps:.1}"),
+        format!("{:.1}", cluster_ttft.p50 * 1e3),
+        format!("{:.1}", cluster_ttft.p99 * 1e3),
+        agg.preemptions.to_string(),
+        cm.preemption_reroutes.to_string(),
+        cm.fcfs_bypasses.to_string(),
+    ]);
+    table.print();
+    println!(
+        "tok/s {cluster_tps:.1} vs {single_tps:.1} (must be >), p99 TTFT {:.1}ms vs {:.1}ms \
+         (must be <), outputs_match={outputs_match}, drift mean {:.3} [{drift_min:.3}, \
+         {drift_max:.3}] -> {}",
+        cluster_ttft.p99 * 1e3,
+        single_ttft.p99 * 1e3,
+        cm.mean_drift(),
+        if ok { "ok" } else { "FAIL" }
+    );
+
+    let doc = sals::harness::bench_doc("cluster")
+        .field("config", "d_model=256 n_layers=6 heads=8 head_dim=32 dense_layers=[0]")
+        .field("n_requests", n_requests)
+        .field("heavy_every", heavy_every)
+        .field("heavy_prompt", heavy_prompt)
+        .field("heavy_new", heavy_new)
+        .field("short_new", short_new)
+        .field("prefill_chunk", chunk)
+        .field("replicas", REPLICAS)
+        .field("replica_pool_bytes", replica_budget)
+        .field("single_pool_bytes", REPLICAS * replica_budget)
+        .field("replica_threads", replica_threads)
+        .field(
+            "single",
+            Json::obj()
+                .field("tokens_per_second", single_tps)
+                .field("wall_s", single_wall)
+                .field("ttft_p50_s", single_ttft.p50)
+                .field("ttft_p99_s", single_ttft.p99)
+                .field("preemptions", single_m.preemptions)
+                .field("peak_running", single_m.peak_running),
+        )
+        .field(
+            "cluster",
+            Json::obj()
+                .field("tokens_per_second", cluster_tps)
+                .field("wall_s", cluster_wall)
+                .field("ttft_p50_s", cluster_ttft.p50)
+                .field("ttft_p99_s", cluster_ttft.p99)
+                .field("coordinator", cm.to_json()),
+        )
+        .field("speedup", cluster_tps / single_tps)
+        .field("p99_ttft_ratio", cluster_ttft.p99 / single_ttft.p99)
+        .field("outputs_match", outputs_match)
+        .field("accepted", ok);
+    let path = sals::harness::bench_artifact_path("BENCH_cluster.json");
+    std::fs::write(&path, doc.to_string()).expect("write BENCH_cluster.json");
+    println!("wrote {}", path.display());
+    if !ok {
+        std::process::exit(1);
+    }
+}

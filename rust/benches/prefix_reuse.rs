@@ -95,6 +95,7 @@ fn main() {
                     pool_budget,
                     threads: 0,
                     prefix_reuse: reuse,
+                    eject_preempted: false,
                 },
             );
             // Prime: publish the shared prefix once (models a system

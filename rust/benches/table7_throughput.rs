@@ -25,6 +25,7 @@ fn build_engine(cfg: &ModelConfig, method: Method, fitted: &Arc<sals::model::Fit
             pool_budget: 1 << 32,
             threads: 0,
             prefix_reuse: false,
+            eject_preempted: false,
         },
     )
 }

@@ -1,0 +1,709 @@
+//! The serving cluster: a [`Coordinator`] that owns N [`Engine`] replicas
+//! on long-lived worker threads and fronts them with one admission queue.
+//!
+//! Ownership model — three layers, each with a single owner:
+//!
+//! * **Model weights** are shared: every replica's [`Model`] holds the
+//!   same `Arc<Weights>`, so N replicas cost N KV pools + N scratch sets,
+//!   not N weight copies. The backend factory is `Arc`-shared the same
+//!   way.
+//! * **Each engine** is owned by exactly one worker thread (built inside
+//!   the spawn, never crossing threads — see [`super::replica`]), with its
+//!   own [`crate::kvcache::PagePool`] and prefix cache. Pools are
+//!   deliberately NOT shared: page accounting stays single-threaded and a
+//!   replica's admission decisions never contend on a lock.
+//! * **The coordinator** (caller's thread) owns the cluster queue, the
+//!   [`Router`] load/affinity ledger, the published-prefix placement
+//!   index, and the in-flight table. All routing state mutates on one
+//!   thread; replicas talk back over a single event channel.
+//!
+//! Routing: placement is a three-step hierarchy, priced in projected
+//! [`crate::model::SequenceFootprint`] bytes at the decode horizon (the
+//! cluster always installs a footprint — the router's token-count
+//! fallback is retired here, because byte pricing is what lets a
+//! compressed-cache replica legitimately accept more work):
+//!
+//! 1. **Session affinity**: a request tagged with a session goes to the
+//!    replica its session is pinned to (warm cache), *waiting* for
+//!    headroom there rather than migrating cold.
+//! 2. **Prefix placement**: an unpinned request whose prompt starts with
+//!    a prefix some replica has published goes to that replica, longest
+//!    match first — adoption skips the shared prefill entirely, which is
+//!    worth more than perfect load spread.
+//! 3. **Least loaded**: otherwise, the lightest ledger wins.
+//!
+//! Admission is *bin-packing over a window*, not strict FCFS: if the
+//! queue's front request fits no replica right now, up to
+//! `bin_pack_window` younger requests are allowed to overtake it (a
+//! short request should not wait behind a giant one that needs a whole
+//! pool to drain first). The front request can never starve: every
+//! completion shrinks some ledger, and an idle replica (load 0) accepts
+//! anything — so the moment its pinned/placed replica drains, the front
+//! dispatches.
+//!
+//! Preemption re-routing: a replica that ejects a preempted request
+//! ([`super::engine::EngineConfig::eject_preempted`]) hands it back as an
+//! event; the coordinator drains the origin's ledger
+//! ([`Router::note_preemption`]), re-routes to the least-loaded replica
+//! (ignoring the old placement — the cache there is already dropped), and
+//! re-pins the session to wherever it lands. Completions drain the exact
+//! projected bytes charged at dispatch and record a
+//! [`DriftRecord`] (projected vs the response's actual peak KV bytes) —
+//! the estimator-quality signal the cluster reports per request.
+
+use super::engine::{Engine, EngineConfig};
+use super::metrics::{ClusterMetrics, DriftRecord};
+use super::replica::{run, Command, Event};
+use super::request::{Request, Response};
+use super::router::{Policy, ReplicaId, Router};
+use crate::kvcache::{prefix_hashes, SeqId};
+use crate::model::{BackendFactory, Model, SequenceFootprint};
+use crate::util::error::{Error, Result};
+use std::collections::{HashMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+/// Cluster configuration: replica count + the per-replica engine config.
+#[derive(Clone)]
+pub struct ClusterConfig {
+    /// Number of engine replicas (worker threads).
+    pub replicas: usize,
+    /// Per-replica engine configuration. `pool_budget` is PER REPLICA:
+    /// a 4-replica cluster holds 4× these pages in total.
+    /// `eject_preempted` is forced on — the coordinator owns re-routing.
+    pub engine: EngineConfig,
+    /// How many queued requests may overtake a front request that
+    /// currently fits no replica (1 = strict FCFS).
+    pub bin_pack_window: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> ClusterConfig {
+        ClusterConfig { replicas: 2, engine: EngineConfig::default(), bin_pack_window: 8 }
+    }
+}
+
+struct ReplicaHandle {
+    commands: Sender<Command>,
+    join: Option<JoinHandle<()>>,
+}
+
+/// Coordinator-side record of a dispatched request.
+struct InFlight {
+    replica: ReplicaId,
+    /// Exact bytes charged to the replica's ledger at dispatch — drained
+    /// verbatim on completion (see [`Router::drain`]) and reported as the
+    /// projected side of the drift record. Constant across preemption
+    /// re-routes (the horizon does not change).
+    projected: usize,
+}
+
+/// The cluster front: owns the queue, the routing ledger, the prefix
+/// placement index, and N replica worker threads.
+pub struct Coordinator {
+    cfg: ClusterConfig,
+    router: Router,
+    replicas: Vec<ReplicaHandle>,
+    events: Receiver<(ReplicaId, Event)>,
+    queue: VecDeque<Request>,
+    in_flight: HashMap<SeqId, InFlight>,
+    /// Published-prefix placement index: prefix hash (as computed by
+    /// [`crate::kvcache::prefix_hash`]) -> (replica that published it,
+    /// prefix length in tokens). First publisher wins; retirement events
+    /// from the owning replica remove entries. The index is a placement
+    /// HINT — staleness costs a cold prefill, never correctness.
+    prefix_index: HashMap<u64, (ReplicaId, usize)>,
+    /// Per-replica pool capacity in bytes (whole pages) — the headroom
+    /// ceiling for projected-load placement.
+    capacity: usize,
+    /// Chunk granularity prefixes are published at (the engines'
+    /// `prefill_chunk`) — what the placement lookup hashes prompts with.
+    chunk: usize,
+    done: Vec<Response>,
+    dispatched: usize,
+    preemption_reroutes: usize,
+    prefix_hint_hits: usize,
+    fcfs_bypasses: usize,
+    duplicates_rejected: usize,
+    drift: Vec<DriftRecord>,
+}
+
+impl Coordinator {
+    /// Build the cluster: derive the routing footprint from the factory,
+    /// spawn one worker thread per replica (each constructs its own
+    /// engine from a shared-weights model clone), and wire the channels.
+    pub fn new(model: Model, factory: Box<BackendFactory>, cfg: ClusterConfig) -> Coordinator {
+        assert!(cfg.replicas > 0, "cluster needs at least one replica");
+        assert!(cfg.engine.page_bytes > 0);
+        let factory: Arc<BackendFactory> = Arc::from(factory);
+        let footprint = SequenceFootprint::of(&model.cfg, &*factory);
+        let router = Router::with_footprint(cfg.replicas, Policy::LeastLoaded, footprint);
+        let capacity = (cfg.engine.pool_budget / cfg.engine.page_bytes) * cfg.engine.page_bytes;
+        let chunk = cfg.engine.prefill_chunk.max(1);
+        let (event_tx, events) = channel();
+        let mut replicas = Vec::with_capacity(cfg.replicas);
+        for r in 0..cfg.replicas {
+            let (command_tx, command_rx) = channel();
+            let events = event_tx.clone();
+            let fac = Arc::clone(&factory);
+            let replica_factory: Box<BackendFactory> = Box::new(move |layer| fac(layer));
+            let replica_model =
+                Model { cfg: model.cfg.clone(), weights: Arc::clone(&model.weights) };
+            let mut engine_cfg = cfg.engine.clone();
+            engine_cfg.eject_preempted = true;
+            let join = std::thread::Builder::new()
+                .name(format!("sals-replica-{r}"))
+                .spawn(move || {
+                    let engine = Engine::new(replica_model, replica_factory, engine_cfg);
+                    run(r, engine, command_rx, events);
+                })
+                .expect("spawn replica worker");
+            replicas.push(ReplicaHandle { commands: command_tx, join: Some(join) });
+        }
+        Coordinator {
+            cfg,
+            router,
+            replicas,
+            events,
+            queue: VecDeque::new(),
+            in_flight: HashMap::new(),
+            prefix_index: HashMap::new(),
+            capacity,
+            chunk,
+            done: Vec::new(),
+            dispatched: 0,
+            preemption_reroutes: 0,
+            prefix_hint_hits: 0,
+            fcfs_bypasses: 0,
+            duplicates_rejected: 0,
+            drift: Vec::new(),
+        }
+    }
+
+    pub fn replicas(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// Requests accepted but not yet completed (queued + dispatched).
+    pub fn outstanding(&self) -> usize {
+        self.queue.len() + self.in_flight.len()
+    }
+
+    /// Current projected-bytes ledger per replica.
+    pub fn loads(&self) -> Vec<usize> {
+        (0..self.replicas.len()).map(|r| self.router.load_of(r)).collect()
+    }
+
+    /// Replica a session is currently pinned to, if any.
+    pub fn session_replica(&self, session: SeqId) -> Option<ReplicaId> {
+        self.router.session_replica(session)
+    }
+
+    /// Drop a session's replica affinity (conversation ended). The next
+    /// turn is placed fresh — by prefix index or load.
+    pub fn end_session(&mut self, session: SeqId) {
+        self.router.end_session(session);
+    }
+
+    /// Accept a request into the cluster queue. Rejects an id already
+    /// queued or in flight anywhere in the cluster — ids key the page-pool
+    /// ledgers, and the per-engine duplicate assert cannot see across
+    /// replicas, so the cluster must enforce uniqueness at its own door.
+    pub fn submit(&mut self, mut req: Request) -> Result<()> {
+        if self.in_flight.contains_key(&req.id) || self.queue.iter().any(|q| q.id == req.id) {
+            self.duplicates_rejected += 1;
+            return Err(Error::Coordinator(format!(
+                "duplicate in-flight request id {} rejected at cluster admission",
+                req.id
+            )));
+        }
+        req.arrival.get_or_insert_with(Instant::now);
+        self.queue.push_back(req);
+        self.pump();
+        Ok(())
+    }
+
+    /// Headroom rule: an idle replica accepts anything (so oversized
+    /// requests cannot starve — the engine's own best-effort admission
+    /// governs them from there); a busy one must fit the projected bytes
+    /// under its pool capacity.
+    fn has_headroom(&self, r: ReplicaId, cost: usize) -> bool {
+        let load = self.router.load_of(r);
+        load == 0 || load + cost <= self.capacity
+    }
+
+    /// Pick a replica for a queued request, or None if nothing can take
+    /// it right now. Returns (replica, placed_by_prefix_hint).
+    fn place(&self, req: &Request) -> Option<(ReplicaId, bool)> {
+        let cost = self.router.dispatch_cost(req);
+        if let Some(sid) = req.session {
+            if let Some(r) = self.router.session_replica(sid) {
+                // Pinned sessions WAIT for their replica rather than
+                // migrating: the whole point of affinity is the warm
+                // prefix cache sitting on that replica.
+                return if self.has_headroom(r, cost) { Some((r, false)) } else { None };
+            }
+        }
+        // Longest published prefix wins; a shorter match on a replica
+        // with headroom still beats a cold least-loaded placement.
+        for &(_, hash) in prefix_hashes(&req.prompt, self.chunk).iter().rev() {
+            if let Some(&(r, _)) = self.prefix_index.get(&hash) {
+                if self.has_headroom(r, cost) {
+                    return Some((r, true));
+                }
+            }
+        }
+        let r = self.router.least_loaded();
+        if self.has_headroom(r, cost) {
+            Some((r, false))
+        } else {
+            None
+        }
+    }
+
+    /// Dispatch every queued request that fits somewhere, scanning up to
+    /// `bin_pack_window` deep past a front request that fits nowhere.
+    fn pump(&mut self) {
+        loop {
+            let window = self.cfg.bin_pack_window.max(1).min(self.queue.len());
+            let mut chosen = None;
+            for qi in 0..window {
+                if let Some((r, hint)) = self.place(&self.queue[qi]) {
+                    chosen = Some((qi, r, hint));
+                    break;
+                }
+            }
+            let Some((qi, r, hint)) = chosen else { break };
+            if qi > 0 {
+                self.fcfs_bypasses += 1;
+            }
+            if hint {
+                self.prefix_hint_hits += 1;
+            }
+            let req = self.queue.remove(qi).expect("scanned index in bounds");
+            let projected = self.router.dispatch_cost(&req);
+            self.router.assign(r, &req, req.session);
+            self.in_flight.insert(req.id, InFlight { replica: r, projected });
+            self.dispatched += 1;
+            self.replicas[r]
+                .commands
+                .send(Command::Submit(req))
+                .expect("replica worker hung up");
+        }
+    }
+
+    fn handle_event(&mut self, origin: ReplicaId, event: Event) {
+        match event {
+            Event::Done(resp) => {
+                let fl = self
+                    .in_flight
+                    .remove(&resp.id)
+                    .expect("completion for a request the cluster never dispatched");
+                debug_assert_eq!(fl.replica, origin, "completion from the wrong replica");
+                self.router.drain(fl.replica, fl.projected);
+                self.drift.push(DriftRecord {
+                    id: resp.id,
+                    projected_bytes: fl.projected,
+                    actual_bytes: resp.peak_kv_bytes,
+                });
+                self.done.push(resp);
+            }
+            Event::Preempted(req) => {
+                let fl = self
+                    .in_flight
+                    .get_mut(&req.id)
+                    .expect("preemption for a request the cluster never dispatched");
+                debug_assert_eq!(fl.replica, origin, "preemption from the wrong replica");
+                // Drain the origin's ledger, then re-route by CURRENT
+                // load — the origin's cache for this request is already
+                // dropped, so the old placement has no residual value and
+                // affinity deliberately does not apply. assign() re-pins
+                // the session to wherever the request lands, so the next
+                // turn follows the cache that will now be warm.
+                self.router.note_preemption(origin, &req);
+                let target = self.router.least_loaded();
+                self.router.assign(target, &req, req.session);
+                fl.replica = target;
+                self.preemption_reroutes += 1;
+                self.replicas[target]
+                    .commands
+                    .send(Command::Submit(req))
+                    .expect("replica worker hung up");
+            }
+            Event::Prefix(ev) => {
+                if ev.published {
+                    // Keep-first: two replicas may publish the same
+                    // prefix; the index answers "where is it warm", and
+                    // the first answer stays valid.
+                    self.prefix_index.entry(ev.hash).or_insert((origin, ev.tokens));
+                } else if let Some(&(owner, _)) = self.prefix_index.get(&ev.hash) {
+                    // Only the indexed owner's retirement removes the
+                    // entry — another replica evicting its duplicate
+                    // copy must not un-index the surviving one.
+                    if owner == origin {
+                        self.prefix_index.remove(&ev.hash);
+                    }
+                }
+            }
+            Event::Died(msg) => {
+                // Re-raise on the caller's thread: cluster failure
+                // semantics match the single engine's loud asserts
+                // ("request can never fit", stall guard).
+                panic!("replica {origin} died: {msg}");
+            }
+        }
+    }
+
+    /// Drive until every accepted request completes; returns responses in
+    /// completion order. Re-entrant: submit more and call again.
+    pub fn run_to_completion(&mut self) -> Vec<Response> {
+        while self.outstanding() > 0 {
+            self.pump();
+            if self.in_flight.is_empty() {
+                // Queue non-empty but nothing dispatched in flight: all
+                // ledgers are zero (drains are symmetric), so pump() is
+                // guaranteed to have dispatched — loop back to it.
+                continue;
+            }
+            let (r, ev) = self.events.recv().expect("all replica workers hung up");
+            self.handle_event(r, ev);
+            // Drain whatever else already arrived before re-pumping, so
+            // one pump sees the fullest picture of freed capacity.
+            while let Ok((r, ev)) = self.events.try_recv() {
+                self.handle_event(r, ev);
+            }
+        }
+        std::mem::take(&mut self.done)
+    }
+
+    /// Snapshot the cluster view: per-replica engine metrics (synced over
+    /// the command channels) + the coordinator's own routing counters and
+    /// the per-request drift ledger.
+    pub fn metrics(&self) -> ClusterMetrics {
+        let mut per_replica = Vec::with_capacity(self.replicas.len());
+        for h in &self.replicas {
+            let (tx, rx) = channel();
+            h.commands.send(Command::Sync(tx)).expect("replica worker hung up");
+            per_replica.push(rx.recv().expect("replica worker died during sync"));
+        }
+        ClusterMetrics {
+            per_replica,
+            dispatched: self.dispatched,
+            preemption_reroutes: self.preemption_reroutes,
+            prefix_hint_hits: self.prefix_hint_hits,
+            fcfs_bypasses: self.fcfs_bypasses,
+            duplicates_rejected: self.duplicates_rejected,
+            drift: self.drift.clone(),
+        }
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for h in &self.replicas {
+            // A worker that already died (panic forwarded as an event)
+            // has dropped its receiver — ignore the send failure.
+            let _ = h.commands.send(Command::Shutdown);
+        }
+        for h in &mut self.replicas {
+            if let Some(join) = h.join.take() {
+                let _ = join.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::engine::testutil::{HalvedFootprint, LyingFootprint};
+    use super::super::request::GenParams;
+    use super::*;
+    use crate::attention::FullAttention;
+    use crate::model::{ModelConfig, Scratch, SequenceState, Weights};
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    const SEED: u64 = 37;
+
+    fn tiny_model() -> Model {
+        let cfg = ModelConfig::tiny_mha(128);
+        Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, SEED)))
+    }
+
+    fn full_factory(cfg: &ModelConfig) -> Box<BackendFactory> {
+        let shape = cfg.attn_shape();
+        Box::new(move |_| Box::new(FullAttention::new(shape)) as _)
+    }
+
+    fn halved_factory(cfg: &ModelConfig) -> Box<BackendFactory> {
+        let shape = cfg.attn_shape();
+        Box::new(move |_| Box::new(HalvedFootprint(FullAttention::new(shape))) as _)
+    }
+
+    fn engine_cfg(pool_pages: usize) -> EngineConfig {
+        EngineConfig {
+            max_batch: 4,
+            prefill_chunk: 8,
+            page_bytes: 4096,
+            pool_budget: pool_pages * 4096,
+            threads: 1,
+            prefix_reuse: false,
+            eject_preempted: false, // forced on by the coordinator anyway
+        }
+    }
+
+    fn cluster(replicas: usize, pool_pages: usize) -> Coordinator {
+        let model = tiny_model();
+        let factory = full_factory(&model.cfg);
+        Coordinator::new(
+            model,
+            factory,
+            ClusterConfig { replicas, engine: engine_cfg(pool_pages), bin_pack_window: 8 },
+        )
+    }
+
+    fn request(id: u64, prompt: Vec<usize>, max_new: usize) -> Request {
+        Request::new(id, prompt, GenParams { max_new_tokens: max_new, stop_token: None })
+    }
+
+    /// The tentpole invariant: per-request token streams are bit-identical
+    /// to a single-engine run regardless of replica count — placement and
+    /// cross-replica batching are semantically invisible.
+    #[test]
+    fn token_streams_identical_across_replica_counts() {
+        let prompts: Vec<Vec<usize>> =
+            vec![vec![5, 6, 7], vec![9, 10, 11, 12], vec![42], vec![1, 2, 3, 4, 5], vec![33, 7]];
+        // Ground truth: direct greedy generation, no serving layer at all.
+        let model = tiny_model();
+        let factory = full_factory(&model.cfg);
+        let mut expected = Vec::new();
+        for p in &prompts {
+            let mut state = SequenceState::new(&model.cfg, &factory);
+            let mut scratch = Scratch::new(&model.cfg);
+            expected.push(model.generate_greedy(&mut state, &mut scratch, p, 6));
+        }
+        for replicas in [1usize, 2, 4] {
+            let mut c = cluster(replicas, 1 << 12); // ample pool
+            for (i, p) in prompts.iter().enumerate() {
+                c.submit(request(i as u64, p.clone(), 6)).unwrap();
+            }
+            let mut responses = c.run_to_completion();
+            responses.sort_by_key(|r| r.id);
+            assert_eq!(responses.len(), prompts.len());
+            for (i, r) in responses.iter().enumerate() {
+                assert_eq!(
+                    r.tokens, expected[i],
+                    "request {i} diverged from direct generation at {replicas} replicas"
+                );
+                assert!(r.peak_kv_bytes > 0, "peak KV must be measured");
+            }
+            let cm = c.metrics();
+            assert_eq!(cm.aggregate().requests_completed, prompts.len());
+            assert_eq!(cm.drift.len(), prompts.len());
+            // Honest footprints never under-estimate: actual peak is at
+            // most the projection for every request.
+            let (_, hi) = cm.drift_bounds();
+            assert!(hi <= 1.0 + 1e-12, "honest footprint must not under-project: {hi}");
+        }
+    }
+
+    #[test]
+    fn duplicate_ids_rejected_cluster_wide() {
+        let mut c = cluster(2, 1 << 12);
+        c.submit(request(7, vec![1, 2, 3], 4)).unwrap();
+        // Already dispatched (in flight on some replica) — still visible
+        // to cluster-level admission.
+        let err = c.submit(request(7, vec![9, 9], 4)).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "got: {err}");
+        assert_eq!(c.run_to_completion().len(), 1);
+        assert_eq!(c.metrics().duplicates_rejected, 1);
+        // After completion the id is free again (matches engine semantics).
+        c.submit(request(7, vec![1, 2, 3], 4)).unwrap();
+        assert_eq!(c.run_to_completion().len(), 1);
+    }
+
+    /// Satellite regression: after a forced-preemption run, no replica's
+    /// tracked load leaks — every charge was drained by completion or
+    /// preemption, symmetric by construction.
+    #[test]
+    fn preemption_reroutes_and_no_load_leaks() {
+        let model = tiny_model();
+        let factory = halved_factory(&model.cfg);
+        // 32-page pools: a 16-token sequence peaks at 24 pages but prices
+        // (halved) at 12, so two co-resident sequences over-commit and
+        // growth must preempt — on every replica that gets two.
+        let mut c = Coordinator::new(
+            model,
+            factory,
+            ClusterConfig { replicas: 2, engine: engine_cfg(32), bin_pack_window: 8 },
+        );
+        for i in 0..4u64 {
+            c.submit(request(i, vec![1, 2, 3, 4, 5, 6, 7, 8], 8)).unwrap();
+        }
+        let responses = c.run_to_completion();
+        assert_eq!(responses.len(), 4);
+        assert!(responses.iter().all(|r| r.tokens.len() == 8));
+        let cm = c.metrics();
+        assert!(
+            cm.aggregate().preemptions >= 1,
+            "scenario must actually force preemption (got none)"
+        );
+        assert!(
+            cm.preemption_reroutes >= 1,
+            "every ejected preemption must be re-routed by the coordinator"
+        );
+        assert_eq!(
+            c.loads(),
+            vec![0, 0],
+            "router ledger leaked load after a preemption-heavy run"
+        );
+        // Under-claiming footprint ⇒ drift ratios above 1 (the signal the
+        // drift ledger exists to expose).
+        let (_, hi) = cm.drift_bounds();
+        assert!(hi > 1.0, "halved footprint must show under-projection drift: {hi}");
+    }
+
+    /// Conservation proptest: across random bursts, prompt mixes, replica
+    /// counts, and forced preemptions, every submitted request completes
+    /// exactly once, cluster metrics sums equal per-replica sums, and the
+    /// routing ledger drains to zero.
+    #[test]
+    fn property_requests_conserved_across_bursts_and_preemptions() {
+        let cfg = ModelConfig::tiny_mha(128);
+        let weights = Arc::new(Weights::random(&cfg, SEED));
+        prop::check(
+            "cluster-conservation",
+            12,
+            |rng: &mut Rng| {
+                // v[0] encodes replica count (1..=4); the rest are prompt
+                // lengths (1..=12 — small enough that any single request
+                // always fits a 32-page pool alone, so forced preemption
+                // can never hit the "can never fit" loud failure).
+                let n = rng.range(1, 8);
+                let mut v = vec![rng.range(1, 5)];
+                v.extend((0..n).map(|_| rng.range(1, 13)));
+                v
+            },
+            |input| {
+                if input.is_empty() {
+                    return true; // shrunk-away input: nothing to check
+                }
+                let replicas = input[0].clamp(1, 4);
+                let plens = &input[1..];
+                let shape = cfg.attn_shape();
+                let factory: Box<BackendFactory> = Box::new(move |_| {
+                    Box::new(HalvedFootprint(FullAttention::new(shape))) as _
+                });
+                let model = Model { cfg: cfg.clone(), weights: Arc::clone(&weights) };
+                let mut c = Coordinator::new(
+                    model,
+                    factory,
+                    ClusterConfig {
+                        replicas,
+                        engine: engine_cfg(32),
+                        bin_pack_window: 4,
+                    },
+                );
+                for (i, &plen) in plens.iter().enumerate() {
+                    let prompt: Vec<usize> = (0..plen.max(1)).map(|t| (t * 7 + i) % 50).collect();
+                    if c.submit(request(i as u64, prompt, 4)).is_err() {
+                        return false;
+                    }
+                }
+                let mut responses = c.run_to_completion();
+                responses.sort_by_key(|r| r.id);
+                // Exactly once: every id present, no extras, no repeats.
+                if responses.len() != plens.len() {
+                    return false;
+                }
+                if responses.iter().enumerate().any(|(i, r)| r.id != i as u64) {
+                    return false;
+                }
+                let cm = c.metrics();
+                let agg = cm.aggregate();
+                let per_completed: usize =
+                    cm.per_replica.iter().map(|m| m.requests_completed).sum();
+                let per_generated: usize =
+                    cm.per_replica.iter().map(|m| m.tokens_generated).sum();
+                let delivered: usize = responses.iter().map(|r| r.tokens.len()).sum();
+                agg.requests_completed == plens.len()
+                    && per_completed == plens.len()
+                    && agg.tokens_generated == delivered
+                    && per_generated == delivered
+                    && cm.dispatched == plens.len()
+                    && cm.drift.len() == plens.len()
+                    && c.loads().iter().all(|&l| l == 0)
+                    && c.outstanding() == 0
+            },
+        );
+    }
+
+    /// The engine's loud-failure semantics survive the thread boundary: a
+    /// request that can never fit its replica's pool panics the caller,
+    /// not a background thread the caller cannot see.
+    #[test]
+    #[should_panic(expected = "can never fit")]
+    fn impossible_request_panics_on_caller_thread() {
+        let model = tiny_model();
+        let factory = lying_factory(&model.cfg);
+        // 8 pages ≈ 5 dense tokens; the 8-token prompt alone can never
+        // fit. The zero-claiming footprint admits it (idle pool), growth
+        // evicts it running alone — the engine asserts, the worker
+        // forwards Died, the coordinator re-raises here.
+        let mut c = Coordinator::new(
+            model,
+            factory,
+            ClusterConfig { replicas: 1, engine: engine_cfg(8), bin_pack_window: 1 },
+        );
+        c.submit(request(0, vec![1, 2, 3, 4, 5, 6, 7, 8], 4)).unwrap();
+        c.run_to_completion();
+    }
+
+    fn lying_factory(cfg: &ModelConfig) -> Box<BackendFactory> {
+        let shape = cfg.attn_shape();
+        Box::new(move |_| Box::new(LyingFootprint(FullAttention::new(shape))) as _)
+    }
+
+    /// Prefix placement: a second request with a published prompt prefix
+    /// is routed to the replica that published it (and adopts, skipping
+    /// the shared prefill) even when another replica is emptier.
+    #[test]
+    fn prefix_index_places_matching_prompt_on_publisher() {
+        let model = tiny_model();
+        let factory = full_factory(&model.cfg);
+        let mut ecfg = engine_cfg(1 << 12);
+        ecfg.prefix_reuse = true;
+        let mut c = Coordinator::new(
+            model,
+            factory,
+            ClusterConfig { replicas: 2, engine: ecfg, bin_pack_window: 8 },
+        );
+        let prompt: Vec<usize> = (1..=12).collect();
+        c.submit(request(0, prompt.clone(), 5)).unwrap();
+        assert_eq!(c.run_to_completion().len(), 1);
+        let first_replica = {
+            // Exactly one replica completed the first request.
+            let cm = c.metrics();
+            (0..2).find(|&r| cm.per_replica[r].requests_completed == 1).unwrap()
+        };
+        assert!(!c.prefix_index.is_empty(), "first run must publish its chunk prefix");
+        // Same prompt, new id, NO session tag: placement must follow the
+        // prefix index to the publisher, not least-loaded (both idle).
+        c.submit(request(1, prompt, 5)).unwrap();
+        assert_eq!(c.run_to_completion().len(), 1);
+        let cm = c.metrics();
+        assert_eq!(cm.prefix_hint_hits, 1, "second request must be placed by the index");
+        assert_eq!(
+            cm.per_replica[first_replica].requests_completed,
+            2,
+            "prefix-matching request must land on the publishing replica"
+        );
+        assert_eq!(
+            cm.aggregate().prefix_adoptions,
+            1,
+            "placement must convert into an actual adoption"
+        );
+    }
+}

@@ -68,6 +68,7 @@ use std::collections::VecDeque;
 use std::time::Instant;
 
 /// Engine configuration.
+#[derive(Clone)]
 pub struct EngineConfig {
     pub max_batch: usize,
     pub prefill_chunk: usize,
@@ -86,6 +87,12 @@ pub struct EngineConfig {
     /// once. Off by default — publications consume pool pages, which
     /// changes capacity accounting for workloads that never re-adopt.
     pub prefix_reuse: bool,
+    /// Replica mode: a preempted request is **ejected** (drained via
+    /// [`Engine::take_preempted`]) instead of re-queued on this engine's
+    /// own waiting queue. The cluster coordinator re-routes ejected
+    /// requests to the least-loaded replica; a standalone engine keeps
+    /// the default `false` and resumes its own preemptions locally.
+    pub eject_preempted: bool,
 }
 
 impl Default for EngineConfig {
@@ -97,14 +104,36 @@ impl Default for EngineConfig {
             pool_budget: 1 << 30,
             threads: 0,
             prefix_reuse: false,
+            eject_preempted: false,
         }
     }
+}
+
+/// A change in this engine's published-prefix set, drained by the cluster
+/// coordinator ([`Engine::take_prefix_events`]) to keep its content-keyed
+/// replica-placement index in sync: `published` entries map `hash` (the
+/// [`crate::kvcache::prefix_hash`] of the first `tokens` prompt tokens)
+/// to this replica; retirements (pool-pressure evictions) remove them.
+#[derive(Clone, Copy, Debug)]
+pub struct PrefixEvent {
+    pub hash: u64,
+    /// Prefix length in tokens (0 for retirements — the hash alone keys
+    /// the index).
+    pub tokens: usize,
+    /// True for a publication, false for an eviction/retirement.
+    pub published: bool,
 }
 
 struct Running {
     req: Request,
     state: SequenceState,
     scratch: Scratch,
+    /// Largest live `kv_bytes()` this run has reached, seeded with the
+    /// request's carried peak so the maximum spans preemption resumes.
+    /// Raw cache bytes (adopted shared panels included) — the *actual*
+    /// side of the cluster's projected-vs-actual drift ledger, compared
+    /// against the undiscounted footprint projection it was routed by.
+    peak_kv: usize,
     /// What prefill actually consumes: the prompt, plus — for a request
     /// resuming after preemption — the tokens it had already generated
     /// (recompute rebuilds their KV, decode continues after them).
@@ -159,6 +188,12 @@ pub struct Engine {
     workers: Workers,
     pub metrics: Metrics,
     done: Vec<Response>,
+    /// Preempted requests ejected under `cfg.eject_preempted` instead of
+    /// re-queued locally — drained by the replica worker for re-routing.
+    ejected: Vec<Request>,
+    /// Published/retired prefix notifications since the last drain (see
+    /// [`PrefixEvent`]); only populated when `cfg.prefix_reuse` is on.
+    prefix_events: Vec<PrefixEvent>,
 }
 
 impl Engine {
@@ -181,7 +216,26 @@ impl Engine {
             workers,
             metrics: Metrics::default(),
             done: Vec::new(),
+            ejected: Vec::new(),
+            prefix_events: Vec::new(),
         }
+    }
+
+    /// Drain responses completed since the last drain (replica-worker
+    /// surface; [`Engine::run_to_completion`] drains the same buffer).
+    pub fn take_done(&mut self) -> Vec<Response> {
+        std::mem::take(&mut self.done)
+    }
+
+    /// Drain requests ejected by preemption under `cfg.eject_preempted`
+    /// (empty in standalone mode, where preemptions re-queue locally).
+    pub fn take_preempted(&mut self) -> Vec<Request> {
+        std::mem::take(&mut self.ejected)
+    }
+
+    /// Drain prefix publication/retirement events since the last drain.
+    pub fn take_prefix_events(&mut self) -> Vec<PrefixEvent> {
+        std::mem::take(&mut self.prefix_events)
     }
 
     /// Enqueue a request (stamps arrival time). The id must be unique
@@ -302,10 +356,12 @@ impl Engine {
             // and queue delay must describe the first run.
             let first_step = req.first_step.take();
             let first_token = req.first_token.take();
+            let peak_kv = req.peak_kv_bytes;
             self.running.push(Running {
                 req,
                 state,
                 scratch,
+                peak_kv,
                 prefill_tokens,
                 prefilled,
                 out,
@@ -325,7 +381,9 @@ impl Engine {
     /// pressure (any reserve/publish may evict unreferenced entries).
     fn drain_evictions(&mut self) {
         for id in self.pool.take_evicted() {
-            self.prefix_cache.remove_shared(id);
+            for hash in self.prefix_cache.remove_shared(id) {
+                self.prefix_events.push(PrefixEvent { hash, tokens: 0, published: false });
+            }
             self.metrics.shared_prefix_evictions += 1;
         }
     }
@@ -354,6 +412,7 @@ impl Engine {
                 workers,
                 pool,
                 prefix_cache,
+                prefix_events,
                 metrics,
                 cfg,
                 ..
@@ -442,10 +501,18 @@ impl Engine {
                     let Some(snap) = r.state.fork_prefix(r.prefilled) else { continue };
                     let Ok(id) = pool.publish_shared(snap.shared_bytes()) else { continue };
                     for ev in pool.take_evicted() {
-                        prefix_cache.remove_shared(ev);
+                        for hash in prefix_cache.remove_shared(ev) {
+                            prefix_events
+                                .push(PrefixEvent { hash, tokens: 0, published: false });
+                        }
                         metrics.shared_prefix_evictions += 1;
                     }
                     prefix_cache.insert(key, id, snap);
+                    prefix_events.push(PrefixEvent {
+                        hash: crate::kvcache::prefix_hash(key),
+                        tokens: key.len(),
+                        published: true,
+                    });
                     metrics.prefix_publications += 1;
                 }
             }
@@ -494,7 +561,10 @@ impl Engine {
         let mut i = 0;
         while i < self.running.len() {
             if self.running[i].finished {
-                let r = self.running.remove(i);
+                let mut r = self.running.remove(i);
+                // Final growth happened this step, after the last peak
+                // refresh — fold it in before the state is dropped.
+                r.peak_kv = r.peak_kv.max(r.state.kv_bytes());
                 self.pool.release(r.req.id);
                 if let Some(id) = r.adopted {
                     // Drop the adoption refcount; the holding stays
@@ -518,6 +588,7 @@ impl Engine {
                     ttft_s: ttft,
                     e2e_s: e2e,
                     preemptions: r.req.preemptions,
+                    peak_kv_bytes: r.peak_kv,
                 });
             } else {
                 i += 1;
@@ -531,6 +602,9 @@ impl Engine {
         // ledger already priced everyone's horizon) — preempt the single
         // *youngest* sequence, retry all reservations, repeat: minimal
         // FCFS-friendly eviction, never the old evict-everyone-that-failed.
+        for r in self.running.iter_mut() {
+            r.peak_kv = r.peak_kv.max(r.state.kv_bytes());
+        }
         loop {
             let mut exhausted = false;
             for r in self.running.iter() {
@@ -584,7 +658,14 @@ impl Engine {
             req.first_step = r.first_step;
             req.first_token = r.first_token;
             req.arrival = req.arrival.or(Some(now));
-            self.waiting.push_front(req);
+            req.peak_kv_bytes = r.peak_kv;
+            if self.cfg.eject_preempted {
+                // Replica mode: hand the request back to the coordinator
+                // for a least-loaded re-route instead of resuming here.
+                self.ejected.push(req);
+            } else {
+                self.waiting.push_front(req);
+            }
         }
         self.drain_evictions();
         // The pool tracks its own high-water mark inside every reserve(),
@@ -623,8 +704,99 @@ impl Engine {
     }
 }
 
+/// Test-only helpers shared with the cluster tests (which need the same
+/// preemption-forcing scenarios this module pins for a single engine).
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::attention::FullAttention;
+
+    /// FullAttention wrapper whose footprint *lies* (claims zero growth):
+    /// forces admission to over-admit so actual `kv_bytes()` growth must
+    /// hit the preemption path — the safety valve for under-estimating
+    /// footprints.
+    pub(crate) struct LyingFootprint(pub(crate) FullAttention);
+
+    impl crate::attention::AttentionBackend for LyingFootprint {
+        fn append(&mut self, k: &[f32], v: &[f32]) {
+            self.0.append(k, v)
+        }
+        fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+            self.0.attend(q, out)
+        }
+        fn len(&self) -> usize {
+            self.0.len()
+        }
+        fn traffic(&self) -> crate::attention::Traffic {
+            self.0.traffic()
+        }
+        fn kv_bytes(&self) -> usize {
+            self.0.kv_bytes()
+        }
+        fn fork_prefix(&self, n_tokens: usize) -> Option<crate::attention::PrefixSnapshot> {
+            self.0.fork_prefix(n_tokens)
+        }
+        fn adopt_prefix(&mut self, snap: &crate::attention::PrefixSnapshot) -> bool {
+            self.0.adopt_prefix(snap)
+        }
+        fn shared_prefix_bytes(&self) -> usize {
+            self.0.shared_prefix_bytes()
+        }
+        fn footprint(&self) -> crate::attention::FootprintModel {
+            crate::attention::FootprintModel::linear(0, 0)
+        }
+        fn name(&self) -> &'static str {
+            "lying-footprint"
+        }
+    }
+
+    /// FullAttention wrapper that under-claims its growth by 2× instead of
+    /// ∞: admission still over-admits (forcing the preemption path), but
+    /// dispatch costs stay nonzero — what the cluster tests need to assert
+    /// router-ledger conservation across preemption re-routes (a zero-cost
+    /// footprint would make "no load leaked" vacuously true).
+    pub(crate) struct HalvedFootprint(pub(crate) FullAttention);
+
+    impl crate::attention::AttentionBackend for HalvedFootprint {
+        fn append(&mut self, k: &[f32], v: &[f32]) {
+            self.0.append(k, v)
+        }
+        fn attend(&mut self, q: &[f32], out: &mut [f32]) {
+            self.0.attend(q, out)
+        }
+        fn len(&self) -> usize {
+            self.0.len()
+        }
+        fn traffic(&self) -> crate::attention::Traffic {
+            self.0.traffic()
+        }
+        fn kv_bytes(&self) -> usize {
+            self.0.kv_bytes()
+        }
+        fn fork_prefix(&self, n_tokens: usize) -> Option<crate::attention::PrefixSnapshot> {
+            self.0.fork_prefix(n_tokens)
+        }
+        fn adopt_prefix(&mut self, snap: &crate::attention::PrefixSnapshot) -> bool {
+            self.0.adopt_prefix(snap)
+        }
+        fn shared_prefix_bytes(&self) -> usize {
+            self.0.shared_prefix_bytes()
+        }
+        fn footprint(&self) -> crate::attention::FootprintModel {
+            let f = self.0.footprint();
+            crate::attention::FootprintModel {
+                bytes_per_token: f.bytes_per_token / 2,
+                ..f
+            }
+        }
+        fn name(&self) -> &'static str {
+            "halved-footprint"
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
+    use super::testutil::LyingFootprint;
     use super::*;
     use crate::attention::FullAttention;
     use crate::coordinator::request::GenParams;
@@ -647,6 +819,7 @@ mod tests {
                 pool_budget: budget,
                 threads: 2,
                 prefix_reuse: false,
+                eject_preempted: false,
             },
         )
     }
@@ -711,6 +884,7 @@ mod tests {
                 pool_budget: 1 << 24,
                 threads: 2,
                 prefix_reuse: false,
+                eject_preempted: false,
             },
         );
         for (i, p) in prompts.iter().enumerate() {
@@ -830,6 +1004,7 @@ mod tests {
                     pool_budget: 1 << 24,
                     threads: 1,
                     prefix_reuse: false,
+                    eject_preempted: false,
                 },
             );
             for (i, p) in prompts.iter().enumerate() {
@@ -971,45 +1146,6 @@ mod tests {
         e.run_to_completion();
     }
 
-    /// FullAttention wrapper whose footprint *lies* (claims zero growth):
-    /// forces admission to over-admit so actual `kv_bytes()` growth must
-    /// hit the preemption path — the safety valve for under-estimating
-    /// footprints.
-    struct LyingFootprint(FullAttention);
-
-    impl crate::attention::AttentionBackend for LyingFootprint {
-        fn append(&mut self, k: &[f32], v: &[f32]) {
-            self.0.append(k, v)
-        }
-        fn attend(&mut self, q: &[f32], out: &mut [f32]) {
-            self.0.attend(q, out)
-        }
-        fn len(&self) -> usize {
-            self.0.len()
-        }
-        fn traffic(&self) -> crate::attention::Traffic {
-            self.0.traffic()
-        }
-        fn kv_bytes(&self) -> usize {
-            self.0.kv_bytes()
-        }
-        fn fork_prefix(&self, n_tokens: usize) -> Option<crate::attention::PrefixSnapshot> {
-            self.0.fork_prefix(n_tokens)
-        }
-        fn adopt_prefix(&mut self, snap: &crate::attention::PrefixSnapshot) -> bool {
-            self.0.adopt_prefix(snap)
-        }
-        fn shared_prefix_bytes(&self) -> usize {
-            self.0.shared_prefix_bytes()
-        }
-        fn footprint(&self) -> crate::attention::FootprintModel {
-            crate::attention::FootprintModel::linear(0, 0)
-        }
-        fn name(&self) -> &'static str {
-            "lying-footprint"
-        }
-    }
-
     #[test]
     fn preempted_request_reports_preemptions() {
         // Pool of 32 pages; two 16-token sequences need 24 pages EACH at
@@ -1034,6 +1170,7 @@ mod tests {
                 pool_budget: 32 * 4096,
                 threads: 2,
                 prefix_reuse: false,
+                eject_preempted: false,
             },
         );
         for i in 0..2 {
@@ -1086,6 +1223,7 @@ mod tests {
                 pool_budget: budget,
                 threads: 2,
                 prefix_reuse: reuse,
+                eject_preempted: false,
             },
         )
     }
@@ -1164,6 +1302,7 @@ mod tests {
                 pool_budget: 48 * 4096,
                 threads: 2,
                 prefix_reuse: true,
+                eject_preempted: false,
             },
         );
         let prompt: Vec<usize> = (1..=12).collect();
@@ -1244,6 +1383,7 @@ mod tests {
                     pool_budget: 88 * 1024,
                     threads: 2,
                     prefix_reuse: false,
+                    eject_preempted: false,
                 },
             );
             let mut rng = Rng::new(73);

@@ -41,6 +41,33 @@ pub struct Metrics {
 }
 
 impl Metrics {
+    /// Fold another replica's metrics into this one (cluster aggregation).
+    /// Counters and token tallies sum; the latency sample vectors
+    /// concatenate (cluster percentiles are over the union of requests);
+    /// `wall_s` takes the max (replicas run concurrently, so summing walls
+    /// would double-count time); `peak_pool_pages` sums (each replica owns
+    /// a distinct pool, so the total is real pages); `peak_running` sums
+    /// (an upper bound on cluster-wide concurrency — per-replica peaks
+    /// need not be simultaneous, which is why it is a bound, not a peak).
+    pub fn absorb(&mut self, other: &Metrics) {
+        self.requests_submitted += other.requests_submitted;
+        self.requests_completed += other.requests_completed;
+        self.tokens_prefilled += other.tokens_prefilled;
+        self.tokens_generated += other.tokens_generated;
+        self.tokens_decoded += other.tokens_decoded;
+        self.preemptions += other.preemptions;
+        self.steps += other.steps;
+        self.prefill_tokens_avoided += other.prefill_tokens_avoided;
+        self.prefix_publications += other.prefix_publications;
+        self.prefix_adoptions += other.prefix_adoptions;
+        self.shared_prefix_evictions += other.shared_prefix_evictions;
+        self.ttft.extend_from_slice(&other.ttft);
+        self.e2e.extend_from_slice(&other.e2e);
+        self.wall_s = self.wall_s.max(other.wall_s);
+        self.peak_pool_pages += other.peak_pool_pages;
+        self.peak_running += other.peak_running;
+    }
+
     /// Decode throughput over the run (generated tokens / wall time).
     pub fn tokens_per_second(&self) -> f64 {
         if self.wall_s <= 0.0 {
@@ -83,6 +110,115 @@ impl Metrics {
     }
 }
 
+/// One request's projected-vs-actual byte record: what the coordinator
+/// routed by (the [`crate::model::SequenceFootprint`] at the decode
+/// horizon) against the peak live cache the request actually reached.
+/// The ratio is the estimator's *drift* — persistently low actuals mean
+/// footprints over-reserve (capacity left on the table), high actuals
+/// mean under-reservation (preemption churn risk).
+#[derive(Clone, Debug)]
+pub struct DriftRecord {
+    pub id: crate::kvcache::SeqId,
+    /// Footprint bytes at the decode horizon, as priced at dispatch.
+    pub projected_bytes: usize,
+    /// Peak live `kv_bytes()` across every run of the request.
+    pub actual_bytes: usize,
+}
+
+impl DriftRecord {
+    /// actual / projected (1.0 = perfect estimate; 0 projected ⇒ ∞-like
+    /// drift reported as the actual byte count to stay finite-ish in
+    /// summaries — only a deliberately lying footprint projects 0).
+    pub fn ratio(&self) -> f64 {
+        if self.projected_bytes == 0 {
+            self.actual_bytes as f64
+        } else {
+            self.actual_bytes as f64 / self.projected_bytes as f64
+        }
+    }
+}
+
+/// Cluster-level view: per-replica [`Metrics`] snapshots plus the
+/// coordinator's own counters (routing, re-routing, prefix placement)
+/// and the per-request drift ledger.
+#[derive(Clone, Debug, Default)]
+pub struct ClusterMetrics {
+    /// Snapshot of each replica engine's metrics (index = replica id).
+    pub per_replica: Vec<Metrics>,
+    /// Requests the coordinator dispatched to a replica.
+    pub dispatched: usize,
+    /// Preempted requests the coordinator re-routed by current load
+    /// (each one drained the origin replica's ledger via
+    /// [`super::Router::note_preemption`]).
+    pub preemption_reroutes: usize,
+    /// Dispatches placed by a prefix-index hit (the chosen replica had
+    /// published the request's longest matching prefix).
+    pub prefix_hint_hits: usize,
+    /// Dispatches that bypassed an older queued request because that
+    /// request fit no replica yet (horizon bin-packing, not strict FCFS).
+    pub fcfs_bypasses: usize,
+    /// Duplicate-id submissions rejected at cluster admission.
+    pub duplicates_rejected: usize,
+    /// Per-request projected-vs-actual bytes, in completion order.
+    pub drift: Vec<DriftRecord>,
+}
+
+impl ClusterMetrics {
+    /// Sum of the per-replica metrics (see [`Metrics::absorb`] for the
+    /// per-field semantics). The conservation invariant the cluster tests
+    /// pin: aggregate counters equal the per-replica sums, and
+    /// `requests_completed` equals the requests submitted to the cluster.
+    pub fn aggregate(&self) -> Metrics {
+        let mut m = Metrics::default();
+        for r in &self.per_replica {
+            m.absorb(r);
+        }
+        m
+    }
+
+    /// Mean drift ratio (actual/projected) over completed requests;
+    /// 1.0 when no records exist.
+    pub fn mean_drift(&self) -> f64 {
+        if self.drift.is_empty() {
+            return 1.0;
+        }
+        self.drift.iter().map(|d| d.ratio()).sum::<f64>() / self.drift.len() as f64
+    }
+
+    /// Worst over-estimate and under-estimate ratios `(min, max)`.
+    pub fn drift_bounds(&self) -> (f64, f64) {
+        let mut lo = f64::INFINITY;
+        let mut hi = 0.0f64;
+        for d in &self.drift {
+            let r = d.ratio();
+            lo = lo.min(r);
+            hi = hi.max(r);
+        }
+        if self.drift.is_empty() {
+            (1.0, 1.0)
+        } else {
+            (lo, hi)
+        }
+    }
+
+    /// Export the cluster view (aggregate + coordinator counters + drift
+    /// summary) for BENCH_cluster.json / EXPERIMENTS.md records.
+    pub fn to_json(&self) -> Json {
+        let (drift_min, drift_max) = self.drift_bounds();
+        Json::obj()
+            .field("replicas", self.per_replica.len())
+            .field("dispatched", self.dispatched)
+            .field("preemption_reroutes", self.preemption_reroutes)
+            .field("prefix_hint_hits", self.prefix_hint_hits)
+            .field("fcfs_bypasses", self.fcfs_bypasses)
+            .field("duplicates_rejected", self.duplicates_rejected)
+            .field("drift_mean", self.mean_drift())
+            .field("drift_min", drift_min)
+            .field("drift_max", drift_max)
+            .field("aggregate", self.aggregate().to_json())
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -100,5 +236,55 @@ mod tests {
         let s = m.to_json().to_string();
         assert!(s.contains("\"ttft_p50_s\""));
         assert!(s.contains("\"tokens_per_second\""));
+    }
+
+    #[test]
+    fn absorb_sums_counters_and_concatenates_samples() {
+        let a = Metrics {
+            requests_completed: 3,
+            tokens_generated: 30,
+            preemptions: 1,
+            ttft: vec![0.1],
+            wall_s: 2.0,
+            peak_pool_pages: 10,
+            peak_running: 2,
+            ..Default::default()
+        };
+        let b = Metrics {
+            requests_completed: 2,
+            tokens_generated: 20,
+            ttft: vec![0.2, 0.3],
+            wall_s: 3.0,
+            peak_pool_pages: 5,
+            peak_running: 1,
+            ..Default::default()
+        };
+        let mut sum = a.clone();
+        sum.absorb(&b);
+        assert_eq!(sum.requests_completed, 5);
+        assert_eq!(sum.tokens_generated, 50);
+        assert_eq!(sum.preemptions, 1);
+        assert_eq!(sum.ttft.len(), 3);
+        assert_eq!(sum.wall_s, 3.0, "concurrent replicas: wall is the max");
+        assert_eq!(sum.peak_pool_pages, 15, "distinct pools: pages sum");
+        assert_eq!(sum.peak_running, 3);
+        let cm = ClusterMetrics { per_replica: vec![a, b], ..Default::default() };
+        assert_eq!(cm.aggregate().requests_completed, 5);
+    }
+
+    #[test]
+    fn drift_records_summarize() {
+        let cm = ClusterMetrics {
+            drift: vec![
+                DriftRecord { id: 0, projected_bytes: 100, actual_bytes: 50 },
+                DriftRecord { id: 1, projected_bytes: 100, actual_bytes: 150 },
+            ],
+            ..Default::default()
+        };
+        assert!((cm.mean_drift() - 1.0).abs() < 1e-12);
+        assert_eq!(cm.drift_bounds(), (0.5, 1.5));
+        assert_eq!(ClusterMetrics::default().mean_drift(), 1.0);
+        let s = cm.to_json().to_string();
+        assert!(s.contains("\"drift_mean\"") && s.contains("\"aggregate\""));
     }
 }

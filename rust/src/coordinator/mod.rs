@@ -3,14 +3,18 @@
 //! admission control, and the scheduling policy; the compute is delegated
 //! to the model's attention backends (CPU) or the PJRT runtime (artifacts).
 
+pub mod cluster;
 pub mod engine;
 pub mod metrics;
+pub mod replica;
 pub mod request;
 pub mod router;
 pub mod trace;
 
-pub use engine::{Engine, EngineConfig};
-pub use metrics::Metrics;
+pub use cluster::{ClusterConfig, Coordinator};
+pub use engine::{Engine, EngineConfig, PrefixEvent};
+pub use metrics::{ClusterMetrics, DriftRecord, Metrics};
+pub use replica::{Command, Event};
 pub use request::{GenParams, Request, Response};
 pub use router::{Policy, ReplicaId, Router};
 pub use trace::{TraceGen, TraceSpec};

@@ -1,0 +1,182 @@
+//! Replica worker: the thread-side half of the serving cluster.
+//!
+//! Each worker owns ONE [`Engine`] for its whole lifetime — the engine is
+//! built *inside* the spawned thread and never crosses a thread boundary,
+//! so nothing about the engine's internals (backend boxes, worker-pool
+//! handles, scratch) needs to be `Sync`. The coordinator talks to a worker
+//! over a per-replica [`Command`] channel and every worker reports on one
+//! shared `(ReplicaId, Event)` channel, so the coordinator's event loop is
+//! a single `recv`.
+//!
+//! The loop discipline keeps workers cheap when idle and responsive when
+//! busy: with nothing outstanding the worker **blocks** on its command
+//! channel (zero spin); with work in flight it drains pending commands
+//! without blocking, steps the engine once, and flushes the step's
+//! products (completions, ejected preemptions, prefix publications) as
+//! events. Engine panics — the loud-failure asserts like "request can
+//! never fit" — are caught and forwarded as [`Event::Died`] so the
+//! coordinator can re-raise them on the caller's thread instead of
+//! hanging on a channel whose worker silently unwound.
+
+use super::engine::{Engine, PrefixEvent};
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+use super::router::ReplicaId;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
+use std::time::Instant;
+
+/// Commands the coordinator sends a replica worker.
+pub enum Command {
+    /// Enqueue a request into the replica engine's admission queue.
+    Submit(Request),
+    /// Snapshot the engine's [`Metrics`] and send them back on the
+    /// provided one-shot channel.
+    Sync(Sender<Metrics>),
+    /// Stop immediately (any in-flight work is abandoned; the coordinator
+    /// only shuts down after draining or when itself dropped mid-run).
+    Shutdown,
+}
+
+/// Events a replica worker reports on the shared channel (tagged with the
+/// worker's [`ReplicaId`] by construction of the tuple it sends).
+pub enum Event {
+    /// A request completed; the coordinator drains the routing ledger and
+    /// records projected-vs-actual drift from the response.
+    Done(Response),
+    /// A request was preempted and ejected (`eject_preempted` mode); the
+    /// coordinator re-routes it to the least-loaded replica.
+    Preempted(Request),
+    /// The engine published or retired a shared prefix; the coordinator
+    /// updates its replica-placement index.
+    Prefix(PrefixEvent),
+    /// The engine panicked or stalled; the coordinator re-raises this as
+    /// a panic so cluster failure semantics match single-engine ones.
+    Died(String),
+}
+
+/// Consecutive zero-progress rounds (work outstanding, no commands
+/// arriving, no sequence stepped) before the worker declares itself
+/// stuck. Mirrors the stall guard in [`Engine::run_to_completion`]: a
+/// long run of zeros with requests outstanding means a pool-gated queue
+/// that can never drain, not slow progress.
+const STALL_LIMIT: usize = 1000;
+
+/// The worker body: build-and-own loop for one replica. Returns when
+/// told to shut down or when the coordinator side hangs up.
+pub(crate) fn run(
+    id: ReplicaId,
+    mut engine: Engine,
+    commands: Receiver<Command>,
+    events: Sender<(ReplicaId, Event)>,
+) {
+    let mut stall = 0usize;
+    loop {
+        // Idle: block until the coordinator has something for us. The
+        // stall guard resets — a quiet cluster is not a stuck one.
+        if engine.outstanding() == 0 {
+            stall = 0;
+            match commands.recv() {
+                Ok(cmd) => {
+                    if apply(&mut engine, cmd) {
+                        return;
+                    }
+                }
+                Err(_) => return, // coordinator dropped
+            }
+        }
+        // Busy (or just woken): drain whatever else is queued without
+        // blocking, so a burst of submissions lands before the next step
+        // and batches together.
+        let mut drained = 0usize;
+        loop {
+            match commands.try_recv() {
+                Ok(cmd) => {
+                    drained += 1;
+                    if apply(&mut engine, cmd) {
+                        return;
+                    }
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => return,
+            }
+        }
+        let mut stepped = 0usize;
+        if engine.outstanding() > 0 {
+            // Wall accounting: replica workers drive step() directly (not
+            // run_to_completion), so busy time is accumulated here — each
+            // replica's wall_s is its busy seconds, and the cluster
+            // aggregate takes the max (see Metrics::absorb).
+            let t0 = Instant::now();
+            let r = catch_unwind(AssertUnwindSafe(|| engine.step()));
+            engine.metrics.wall_s += t0.elapsed().as_secs_f64();
+            match r {
+                Ok(n) => stepped = n,
+                Err(payload) => {
+                    let msg = panic_message(payload.as_ref());
+                    let _ = events.send((id, Event::Died(msg)));
+                    return;
+                }
+            }
+        }
+        // Flush the step's products. Completions first: the coordinator's
+        // ledger should see a finished request before any preemption the
+        // same step caused elsewhere in the running set.
+        for resp in engine.take_done() {
+            if events.send((id, Event::Done(resp))).is_err() {
+                return;
+            }
+        }
+        for req in engine.take_preempted() {
+            if events.send((id, Event::Preempted(req))).is_err() {
+                return;
+            }
+        }
+        for ev in engine.take_prefix_events() {
+            if events.send((id, Event::Prefix(ev))).is_err() {
+                return;
+            }
+        }
+        if engine.outstanding() > 0 && stepped == 0 && drained == 0 {
+            stall += 1;
+            if stall >= STALL_LIMIT {
+                let _ = events.send((
+                    id,
+                    Event::Died(format!(
+                        "replica stalled: {} request(s) outstanding, none can be admitted",
+                        engine.outstanding()
+                    )),
+                ));
+                return;
+            }
+        } else {
+            stall = 0;
+        }
+    }
+}
+
+/// Apply one command; returns true on shutdown.
+fn apply(engine: &mut Engine, cmd: Command) -> bool {
+    match cmd {
+        Command::Submit(req) => {
+            engine.submit(req);
+            false
+        }
+        Command::Sync(reply) => {
+            let _ = reply.send(engine.metrics.clone());
+            false
+        }
+        Command::Shutdown => true,
+    }
+}
+
+/// Best-effort extraction of a panic payload's message.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "engine panicked".to_string()
+    }
+}

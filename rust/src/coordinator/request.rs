@@ -45,6 +45,17 @@ pub struct Request {
     /// forgetting this would inflate `Response::ttft_s` to the first
     /// post-resume token).
     pub first_token: Option<Instant>,
+    /// Conversation this request belongs to, if any. The cluster
+    /// coordinator pins a session's turns to one replica (warm prefix
+    /// cache) and re-pins on preemption re-route; `None` requests are
+    /// placed purely by prefix-index hits and projected load.
+    pub session: Option<SeqId>,
+    /// Largest live `kv_bytes()` this request's sequence ever reached,
+    /// carried across preemption (caches are dropped on re-queue, so the
+    /// engine alone cannot remember the first run's peak). The completed
+    /// [`Response`] reports it as the *actual* side of the cluster's
+    /// projected-vs-actual estimator-drift ledger.
+    pub peak_kv_bytes: usize,
 }
 
 impl Request {
@@ -58,7 +69,15 @@ impl Request {
             generated: Vec::new(),
             first_step: None,
             first_token: None,
+            session: None,
+            peak_kv_bytes: 0,
         }
+    }
+
+    /// Tag the request with a conversation id (see [`Request::session`]).
+    pub fn with_session(mut self, session: SeqId) -> Request {
+        self.session = Some(session);
+        self
     }
 }
 
@@ -76,6 +95,10 @@ pub struct Response {
     pub e2e_s: f64,
     /// Times this sequence was preempted and re-queued.
     pub preemptions: usize,
+    /// Peak live cache bytes across every run of this request (resumes
+    /// included) — the measured side the cluster compares against the
+    /// footprint projection it routed by.
+    pub peak_kv_bytes: usize,
 }
 
 #[cfg(test)]

@@ -5,6 +5,20 @@
 //! least-loaded replica (power-of-one-choice with exact load here, since
 //! replicas are in-process). Session affinity is supported so multi-turn
 //! requests can reuse a replica's warm cache.
+//!
+//! Two usage tiers:
+//!
+//! * **Bare router** ([`Router::route`]): the router both picks the
+//!   replica and charges its ledger — the original standalone contract,
+//!   kept for drivers that hold replicas directly. Without an installed
+//!   footprint it falls back to pricing in tokens.
+//! * **Cluster ledger** ([`Router::assign`] + accessors): the
+//!   [`super::Coordinator`] picks the replica itself (affinity → prefix
+//!   placement → least loaded, with horizon bin-packing) and uses the
+//!   router purely as the load ledger + affinity map. The cluster tier
+//!   always installs a [`SequenceFootprint`], so the token-count fallback
+//!   of [`Router::dispatch_cost`] is retired there — cluster load is
+//!   projected bytes, the same currency replicas reserve at admit.
 
 use super::request::Request;
 use crate::kvcache::SeqId;
@@ -69,6 +83,17 @@ impl Router {
         self.load[r]
     }
 
+    /// Replica currently carrying the least outstanding load (lowest
+    /// index wins ties).
+    pub fn least_loaded(&self) -> ReplicaId {
+        self.load.iter().enumerate().min_by_key(|(_, &l)| l).map(|(i, _)| i).unwrap()
+    }
+
+    /// Replica a session is pinned to, if any.
+    pub fn session_replica(&self, session: SeqId) -> Option<ReplicaId> {
+        self.affinity.get(&session).copied()
+    }
+
     /// Route a request; `session` pins follow-ups to the same replica.
     pub fn route(&mut self, req: &Request, session: Option<SeqId>) -> ReplicaId {
         if let Some(sid) = session {
@@ -83,15 +108,28 @@ impl Router {
                 self.rr_next += 1;
                 r
             }
-            Policy::LeastLoaded => {
-                self.load.iter().enumerate().min_by_key(|(_, &l)| l).map(|(i, _)| i).unwrap()
-            }
+            Policy::LeastLoaded => self.least_loaded(),
         };
         if let Some(sid) = session {
             self.affinity.insert(sid, r);
         }
         self.note_dispatch(r, req);
         r
+    }
+
+    /// Directed dispatch: the caller (the cluster [`super::Coordinator`])
+    /// picked `r` itself — by affinity, prefix placement, or bin-packing —
+    /// and the router records the consequences: the request's
+    /// [`Router::dispatch_cost`] lands on `r`'s ledger and `session` (re-)
+    /// pins to `r`. Re-pinning is deliberate: a preemption re-route moves
+    /// a session's affinity to wherever the request actually went, so the
+    /// next turn follows the cache that is now warm.
+    pub fn assign(&mut self, r: ReplicaId, req: &Request, session: Option<SeqId>) {
+        assert!(r < self.load.len(), "replica {r} out of range");
+        if let Some(sid) = session {
+            self.affinity.insert(sid, r);
+        }
+        self.note_dispatch(r, req);
     }
 
     /// Cost estimate of one request — what [`Router::route`] adds to the
@@ -120,6 +158,18 @@ impl Router {
     pub fn complete(&mut self, r: ReplicaId, req: &Request) {
         let cost = self.dispatch_cost(req);
         self.load[r] = self.load[r].saturating_sub(cost);
+    }
+
+    /// Drain exactly `bytes` previously charged to `r` — the cluster
+    /// coordinator's completion path. Completion events carry the
+    /// [`super::Response`], not the [`Request`], so the coordinator cannot
+    /// re-price via [`Router::complete`]; instead it records the charged
+    /// [`Router::dispatch_cost`] in its in-flight table at dispatch time
+    /// and drains that exact number here, keeping charge/drain symmetric
+    /// by construction (the same leak-proofing `complete` provides for
+    /// callers that still hold the request).
+    pub fn drain(&mut self, r: ReplicaId, bytes: usize) {
+        self.load[r] = self.load[r].saturating_sub(bytes);
     }
 
     /// A replica preempted (re-queued) this request: drain the dispatch
@@ -265,6 +315,25 @@ mod tests {
         // Without a footprint the router still prices in tokens.
         let bare = Router::new(1, Policy::LeastLoaded);
         assert_eq!(bare.dispatch_cost(&request), 256 + 4);
+    }
+
+    #[test]
+    fn assign_charges_and_repins() {
+        let mut r = Router::new(3, Policy::LeastLoaded);
+        let request = req(0, 10); // token-fallback cost 14
+        r.assign(2, &request, Some(7));
+        assert_eq!(r.load_of(2), 14);
+        assert_eq!(r.session_replica(7), Some(2));
+        // A re-route re-pins the session to the new replica and the old
+        // ledger is drained by the caller via note_preemption.
+        r.note_preemption(2, &request);
+        r.assign(0, &request, Some(7));
+        assert_eq!(r.session_replica(7), Some(0));
+        assert_eq!((r.load_of(0), r.load_of(2)), (14, 0));
+        assert_eq!(r.least_loaded(), 1);
+        r.complete(0, &request);
+        assert_eq!(r.load_of(0), 0);
+        assert_eq!(r.session_replica(99), None);
     }
 
     #[test]

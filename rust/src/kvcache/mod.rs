@@ -329,6 +329,32 @@ fn fnv_extend(mut h: u64, tokens: &[usize]) -> u64 {
     h
 }
 
+/// Content hash of a token prefix — the exact key [`PrefixCache`] files
+/// entries under. Public so layers above one engine (the cluster
+/// coordinator's replica-placement index) can speak the same
+/// content-keyed language without holding a `PrefixCache` of their own.
+pub fn prefix_hash(tokens: &[usize]) -> u64 {
+    fnv_extend(FNV_OFFSET, tokens)
+}
+
+/// `(prefix_len, hash)` of every complete chunk-aligned prefix of
+/// `tokens`, longest last — one rolling pass, each hash identical to
+/// [`prefix_hash`] of that prefix. The cluster coordinator walks this
+/// against its publication index to find the replica most likely to hold
+/// a request's warm prefix.
+pub fn prefix_hashes(tokens: &[usize], chunk: usize) -> Vec<(usize, u64)> {
+    assert!(chunk > 0);
+    let mut h = FNV_OFFSET;
+    let m = tokens.len() / chunk;
+    let mut out = Vec::with_capacity(m);
+    for k in 1..=m {
+        let hi = k * chunk;
+        h = fnv_extend(h, &tokens[(k - 1) * chunk..hi]);
+        out.push((hi, h));
+    }
+    out
+}
+
 struct PrefixEntry<T> {
     /// The exact prefix tokens — verified on lookup so a hash collision
     /// can never adopt the wrong prefix.
@@ -416,12 +442,19 @@ impl<T> PrefixCache<T> {
         true
     }
 
-    /// Drop every entry backed by an evicted shared holding; returns how
-    /// many were removed.
-    pub fn remove_shared(&mut self, id: SharedId) -> usize {
-        let before = self.entries.len();
-        self.entries.retain(|_, e| e.shared_id != id);
-        before - self.entries.len()
+    /// Drop every entry backed by an evicted shared holding; returns the
+    /// content hashes of the removed entries so the layer above (the
+    /// cluster coordinator's placement index) can retire the same keys.
+    pub fn remove_shared(&mut self, id: SharedId) -> Vec<u64> {
+        let mut removed = Vec::new();
+        self.entries.retain(|&h, e| {
+            let keep = e.shared_id != id;
+            if !keep {
+                removed.push(h);
+            }
+            keep
+        });
+        removed
     }
 
     /// Shared ids of all live entries (engine shutdown / tests).
@@ -561,10 +594,29 @@ mod tests {
         assert!(c.lookup_longest(&[7usize; 12]).is_none());
         assert!(c.contains(&toks[..8]));
         assert!(!c.contains(&toks[..7]), "non-chunk-aligned prefixes are never published");
-        // Eviction sync: dropping id8's entry leaves only the short prefix.
-        assert_eq!(c.remove_shared(id8), 1);
+        // Eviction sync: dropping id8's entry leaves only the short prefix,
+        // and the removal reports the retired content hash.
+        assert_eq!(c.remove_shared(id8), vec![prefix_hash(&toks[..8])]);
         let (n, _, _) = c.lookup_longest(&toks).unwrap();
         assert_eq!(n, 4);
+    }
+
+    #[test]
+    fn prefix_hashes_match_cache_keys() {
+        // The public rolling enumeration must produce exactly the hashes
+        // the cache files entries under, so a coordinator-side index and
+        // per-engine caches agree on every chunk-aligned prefix.
+        let toks: Vec<usize> = (10..31).collect();
+        let hs = prefix_hashes(&toks, 4);
+        assert_eq!(hs.len(), 5, "21 tokens / chunk 4 = 5 complete chunks");
+        for &(n, h) in &hs {
+            assert_eq!(h, prefix_hash(&toks[..n]), "prefix of {n}");
+        }
+        let mut c: PrefixCache<()> = PrefixCache::new(4);
+        assert!(c.insert(&toks[..8], 1, ()));
+        let (n, _, _) = c.lookup_longest(&toks).unwrap();
+        assert_eq!(n, 8);
+        assert_eq!(hs[1], (8, prefix_hash(&toks[..8])));
     }
 
     #[test]

@@ -3,13 +3,14 @@
 //! shared-prefix traffic pattern prefix reuse exists for (each turn's
 //! prompt is a strict extension of the previous turn's prompt ++ answer).
 //!
-//! The driver threads the turns through a [`Router`] with session
-//! affinity (a conversation's warm prefix cache lives on one replica, so
-//! bouncing turns across replicas would forfeit every adoption) and calls
-//! [`Router::end_session`] when a conversation closes, so affinity
-//! entries do not accumulate forever.
+//! The driver submits turns to a serving [`Coordinator`] with session
+//! tags: the cluster pins a conversation to one replica (its warm prefix
+//! cache lives there, so bouncing turns across replicas would forfeit
+//! every adoption), re-pins only when a preemption re-route moves the
+//! request, and [`Coordinator::end_session`] is called when a
+//! conversation closes so affinity entries do not accumulate forever.
 
-use crate::coordinator::{Engine, GenParams, Request, Router};
+use crate::coordinator::{Coordinator, GenParams, Request};
 use crate::util::rng::Rng;
 
 /// Shape of a synthetic chat workload.
@@ -37,19 +38,21 @@ pub struct ChatStats {
     /// Summed over replicas after the run.
     pub prefill_tokens_avoided: usize,
     pub prefix_adoptions: usize,
-    /// Replica each session was pinned to (index = session).
+    /// Replica each session ended up pinned to (index = session).
     pub session_replica: Vec<usize>,
+    /// Times any session's pinned replica changed between turns. Only a
+    /// preemption re-route can move a pin, so a run without preemptions
+    /// must report 0 — the affinity-stability invariant.
+    pub affinity_moves: usize,
     /// Per-session final transcripts (prompt ++ every answer), for
     /// cross-run comparisons.
     pub transcripts: Vec<Vec<usize>>,
 }
 
-/// Drive a chat workload over engine replicas through the router, one
-/// turn round at a time (every live session advances a turn, then its
-/// replica runs to completion). Returns per-session transcripts and the
-/// summed reuse metrics.
-pub fn run_chat(spec: &ChatSpec, replicas: &mut [Engine], router: &mut Router) -> ChatStats {
-    assert!(!replicas.is_empty() && router.replicas() == replicas.len());
+/// Drive a chat workload through the serving cluster, one turn round at a
+/// time (every session advances a turn, then the cluster drains). Returns
+/// per-session transcripts and the summed reuse metrics.
+pub fn run_chat(spec: &ChatSpec, cluster: &mut Coordinator) -> ChatStats {
     let mut rng = Rng::new(spec.seed);
     // A session's transcript: everything the model has seen + said; the
     // next turn's prompt is transcript ++ fresh user tokens.
@@ -60,8 +63,8 @@ pub fn run_chat(spec: &ChatSpec, replicas: &mut [Engine], router: &mut Router) -
     };
     let mut next_id = 0u64;
     for turn in 0..spec.turns_per_session {
-        // (session, replica, dispatched request) in flight this round.
-        let mut in_flight: Vec<(usize, usize, Request)> = Vec::new();
+        // (request id, session) dispatched this round.
+        let mut turn_ids: Vec<(u64, usize)> = Vec::new();
         for s in 0..spec.n_sessions {
             let user_tokens =
                 if turn == 0 { spec.first_turn_tokens } else { spec.turn_tokens };
@@ -72,35 +75,39 @@ pub fn run_chat(spec: &ChatSpec, replicas: &mut [Engine], router: &mut Router) -
                 next_id,
                 transcripts[s].clone(),
                 GenParams { max_new_tokens: spec.max_new_tokens, stop_token: None },
-            );
+            )
+            .with_session(s as u64);
+            stats.prompt_tokens += req.prompt.len();
+            cluster.submit(req).expect("chat request ids are unique");
+            turn_ids.push((next_id, s));
             next_id += 1;
-            let r = router.route(&req, Some(s as u64));
+        }
+        for resp in cluster.run_to_completion() {
+            let &(_, s) =
+                turn_ids.iter().find(|(id, _)| *id == resp.id).expect("unknown response id");
+            transcripts[s].extend_from_slice(&resp.tokens);
+            stats.turns_completed += 1;
+        }
+        for s in 0..spec.n_sessions {
+            let r = cluster
+                .session_replica(s as u64)
+                .expect("session must stay pinned while the conversation is live");
             if stats.session_replica[s] == usize::MAX {
                 stats.session_replica[s] = r;
-            } else {
-                assert_eq!(stats.session_replica[s], r, "affinity moved session {s}");
-            }
-            stats.prompt_tokens += req.prompt.len();
-            replicas[r].submit(req.clone());
-            in_flight.push((s, r, req));
-        }
-        for replica in replicas.iter_mut() {
-            for resp in replica.run_to_completion() {
-                let (s, r, req) =
-                    in_flight.iter().find(|(_, _, rq)| rq.id == resp.id).expect("unknown id");
-                transcripts[*s].extend_from_slice(&resp.tokens);
-                router.complete(*r, req);
-                stats.turns_completed += 1;
+            } else if stats.session_replica[s] != r {
+                // A preemption re-route moved the conversation — follow
+                // it (the warm cache is on the new replica now).
+                stats.affinity_moves += 1;
+                stats.session_replica[s] = r;
             }
         }
     }
     for s in 0..spec.n_sessions {
-        router.end_session(s as u64);
+        cluster.end_session(s as u64);
     }
-    for replica in replicas.iter() {
-        stats.prefill_tokens_avoided += replica.metrics.prefill_tokens_avoided;
-        stats.prefix_adoptions += replica.metrics.prefix_adoptions;
-    }
+    let agg = cluster.metrics().aggregate();
+    stats.prefill_tokens_avoided = agg.prefill_tokens_avoided;
+    stats.prefix_adoptions = agg.prefix_adoptions;
     stats.transcripts = transcripts;
     stats
 }
@@ -109,32 +116,33 @@ pub fn run_chat(spec: &ChatSpec, replicas: &mut [Engine], router: &mut Router) -
 mod tests {
     use super::*;
     use crate::attention::FullAttention;
-    use crate::coordinator::{EngineConfig, Policy};
+    use crate::coordinator::{ClusterConfig, EngineConfig};
     use crate::model::{BackendFactory, Model, ModelConfig, Weights};
     use std::sync::Arc;
 
-    fn replicas(n: usize, reuse: bool) -> Vec<Engine> {
-        (0..n)
-            .map(|_| {
-                let cfg = ModelConfig::tiny_mha(256);
-                let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 37)));
-                let shape = cfg.attn_shape();
-                let factory: Box<BackendFactory> =
-                    Box::new(move |_| Box::new(FullAttention::new(shape)) as _);
-                Engine::new(
-                    model,
-                    factory,
-                    EngineConfig {
-                        max_batch: 4,
-                        prefill_chunk: 8,
-                        page_bytes: 4096,
-                        pool_budget: 1 << 26,
-                        threads: 2,
-                        prefix_reuse: reuse,
-                    },
-                )
-            })
-            .collect()
+    fn cluster(n: usize, reuse: bool) -> Coordinator {
+        let cfg = ModelConfig::tiny_mha(256);
+        let model = Model::new(cfg.clone(), Arc::new(Weights::random(&cfg, 37)));
+        let shape = cfg.attn_shape();
+        let factory: Box<BackendFactory> =
+            Box::new(move |_| Box::new(FullAttention::new(shape)) as _);
+        Coordinator::new(
+            model,
+            factory,
+            ClusterConfig {
+                replicas: n,
+                engine: EngineConfig {
+                    max_batch: 4,
+                    prefill_chunk: 8,
+                    page_bytes: 4096,
+                    pool_budget: 1 << 26,
+                    threads: 2,
+                    prefix_reuse: reuse,
+                    eject_preempted: false, // forced on by the coordinator
+                },
+                bin_pack_window: 8,
+            },
+        )
     }
 
     fn spec() -> ChatSpec {
@@ -152,17 +160,18 @@ mod tests {
     #[test]
     fn multi_turn_sessions_stay_pinned_and_complete() {
         let spec = spec();
-        let mut engines = replicas(2, false);
-        let mut router = Router::new(2, Policy::LeastLoaded);
-        let stats = run_chat(&spec, &mut engines, &mut router);
+        let mut c = cluster(2, false);
+        let stats = run_chat(&spec, &mut c);
         assert_eq!(stats.turns_completed, 9);
         assert!(stats.session_replica.iter().all(|&r| r < 2));
+        // Ample pool ⇒ no preemptions ⇒ pins never move.
+        assert_eq!(stats.affinity_moves, 0, "affinity moved without any preemption");
+        assert_eq!(c.metrics().aggregate().preemptions, 0);
         // Every transcript holds all user tokens + all answers.
         let expect = 16 + 2 * 6 + 3 * 4;
         assert!(stats.transcripts.iter().all(|t| t.len() == expect));
-        // end_session dropped the affinity: load fully drained means
-        // complete() was called once per turn with the charged cost.
-        assert_eq!(router.load_of(0) + router.load_of(1), 0);
+        // Charge/drain symmetry: the run left nothing on any ledger.
+        assert!(c.loads().iter().all(|&l| l == 0), "router ledger leaked load");
     }
 
     #[test]
@@ -171,16 +180,47 @@ mod tests {
         // published prefix, so later turns adopt instead of re-prefilling
         // the transcript — and the conversation itself is unchanged.
         let spec = spec();
-        let mut cold_engines = replicas(2, false);
-        let mut cold_router = Router::new(2, Policy::LeastLoaded);
-        let cold = run_chat(&spec, &mut cold_engines, &mut cold_router);
-        let mut warm_engines = replicas(2, true);
-        let mut warm_router = Router::new(2, Policy::LeastLoaded);
-        let warm = run_chat(&spec, &mut warm_engines, &mut warm_router);
+        let mut cold_cluster = cluster(2, false);
+        let cold = run_chat(&spec, &mut cold_cluster);
+        let mut warm_cluster = cluster(2, true);
+        let warm = run_chat(&spec, &mut warm_cluster);
         assert_eq!(cold.prefix_adoptions, 0);
         assert!(warm.prefix_adoptions > 0, "turn 2+ must adopt the published transcript");
         assert!(warm.prefill_tokens_avoided >= 8 * warm.prefix_adoptions);
         // Reuse must be semantically invisible: identical transcripts.
         assert_eq!(cold.transcripts, warm.transcripts);
+    }
+
+    #[test]
+    fn warm_turn_after_session_end_lands_on_publishing_replica() {
+        // A conversation runs (publishing its transcript prefixes), then
+        // ends — affinity dropped. A NEW session re-sending the same
+        // transcript must be placed by the prefix index onto the replica
+        // that holds the published cache, not wherever is emptiest.
+        let spec = ChatSpec { n_sessions: 1, turns_per_session: 2, ..spec() };
+        let mut c = cluster(2, true);
+        let stats = run_chat(&spec, &mut c);
+        assert_eq!(stats.turns_completed, 2);
+        let home = stats.session_replica[0];
+        let hints_before = c.metrics().prefix_hint_hits;
+        // run_chat ended the session, so this placement cannot use
+        // affinity — only the content-keyed prefix index.
+        let req = Request::new(
+            1000,
+            stats.transcripts[0].clone(),
+            GenParams { max_new_tokens: spec.max_new_tokens, stop_token: None },
+        )
+        .with_session(77);
+        c.submit(req).expect("fresh id");
+        assert_eq!(
+            c.session_replica(77),
+            Some(home),
+            "warm re-send must land on the replica holding its published prefix"
+        );
+        assert_eq!(c.run_to_completion().len(), 1);
+        let m = c.metrics();
+        assert!(m.prefix_hint_hits > hints_before, "placement must be a prefix-index hit");
+        assert!(m.aggregate().prefix_adoptions >= stats.prefix_adoptions + 1);
+        c.end_session(77);
     }
 }
